@@ -1,0 +1,73 @@
+//! Quickstart: optimize ResNet-18 deployment on the large Gemmini with
+//! FADiff and print the resulting strategy.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (requires `make artifacts` once beforehand)
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::costmodel;
+use fadiff::runtime::Runtime;
+use fadiff::search::{gradient, Budget};
+use fadiff::workload::{zoo, DIM_NAMES};
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT-compiled differentiable cost model
+    let rt = Runtime::load_default()?;
+
+    // 2. pick a workload and a hardware configuration
+    let workload = zoo::resnet18();
+    let hw = load_config(&repo_root(), "large")?;
+    println!("workload: {} ({} layers, {:.2} GMACs)",
+             workload.name, workload.len(),
+             workload.total_ops() / 1e9);
+    println!("hardware: {}x{} PEs, {} KB scratchpad, {} KB accumulator",
+             hw.pe_rows, hw.pe_cols,
+             hw.c2_bytes / 1024.0, hw.c1_bytes / 1024.0);
+
+    // 3. run the fusion-aware gradient search (10 s budget)
+    let result = gradient::optimize(
+        &rt, &workload, &hw,
+        &gradient::GradientConfig::default(),
+        Budget { seconds: 10.0, max_iters: usize::MAX },
+    )?;
+
+    // 4. inspect the result
+    println!("\nbest EDP     : {:.4e} pJ*cycles", result.edp);
+    println!("energy       : {:.4e} pJ", result.energy);
+    println!("latency      : {:.4e} cycles ({:.3} ms @ 1 GHz)",
+             result.latency, result.latency / 1e6);
+    println!("iterations   : {} (evals {})", result.iters, result.evals);
+
+    println!("\nfusion groups:");
+    for (a, b) in result.best.groups() {
+        let names: Vec<&str> = workload.layers[a..=b]
+            .iter()
+            .map(|l| l.name.as_str())
+            .collect();
+        if a == b {
+            println!("  [single] {}", names[0]);
+        } else {
+            println!("  [fused ] {}", names.join(" -> "));
+        }
+    }
+
+    // 5. show one layer's decoded mapping in detail
+    let li = 1;
+    let m = &result.best.mappings[li];
+    println!("\nmapping of {} (dims N,K,C,P,Q,R,S = {:?}):",
+             workload.layers[li].name, workload.layers[li].dims);
+    println!("  {:>4} {:>6} {:>6} {:>6} {:>8}", "dim", "t_L0", "t_L1",
+             "t_L2", "spatial");
+    for d in 0..7 {
+        println!("  {:>4} {:>6} {:>6} {:>6} {:>8}", DIM_NAMES[d],
+                 m.factors[d][0], m.factors[d][1], m.factors[d][2],
+                 m.factors[d][3]);
+    }
+
+    // 6. verify hardware validity end to end
+    costmodel::feasible(&result.best, &workload, &hw)
+        .expect("strategy must be hardware-valid");
+    println!("\nstrategy validated: fits PE array, scratchpad and \
+              accumulator budgets");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serving demo: starts the coordinator TCP service, drives it with a
+//! small batch of concurrent scheduling requests from client threads,
+//! and reports per-request latency + service throughput — the
+//! "scheduler-as-a-service" deployment mode.
+//!
+//! Run with:  cargo run --release --example serve
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use fadiff::coordinator::{server, Coordinator};
+
+fn request(addr: std::net::SocketAddr, body: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(body.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(line.trim().to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    // bind on an ephemeral port and run the server in the background
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let coord = Coordinator::new(None, 2)?;
+    let server_thread =
+        std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // ping until ready
+    for _ in 0..50 {
+        if request(addr, r#"{"verb": "ping"}"#).is_ok() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("coordinator serving on {addr}");
+
+    // fire a batch of concurrent optimization requests
+    let jobs = [
+        ("resnet18", "large", 3.0),
+        ("mobilenet", "large", 3.0),
+        ("vgg16", "small", 3.0),
+        ("gpt3", "large", 3.0),
+    ];
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = jobs
+        .iter()
+        .map(|&(wl, cfg, secs)| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"verb": "optimize", "workload": "{wl}", "config": "{cfg}", "method": "fadiff", "seconds": {secs}, "seed": 7}}"#
+                );
+                let t = std::time::Instant::now();
+                let resp = request(addr, &body);
+                (wl, cfg, t.elapsed().as_secs_f64(), resp)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (wl, cfg, secs, resp) = h.join().unwrap();
+        let resp = resp?;
+        // pull the EDP out of the JSON response
+        let j = fadiff::util::json::Json::parse(&resp)?;
+        let edp = j.get_f64("full_model_edp")?;
+        println!("  {wl:<10} {cfg:<6} -> EDP {edp:.3e}  \
+                  (request latency {secs:.2}s)");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("batch of {} requests in {:.2}s on 2 workers \
+              ({:.2} jobs/s)", jobs.len(), wall,
+             jobs.len() as f64 / wall);
+
+    // metrics + graceful shutdown
+    println!("metrics: {}", request(addr, r#"{"verb": "metrics"}"#)?);
+    let _ = request(addr, r#"{"verb": "shutdown"}"#)?;
+    let _ = server_thread.join();
+    println!("server shut down cleanly");
+    Ok(())
+}

@@ -1,0 +1,148 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts for the Rust (L3) runtime.
+
+Usage (from `make artifacts`):
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, under the output directory:
+    fadiff_grad.hlo.txt    loss_and_grad   (FADiff / DOSA hot path)
+    fadiff_eval.hlo.txt    eval_batch      (GA / BO population eval)
+    fadiff_detail.hlo.txt  detail          (validation, Fig 3 breakdowns)
+    manifest.json          shapes + operand order for each artifact
+
+Interchange is HLO *text*, not a serialized HloModuleProto: the `xla`
+crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids), while the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from . import model
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def grad_specs(l=C.L_MAX, k=C.K_MAX):
+    """(name, spec) list for `loss_and_grad`, in operand order."""
+    return [
+        ("theta", _spec(l, 7, 4)),
+        ("sigma_logit", _spec(l)),
+        ("dims", _spec(l, 7)),
+        ("div", _spec(l, 7, k)),
+        ("div_mask", _spec(l, 7, k)),
+        ("layer_mask", _spec(l)),
+        ("edge_mask", _spec(l)),
+        ("gumbel", _spec(l, 7, 4, k)),
+        ("tau", _spec()),
+        ("alpha", _spec()),
+        ("lam", _spec()),
+        ("hw", _spec(C.NHW)),
+    ]
+
+
+def eval_specs(b=C.B_EVAL, l=C.L_MAX):
+    return [
+        ("factors", _spec(b, l, 7, 4)),
+        ("sigma_bin", _spec(b, l)),
+        ("dims", _spec(l, 7)),
+        ("layer_mask", _spec(l)),
+        ("edge_mask", _spec(l)),
+        ("hw", _spec(C.NHW)),
+    ]
+
+
+def detail_specs(l=C.L_MAX):
+    return [
+        ("factors", _spec(l, 7, 4)),
+        ("sigma_bin", _spec(l)),
+        ("dims", _spec(l, 7)),
+        ("layer_mask", _spec(l)),
+        ("edge_mask", _spec(l)),
+        ("hw", _spec(C.NHW)),
+    ]
+
+
+GRAD_OUTPUTS = [
+    ("loss", []), ("edp", []), ("energy", []), ("latency", []),
+    ("penalty", []),
+    ("grad_theta", [C.L_MAX, 7, 4]), ("grad_sigma", [C.L_MAX]),
+]
+EVAL_OUTPUTS = [
+    ("edp", [C.B_EVAL]), ("energy", [C.B_EVAL]), ("latency", [C.B_EVAL]),
+    ("violation", [C.B_EVAL]),
+]
+DETAIL_OUTPUTS = [
+    ("edp", []), ("energy", []), ("latency", []),
+    ("comp", [C.L_MAX, C.NCOMP]), ("access", [C.L_MAX, 4]),
+    ("lat_l", [C.L_MAX]), ("en_l", [C.L_MAX]), ("t3", [C.L_MAX, 7]),
+]
+
+
+def to_hlo_text(fn, specs):
+    """Lower a jitted fn at the given example specs to HLO text."""
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "fadiff_grad": (model.loss_and_grad, grad_specs, GRAD_OUTPUTS),
+    "fadiff_eval": (model.eval_batch, eval_specs, EVAL_OUTPUTS),
+    "fadiff_detail": (model.detail, detail_specs, DETAIL_OUTPUTS),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact subset")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "l_max": C.L_MAX,
+        "k_max": C.K_MAX,
+        "b_eval": C.B_EVAL,
+        "nhw": C.NHW,
+        "ncomp": C.NCOMP,
+        "artifacts": {},
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, (fn, mkspecs, outs) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        specs = mkspecs()
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s.shape)}
+                       for n, s in specs],
+            "outputs": [{"name": n, "shape": shape} for n, shape in outs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

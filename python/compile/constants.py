@@ -1,0 +1,81 @@
+"""Shared constants for the FADiff differentiable cost model.
+
+These mirror `rust/src/costmodel/` exactly — any change here must be
+reflected there (cross-checked by the runtime consistency tests).
+
+Problem space: the unified 7-dim space of the paper (Sec 3.1.1),
+  N, K, C, P, Q, R, S
+GEMM layers use P for the M (row) dimension, K for output columns, C for
+the reduction dimension, N for batch; R = S = 1.
+
+Memory hierarchy (Sec 2.1, Gemmini):
+  L0 = PE registers (weights, weight-stationary)
+  L1 = accumulator (outputs / partial sums only)
+  L2 = scratchpad (inputs + weights)
+  L3 = DRAM
+"""
+
+# ---- problem dimensions -------------------------------------------------
+DIM_N, DIM_K, DIM_C, DIM_P, DIM_Q, DIM_R, DIM_S = range(7)
+NDIMS = 7
+DIM_NAMES = ["N", "K", "C", "P", "Q", "R", "S"]
+
+# ---- factor slots: theta[..., slot] ------------------------------------
+# temporal tiling factors at L0, L1, L2; spatial factor (PE array, at L0).
+# The DRAM (L3) temporal factor is DERIVED as dim / (t0*t1*t2*s) so the
+# per-dimension product constraint holds by construction.
+SLOT_T0, SLOT_T1, SLOT_T2, SLOT_S = range(4)
+NSLOTS = 4
+
+# ---- tensor membership masks (which dims index each tensor) ------------
+#          N  K  C  P  Q  R  S
+W_DIMS = [0, 1, 1, 0, 0, 1, 1]  # weights:  K,C,R,S
+I_DIMS = [1, 0, 1, 1, 1, 1, 1]  # inputs:   N,C,(P,Q,R,S via sliding window; halo ignored)
+O_DIMS = [1, 1, 0, 1, 1, 0, 0]  # outputs:  N,K,P,Q
+
+# Spatial unrolling is allowed on K (array columns) and C (array rows)
+# only, matching Gemmini's 2-D weight-stationary systolic array.
+SPATIAL_DIMS = [0, 1, 1, 0, 0, 0, 0]
+
+# ---- traffic component indices (kernel output comp[L, NCOMP]) ----------
+C_OPS = 0        # total MACs
+C_PES = 1        # effective PEs = prod of spatial factors
+C_FILL2_I = 2    # DRAM -> L2 fill of inputs            (elements)
+C_FILL2_W = 3    # DRAM -> L2 fill of weights
+C_FILL0_W = 4    # L2 -> L0 fill of weights
+C_READPE_I = 5   # L2 -> PE supply reads of inputs   = Ops / Bcast_I
+C_ACCWB_O = 6    # PE -> L1 accumulation write-back  = Ops / Reduce_O
+C_WB0_O = 7      # L1 -> L3 baseline output write-back (pre-fusion)
+C_SW2 = 8        # W tile footprint at L2 (elements)
+C_SI2 = 9        # I tile footprint at L2 (elements)
+C_SO1 = 10       # O tile footprint at L1 (elements)
+C_TP2 = 11       # P tile extent at L2 (output tile rows)
+C_TQ2 = 12       # Q tile extent at L2
+C_TK2 = 13       # K tile extent at L2 (output channels on-chip)
+C_TC2 = 14       # C tile extent at L2 (input channels on-chip)
+C_READ0_W = 15   # L0 -> PE weight reads             = Ops / Bcast_W
+NCOMP = 16
+
+# ---- hardware vector hw[NHW] -------------------------------------------
+HW_PE_ROWS = 0    # systolic array rows  (spatial C limit)
+HW_PE_COLS = 1    # systolic array cols  (spatial K limit)
+HW_C1 = 2         # accumulator capacity, bytes
+HW_C2 = 3         # scratchpad capacity, bytes
+HW_BW3 = 4        # DRAM bandwidth, bytes / cycle
+HW_BW2 = 5        # scratchpad bandwidth, bytes / cycle
+HW_BW1 = 6        # accumulator bandwidth, bytes / cycle
+HW_EPA3 = 7       # DRAM energy, pJ / element access
+HW_EPA2 = 8       # scratchpad EPA, pJ / element (from the EPA MLP)
+HW_EPA1 = 9       # accumulator EPA, pJ / element (from the EPA MLP)
+HW_EPA0 = 10      # PE register EPA, pJ / element
+HW_EPO = 11       # compute energy, pJ / MAC
+HW_EB = 12        # bytes per element
+NHW = 16          # padded
+
+# ---- AOT artifact static shapes ----------------------------------------
+L_MAX = 32        # padded layer count (largest zoo model has 29 layers)
+K_MAX = 32        # padded divisor-candidate count per (dim, slot)
+B_EVAL = 64       # population batch for the discrete eval artifact
+
+EPS = 1e-9
+NEG_INF = -1e30

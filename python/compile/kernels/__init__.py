@@ -1,0 +1,5 @@
+"""L1 Pallas kernels for the FADiff cost-model hot spots."""
+from .gumbel_snap import gumbel_snap
+from .traffic import traffic
+from .ad import gumbel_snap_ad, traffic_ad
+__all__ = ["gumbel_snap", "traffic", "gumbel_snap_ad", "traffic_ad"]

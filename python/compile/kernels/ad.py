@@ -1,0 +1,64 @@
+"""Reverse-mode AD wrappers for the L1 Pallas kernels.
+
+`pallas_call` (interpret mode) has no registered transpose rule, so the
+kernels cannot be differentiated directly. Each kernel gets a
+`jax.custom_vjp`: the *forward* pass executes the Pallas kernel (this is
+what dominates the lowered HLO), while the *backward* pass reuses the
+pure-jnp oracle's VJP — mathematically identical (ref == kernel is
+asserted by the pytest/hypothesis suite), and both halves are lowered into
+the single AOT artifact the Rust runtime executes.
+
+Cotangents are propagated to the continuously-optimized inputs only
+(`theta` for the snap, `factors` for traffic); all other inputs are
+constants of the optimization step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import gumbel_snap as _gumbel_snap_kernel
+from . import traffic as _traffic_kernel
+from .ref import ref_gumbel_snap, ref_traffic
+
+
+@jax.custom_vjp
+def gumbel_snap_ad(theta, div, div_mask, gumbel, tau, alpha):
+    return _gumbel_snap_kernel(theta, div, div_mask, gumbel, tau, alpha)
+
+
+def _snap_fwd(theta, div, div_mask, gumbel, tau, alpha):
+    out = _gumbel_snap_kernel(theta, div, div_mask, gumbel, tau, alpha)
+    return out, (theta, div, div_mask, gumbel, tau, alpha)
+
+
+def _snap_bwd(res, ct):
+    theta, div, div_mask, gumbel, tau, alpha = res
+    _, vjp = jax.vjp(
+        lambda th: ref_gumbel_snap(th, div, div_mask, gumbel, tau, alpha),
+        theta)
+    (g_theta,) = vjp(ct)
+    z = lambda x: jnp.zeros_like(x)
+    return (g_theta, z(div), z(div_mask), z(gumbel), z(tau), z(alpha))
+
+
+gumbel_snap_ad.defvjp(_snap_fwd, _snap_bwd)
+
+
+@jax.custom_vjp
+def traffic_ad(factors, dims, layer_mask):
+    return _traffic_kernel(factors, dims, layer_mask)
+
+
+def _traffic_fwd(factors, dims, layer_mask):
+    return _traffic_kernel(factors, dims, layer_mask), (factors, dims,
+                                                        layer_mask)
+
+
+def _traffic_bwd(res, ct):
+    factors, dims, layer_mask = res
+    _, vjp = jax.vjp(lambda f: ref_traffic(f, dims, layer_mask), factors)
+    (g_factors,) = vjp(ct)
+    return (g_factors, jnp.zeros_like(dims), jnp.zeros_like(layer_mask))
+
+
+traffic_ad.defvjp(_traffic_fwd, _traffic_bwd)

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: Gumbel-Softmax divisor snap (paper Eqs. (1)-(3)).
+
+The kernel maps the continuous tiling factor `2**theta` onto the divisor
+set of each problem dimension through a temperature-annealed, noisy
+softmax, producing both the soft expectation (backward path) and the
+argmax selection (straight-through forward path).
+
+TPU mapping (DESIGN.md §6): the grid blocks over layers; each program
+holds one [LB, 7, 4, K] logit tile in VMEM and performs a masked dense
+softmax over the K≤32 divisor slots — no gathers, fully vectorized on the
+VPU. `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime runs unmodified.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import constants as C
+
+LB = 8  # layer block per grid step
+
+
+def _kernel(theta_ref, div_ref, mask_ref, gumbel_ref, ta_ref,
+            soft_ref, hard_ref):
+    theta = theta_ref[...]                       # [LB,7,4]
+    d = div_ref[...][:, :, None, :]              # [LB,7,1,K]
+    m = mask_ref[...][:, :, None, :]             # [LB,7,1,K]
+    g = gumbel_ref[...]                          # [LB,7,4,K]
+    tau = ta_ref[0]
+    alpha = ta_ref[1]
+
+    # Eq. (1) with log-domain proximity: divisor candidates are close to
+    # uniform in log space, so measuring distance in log2 keeps the
+    # softmax unsaturated across dims from 3 to 25088 (linear-space
+    # distance collapses the gradient for large dims; DESIGN.md §2).
+    ld = jnp.log2(jnp.maximum(d, 1e-9))
+    logits = -alpha * (theta[..., None] - ld) ** 2
+    z = (logits + g) / tau                       # Eq. (2)
+    z = jnp.where(m > 0, z, C.NEG_INF)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    # Clamp before exp: XLA 0.5.x's vectorized expf integer-overflows for
+    # arguments around -1e30 (Eigen pexp round(x/ln2)); exp(-100) is
+    # already exactly 0 in f32, so the clamp is value-preserving.
+    e = jnp.exp(jnp.maximum(z - zmax, -100.0)) * m
+    p = e / (jnp.sum(e, axis=-1, keepdims=True) + C.EPS)
+    soft_ref[...] = jnp.sum(p * d, axis=-1)      # Eq. (3)
+
+    onehot = jnp.where((z >= zmax) & (m > 0), 1.0, 0.0)
+    onehot = onehot / (jnp.sum(onehot, axis=-1, keepdims=True) + C.EPS)
+    hard_ref[...] = jnp.sum(onehot * d, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gumbel_snap(theta, div, div_mask, gumbel, tau, alpha):
+    """Pallas entry point; signature mirrors `ref.ref_gumbel_snap`.
+
+    tau/alpha are scalar (0-d or [1]) arrays; they are packed into one
+    [2] operand so the kernel sees a single tiny SMEM-class input.
+    """
+    l, _, _ = theta.shape
+    k = div.shape[-1]
+    assert l % LB == 0, f"layer count {l} must be a multiple of {LB}"
+    ta = jnp.stack([jnp.asarray(tau, jnp.float32).reshape(()),
+                    jnp.asarray(alpha, jnp.float32).reshape(())])
+    grid = (l // LB,)
+    blk = lambda *shape: shape  # readability
+    soft, hard = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(blk(LB, 7, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec(blk(LB, 7, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec(blk(LB, 7, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec(blk(LB, 7, 4, k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(blk(2), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(blk(LB, 7, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec(blk(LB, 7, 4), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, 7, 4), jnp.float32),
+            jax.ShapeDtypeStruct((l, 7, 4), jnp.float32),
+        ],
+        interpret=True,
+    )(theta, div, div_mask, gumbel, ta)
+    return soft, hard

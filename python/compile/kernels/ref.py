@@ -1,0 +1,130 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain `jax.numpy` broadcasting only. pytest/hypothesis
+compare kernel vs oracle over swept shapes — this is the core L1
+correctness signal (the kernels are what actually lower into the AOT
+artifacts the Rust runtime executes).
+"""
+
+import jax.numpy as jnp
+
+from .. import constants as C
+
+
+def ref_gumbel_snap(theta, div, div_mask, gumbel, tau, alpha):
+    """Gumbel-Softmax divisor snap (paper Eqs. (1)-(3)).
+
+    Args:
+      theta:    [L, 7, 4] log2-space continuous tiling factors.
+      div:      [L, 7, K] divisor candidates of each problem dim (padded).
+      div_mask: [L, 7, K] 1.0 for valid candidates, 0.0 for padding.
+      gumbel:   [L, 7, 4, K] pre-sampled Gumbel(0,1) noise (0 => greedy).
+      tau:      scalar softmax temperature (annealed by the L3 driver).
+      alpha:    scalar proximity sharpness for the logits (Eq. (1)).
+
+    Returns:
+      soft: [L, 7, 4] expected divisor  sum_j p_j d_j          (Eq. (3))
+      hard: [L, 7, 4] argmax divisor (straight-through forward value)
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    d = div[:, :, None, :]                                # [L,7,1,K]
+    m = div_mask[:, :, None, :]                           # [L,7,1,K]
+    # Eq. (1), log-domain proximity (see gumbel_snap.py)
+    ld = jnp.log2(jnp.maximum(d, 1e-9))
+    logits = -alpha * (theta[..., None] - ld) ** 2
+    z = (logits + gumbel) / tau                           # Eq. (2)
+    z = jnp.where(m > 0, z, C.NEG_INF)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    # clamped exactly like the Pallas kernel (see gumbel_snap.py)
+    e = jnp.exp(jnp.maximum(z - zmax, -100.0)) * m
+    p = e / (jnp.sum(e, axis=-1, keepdims=True) + C.EPS)
+    soft = jnp.sum(p * d, axis=-1)                        # Eq. (3)
+    onehot = jnp.where((z >= zmax) & (m > 0), 1.0, 0.0)
+    onehot = onehot / (jnp.sum(onehot, axis=-1, keepdims=True) + C.EPS)
+    hard = jnp.sum(onehot * d, axis=-1)
+    return soft, hard
+
+
+def ref_traffic(factors, dims, layer_mask):
+    """Per-layer traffic components (paper Eqs. (4)-(12)).
+
+    Args:
+      factors:    [L, 7, 4] tiling factors (slots t_L0, t_L1, t_L2, spatial).
+                  May be continuous (soft/ST) or integer-valued.
+      dims:       [L, 7] full problem dimension sizes.
+      layer_mask: [L] 1.0 for real layers, 0.0 for padding.
+
+    Returns:
+      comp: [L, NCOMP] traffic components (see constants.py).
+      t3:   [L, 7] derived DRAM-level temporal factor dim/(t0*t1*t2*s).
+    """
+    t0 = factors[:, :, C.SLOT_T0]
+    t1 = factors[:, :, C.SLOT_T1]
+    t2 = factors[:, :, C.SLOT_T2]
+    sp = factors[:, :, C.SLOT_S]
+
+    w = jnp.asarray(C.W_DIMS, jnp.float32)
+    i_ = jnp.asarray(C.I_DIMS, jnp.float32)
+    o = jnp.asarray(C.O_DIMS, jnp.float32)
+    sd = jnp.asarray(C.SPATIAL_DIMS, jnp.float32)
+
+    sp_eff = jnp.where(sd > 0, sp, 1.0)                    # spatial off non-KC
+    inner = t0 * t1 * t2 * sp_eff                          # product below DRAM
+    t3 = dims / jnp.maximum(inner, C.EPS)                  # derived (Sec 3.1.1)
+    t3c = jnp.maximum(t3, 1.0)              # honest-traffic clamp (kernel)
+
+    def mprod(x, mask):
+        # masked product over the dim axis: prod_{d: mask[d]=1} x[:, d]
+        return jnp.prod(jnp.where(mask > 0, x, 1.0), axis=1)
+
+    ops = jnp.prod(dims, axis=1)                           # total MACs
+    pes = jnp.prod(sp_eff, axis=1)                         # effective PEs
+
+    # Tile extents per dim at each residence level (spatial counts at L0+).
+    ext0 = t0 * sp_eff
+    ext1 = ext0 * t1
+    ext2 = ext1 * t2                                       # extent at L2
+
+    # TileSize(i, T): Eq. (5); FetchCount / WriteCount: Eq. (6) over all d.
+    s_w2 = mprod(ext2, w)
+    s_i2 = mprod(ext2, i_)
+    s_w0 = mprod(ext0, w)
+    s_o1 = mprod(ext1, o)
+
+    fetch2 = jnp.prod(t3c, axis=1)                         # outer-of-L2 iters
+    fetch0 = jnp.prod(t3c * t2 * t1, axis=1)               # outer-of-L0 iters
+    wcount1 = jnp.prod(t3c * t2, axis=1)                   # outer-of-L1 iters
+
+    fill2_i = s_i2 * fetch2                                # Eq. (4)
+    fill2_w = s_w2 * fetch2
+    fill0_w = s_w0 * fetch0                                # Eq. (7) L2->L0
+
+    # PE-supplying reads, Eqs. (8)-(9): inputs broadcast across spatial K
+    # (array columns); weights are per-PE (K and C both index W => Bcast=1).
+    bcast_i = mprod(sp_eff, (1.0 - i_) * sd)               # = spatial K
+    read_pe_i = ops / jnp.maximum(bcast_i, C.EPS)
+    read0_w = ops                                          # Bcast_W == 1
+
+    # Accumulation write-back, Eqs. (11)-(12): partial sums reduced across
+    # spatial C (array rows) before hitting the L1 accumulator.
+    reduce_o = mprod(sp_eff, (1.0 - o) * sd)               # = spatial C
+    accwb_o = ops / jnp.maximum(reduce_o, C.EPS)
+
+    # Inter-memory write-back L1 -> L3 (baseline, pre-fusion), Eq. (10).
+    wb0_o = s_o1 * wcount1
+
+    comp = jnp.stack(
+        [
+            ops, pes, fill2_i, fill2_w, fill0_w, read_pe_i, accwb_o, wb0_o,
+            s_w2, s_i2, s_o1,
+            ext2[:, C.DIM_P], ext2[:, C.DIM_Q],
+            ext2[:, C.DIM_K], ext2[:, C.DIM_C],
+            read0_w,
+        ],
+        axis=1,
+    )
+    comp = comp * layer_mask[:, None]
+    t3 = jnp.where(layer_mask[:, None] > 0, t3, 1.0)
+    return comp, t3

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: per-layer traffic accounting (paper Eqs. (4)-(12)).
+
+Given (possibly continuous) tiling factors, computes every data-movement
+component of the unified cost model: fills, inter-memory reads,
+PE-supplying reads (with broadcast reuse), accumulation write-backs (with
+spatial reduction), and the baseline inter-memory write-back that the
+fusion variable sigma later modulates (Eqs. (13)-(15), applied in L2).
+
+TPU mapping: grid over layer blocks; per-program state is a [LB, 7, 4]
+factor tile plus [7]-wide membership masks — everything stays in VMEM and
+reduces along the short dim axis with dense vector ops. interpret=True
+(see gumbel_snap.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import constants as C
+
+LB = 8  # layer block per grid step
+
+# Static dim-index tuples for the membership products (constants.py masks,
+# written as explicit indices: Pallas kernels may not capture array
+# constants, and a 7-way static product is VPU-trivial anyway).
+_W_IDX = tuple(d for d in range(7) if C.W_DIMS[d])          # K,C,R,S
+_I_IDX = tuple(d for d in range(7) if C.I_DIMS[d])          # N,C,P,Q,R,S
+_O_IDX = tuple(d for d in range(7) if C.O_DIMS[d])          # N,K,P,Q
+
+
+def _iprod(x, idx):
+    """Product over a static tuple of dim indices of [LB, 7] `x`."""
+    out = x[:, idx[0]]
+    for d in idx[1:]:
+        out = out * x[:, d]
+    return out
+
+
+def _kernel(factors_ref, dims_ref, lmask_ref, comp_ref, t3_ref):
+    f = factors_ref[...]                          # [LB,7,4]
+    dims = dims_ref[...]                          # [LB,7]
+    lm = lmask_ref[...]                           # [LB]
+
+    t0, t1, t2 = f[:, :, C.SLOT_T0], f[:, :, C.SLOT_T1], f[:, :, C.SLOT_T2]
+    sp = f[:, :, C.SLOT_S]
+    # spatial unrolling exists on K (cols) and C (rows) only
+    sp_k = sp[:, C.DIM_K]
+    sp_c = sp[:, C.DIM_C]
+    sp_eff = jnp.ones_like(sp)
+    sp_eff = sp_eff.at[:, C.DIM_K].set(sp_k)
+    sp_eff = sp_eff.at[:, C.DIM_C].set(sp_c)
+
+    inner = t0 * t1 * t2 * sp_eff
+    t3 = dims / jnp.maximum(inner, C.EPS)         # derived DRAM factor
+    # Honest-traffic clamp: an over-tiled dim (inner > dim, t3 < 1) must
+    # not UNDERcount fetches — that would reward constraint violations
+    # with fictitious reuse. P_valid still drives t3 back above 1.
+    t3c = jnp.maximum(t3, 1.0)
+
+    ops = jnp.prod(dims, axis=1)
+    pes = sp_k * sp_c
+
+    ext0 = t0 * sp_eff
+    ext1 = ext0 * t1
+    ext2 = ext1 * t2
+
+    s_w2 = _iprod(ext2, _W_IDX)
+    s_i2 = _iprod(ext2, _I_IDX)
+    s_w0 = _iprod(ext0, _W_IDX)
+    s_o1 = _iprod(ext1, _O_IDX)
+
+    fetch2 = jnp.prod(t3c, axis=1)
+    fetch0 = jnp.prod(t3c * t2 * t1, axis=1)
+    wcount1 = jnp.prod(t3c * t2, axis=1)
+
+    fill2_i = s_i2 * fetch2
+    fill2_w = s_w2 * fetch2
+    fill0_w = s_w0 * fetch0
+
+    # Bcast_I = spatial K (inputs broadcast across array columns);
+    # Reduce_O = spatial C (partial sums reduced across array rows).
+    read_pe_i = ops / jnp.maximum(sp_k, C.EPS)
+    read0_w = ops                                  # Bcast_W == 1
+
+    accwb_o = ops / jnp.maximum(sp_c, C.EPS)
+    wb0_o = s_o1 * wcount1
+
+    comp = jnp.stack(
+        [
+            ops, pes, fill2_i, fill2_w, fill0_w, read_pe_i, accwb_o, wb0_o,
+            s_w2, s_i2, s_o1,
+            ext2[:, C.DIM_P], ext2[:, C.DIM_Q],
+            ext2[:, C.DIM_K], ext2[:, C.DIM_C],
+            read0_w,
+        ],
+        axis=1,
+    )
+    comp_ref[...] = comp * lm[:, None]
+    t3_ref[...] = jnp.where(lm[:, None] > 0, t3, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def traffic(factors, dims, layer_mask):
+    """Pallas entry point; signature mirrors `ref.ref_traffic`."""
+    l = factors.shape[0]
+    assert l % LB == 0, f"layer count {l} must be a multiple of {LB}"
+    grid = (l // LB,)
+    comp, t3 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((LB, 7, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((LB, 7), lambda i: (i, 0)),
+            pl.BlockSpec((LB,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((LB, C.NCOMP), lambda i: (i, 0)),
+            pl.BlockSpec((LB, 7), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, C.NCOMP), jnp.float32),
+            jax.ShapeDtypeStruct((l, 7), jnp.float32),
+        ],
+        interpret=True,
+    )(factors, dims, layer_mask)
+    return comp, t3

@@ -1,0 +1,271 @@
+"""L2: the unified differentiable energy/latency/EDP model of FADiff.
+
+Composes the L1 Pallas kernels (`gumbel_snap`, `traffic`) into the paper's
+cost model:
+
+  * fusion-aware boundary modulation           Eqs. (13)-(15)
+  * roofline latency                           Eq.  (16)
+  * compute + data-movement energy             Eqs. (17)-(19)
+  * augmented loss with penalty terms          Eqs. (20)-(26)
+
+Three entry points are AOT-lowered by `aot.py`:
+
+  loss_and_grad  — value_and_grad of the augmented loss w.r.t.
+                   (theta, sigma_logit); the FADiff optimization hot path.
+  eval_batch     — discrete EDP/energy/latency/feasibility for a
+                   population of candidate strategies (GA / BO hot path).
+  detail         — single-strategy per-layer breakdown (validation, Fig 3).
+
+Conventions: all tensors f32; `sigma_logit[i]` controls the edge
+v_i -> v_{i+1}; padding handled by `layer_mask` / `edge_mask`. The loss
+uses log(EDP) + lambda * (normalized penalties): the log is a monotone
+transform of the paper's EDP objective (same optimum, scale-invariant
+gradients across workloads whose raw EDP spans 1e10..1e15), and penalties
+are expressed as relative violations for the same reason (DESIGN.md §2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import constants as C
+from .kernels import gumbel_snap, traffic
+from .kernels.ad import gumbel_snap_ad, traffic_ad
+
+ACC_BYTES = 4.0  # the L1 accumulator holds 4-byte partial sums
+
+
+def _shift_in(x):
+    """sigma of the incoming edge of each layer: sig_in[l] = sig_out[l-1]."""
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
+
+
+def _group_scan(s_bytes, sig_in):
+    """Soft fusion-group footprint R_l = S_l + sigma_in[l] * R_{l-1}.
+
+    The differentiable analogue of Eq. (24)'s per-group sum; with binary
+    sigma the scan reproduces the exact running group totals.
+    """
+
+    def step(r_prev, xs):
+        s_l, sg = xs
+        r = s_l + sg * r_prev
+        return r, r
+
+    _, r = jax.lax.scan(step, 0.0, (s_bytes, sig_in))
+    return r
+
+
+# --------------------------------------------------------------------------
+# cost aggregation (fusion boundary + latency + energy)
+# --------------------------------------------------------------------------
+
+def fusion_costs(comp, sigma, edge_mask, layer_mask, hw):
+    """Fusion-modulated per-level accesses, latency and energy per layer.
+
+    Args:
+      comp:       [L, NCOMP] traffic components from the L1 kernel.
+      sigma:      [L] continuous fusion variable for edge l -> l+1, in [0,1].
+      edge_mask:  [L] 1.0 where that edge is fusible.
+      layer_mask: [L] real-layer mask.
+      hw:         [NHW] hardware vector (see constants.py).
+    """
+    sig_out = sigma * edge_mask * layer_mask          # edge leaving layer l
+    sig_in = _shift_in(sig_out)
+
+    ops = comp[:, C.C_OPS]
+    pes = jnp.maximum(comp[:, C.C_PES], 1.0)
+    fill2_i = comp[:, C.C_FILL2_I]
+    fill2_w = comp[:, C.C_FILL2_W]
+    fill0_w = comp[:, C.C_FILL0_W]
+    read_pe_i = comp[:, C.C_READPE_I]
+    accwb = comp[:, C.C_ACCWB_O]
+    wb0 = comp[:, C.C_WB0_O]
+    read0_w = comp[:, C.C_READ0_W]
+
+    # Fusion-aware boundary, Eqs. (13)-(15).
+    wb3 = (1.0 - sig_out) * wb0                       # L1 -> L3 write-back
+    copy12 = sig_out * wb0                            # L1 -> L2 on-chip copy
+    fill2_i_eff = (1.0 - sig_in) * fill2_i            # consumer skips DRAM
+
+    a3 = fill2_i_eff + fill2_w + wb3                  # DRAM port traffic
+    a2 = fill2_i_eff + fill2_w + fill0_w + read_pe_i + copy12
+    a1 = accwb + wb0                                  # acc writes + drains
+    a0 = fill0_w + read0_w                            # PE register file
+
+    eb = hw[C.HW_EB]
+    # Roofline latency, Eq. (16); L0 is array-internal (bandwidth-matched).
+    lat = jnp.maximum(ops / pes,
+                      jnp.maximum(a3 * eb / hw[C.HW_BW3],
+                                  jnp.maximum(a2 * eb / hw[C.HW_BW2],
+                                              a1 * eb / hw[C.HW_BW1])))
+    lat = lat * layer_mask
+
+    # Energy, Eqs. (17)-(19).
+    en = (ops * hw[C.HW_EPO]
+          + a3 * hw[C.HW_EPA3] + a2 * hw[C.HW_EPA2]
+          + a1 * hw[C.HW_EPA1] + a0 * hw[C.HW_EPA0])
+    en = en * layer_mask
+
+    latency = jnp.sum(lat)
+    energy = jnp.sum(en)
+    return {
+        "access": jnp.stack([a0, a1, a2, a3], axis=1) * layer_mask[:, None],
+        "lat_l": lat,
+        "en_l": en,
+        "latency": latency,
+        "energy": energy,
+        "edp": energy * latency,
+        "wb3": wb3,
+        "copy12": copy12,
+    }
+
+
+# --------------------------------------------------------------------------
+# penalties (Eqs. (20)-(26))
+# --------------------------------------------------------------------------
+
+def penalties(theta, factors, t3, comp, sigma, edge_mask, layer_mask, hw):
+    """Normalized mapping-validity, memory-capacity, alignment penalties."""
+    sd = jnp.asarray(C.SPATIAL_DIMS, jnp.float32)
+    lm2 = layer_mask[:, None]
+
+    # --- P_map = P_valid + P_spatial (Eqs. (21)-(23)) ---------------------
+    # Violations are measured in LOG-relative form, matching the log-EDP
+    # objective's scale: a 2x overflow costs the same no matter whether it
+    # is 2 KB over an 1 KB budget or 1 MB over 512 KB. (The paper's raw
+    # quadratic form makes penalty gradients dwarf the objective by many
+    # orders of magnitude on large workloads; DESIGN.md §2.)
+    def logviol(ratio):
+        return jnp.maximum(0.0, jnp.log(jnp.maximum(ratio, C.EPS))) ** 2
+
+    t_cont = jnp.exp2(theta)                       # raw continuous factors
+    p_valid = (jnp.sum(jnp.maximum(0.0, 1.0 - t_cont) ** 2
+                       * layer_mask[:, None, None])
+               + jnp.sum(logviol(1.0 / jnp.maximum(t3, C.EPS)) * lm2))
+
+    sp = factors[:, :, C.SLOT_S]
+    sp_eff = jnp.where(sd > 0, sp, 1.0)
+    n_pe = hw[C.HW_PE_ROWS] * hw[C.HW_PE_COLS]
+    pes = jnp.prod(sp_eff, axis=1)
+    p_spatial = jnp.sum(logviol(pes / n_pe) * layer_mask)
+    # Gemmini refinement: per-axis limits (K on columns, C on rows).
+    p_spatial += jnp.sum(
+        logviol(sp[:, C.DIM_K] / hw[C.HW_PE_COLS]) * layer_mask)
+    p_spatial += jnp.sum(
+        logviol(sp[:, C.DIM_C] / hw[C.HW_PE_ROWS]) * layer_mask)
+    p_map = p_valid + p_spatial
+
+    # --- P_mem (Eqs. (24)-(25)) -------------------------------------------
+    eb = hw[C.HW_EB]
+    s_l2 = (comp[:, C.C_SW2] + comp[:, C.C_SI2]) * eb      # per-layer bytes
+    sig_out = sigma * edge_mask * layer_mask
+    r = _group_scan(s_l2, _shift_in(sig_out))
+    p_mem = jnp.sum(logviol(r / hw[C.HW_C2]) * layer_mask)
+    s_l1 = comp[:, C.C_SO1] * ACC_BYTES
+    p_mem += jnp.sum(logviol(s_l1 / hw[C.HW_C1]) * layer_mask)
+
+    # --- P_align (Eq. (26)), sigma-weighted so it binds where fusing ------
+    tp, tq = comp[:, C.C_TP2], comp[:, C.C_TQ2]
+    tk, tc = comp[:, C.C_TK2], comp[:, C.C_TC2]
+
+    def rel(a, b):
+        return ((a - b) / (a + b + C.EPS)) ** 2
+
+    def nxt(x):
+        return jnp.concatenate([x[1:], jnp.ones((1,), x.dtype)])
+
+    pair = rel(tp, nxt(tp)) + rel(tq, nxt(tq)) + rel(tk, nxt(tc))
+    p_align = jnp.sum(pair * sig_out)
+
+    return p_map, p_mem, p_align
+
+
+def _violation(comp, t3, factors, sigma_bin, edge_mask, layer_mask, hw):
+    """Hard feasibility signal (relative violation, 0 = feasible)."""
+    eb = hw[C.HW_EB]
+    s_l2 = (comp[:, C.C_SW2] + comp[:, C.C_SI2]) * eb
+    sig_out = sigma_bin * edge_mask * layer_mask
+    r = _group_scan(s_l2, _shift_in(sig_out))
+    viol = jnp.sum(jnp.maximum(0.0, r / hw[C.HW_C2] - 1.0) * layer_mask)
+    viol += jnp.sum(
+        jnp.maximum(0.0, comp[:, C.C_SO1] * ACC_BYTES / hw[C.HW_C1] - 1.0)
+        * layer_mask)
+    sd = jnp.asarray(C.SPATIAL_DIMS, jnp.float32)
+    sp = factors[:, :, C.SLOT_S]
+    pes = jnp.prod(jnp.where(sd > 0, sp, 1.0), axis=1)
+    n_pe = hw[C.HW_PE_ROWS] * hw[C.HW_PE_COLS]
+    viol += jnp.sum(jnp.maximum(0.0, pes / n_pe - 1.0) * layer_mask)
+    viol += jnp.sum(jnp.maximum(0.0, 1.0 - t3) * layer_mask[:, None])
+    return viol
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def loss_fn(theta, sigma_logit, dims, div, div_mask, layer_mask, edge_mask,
+            gumbel, tau, alpha, lam, hw):
+    """Augmented loss (Eq. (20)) on the continuous relaxation."""
+    soft, hard = gumbel_snap_ad(theta, div, div_mask, gumbel, tau, alpha)
+    # Straight-through estimator: discrete forward, soft backward.
+    st = soft + jax.lax.stop_gradient(hard - soft)
+    comp, t3 = traffic_ad(st, dims, layer_mask)
+    sigma = jax.nn.sigmoid(sigma_logit)
+    cost = fusion_costs(comp, sigma, edge_mask, layer_mask, hw)
+    p_map, p_mem, p_align = penalties(
+        theta, st, t3, comp, sigma, edge_mask, layer_mask, hw)
+    pen = p_map + p_mem + p_align
+    loss = jnp.log(cost["edp"] + C.EPS) + lam.reshape(()) * pen
+    aux = (cost["edp"], cost["energy"], cost["latency"], pen)
+    return loss, aux
+
+
+def loss_and_grad(theta, sigma_logit, dims, div, div_mask, layer_mask,
+                  edge_mask, gumbel, tau, alpha, lam, hw):
+    """The gradient-search hot path: value, aux metrics, and gradients."""
+    (loss, aux), (g_theta, g_sigma) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(
+            theta, sigma_logit, dims, div, div_mask, layer_mask, edge_mask,
+            gumbel, tau, alpha, lam, hw)
+    edp, energy, latency, pen = aux
+    return loss, edp, energy, latency, pen, g_theta, g_sigma
+
+
+def eval_one(factors, sigma_bin, dims, layer_mask, edge_mask, hw):
+    """Discrete evaluation of one decoded strategy."""
+    comp, t3 = traffic(factors, dims, layer_mask)
+    cost = fusion_costs(comp, sigma_bin, edge_mask, layer_mask, hw)
+    viol = _violation(comp, t3, factors, sigma_bin, edge_mask, layer_mask, hw)
+    return cost["edp"], cost["energy"], cost["latency"], viol
+
+
+def eval_batch(factors, sigma_bin, dims, layer_mask, edge_mask, hw):
+    """Population evaluation for GA/BO: one PJRT call per generation.
+
+    factors: [B, L, 7, 4]; sigma_bin: [B, L]. The traffic kernel runs once
+    over the flattened [B*L] layer axis (single grid launch), then the
+    per-candidate reductions are vectorized with vmap.
+    """
+    b, l = factors.shape[0], factors.shape[1]
+    flat = factors.reshape(b * l, 7, 4)
+    dims_b = jnp.broadcast_to(dims, (b, l, 7)).reshape(b * l, 7)
+    lm_b = jnp.broadcast_to(layer_mask, (b, l)).reshape(b * l)
+    comp, t3 = traffic(flat, dims_b, lm_b)
+    comp = comp.reshape(b, l, C.NCOMP)
+    t3 = t3.reshape(b, l, 7)
+
+    def one(comp_i, t3_i, fac_i, sig_i):
+        cost = fusion_costs(comp_i, sig_i, edge_mask, layer_mask, hw)
+        viol = _violation(comp_i, t3_i, fac_i, sig_i, edge_mask,
+                          layer_mask, hw)
+        return cost["edp"], cost["energy"], cost["latency"], viol
+
+    return jax.vmap(one)(comp, t3, factors, sigma_bin)
+
+
+def detail(factors, sigma_bin, dims, layer_mask, edge_mask, hw):
+    """Single-strategy per-layer breakdown for validation and Fig 3."""
+    comp, t3 = traffic(factors, dims, layer_mask)
+    cost = fusion_costs(comp, sigma_bin, edge_mask, layer_mask, hw)
+    return (cost["edp"], cost["energy"], cost["latency"],
+            comp, cost["access"], cost["lat_l"], cost["en_l"], t3)

@@ -1,0 +1,71 @@
+"""Shared fixtures/helpers for the FADiff python test suite."""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from compile import constants as C
+
+
+def divisors(n, k_max=C.K_MAX):
+    """Divisor candidates of n, log-subsampled to k_max (mirrors Rust)."""
+    ds = [j for j in range(1, n + 1) if n % j == 0]
+    if len(ds) <= k_max:
+        return ds
+    # keep 1 and n, evenly subsample the interior by index
+    idx = np.unique(np.round(np.linspace(0, len(ds) - 1, k_max)).astype(int))
+    return [ds[i] for i in idx]
+
+
+def divisor_tables(dims, k_max=C.K_MAX):
+    """Build padded [L,7,K] divisor/mask tables for a dims array."""
+    l = dims.shape[0]
+    div = np.ones((l, 7, k_max), np.float32)
+    mask = np.zeros((l, 7, k_max), np.float32)
+    for i in range(l):
+        for d in range(7):
+            ds = divisors(int(dims[i, d]), k_max)
+            div[i, d, :len(ds)] = ds
+            mask[i, d, :len(ds)] = 1.0
+    return div, mask
+
+
+def hw_vector(pe_rows=32, pe_cols=32, l1_kb=64, l2_kb=512,
+              bw3=16, bw2=64, bw1=64,
+              epa3=100.0, epa2=2.6, epa1=1.06, epa0=0.05,
+              epo=0.3, eb=2.0):
+    hw = np.zeros(C.NHW, np.float32)
+    hw[C.HW_PE_ROWS] = pe_rows
+    hw[C.HW_PE_COLS] = pe_cols
+    hw[C.HW_C1] = l1_kb * 1024
+    hw[C.HW_C2] = l2_kb * 1024
+    hw[C.HW_BW3] = bw3
+    hw[C.HW_BW2] = bw2
+    hw[C.HW_BW1] = bw1
+    hw[C.HW_EPA3] = epa3
+    hw[C.HW_EPA2] = epa2
+    hw[C.HW_EPA1] = epa1
+    hw[C.HW_EPA0] = epa0
+    hw[C.HW_EPO] = epo
+    hw[C.HW_EB] = eb
+    return hw
+
+
+def conv_chain(l_total=C.L_MAX):
+    """A small VGG-ish conv chain padded to l_total; returns dims, masks."""
+    layers = [
+        [1, 64, 3, 224, 224, 3, 3],
+        [1, 64, 64, 224, 224, 3, 3],
+        [1, 128, 64, 112, 112, 3, 3],
+        [1, 128, 128, 112, 112, 3, 3],
+    ]
+    dims = np.ones((l_total, 7), np.float32)
+    dims[:len(layers)] = np.asarray(layers, np.float32)
+    lmask = np.zeros(l_total, np.float32)
+    lmask[:len(layers)] = 1.0
+    emask = np.zeros(l_total, np.float32)
+    emask[:len(layers) - 1] = 1.0
+    return dims, lmask, emask

@@ -1,0 +1,187 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value regimes; every property asserts
+allclose between kernel and `ref.py`. These are the tests that certify
+what actually gets lowered into the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile.kernels import gumbel_snap, traffic
+from compile.kernels.ad import gumbel_snap_ad, traffic_ad
+from compile.kernels.ref import ref_gumbel_snap, ref_traffic
+
+from .conftest import divisor_tables
+
+LB = 8  # kernel layer-block; L must be a multiple
+
+DIM_POOL = [1, 2, 3, 4, 7, 8, 16, 32, 56, 64, 112, 128, 224, 512, 2048]
+
+
+def _random_problem(rng, l, k):
+    dims = rng.choice(DIM_POOL, (l, 7)).astype(np.float32)
+    div, mask = divisor_tables(dims, k)
+    theta = rng.normal(1.0, 1.5, (l, 7, 4)).astype(np.float32)
+    gum = rng.gumbel(size=(l, 7, 4, k)).astype(np.float32)
+    return dims, div, mask, theta, gum
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([8, 16, 32]),
+    tau=st.floats(0.05, 5.0),
+    alpha=st.floats(0.01, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gumbel_snap_matches_ref(l, k, tau, alpha, seed):
+    rng = np.random.default_rng(seed)
+    dims, div, mask, theta, gum = _random_problem(rng, l, k)
+    tau32, alpha32 = np.float32(tau), np.float32(alpha)
+    s1, h1 = gumbel_snap(theta, div, mask, gum, tau32, alpha32)
+    s2, h2 = ref_gumbel_snap(*map(jnp.asarray,
+                                  (theta, div, mask, gum, tau32, alpha32)))
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h1, h2, rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    frac_pad=st.floats(0.0, 0.5),
+)
+def test_traffic_matches_ref(l, seed, frac_pad):
+    rng = np.random.default_rng(seed)
+    dims, div, mask, theta, _ = _random_problem(rng, l, 16)
+    # random *divisor* factors so products stay meaningful
+    idx = rng.integers(0, 16, (l, 7, 4))
+    factors = np.take_along_axis(
+        np.broadcast_to(div[:, :, None, :], (l, 7, 4, 16)),
+        idx[..., None], axis=-1)[..., 0].astype(np.float32)
+    # some padding layers
+    lm = np.ones(l, np.float32)
+    lm[int(l * (1 - frac_pad)):] = 0.0
+    c1, t31 = traffic(factors, dims, lm)
+    c2, t32 = ref_traffic(*map(jnp.asarray, (factors, dims, lm)))
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(t31, t32, rtol=1e-5, atol=1e-5)
+
+
+def test_gumbel_snap_hard_is_valid_divisor():
+    rng = np.random.default_rng(3)
+    dims, div, mask, theta, gum = _random_problem(rng, 16, 16)
+    _, hard = gumbel_snap(theta, div, mask, gum, np.float32(0.5),
+                          np.float32(0.1))
+    hard = np.asarray(hard)
+    for i in range(16):
+        for d in range(7):
+            n = int(dims[i, d])
+            for m in range(4):
+                f = hard[i, d, m]
+                assert f >= 1 and n % int(round(f)) == 0, (
+                    f"snap produced non-divisor {f} of {n}")
+
+
+def test_gumbel_snap_zero_tau_limit_prefers_nearest():
+    """As tau -> small and no noise, hard snap = nearest divisor."""
+    l = 8
+    dims = np.full((l, 7), 12.0, np.float32)
+    div, mask = divisor_tables(dims, 8)
+    theta = np.log2(np.full((l, 7, 4), 3.8, np.float32))  # nearest div = 4
+    gum = np.zeros((l, 7, 4, 8), np.float32)
+    _, hard = gumbel_snap(theta, div, mask, gum, np.float32(0.01),
+                          np.float32(1.0))
+    np.testing.assert_allclose(np.asarray(hard), 4.0)
+
+
+def test_traffic_ops_and_pes():
+    """Ops = prod(dims); PEs = spatial K * spatial C."""
+    l = 8
+    dims = np.ones((l, 7), np.float32)
+    dims[0] = [2, 8, 4, 6, 6, 3, 3]
+    factors = np.ones((l, 7, 4), np.float32)
+    factors[0, C.DIM_K, C.SLOT_S] = 8
+    factors[0, C.DIM_C, C.SLOT_S] = 2
+    lm = np.zeros(l, np.float32)
+    lm[0] = 1
+    comp, _ = traffic(factors, dims, lm)
+    comp = np.asarray(comp)
+    assert comp[0, C.C_OPS] == 2 * 8 * 4 * 6 * 6 * 3 * 3
+    assert comp[0, C.C_PES] == 16
+    # spatial on non-K/C dims must not affect PEs
+    factors[0, C.DIM_P, C.SLOT_S] = 4
+    comp2, _ = traffic(factors, dims, lm)
+    assert np.asarray(comp2)[0, C.C_PES] == 16
+
+
+def test_traffic_padding_layers_are_zero():
+    l = 8
+    dims = np.full((l, 7), 4.0, np.float32)
+    factors = np.full((l, 7, 4), 1.0, np.float32)
+    lm = np.zeros(l, np.float32)
+    comp, t3 = traffic(factors, dims, lm)
+    np.testing.assert_allclose(np.asarray(comp), 0.0)
+    np.testing.assert_allclose(np.asarray(t3), 1.0)
+
+
+def test_traffic_tilesize_fetchcount_identity():
+    """Eq. (4)-(6): full tiling at L2 => fill equals tensor size once."""
+    l = 8
+    dims = np.ones((l, 7), np.float32)
+    dims[0] = [1, 16, 8, 10, 10, 3, 3]
+    factors = np.ones((l, 7, 4), np.float32)
+    factors[0, :, C.SLOT_T2] = dims[0]          # entire problem tiled at L2
+    lm = np.zeros(l, np.float32)
+    lm[0] = 1
+    comp, t3 = traffic(factors, dims, lm)
+    comp = np.asarray(comp)
+    w_size = 16 * 8 * 3 * 3
+    i_size = 1 * 8 * 10 * 10 * 3 * 3
+    assert comp[0, C.C_FILL2_W] == w_size
+    assert comp[0, C.C_FILL2_I] == i_size
+    np.testing.assert_allclose(np.asarray(t3)[0], 1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ad_wrappers_forward_equals_kernel(seed):
+    rng = np.random.default_rng(seed)
+    dims, div, mask, theta, gum = _random_problem(rng, 8, 8)
+    tau, alpha = np.float32(1.0), np.float32(0.1)
+    s1, h1 = gumbel_snap(theta, div, mask, gum, tau, alpha)
+    s2, h2 = gumbel_snap_ad(theta, div, mask, gum, tau, alpha)
+    np.testing.assert_allclose(s1, s2, rtol=0)
+    np.testing.assert_allclose(h1, h2, rtol=0)
+    lm = np.ones(8, np.float32)
+    c1, t1 = traffic(np.asarray(h1), dims, lm)
+    c2, t2 = traffic_ad(jnp.asarray(np.asarray(h1)), jnp.asarray(dims),
+                        jnp.asarray(lm))
+    np.testing.assert_allclose(c1, c2, rtol=0)
+    np.testing.assert_allclose(t1, t2, rtol=0)
+
+
+def test_ad_wrapper_gradient_matches_ref_gradient():
+    """custom_vjp backward must equal the oracle's autodiff gradient."""
+    import jax
+
+    rng = np.random.default_rng(7)
+    dims, div, mask, theta, gum = _random_problem(rng, 8, 8)
+    tau, alpha = np.float32(1.0), np.float32(0.1)
+
+    def via_kernel(th):
+        soft, _ = gumbel_snap_ad(th, div, mask, gum, tau, alpha)
+        return jnp.sum(soft ** 2)
+
+    def via_ref(th):
+        soft, _ = ref_gumbel_snap(th, jnp.asarray(div), jnp.asarray(mask),
+                                  jnp.asarray(gum), tau, alpha)
+        return jnp.sum(soft ** 2)
+
+    g1 = jax.grad(via_kernel)(jnp.asarray(theta))
+    g2 = jax.grad(via_ref)(jnp.asarray(theta))
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,174 @@
+"""L2 model semantics: fusion boundary, penalties, gradients, batched eval."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile import model
+
+from .conftest import conv_chain, divisor_tables, hw_vector
+
+
+def _loss_inputs(seed=0, sigma_logit=None, theta=None, lam=1.0, hw=None):
+    rng = np.random.default_rng(seed)
+    dims, lmask, emask = conv_chain()
+    div, dmask = divisor_tables(dims)
+    if theta is None:
+        theta = rng.normal(1.0, 1.0, (C.L_MAX, 7, 4)).astype(np.float32)
+    if sigma_logit is None:
+        sigma_logit = np.zeros(C.L_MAX, np.float32)
+    gum = np.zeros((C.L_MAX, 7, 4, C.K_MAX), np.float32)
+    if hw is None:
+        hw = hw_vector()
+    return [jnp.asarray(x) for x in (
+        theta, sigma_logit, dims, div, dmask, lmask, emask, gum,
+        np.float32(1.0), np.float32(0.05), np.float32(lam), hw)]
+
+
+def test_loss_and_grad_finite():
+    out = model.loss_and_grad(*_loss_inputs())
+    loss, edp, en, lat, pen, gt, gs = out
+    assert np.isfinite(float(loss))
+    assert float(edp) > 0 and float(en) > 0 and float(lat) > 0
+    assert bool(jnp.all(jnp.isfinite(gt)))
+    assert bool(jnp.all(jnp.isfinite(gs)))
+
+
+def test_fusion_reduces_dram_traffic():
+    """sigma=1 on an edge must strictly reduce DRAM accesses (Eqs 13-15)."""
+    dims, lmask, emask = conv_chain()
+    factors = np.ones((C.L_MAX, 7, 4), np.float32)
+    factors[:, :, C.SLOT_T2] = dims          # everything resident at L2
+    hw = jnp.asarray(hw_vector())
+    sig0 = jnp.zeros(C.L_MAX)
+    sig1 = jnp.zeros(C.L_MAX).at[0].set(1.0)
+    args = (jnp.asarray(factors), jnp.asarray(dims), jnp.asarray(lmask))
+    comp, _ = model.traffic(*args)
+    c0 = model.fusion_costs(comp, sig0, jnp.asarray(emask),
+                            jnp.asarray(lmask), hw)
+    c1 = model.fusion_costs(comp, sig1, jnp.asarray(emask),
+                            jnp.asarray(lmask), hw)
+    a3_0 = float(jnp.sum(c0["access"][:, 3]))
+    a3_1 = float(jnp.sum(c1["access"][:, 3]))
+    assert a3_1 < a3_0, "fusion did not reduce DRAM traffic"
+    # on-chip copy appears instead
+    assert float(jnp.sum(c1["copy12"])) > 0
+    assert float(jnp.sum(c0["copy12"])) == 0
+
+
+def test_fusion_sigma_monotone_in_edp():
+    """For a bandwidth-bound chain, EDP decreases monotonically in sigma."""
+    dims, lmask, emask = conv_chain()
+    factors = np.ones((C.L_MAX, 7, 4), np.float32)
+    factors[:, :, C.SLOT_T2] = dims
+    hw = jnp.asarray(hw_vector())
+    comp, _ = model.traffic(jnp.asarray(factors), jnp.asarray(dims),
+                            jnp.asarray(lmask))
+    prev = None
+    for s in (0.0, 0.25, 0.5, 0.75, 1.0):
+        sig = jnp.full((C.L_MAX,), s)
+        cost = model.fusion_costs(comp, sig, jnp.asarray(emask),
+                                  jnp.asarray(lmask), hw)
+        edp = float(cost["edp"])
+        if prev is not None:
+            assert edp <= prev * (1 + 1e-6)
+        prev = edp
+
+
+def test_sigma_gradient_sign_points_toward_fusion():
+    """With fusion profitable, d loss / d sigma_logit must be negative."""
+    out = model.loss_and_grad(*_loss_inputs(lam=0.0))
+    gs = np.asarray(out[6])
+    dims, lmask, emask = conv_chain()
+    real_edges = int(emask.sum())
+    assert (gs[:real_edges] < 0).all(), gs[:real_edges + 1]
+
+
+def test_penalty_spatial_overflow():
+    """Spatial factors beyond the PE array must be penalized."""
+    theta = np.zeros((C.L_MAX, 7, 4), np.float32)
+    theta[:, C.DIM_K, C.SLOT_S] = 7.0          # 2^7 = 128 > 32 cols
+    args = _loss_inputs(theta=theta)
+    out = model.loss_and_grad(*args)
+    pen = float(out[4])
+    assert pen > 0
+
+
+def test_penalty_zero_for_trivial_mapping():
+    """All-ones factors (everything at DRAM) violate nothing."""
+    theta = np.zeros((C.L_MAX, 7, 4), np.float32)   # 2^0 = 1
+    out = model.loss_and_grad(*_loss_inputs(theta=theta))
+    # alignment: sigma=0.5 default with equal tiles => tiny alignment term
+    assert float(out[4]) < 1e-3
+
+
+def test_group_scan_matches_exact_group_sums():
+    """Binary sigma scan == exact per-group running footprint."""
+    s = jnp.asarray(np.array([10., 20., 30., 40., 50.], np.float32))
+    sig_in = jnp.asarray(np.array([0., 1., 1., 0., 1.], np.float32))
+    r = model._group_scan(s, sig_in)
+    np.testing.assert_allclose(np.asarray(r), [10., 30., 60., 40., 90.])
+
+
+def test_eval_batch_matches_eval_one():
+    rng = np.random.default_rng(5)
+    dims, lmask, emask = conv_chain()
+    hw = hw_vector()
+    b = 4
+    fac = np.ones((b, C.L_MAX, 7, 4), np.float32)
+    for i in range(b):
+        fac[i, :, :, C.SLOT_T1] = rng.choice([1, 2, 4], (C.L_MAX, 7))
+    sig = (rng.random((b, C.L_MAX)) > 0.5).astype(np.float32)
+    eb, enb, latb, vb = model.eval_batch(*map(jnp.asarray,
+                                              (fac, sig, dims, lmask,
+                                               emask, hw)))
+    for i in range(b):
+        e1, en1, lat1, v1 = model.eval_one(*map(jnp.asarray,
+                                                (fac[i], sig[i], dims, lmask,
+                                                 emask, hw)))
+        np.testing.assert_allclose(float(eb[i]), float(e1), rtol=1e-5)
+        np.testing.assert_allclose(float(vb[i]), float(v1), rtol=1e-5)
+
+
+def test_detail_totals_consistent():
+    dims, lmask, emask = conv_chain()
+    hw = hw_vector()
+    fac = np.ones((C.L_MAX, 7, 4), np.float32)
+    sig = np.zeros(C.L_MAX, np.float32)
+    edp, en, lat, comp, access, lat_l, en_l, t3 = model.detail(
+        *map(jnp.asarray, (fac, sig, dims, lmask, emask, hw)))
+    np.testing.assert_allclose(float(en), float(jnp.sum(en_l)), rtol=1e-6)
+    np.testing.assert_allclose(float(lat), float(jnp.sum(lat_l)), rtol=1e-6)
+    np.testing.assert_allclose(float(edp), float(en) * float(lat), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), lam=st.floats(0.1, 10.0))
+def test_loss_grad_always_finite(seed, lam):
+    out = model.loss_and_grad(*_loss_inputs(seed=seed, lam=lam))
+    assert np.isfinite(float(out[0]))
+    assert bool(jnp.all(jnp.isfinite(out[5])))
+    assert bool(jnp.all(jnp.isfinite(out[6])))
+
+
+def test_latency_roofline_compute_bound():
+    """A tiny-traffic, big-compute layer must be compute-bound (Eq 16)."""
+    dims = np.ones((C.L_MAX, 7), np.float32)
+    dims[0] = [1, 32, 32, 1, 1, 1, 1]          # 1024 MACs
+    lmask = np.zeros(C.L_MAX, np.float32)
+    lmask[0] = 1
+    emask = np.zeros(C.L_MAX, np.float32)
+    fac = np.ones((C.L_MAX, 7, 4), np.float32)
+    fac[0, C.DIM_K, C.SLOT_S] = 32
+    fac[0, C.DIM_C, C.SLOT_S] = 32
+    fac[0, :, C.SLOT_T2] = dims[0] / fac[0, :, C.SLOT_S]
+    hw = hw_vector(bw3=1e9, bw2=1e9, bw1=1e9)   # infinite bandwidth
+    comp, _ = model.traffic(jnp.asarray(fac), jnp.asarray(dims),
+                            jnp.asarray(lmask))
+    cost = model.fusion_costs(comp, jnp.zeros(C.L_MAX), jnp.asarray(emask),
+                              jnp.asarray(lmask), jnp.asarray(hw))
+    ops = 32 * 32
+    np.testing.assert_allclose(float(cost["latency"]), ops * 1.0 / 1024,
+                               rtol=1e-6)

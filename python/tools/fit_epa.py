@@ -1,0 +1,84 @@
+"""Fit the on-chip EPA (energy-per-access) MLP and bake its weights.
+
+The paper (Sec 2.1) models the energy-per-access of on-chip buffers with
+"a small MLP as a function of buffer capacity". The silicon calibration
+data behind the authors' MLP is not published, so we fit the same MLP
+architecture to a CACTI-class analytic target
+
+    epa(kb) = 0.18 + 0.11 * sqrt(kb)        [pJ / element, 2-byte elems]
+
+over capacities 1 KB .. 4 MB. The MLP is 1 -> H -> H -> 1 with tanh
+activations; hidden weights are fixed random features (seeded, so the fit
+is deterministic) and the two output layers are solved in closed form via
+ridge-regularized least squares — no iterative training, bit-identical
+re-runs.
+
+Output: data/epa_mlp.json consumed by BOTH the Rust config layer
+(`rust/src/config/epa.rs`) and the python tests, so L2 and L3 evaluate
+the same EPA curve.
+"""
+
+import json
+import os
+
+import numpy as np
+
+H = 8
+SEED = 20250710
+
+
+def target(kb):
+    return 0.18 + 0.11 * np.sqrt(kb)
+
+
+def fit():
+    rng = np.random.default_rng(SEED)
+    kb = np.logspace(0, np.log10(4096.0), 256)
+    # normalized feature: (log2(KB) - 6) / 6 keeps tanh unsaturated
+    x = ((np.log2(kb) - 6.0) / 6.0)[:, None]
+    y = target(kb)[:, None]
+
+    w1 = rng.normal(0, 1.0, (1, H))
+    b1 = rng.normal(0, 1.0, (H,))
+    h1 = np.tanh(x @ w1 + b1)
+
+    w2 = rng.normal(0, 1.0, (H, H))
+    b2 = rng.normal(0, 1.0, (H,))
+    h2 = np.tanh(h1 @ w2 + b2)
+
+    # closed-form ridge solve for the linear readout
+    a = np.concatenate([h2, np.ones((len(kb), 1))], axis=1)
+    coef = np.linalg.solve(a.T @ a + 1e-6 * np.eye(H + 1), a.T @ y)
+    w3, b3 = coef[:H, 0], coef[H, 0]
+
+    pred = (h2 @ w3 + b3)
+    err = float(np.max(np.abs(pred - y[:, 0]) / y[:, 0]))
+    return {
+        "arch": "1-8-8-1 tanh, input (log2(KB)-6)/6, output pJ/element",
+        "seed": SEED,
+        "max_rel_err": err,
+        "w1": w1.tolist(), "b1": b1.tolist(),
+        "w2": w2.tolist(), "b2": b2.tolist(),
+        "w3": w3.tolist(), "b3": float(b3),
+    }
+
+
+def mlp_epa(weights, kb):
+    """Reference evaluation (mirrored in rust/src/config/epa.rs)."""
+    x = ((np.atleast_1d(np.log2(kb)).astype(np.float64) - 6.0) / 6.0)[:, None]
+    h1 = np.tanh(x @ np.asarray(weights["w1"]) + np.asarray(weights["b1"]))
+    h2 = np.tanh(h1 @ np.asarray(weights["w2"]) + np.asarray(weights["b2"]))
+    return h2 @ np.asarray(weights["w3"]) + weights["b3"]
+
+
+if __name__ == "__main__":
+    w = fit()
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "data",
+                       "epa_mlp.json")
+    out = os.path.normpath(out)
+    with open(out, "w") as f:
+        json.dump(w, f, indent=2)
+    print(f"wrote {out} (max rel err {w['max_rel_err']:.4f})")
+    for kb in (8, 64, 512):
+        print(f"  epa({kb} KB) = {mlp_epa(w, kb)[0]:.4f} pJ/elem "
+              f"(target {target(kb):.4f})")

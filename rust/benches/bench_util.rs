@@ -1,0 +1,36 @@
+//! Shared timing helpers for the custom (harness = false) benches —
+//! criterion is unavailable in the offline image (DESIGN.md §3).
+
+use std::time::Instant;
+
+/// Measure a closure `iters` times; returns (mean_s, min_s, max_s).
+pub fn time<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64, f64) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let sum: f64 = samples.iter().sum();
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0, f64::max);
+    (sum / iters as f64, min, max)
+}
+
+/// Pretty-print a benchmark row.
+pub fn report(name: &str, mean: f64, min: f64, max: f64, unit_note: &str) {
+    println!("{name:<44} mean {:>10} min {:>10} max {:>10}  {unit_note}",
+             fmt(mean), fmt(min), fmt(max));
+}
+
+fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}

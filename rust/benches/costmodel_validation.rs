@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Sec 4.2's cost-model validation (accuracy +
+//! rank correlations vs the golden tile simulator) and time both models.
+//! `cargo bench --bench costmodel_validation`
+
+mod bench_util;
+
+use bench_util::{report, time};
+use fadiff::config::{load_config, repo_root};
+use fadiff::costmodel;
+use fadiff::experiments::validation;
+use fadiff::mapping::Strategy;
+use fadiff::sim::tilesim;
+use fadiff::workload::zoo;
+
+fn main() {
+    let hw = load_config(&repo_root(), "large").expect("config");
+    println!("== Sec 4.2 reproduction: differentiable model vs golden \
+              tile simulator ==\n");
+    let r = validation::run(&hw, 80, 11);
+    println!("{}", validation::render(&r));
+    println!("paper: 96% access accuracy; latency tau/rho = 1.00/1.00; \
+              energy tau/rho = 0.78/0.92\n");
+
+    // model evaluation throughput (native f64 closed form vs simulator)
+    let w = zoo::vgg19();
+    let s = Strategy::trivial(&w);
+    let (mean, min, max) = time(2000, || {
+        let _ = costmodel::evaluate(&s, &w, &hw);
+    });
+    report("closed-form evaluate (vgg19, 19 layers)", mean, min, max,
+           &format!("{:.1}k evals/s", 1e-3 / mean));
+    let (mean, min, max) = time(2000, || {
+        let _ = tilesim::simulate(&s, &w, &hw);
+    });
+    report("tile simulator (vgg19, 19 layers)", mean, min, max,
+           &format!("{:.1}k sims/s", 1e-3 / mean));
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate paper Fig 3 (Z-scored latency/energy trends of the
+//! fused cost model vs the DeFiNES-like depth-first baseline) and time
+//! the analytical models. `cargo bench --bench fig3_fusion_trend`
+
+mod bench_util;
+
+use bench_util::{report, time};
+use fadiff::config::{load_config, repo_root};
+use fadiff::experiments::fig3;
+use fadiff::sim::definesim;
+use fadiff::workload::zoo;
+
+fn main() {
+    let hw = load_config(&repo_root(), "large").expect("config");
+    println!("== Fig 3 reproduction: fusion trend vs depth-first \
+              baseline ==\n");
+    let (two, three) = fig3::run(&hw);
+    println!("{}", fig3::render(&two));
+    println!("{}", fig3::render(&three));
+    println!("paper claim: Z-scored trends closely match for 2- and \
+              3-layer fusion.\n");
+
+    // timing of both analytical models
+    let w = zoo::vgg16();
+    let stack = [w.layers[4].clone(), w.layers[5].clone(),
+                 w.layers[6].clone()];
+    let (mean, min, max) = time(50, || {
+        let _ = fig3::run_panel(&stack, &hw);
+    });
+    report("fig3 3-layer panel (ours + DF, 10 tiles)", mean, min, max, "");
+    let (mean, min, max) = time(200, || {
+        let _ = definesim::sweep_tiles(&stack, &hw);
+    });
+    report("definesim 3-layer tile sweep", mean, min, max, "");
+}

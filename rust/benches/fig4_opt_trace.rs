@@ -1,0 +1,33 @@
+//! Bench: regenerate paper Fig 4 (best EDP vs optimization time for GA,
+//! BO and the gradient method under the same budget, large Gemmini).
+//!
+//! Budget via env FADIFF_F4_SECONDS (default 8).
+//! `cargo bench --bench fig4_opt_trace`
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::experiments::fig4;
+use fadiff::runtime::Runtime;
+use fadiff::workload::zoo;
+
+fn main() {
+    let seconds: f64 = std::env::var("FADIFF_F4_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8.0);
+    let rt = Runtime::load_default().expect("artifacts");
+    let hw = load_config(&repo_root(), "large").expect("config");
+    for w in [zoo::resnet18(), zoo::vgg16()] {
+        println!("== Fig 4 reproduction on {} ({seconds}s budget) ==",
+                 w.name);
+        let r = fig4::run(&rt, &w, &hw, seconds, 1).expect("fig4");
+        println!("{}", fig4::render(&r));
+        let grad = r.methods[0].final_edp;
+        for m in &r.methods[1..] {
+            println!("gradient vs {}: {:.1}x lower EDP at budget end",
+                     m.method, m.final_edp / grad);
+        }
+        println!();
+    }
+    println!("paper claim: the gradient method converges to lower EDP \
+              far faster than GA/BO at every budget.");
+}

@@ -1,0 +1,118 @@
+//! Bench: the optimization hot paths (EXPERIMENTS.md §Perf tracks these).
+//!
+//!   * PJRT gradient step (stage + execute + fetch) — the FADiff inner
+//!     loop; dominates wall-clock per iteration.
+//!   * batched population eval through the AOT artifact (GA/BO path).
+//!   * native closed-form evaluate + decode (incumbent refresh path).
+//!   * end-to-end optimizer throughput (iters/s under a fixed budget).
+//!
+//! `cargo bench --bench perf_hotpath`
+
+mod bench_util;
+
+use bench_util::{report, time};
+use fadiff::config::{load_config, repo_root};
+use fadiff::costmodel;
+use fadiff::mapping::decode::{decode, Relaxed};
+use fadiff::mapping::Strategy;
+use fadiff::runtime::stage::WorkloadStage;
+use fadiff::runtime::{HostTensor, Runtime, ART_EVAL, ART_GRAD};
+use fadiff::search::{gradient, Budget};
+use fadiff::util::rng::Rng;
+use fadiff::workload::zoo;
+
+fn main() {
+    let rt = Runtime::load_default().expect("artifacts");
+    let hw = load_config(&repo_root(), "large").expect("config");
+    let w = zoo::resnet18();
+    let stage = WorkloadStage::new(&w, &hw, rt.manifest.l_max,
+                                   rt.manifest.k_max)
+        .expect("stage");
+    let (l, k) = (rt.manifest.l_max, rt.manifest.k_max);
+    let grad = rt.get(ART_GRAD).expect("grad artifact");
+    let eval = rt.get(ART_EVAL).expect("eval artifact");
+    let mut rng = Rng::new(1);
+
+    // --- PJRT gradient step -------------------------------------------
+    let theta = vec![0.5f32; l * 7 * 4];
+    let sigma = vec![0.0f32; l];
+    let mut gumbel = vec![0.0f32; l * 7 * 4 * k];
+    for g in gumbel.iter_mut() {
+        *g = rng.gumbel() as f32;
+    }
+    let (mean, min, max) = time(300, || {
+        let out = grad
+            .run(&[
+                HostTensor::new(theta.clone()),
+                HostTensor::new(sigma.clone()),
+                stage.dims.clone(),
+                stage.div.clone(),
+                stage.div_mask.clone(),
+                stage.layer_mask.clone(),
+                stage.edge_mask.clone(),
+                HostTensor::new(gumbel.clone()),
+                HostTensor::scalar(1.0),
+                HostTensor::scalar(2.0),
+                HostTensor::scalar(1.0),
+                stage.hw.clone(),
+            ])
+            .unwrap();
+        assert!(out[0][0].is_finite());
+    });
+    report("PJRT gradient step (L=32, K=32)", mean, min, max,
+           &format!("{:.0} steps/s", 1.0 / mean));
+
+    // --- batched population eval ----------------------------------------
+    let pop = vec![Strategy::trivial(&w); rt.manifest.b_eval];
+    let (fac, sig) =
+        stage.pack_population(&pop, rt.manifest.b_eval).unwrap();
+    let (mean, min, max) = time(100, || {
+        let out = eval
+            .run(&[
+                fac.clone(),
+                sig.clone(),
+                stage.dims.clone(),
+                stage.layer_mask.clone(),
+                stage.edge_mask.clone(),
+                stage.hw.clone(),
+            ])
+            .unwrap();
+        assert!(out[0][0].is_finite());
+    });
+    report("PJRT batched eval (B=64 candidates)", mean, min, max,
+           &format!("{:.0}k cand/s", 64.0 / mean / 1e3));
+
+    // --- native paths ---------------------------------------------------
+    let s = Strategy::trivial(&w);
+    let (mean, min, max) = time(5000, || {
+        let _ = costmodel::evaluate(&s, &w, &hw);
+    });
+    report("native closed-form evaluate (21 layers)", mean, min, max,
+           &format!("{:.0}k evals/s", 1e-3 / mean));
+
+    let mut relaxed = Relaxed::neutral(&w);
+    for lix in 0..w.len() {
+        for d in 0..7 {
+            for sl in 0..4 {
+                relaxed.theta[lix][d][sl] = rng.range(0.0, 6.0);
+            }
+        }
+    }
+    let (mean, min, max) = time(2000, || {
+        let _ = decode(&relaxed, &w, &hw);
+    });
+    report("decode relaxed -> valid strategy", mean, min, max,
+           &format!("{:.1}k decodes/s", 1e-3 / mean));
+
+    // --- end-to-end optimizer throughput --------------------------------
+    let budget = Budget { seconds: 5.0, max_iters: usize::MAX };
+    let t0 = std::time::Instant::now();
+    let r = gradient::optimize(&rt, &w, &hw,
+                               &gradient::GradientConfig::default(),
+                               budget)
+        .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\nend-to-end FADiff on resnet18: {} iters in {:.1}s = \
+              {:.0} iters/s, best EDP {:.3e}",
+             r.iters, wall, r.iters as f64 / wall, r.edp);
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Table 1 (EDP across models, configs and
+//! methods under equal budgets) and time the per-cell optimizations.
+//!
+//! Budget via env: FADIFF_T1_SECONDS (default 6), FADIFF_T1_THREADS (4).
+//! `cargo bench --bench table1`
+
+use fadiff::config::repo_root;
+use fadiff::experiments::table1;
+
+fn main() {
+    let seconds: f64 = std::env::var("FADIFF_T1_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6.0);
+    let threads: usize = std::env::var("FADIFF_T1_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    println!("== Table 1 reproduction ({seconds}s/cell, {threads} \
+              threads) ==");
+    let t0 = std::time::Instant::now();
+    let t = table1::run(&repo_root().join("artifacts"), seconds, threads, 1)
+        .expect("table1 run");
+    println!("{}", table1::render(&t));
+    println!("total wall: {:.1}s for {} cells",
+             t0.elapsed().as_secs_f64(), t.cells.len());
+
+    for config in ["large", "small"] {
+        let imp = t.improvement_vs_dosa(config) * 100.0;
+        let fadiff = t.column_geomean(config, "FADiff");
+        let ga = t.column_geomean(config, "GA");
+        let bo = t.column_geomean(config, "BO");
+        println!("[{}] FADiff vs DOSA: {imp:+.1}% (paper: ~{}%), GA \
+                  {:.1}x, BO {:.1}x worse (paper: 1-2 orders)",
+                 config, if config == "large" { 18 } else { 13 },
+                 ga / fadiff, bo / fadiff);
+    }
+}

@@ -1,0 +1,92 @@
+//! Energy-per-access MLP for on-chip buffers.
+//!
+//! The paper (Sec 2.1) models on-chip EPA "using a small MLP as a
+//! function of buffer capacity". The weights are fit offline by
+//! `python/tools/fit_epa.py` against a CACTI-class √capacity curve and
+//! baked into `data/epa_mlp.json`; this module evaluates the identical
+//! network so L2 (python) and L3 (rust) agree bit-for-bit on hardware
+//! constants.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// The 1-8-8-1 tanh MLP: input (log2(KB) - 6) / 6, output pJ/element.
+#[derive(Clone, Debug)]
+pub struct EpaMlp {
+    w1: Vec<Vec<f64>>, // [1][H]
+    b1: Vec<f64>,      // [H]
+    w2: Vec<Vec<f64>>, // [H][H]
+    b2: Vec<f64>,      // [H]
+    w3: Vec<f64>,      // [H]
+    b3: f64,
+}
+
+impl EpaMlp {
+    /// Load from the baked JSON weight file.
+    pub fn from_json(j: &Json) -> Result<EpaMlp> {
+        Ok(EpaMlp {
+            w1: j.get_mat("w1")?,
+            b1: j.get_vec("b1")?,
+            w2: j.get_mat("w2")?,
+            b2: j.get_vec("b2")?,
+            w3: j.get_vec("w3")?,
+            b3: j.get_f64("b3")?,
+        })
+    }
+
+    /// Load from `data/epa_mlp.json` relative to the repo root.
+    pub fn load(repo_root: &std::path::Path) -> Result<EpaMlp> {
+        let text =
+            std::fs::read_to_string(repo_root.join("data/epa_mlp.json"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// EPA in pJ/element for a buffer of `kb` kilobytes.
+    pub fn epa(&self, kb: f64) -> f64 {
+        let h = self.w1[0].len();
+        let x = (kb.max(1e-9).log2() - 6.0) / 6.0;
+        let mut h1 = vec![0.0; h];
+        for j in 0..h {
+            h1[j] = (x * self.w1[0][j] + self.b1[j]).tanh();
+        }
+        let mut h2 = vec![0.0; h];
+        for j in 0..h {
+            let mut acc = self.b2[j];
+            for i in 0..h {
+                acc += h1[i] * self.w2[i][j];
+            }
+            h2[j] = acc.tanh();
+        }
+        let mut y = self.b3;
+        for i in 0..h {
+            y += h2[i] * self.w3[i];
+        }
+        y.max(0.01) // physical floor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+
+    #[test]
+    fn loads_and_is_monotone_ish() {
+        let mlp = EpaMlp::load(&repo_root()).unwrap();
+        let e8 = mlp.epa(8.0);
+        let e64 = mlp.epa(64.0);
+        let e512 = mlp.epa(512.0);
+        assert!(e8 > 0.0 && e64 > e8 && e512 > e64,
+                "{e8} {e64} {e512}");
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // printed by python/tools/fit_epa.py at bake time
+        let mlp = EpaMlp::load(&repo_root()).unwrap();
+        assert!((mlp.epa(8.0) - 0.4026).abs() < 0.01, "{}", mlp.epa(8.0));
+        assert!((mlp.epa(64.0) - 1.0646).abs() < 0.01);
+        assert!((mlp.epa(512.0) - 2.6447).abs() < 0.01);
+    }
+}

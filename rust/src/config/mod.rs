@@ -1,0 +1,194 @@
+//! Hardware configuration: the Gemmini accelerator instances of the paper
+//! (Sec 2.1, Sec 4.1) plus the constants layout shared with the AOT
+//! artifacts (`python/compile/constants.py`).
+
+pub mod epa;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use epa::EpaMlp;
+
+/// Indices into the `hw` vector handed to the AOT artifacts.
+/// MUST mirror `python/compile/constants.py`.
+pub mod hwvec {
+    pub const PE_ROWS: usize = 0;
+    pub const PE_COLS: usize = 1;
+    pub const C1: usize = 2;
+    pub const C2: usize = 3;
+    pub const BW3: usize = 4;
+    pub const BW2: usize = 5;
+    pub const BW1: usize = 6;
+    pub const EPA3: usize = 7;
+    pub const EPA2: usize = 8;
+    pub const EPA1: usize = 9;
+    pub const EPA0: usize = 10;
+    pub const EPO: usize = 11;
+    pub const EB: usize = 12;
+    pub const NHW: usize = 16;
+}
+
+/// A fully-resolved accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    pub name: String,
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// L1 accumulator capacity, bytes.
+    pub c1_bytes: f64,
+    /// L2 scratchpad capacity, bytes.
+    pub c2_bytes: f64,
+    /// Bandwidths, bytes per cycle (1 GHz clock).
+    pub bw_dram: f64,
+    pub bw_l2: f64,
+    pub bw_l1: f64,
+    /// Energy per element access, pJ.
+    pub epa_dram: f64,
+    pub epa_l2: f64,
+    pub epa_l1: f64,
+    pub epa_reg: f64,
+    /// Energy per MAC, pJ.
+    pub energy_per_mac: f64,
+    /// Bytes per element (int8/fp16-class datapath: 2).
+    pub element_bytes: f64,
+    /// Bytes per accumulator entry (fp32 partial sums).
+    pub acc_bytes: f64,
+}
+
+impl HwConfig {
+    /// Total PEs.
+    pub fn n_pe(&self) -> f64 {
+        (self.pe_rows * self.pe_cols) as f64
+    }
+
+    /// Pack into the `hw` input vector of the AOT artifacts.
+    pub fn to_hw_vector(&self) -> Vec<f32> {
+        let mut v = vec![0f32; hwvec::NHW];
+        v[hwvec::PE_ROWS] = self.pe_rows as f32;
+        v[hwvec::PE_COLS] = self.pe_cols as f32;
+        v[hwvec::C1] = self.c1_bytes as f32;
+        v[hwvec::C2] = self.c2_bytes as f32;
+        v[hwvec::BW3] = self.bw_dram as f32;
+        v[hwvec::BW2] = self.bw_l2 as f32;
+        v[hwvec::BW1] = self.bw_l1 as f32;
+        v[hwvec::EPA3] = self.epa_dram as f32;
+        v[hwvec::EPA2] = self.epa_l2 as f32;
+        v[hwvec::EPA1] = self.epa_l1 as f32;
+        v[hwvec::EPA0] = self.epa_reg as f32;
+        v[hwvec::EPO] = self.energy_per_mac as f32;
+        v[hwvec::EB] = self.element_bytes as f32;
+        v
+    }
+}
+
+/// Locate the repository root (directory containing `data/`), walking up
+/// from the current directory — robust to `cargo test` / `cargo bench`
+/// working-directory differences.
+pub fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("data/hw_configs.json").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            // fall back to the compile-time manifest dir
+            return PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        }
+    }
+}
+
+/// Load a named configuration ("large" / "small") from
+/// `data/hw_configs.json`, resolving on-chip EPA through the MLP.
+pub fn load_config(repo: &Path, name: &str) -> Result<HwConfig> {
+    let text = std::fs::read_to_string(repo.join("data/hw_configs.json"))?;
+    let j = Json::parse(&text)?;
+    let mlp = EpaMlp::load(repo)?;
+    config_from_json(&j, &mlp, name)
+}
+
+/// Build a config from parsed JSON (exposed for tests / sweeps).
+pub fn config_from_json(j: &Json, mlp: &EpaMlp, name: &str)
+                        -> Result<HwConfig> {
+    let c = j
+        .get("configs")?
+        .as_obj()?
+        .get(name)
+        .ok_or_else(|| anyhow!("unknown hw config {name:?}"))?;
+    let l1_kb = c.get_f64("l1_kb")?;
+    let l2_kb = c.get_f64("l2_kb")?;
+    Ok(HwConfig {
+        name: name.to_string(),
+        pe_rows: c.get_f64("pe_rows")? as usize,
+        pe_cols: c.get_f64("pe_cols")? as usize,
+        c1_bytes: l1_kb * 1024.0,
+        c2_bytes: l2_kb * 1024.0,
+        bw_dram: c.get_f64("bw_dram")?,
+        bw_l2: c.get_f64("bw_l2")?,
+        bw_l1: c.get_f64("bw_l1")?,
+        epa_dram: j.get_f64("epa_dram")?,
+        epa_l2: mlp.epa(l2_kb),
+        epa_l1: mlp.epa(l1_kb),
+        epa_reg: j.get_f64("epa_reg")?,
+        energy_per_mac: j.get_f64("energy_per_mac")?,
+        element_bytes: j.get_f64("element_bytes")?,
+        acc_bytes: j.get_f64("acc_bytes")?,
+    })
+}
+
+/// A custom sweep configuration derived from `large` with overridden
+/// array/buffer geometry (used by the hw_sweep example).
+pub fn custom_config(repo: &Path, pe: usize, l1_kb: f64, l2_kb: f64)
+                     -> Result<HwConfig> {
+    let mut c = load_config(repo, "large")?;
+    let mlp = EpaMlp::load(repo)?;
+    c.name = format!("custom-{pe}x{pe}-{l1_kb}KB-{l2_kb}KB");
+    c.pe_rows = pe;
+    c.pe_cols = pe;
+    c.c1_bytes = l1_kb * 1024.0;
+    c.c2_bytes = l2_kb * 1024.0;
+    c.epa_l1 = mlp.epa(l1_kb);
+    c.epa_l2 = mlp.epa(l2_kb);
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_paper_configs() {
+        let repo = repo_root();
+        let large = load_config(&repo, "large").unwrap();
+        assert_eq!(large.pe_rows, 32);
+        assert_eq!(large.c2_bytes, 512.0 * 1024.0);
+        let small = load_config(&repo, "small").unwrap();
+        assert_eq!(small.pe_rows, 16);
+        assert_eq!(small.c1_bytes, 8.0 * 1024.0);
+        // larger buffers must cost more energy per access (MLP monotone)
+        assert!(large.epa_l2 > small.epa_l2);
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        assert!(load_config(&repo_root(), "gigantic").is_err());
+    }
+
+    #[test]
+    fn hw_vector_layout() {
+        let c = load_config(&repo_root(), "large").unwrap();
+        let v = c.to_hw_vector();
+        assert_eq!(v.len(), hwvec::NHW);
+        assert_eq!(v[hwvec::PE_ROWS], 32.0);
+        assert_eq!(v[hwvec::C2], 512.0 * 1024.0);
+        assert_eq!(v[hwvec::EB], 2.0);
+    }
+
+    #[test]
+    fn custom_config_overrides() {
+        let c = custom_config(&repo_root(), 8, 4.0, 32.0).unwrap();
+        assert_eq!(c.pe_rows, 8);
+        assert_eq!(c.c1_bytes, 4096.0);
+    }
+}

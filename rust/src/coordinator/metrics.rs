@@ -1,0 +1,64 @@
+//! Coordinator metrics: lock-free counters surfaced on the CLI and the
+//! TCP server's `metrics` verb.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Service counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub started: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+}
+
+impl Metrics {
+    /// Jobs accepted but not finished.
+    pub fn in_flight(&self) -> u64 {
+        let s = self.submitted.load(Ordering::SeqCst);
+        let c = self.completed.load(Ordering::SeqCst)
+            + self.failed.load(Ordering::SeqCst);
+        s.saturating_sub(c)
+    }
+
+    /// Render as a one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} started={} completed={} failed={} in_flight={}",
+            self.submitted.load(Ordering::SeqCst),
+            self.started.load(Ordering::SeqCst),
+            self.completed.load(Ordering::SeqCst),
+            self.failed.load(Ordering::SeqCst),
+            self.in_flight()
+        )
+    }
+
+    /// Render as JSON (server `metrics` verb).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("submitted",
+             num(self.submitted.load(Ordering::SeqCst) as f64)),
+            ("started", num(self.started.load(Ordering::SeqCst) as f64)),
+            ("completed",
+             num(self.completed.load(Ordering::SeqCst) as f64)),
+            ("failed", num(self.failed.load(Ordering::SeqCst) as f64)),
+            ("in_flight", num(self.in_flight() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_flight_accounting() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::SeqCst);
+        m.completed.fetch_add(1, Ordering::SeqCst);
+        m.failed.fetch_add(1, Ordering::SeqCst);
+        assert_eq!(m.in_flight(), 1);
+        assert!(m.summary().contains("in_flight=1"));
+    }
+}

@@ -1,0 +1,275 @@
+//! The scheduling coordinator: a job service that accepts deployment
+//! optimization requests (workload x hardware x method x budget) and
+//! dispatches them to a pool of worker threads, each owning a private
+//! PJRT runtime (the xla crate's client is `Rc`-based and must not cross
+//! threads).
+//!
+//! This is the L3 "production" face of FADiff: a long-running process
+//! (`fadiff serve`) or an embedded library (`Coordinator::new`) that
+//! turns DNN deployment requests into hardware-valid strategies, with
+//! queueing, metrics, and graceful shutdown. Python never runs here —
+//! workers execute the AOT artifacts.
+
+pub mod metrics;
+pub mod server;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{load_config, repo_root};
+use crate::costmodel;
+use crate::runtime::Runtime;
+use crate::search::{bo, ga, gradient, random, Budget, SearchResult};
+use crate::util::threadpool::{oneshot, OneShot, OneShotSender};
+use crate::workload::zoo;
+
+pub use metrics::Metrics;
+
+/// Optimization method selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    FADiff,
+    Dosa,
+    Ga,
+    Bo,
+    Random,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fadiff" | "gradient" => Method::FADiff,
+            "dosa" | "layerwise" => Method::Dosa,
+            "ga" | "genetic" => Method::Ga,
+            "bo" | "bayesian" => Method::Bo,
+            "random" | "rand" => Method::Random,
+            other => return Err(anyhow!("unknown method {other:?}")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FADiff => "fadiff",
+            Method::Dosa => "dosa",
+            Method::Ga => "ga",
+            Method::Bo => "bo",
+            Method::Random => "random",
+        }
+    }
+}
+
+/// A deployment-optimization request.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub workload: String,
+    pub config: String,
+    pub method: Method,
+    pub seconds: f64,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for JobRequest {
+    fn default() -> Self {
+        JobRequest {
+            workload: "resnet18".into(),
+            config: "large".into(),
+            method: Method::FADiff,
+            seconds: 10.0,
+            max_iters: usize::MAX,
+            seed: 0xFAD1FF,
+        }
+    }
+}
+
+/// The outcome handed back to the requester.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub request: JobRequest,
+    /// Per-replica EDP (pJ * cycles).
+    pub edp: f64,
+    /// Full-model EDP (replica^2-scaled, Table-1 units).
+    pub full_model_edp: f64,
+    pub energy: f64,
+    pub latency: f64,
+    /// Fusion groups as (start, end) inclusive layer ranges.
+    pub groups: Vec<(usize, usize)>,
+    /// Layer names per fused group of size > 1.
+    pub fused_names: Vec<Vec<String>>,
+    pub iters: usize,
+    pub evals: usize,
+    pub wall_seconds: f64,
+}
+
+type Envelope = (JobRequest, OneShotSender<Result<JobResult, String>>);
+
+/// The coordinator: queue + worker pool + metrics.
+pub struct Coordinator {
+    tx: Option<Sender<Envelope>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Spawn `n_workers` workers, each compiling its own PJRT runtime
+    /// from `artifacts_dir` (defaults to `<repo>/artifacts`).
+    pub fn new(artifacts_dir: Option<PathBuf>, n_workers: usize)
+               -> Result<Coordinator> {
+        let dir = artifacts_dir
+            .unwrap_or_else(|| repo_root().join("artifacts"));
+        // fail fast if artifacts are missing (workers would panic late)
+        crate::runtime::Manifest::load(&dir)?;
+        let (tx, rx) = channel::<Envelope>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let dir = dir.clone();
+                let metrics = Arc::clone(&metrics);
+                std::thread::Builder::new()
+                    .name(format!("fadiff-coord-{i}"))
+                    .spawn(move || worker_loop(&dir, &rx, &metrics))
+                    .expect("spawn coordinator worker")
+            })
+            .collect();
+        Ok(Coordinator { tx: Some(tx), workers, metrics })
+    }
+
+    /// Submit a job; returns a handle to wait on.
+    pub fn submit(&self, req: JobRequest)
+                  -> OneShot<Result<JobResult, String>> {
+        let (tx, rx) = oneshot();
+        self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("coordinator shut down")
+            .send((req, tx))
+            .expect("workers alive");
+        rx
+    }
+
+    /// Submit and block for the result.
+    pub fn run(&self, req: JobRequest) -> Result<JobResult> {
+        self.submit(req)
+            .wait()
+            .ok_or_else(|| anyhow!("worker dropped the job"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(dir: &std::path::Path,
+               rx: &Arc<Mutex<Receiver<Envelope>>>,
+               metrics: &Arc<Metrics>) {
+    // One PJRT runtime per worker; artifacts compile lazily on first use.
+    let rt = match Runtime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // drain jobs with an error rather than hanging requesters
+            while let Ok((_, reply)) = {
+                let g = rx.lock().unwrap();
+                g.recv()
+            } {
+                reply.send(Err(format!("runtime init failed: {e}")));
+            }
+            return;
+        }
+    };
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let (req, reply) = match job {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        metrics.started.fetch_add(1, Ordering::SeqCst);
+        let out = execute_job(&rt, &req);
+        match &out {
+            Ok(_) => metrics.completed.fetch_add(1, Ordering::SeqCst),
+            Err(_) => metrics.failed.fetch_add(1, Ordering::SeqCst),
+        };
+        reply.send(out.map_err(|e| e.to_string()));
+    }
+}
+
+/// Run one job on a given runtime (also used directly by the CLI).
+pub fn execute_job(rt: &Runtime, req: &JobRequest) -> Result<JobResult> {
+    let w = zoo::by_name(&req.workload)
+        .ok_or_else(|| anyhow!("unknown workload {:?}", req.workload))?;
+    let hw = load_config(&repo_root(), &req.config)?;
+    let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
+    let t0 = std::time::Instant::now();
+    let r: SearchResult = match req.method {
+        Method::FADiff => gradient::optimize(
+            rt, &w, &hw,
+            &gradient::GradientConfig { seed: req.seed,
+                                        ..Default::default() },
+            budget)?,
+        Method::Dosa => gradient::optimize(
+            rt, &w, &hw,
+            &gradient::GradientConfig {
+                seed: req.seed,
+                ..gradient::GradientConfig::dosa()
+            },
+            budget)?,
+        Method::Ga => ga::optimize(
+            &w, &hw, &ga::GaConfig { seed: req.seed, ..Default::default() },
+            budget, rt.manifest.k_max)?,
+        Method::Bo => bo::optimize(
+            &w, &hw, &bo::BoConfig { seed: req.seed, ..Default::default() },
+            budget)?,
+        Method::Random => random::optimize(&w, &hw, req.seed, budget)?,
+    };
+    // final safety: the result must be hardware-valid
+    costmodel::feasible(&r.best, &w, &hw)
+        .map_err(|e| anyhow!("coordinator produced invalid strategy: {e}"))?;
+    let groups = r.best.groups();
+    let fused_names = groups
+        .iter()
+        .filter(|(a, b)| b > a)
+        .map(|&(a, b)| {
+            w.layers[a..=b].iter().map(|l| l.name.clone()).collect()
+        })
+        .collect();
+    Ok(JobResult {
+        request: req.clone(),
+        edp: r.edp,
+        full_model_edp: r.full_model_edp(&w),
+        energy: r.energy,
+        latency: r.latency,
+        groups,
+        fused_names,
+        iters: r.iters,
+        evals: r.evals,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Graceful-shutdown flag shared with the TCP server.
+pub struct ShutdownFlag(pub Arc<AtomicBool>);
+
+impl Default for ShutdownFlag {
+    fn default() -> Self {
+        ShutdownFlag(Arc::new(AtomicBool::new(false)))
+    }
+}

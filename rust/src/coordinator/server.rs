@@ -1,0 +1,212 @@
+//! TCP front-end for the coordinator: a line-delimited JSON protocol.
+//!
+//! Request (one line):
+//!   {"verb": "optimize", "workload": "resnet18", "config": "large",
+//!    "method": "fadiff", "seconds": 5, "seed": 1}
+//!   {"verb": "metrics"}
+//!   {"verb": "ping"}
+//!   {"verb": "shutdown"}
+//!
+//! Response (one line): {"ok": true, ...} or {"ok": false, "error": "..."}.
+//! Each connection may send any number of requests; the server handles
+//! connections on acceptor-spawned threads and forwards jobs to the
+//! coordinator queue.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, s as js, Json};
+
+use super::{Coordinator, JobRequest, JobResult, Method, ShutdownFlag};
+
+/// Parse one request line into a JobRequest (for the `optimize` verb).
+pub fn parse_request(j: &Json) -> Result<JobRequest> {
+    let mut req = JobRequest::default();
+    if let Ok(w) = j.get("workload") {
+        req.workload = w.as_str()?.to_string();
+    }
+    if let Ok(c) = j.get("config") {
+        req.config = c.as_str()?.to_string();
+    }
+    if let Ok(m) = j.get("method") {
+        req.method = Method::parse(m.as_str()?)?;
+    }
+    if let Ok(t) = j.get("seconds") {
+        req.seconds = t.as_f64()?;
+    }
+    if let Ok(i) = j.get("max_iters") {
+        req.max_iters = i.as_usize()?;
+    }
+    if let Ok(sd) = j.get("seed") {
+        req.seed = sd.as_f64()? as u64;
+    }
+    Ok(req)
+}
+
+/// Serialize a JobResult for the wire.
+pub fn result_to_json(r: &JobResult) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("workload", js(&r.request.workload)),
+        ("config", js(&r.request.config)),
+        ("method", js(r.request.method.name())),
+        ("edp", num(r.edp)),
+        ("full_model_edp", num(r.full_model_edp)),
+        ("energy_pj", num(r.energy)),
+        ("latency_cycles", num(r.latency)),
+        ("fused_groups",
+         Json::Arr(r.fused_names
+             .iter()
+             .map(|g| Json::Arr(g.iter().map(|n| js(n)).collect()))
+             .collect())),
+        ("iters", num(r.iters as f64)),
+        ("evals", num(r.evals as f64)),
+        ("wall_seconds", num(r.wall_seconds)),
+    ])
+}
+
+fn error_json(msg: &str) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", js(msg))])
+}
+
+/// Handle one client connection.
+fn handle(stream: TcpStream, coord: &Coordinator, shutdown: &ShutdownFlag)
+          -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = match Json::parse(trimmed) {
+            Err(e) => error_json(&format!("bad json: {e}")),
+            Ok(j) => {
+                let verb = j
+                    .get("verb")
+                    .and_then(|v| Ok(v.as_str()?.to_string()))
+                    .unwrap_or_else(|_| "optimize".to_string());
+                match verb.as_str() {
+                    "ping" => obj(vec![("ok", Json::Bool(true)),
+                                       ("pong", Json::Bool(true))]),
+                    "metrics" => {
+                        let mut m = coord.metrics.to_json();
+                        if let Json::Obj(map) = &mut m {
+                            map.insert("ok".into(), Json::Bool(true));
+                        }
+                        m
+                    }
+                    "shutdown" => {
+                        shutdown.0.store(true, Ordering::SeqCst);
+                        obj(vec![("ok", Json::Bool(true)),
+                                 ("shutting_down", Json::Bool(true))])
+                    }
+                    "optimize" => match parse_request(&j) {
+                        Err(e) => error_json(&e.to_string()),
+                        Ok(req) => match coord.run(req) {
+                            Ok(r) => result_to_json(&r),
+                            Err(e) => error_json(&e.to_string()),
+                        },
+                    },
+                    other => error_json(&format!("unknown verb {other:?}")),
+                }
+            }
+        };
+        let mut text = String::new();
+        // compact single-line output: strip pretty newlines
+        for ch in response.pretty().chars() {
+            if ch != '\n' {
+                text.push(ch);
+            }
+        }
+        text.push('\n');
+        stream.write_all(text.as_bytes())?;
+        stream.flush()?;
+        if shutdown.0.load(Ordering::SeqCst) {
+            log_line(&format!("shutdown requested by {peer}"));
+            return Ok(());
+        }
+    }
+}
+
+fn log_line(msg: &str) {
+    eprintln!("[fadiff-serve] {msg}");
+}
+
+/// Run the server until a `shutdown` verb arrives. Returns the bound
+/// address (useful with port 0 in tests via `bind_and_serve`).
+pub fn serve(addr: &str, coord: Coordinator) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    serve_on(listener, coord)
+}
+
+/// Serve on an already-bound listener (lets tests pick port 0).
+pub fn serve_on(listener: TcpListener, coord: Coordinator) -> Result<()> {
+    let local = listener.local_addr()?;
+    log_line(&format!("listening on {local} with {} workers",
+                      coord.n_workers()));
+    let coord = Arc::new(coord);
+    let shutdown = ShutdownFlag::default();
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shutdown.0.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let coord = Arc::clone(&coord);
+                let flag = ShutdownFlag(Arc::clone(&shutdown.0));
+                conns.push(std::thread::spawn(move || {
+                    if let Err(e) = handle(stream, &coord, &flag) {
+                        log_line(&format!("connection error: {e}"));
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            Err(e) => return Err(e.into()),
+        }
+        conns.retain(|c| !c.is_finished());
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    log_line("server stopped");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_defaults_and_overrides() {
+        let j = Json::parse(
+            r#"{"workload": "vgg16", "method": "ga", "seconds": 2.5}"#)
+            .unwrap();
+        let r = parse_request(&j).unwrap();
+        assert_eq!(r.workload, "vgg16");
+        assert_eq!(r.method, Method::Ga);
+        assert_eq!(r.seconds, 2.5);
+        assert_eq!(r.config, "large"); // default
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_method() {
+        let j = Json::parse(r#"{"method": "quantum"}"#).unwrap();
+        assert!(parse_request(&j).is_err());
+    }
+}

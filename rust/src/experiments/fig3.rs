@@ -1,0 +1,176 @@
+//! Fig 3 reproduction: Z-score-normalized latency & energy trends of our
+//! fused cost model vs the DeFiNES-like depth-first baseline, for
+//! two-layer and three-layer fusion stacks, swept over on-chip tile
+//! sizes.
+//!
+//! The paper validates *trend agreement* (Z-scored curves overlap), not
+//! absolute numbers; we additionally report the Pearson correlation of
+//! the normalized series.
+
+use crate::config::HwConfig;
+use crate::costmodel;
+use crate::mapping::{LayerMapping, Strategy, SLOT_S, SLOT_T0, SLOT_T1,
+                     SLOT_T2};
+use crate::sim::definesim::{self, DfTile};
+use crate::util::stats::{pearson, zscore};
+use crate::workload::{zoo, Layer, DIM_C, DIM_K, DIM_N, DIM_P, DIM_Q,
+                      DIM_R, DIM_S};
+
+/// One swept point.
+#[derive(Clone, Debug)]
+pub struct TrendPoint {
+    pub tile: usize,
+    pub ours_latency: f64,
+    pub ours_energy: f64,
+    pub df_latency: f64,
+    pub df_energy: f64,
+}
+
+/// One panel of Fig 3 (two-layer or three-layer fusion).
+#[derive(Clone, Debug)]
+pub struct TrendReport {
+    pub stack_len: usize,
+    pub points: Vec<TrendPoint>,
+    pub latency_corr: f64,
+    pub energy_corr: f64,
+    /// Z-scored series in sweep order: (ours, definesim).
+    pub z_latency: (Vec<f64>, Vec<f64>),
+    pub z_energy: (Vec<f64>, Vec<f64>),
+}
+
+/// Build a fused strategy whose L2 residency matches a depth-first
+/// output-tile of `t x t`: spatial dims tiled to t on chip, channels
+/// resident, everything else at DRAM.
+fn strategy_for_tile(stack: &[Layer], t: usize, hw: &HwConfig) -> Strategy {
+    let mut mappings = Vec::new();
+    for l in stack {
+        let mut m = LayerMapping::trivial();
+        for (d, ext) in [(DIM_P, t), (DIM_Q, t)] {
+            let n = l.dims[d] as u64;
+            // largest divisor of n that is <= requested tile extent
+            let f = crate::mapping::divisors(n)
+                .into_iter()
+                .filter(|&x| x <= ext as u64)
+                .max()
+                .unwrap_or(1);
+            m.factors[d][SLOT_T1] = f;
+        }
+        // channels resident at L2; filters at L0-adjacent levels
+        for d in [DIM_C, DIM_K] {
+            let n = l.dims[d] as u64;
+            let sp_cap = if d == DIM_K {
+                hw.pe_cols as u64
+            } else {
+                hw.pe_rows as u64
+            };
+            let sp = crate::mapping::divisors(n)
+                .into_iter()
+                .filter(|&x| x <= sp_cap)
+                .max()
+                .unwrap_or(1);
+            m.factors[d][SLOT_S] = sp;
+            m.factors[d][SLOT_T2] = n / sp;
+        }
+        for d in [DIM_R, DIM_S, DIM_N] {
+            m.factors[d][SLOT_T0] = l.dims[d] as u64;
+        }
+        mappings.push(m);
+    }
+    Strategy { mappings, fuse: vec![true; stack.len() - 1] }
+}
+
+/// Run one panel over a conv stack.
+pub fn run_panel(stack: &[Layer], hw: &HwConfig) -> TrendReport {
+    let w = crate::workload::Workload::chain("fig3", stack.to_vec(), &[],
+                                             1.0);
+    let mut points = Vec::new();
+    for (tile, df) in definesim::sweep_tiles(stack, hw) {
+        let s = strategy_for_tile(stack, tile.tp, hw);
+        let ours = costmodel::evaluate(&s, &w, hw);
+        points.push(TrendPoint {
+            tile: tile.tp,
+            ours_latency: ours.latency,
+            ours_energy: ours.energy,
+            df_latency: df.latency,
+            df_energy: df.energy,
+        });
+        let _ = DfTile { tp: tile.tp, tq: tile.tq };
+    }
+    let zl_ours = zscore(&points.iter().map(|p| p.ours_latency)
+                         .collect::<Vec<_>>());
+    let zl_df = zscore(&points.iter().map(|p| p.df_latency)
+                       .collect::<Vec<_>>());
+    let ze_ours = zscore(&points.iter().map(|p| p.ours_energy)
+                         .collect::<Vec<_>>());
+    let ze_df = zscore(&points.iter().map(|p| p.df_energy)
+                       .collect::<Vec<_>>());
+    TrendReport {
+        stack_len: stack.len(),
+        latency_corr: pearson(&zl_ours, &zl_df),
+        energy_corr: pearson(&ze_ours, &ze_df),
+        z_latency: (zl_ours, zl_df),
+        z_energy: (ze_ours, ze_df),
+        points,
+    }
+}
+
+/// The two Fig 3 panels on VGG16 conv3 stacks (paper uses conv chains).
+pub fn run(hw: &HwConfig) -> (TrendReport, TrendReport) {
+    let w = zoo::vgg16();
+    let two = [w.layers[4].clone(), w.layers[5].clone()];
+    let three =
+        [w.layers[4].clone(), w.layers[5].clone(), w.layers[6].clone()];
+    (run_panel(&two, hw), run_panel(&three, hw))
+}
+
+/// Render a panel as a markdown table + correlation line.
+pub fn render(r: &TrendReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{}-layer fusion: latency corr {:.3}, \
+                           energy corr {:.3}\n",
+                          r.stack_len, r.latency_corr, r.energy_corr));
+    out.push_str(
+        "| tile | z-lat ours | z-lat DF | z-en ours | z-en DF |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for (i, p) in r.points.iter().enumerate() {
+        out.push_str(&format!(
+            "| {} | {:+.2} | {:+.2} | {:+.2} | {:+.2} |\n",
+            p.tile, r.z_latency.0[i], r.z_latency.1[i],
+            r.z_energy.0[i], r.z_energy.1[i]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+
+    #[test]
+    fn fig3_trends_match_definesim() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let (two, three) = run(&hw);
+        assert!(two.points.len() >= 5);
+        assert!(three.points.len() >= 5);
+        // paper claim: Z-scored trends closely match for both panels
+        assert!(two.energy_corr > 0.7, "2-layer energy {}", two.energy_corr);
+        assert!(three.energy_corr > 0.7,
+                "3-layer energy {}", three.energy_corr);
+        assert!(two.latency_corr > 0.5,
+                "2-layer latency {}", two.latency_corr);
+    }
+
+    #[test]
+    fn strategies_for_tiles_are_valid() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let stack = [w.layers[4].clone(), w.layers[5].clone()];
+        for t in [4usize, 14, 56] {
+            let s = strategy_for_tile(&stack, t, &hw);
+            let wl = crate::workload::Workload::chain(
+                "t", stack.to_vec(), &[], 1.0);
+            s.validate(&wl, hw.pe_rows as u64, hw.pe_cols as u64)
+                .unwrap();
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Fig 4 reproduction: EDP vs optimization time for GA, BO and the
+//! gradient method under the same wall-clock budget (large-Gemmini).
+
+use anyhow::Result;
+
+use crate::config::HwConfig;
+use crate::runtime::Runtime;
+use crate::search::{bo, ga, gradient, Budget, TracePoint};
+use crate::workload::Workload;
+
+/// One method's convergence trace.
+#[derive(Clone, Debug)]
+pub struct MethodTrace {
+    pub method: String,
+    pub final_edp: f64,
+    pub trace: Vec<TracePoint>,
+}
+
+/// The full figure: one trace per method.
+#[derive(Clone, Debug)]
+pub struct Fig4Report {
+    pub workload: String,
+    pub budget_seconds: f64,
+    pub methods: Vec<MethodTrace>,
+}
+
+/// Run all three methods with the same budget and seed base.
+pub fn run(rt: &Runtime, w: &Workload, hw: &HwConfig, seconds: f64,
+           seed: u64) -> Result<Fig4Report> {
+    let budget = Budget { seconds, max_iters: usize::MAX };
+
+    let rg = gradient::optimize(
+        rt, w, hw,
+        &gradient::GradientConfig { seed, ..Default::default() },
+        budget)?;
+    let rga = ga::optimize(
+        w, hw, &ga::GaConfig { seed, ..Default::default() }, budget,
+        rt.manifest.k_max)?;
+    let rbo = bo::optimize(
+        w, hw, &bo::BoConfig { seed, ..Default::default() }, budget)?;
+
+    Ok(Fig4Report {
+        workload: w.name.clone(),
+        budget_seconds: seconds,
+        methods: vec![
+            MethodTrace { method: "gradient (FADiff)".into(),
+                          final_edp: rg.edp, trace: rg.trace },
+            MethodTrace { method: "GA".into(), final_edp: rga.edp,
+                          trace: rga.trace },
+            MethodTrace { method: "BO".into(), final_edp: rbo.edp,
+                          trace: rbo.trace },
+        ],
+    })
+}
+
+/// Best-EDP-so-far sampled on a common time grid (for plotting/tables).
+pub fn sample_grid(t: &[TracePoint], grid: &[f64]) -> Vec<f64> {
+    grid.iter()
+        .map(|&g| {
+            t.iter()
+                .filter(|p| p.seconds <= g)
+                .map(|p| p.best_edp)
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect()
+}
+
+/// Render as a markdown time-series table.
+pub fn render(r: &Fig4Report) -> String {
+    let grid: Vec<f64> = (1..=10)
+        .map(|i| r.budget_seconds * i as f64 / 10.0)
+        .collect();
+    let mut out = format!(
+        "workload {} — best EDP vs time (budget {:.1}s)\n",
+        r.workload, r.budget_seconds);
+    out.push_str("| t (s) |");
+    for m in &r.methods {
+        out.push_str(&format!(" {} |", m.method));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in &r.methods {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    let series: Vec<Vec<f64>> = r
+        .methods
+        .iter()
+        .map(|m| sample_grid(&m.trace, &grid))
+        .collect();
+    for (i, g) in grid.iter().enumerate() {
+        out.push_str(&format!("| {g:.1} |"));
+        for s in &series {
+            if s[i].is_finite() {
+                out.push_str(&format!(" {:.3e} |", s[i]));
+            } else {
+                out.push_str(" - |");
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::workload::zoo;
+
+    #[test]
+    fn fig4_gradient_dominates() {
+        let rt = Runtime::load(&repo_root().join("artifacts")).unwrap();
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::resnet18();
+        let r = run(&rt, &w, &hw, 3.0, 99).unwrap();
+        assert_eq!(r.methods.len(), 3);
+        let grad = r.methods[0].final_edp;
+        for m in &r.methods[1..] {
+            assert!(grad <= m.final_edp * 1.05,
+                    "gradient {grad} vs {} {}", m.method, m.final_edp);
+        }
+    }
+
+    #[test]
+    fn sample_grid_is_monotone() {
+        let t = vec![
+            TracePoint { seconds: 0.1, best_edp: 10.0, iter: 1 },
+            TracePoint { seconds: 0.5, best_edp: 5.0, iter: 2 },
+            TracePoint { seconds: 0.9, best_edp: 2.0, iter: 3 },
+        ];
+        let g = sample_grid(&t, &[0.2, 0.6, 1.0]);
+        assert_eq!(g, vec![10.0, 5.0, 2.0]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Cost-model validation (paper Sec 4.2): the differentiable closed-form
+//! model vs the independent tile-walking golden simulator, over the
+//! diverse single-layer operator set (standard / depthwise / pointwise /
+//! large-kernel convolutions, FC, attention GEMM).
+//!
+//! Reports the paper's three metrics: access-count prediction accuracy,
+//! and Kendall tau / Spearman rho ranking consistency for latency and
+//! energy (paper: 96% accuracy; latency tau = 1.0; energy tau = 0.78,
+//! rho = 0.92).
+
+use crate::config::HwConfig;
+use crate::costmodel;
+use crate::mapping::decode::{decode_layer, Relaxed};
+use crate::sim::tilesim;
+use crate::util::rng::Rng;
+use crate::util::stats::{accuracy, kendall_tau, spearman_rho};
+use crate::workload::{zoo, NDIMS};
+
+/// Validation metrics per operator.
+#[derive(Clone, Debug)]
+pub struct OperatorValidation {
+    pub name: String,
+    pub access_accuracy: f64,
+    pub latency_tau: f64,
+    pub latency_rho: f64,
+    pub energy_tau: f64,
+    pub energy_rho: f64,
+}
+
+/// Aggregate report.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub per_op: Vec<OperatorValidation>,
+    pub mean_access_accuracy: f64,
+    pub mean_latency_tau: f64,
+    pub mean_latency_rho: f64,
+    pub mean_energy_tau: f64,
+    pub mean_energy_rho: f64,
+}
+
+/// Run the validation sweep: `samples` random mappings per operator.
+pub fn run(hw: &HwConfig, samples: usize, seed: u64) -> ValidationReport {
+    let mut rng = Rng::new(seed);
+    let mut per_op = Vec::new();
+    for layer in zoo::validation_operators() {
+        let mut cf_access = Vec::new();
+        let mut sim_access = Vec::new();
+        let mut cf_lat = Vec::new();
+        let mut sim_lat = Vec::new();
+        let mut cf_en = Vec::new();
+        let mut sim_en = Vec::new();
+        for _ in 0..samples {
+            let mut relaxed = Relaxed {
+                theta: vec![[[0.0; 4]; NDIMS]],
+                sigma: vec![],
+            };
+            for d in 0..NDIMS {
+                let cap = (layer.dims[d] as f64).log2().max(0.0);
+                for s in 0..4 {
+                    relaxed.theta[0][d][s] = rng.range(-0.5, cap + 0.5);
+                }
+            }
+            let m = decode_layer(&relaxed.theta[0], &layer.dims, hw);
+            let cf = costmodel::components(&m, &layer.dims);
+            let sim = tilesim::simulate_layer(&m, &layer.dims);
+            // compare aggregate inter-memory traffic (fills + write-back)
+            cf_access.push(cf.fill2_i + cf.fill2_w + cf.fill0_w + cf.wb0_o);
+            sim_access.push(
+                sim.fill2_i + sim.fill2_w + sim.fill0_w + sim.wb_o);
+            let lc = costmodel::layer_cost(&cf, 0.0, 0.0, hw);
+            cf_lat.push(lc.latency);
+            cf_en.push(lc.energy);
+            // simulated cost via the same hw constants, sim traffic
+            let a3 = sim.fill2_i + sim.fill2_w + sim.wb_o;
+            let a2 = sim.fill2_i + sim.fill2_w + sim.fill0_w
+                + sim.read_pe_i;
+            let a1 = sim.accwb_o + sim.wb_o;
+            let a0 = sim.fill0_w + sim.ops;
+            let pes = (m.pes() as f64).max(1.0);
+            let eb = hw.element_bytes;
+            sim_lat.push((sim.ops / pes)
+                .max(a3 * eb / hw.bw_dram)
+                .max(a2 * eb / hw.bw_l2)
+                .max(a1 * eb / hw.bw_l1));
+            sim_en.push(sim.ops * hw.energy_per_mac
+                + a3 * hw.epa_dram
+                + a2 * hw.epa_l2
+                + a1 * hw.epa_l1
+                + a0 * hw.epa_reg);
+        }
+        per_op.push(OperatorValidation {
+            name: layer.name.clone(),
+            access_accuracy: accuracy(&cf_access, &sim_access),
+            latency_tau: kendall_tau(&cf_lat, &sim_lat),
+            latency_rho: spearman_rho(&cf_lat, &sim_lat),
+            energy_tau: kendall_tau(&cf_en, &sim_en),
+            energy_rho: spearman_rho(&cf_en, &sim_en),
+        });
+    }
+    let mean = |f: &dyn Fn(&OperatorValidation) -> f64| -> f64 {
+        per_op.iter().map(|o| f(o)).sum::<f64>() / per_op.len() as f64
+    };
+    ValidationReport {
+        mean_access_accuracy: mean(&|o| o.access_accuracy),
+        mean_latency_tau: mean(&|o| o.latency_tau),
+        mean_latency_rho: mean(&|o| o.latency_rho),
+        mean_energy_tau: mean(&|o| o.energy_tau),
+        mean_energy_rho: mean(&|o| o.energy_rho),
+        per_op,
+    }
+}
+
+/// Render as a markdown table (CLI + EXPERIMENTS.md).
+pub fn render(r: &ValidationReport) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| operator | access acc | lat tau | lat rho | en tau | en rho |\n");
+    out.push_str(
+        "|---|---|---|---|---|---|\n");
+    for o in &r.per_op {
+        out.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
+            o.name, o.access_accuracy, o.latency_tau, o.latency_rho,
+            o.energy_tau, o.energy_rho));
+    }
+    out.push_str(&format!(
+        "| **mean** | **{:.3}** | **{:.3}** | **{:.3}** | **{:.3}** | \
+         **{:.3}** |\n",
+        r.mean_access_accuracy, r.mean_latency_tau, r.mean_latency_rho,
+        r.mean_energy_tau, r.mean_energy_rho));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+
+    #[test]
+    fn validation_reproduces_paper_shape() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let r = run(&hw, 40, 11);
+        assert_eq!(r.per_op.len(), 12);
+        // paper-shape targets (measured values recorded in
+        // EXPERIMENTS.md): high access accuracy, strong latency ranking
+        // (rho near 1), energy tau/rho in the paper's 0.78/0.92 band
+        assert!(r.mean_access_accuracy > 0.80,
+                "accuracy {}", r.mean_access_accuracy);
+        assert!(r.mean_latency_tau > 0.75,
+                "lat tau {}", r.mean_latency_tau);
+        assert!(r.mean_latency_rho > 0.9,
+                "lat rho {}", r.mean_latency_rho);
+        assert!(r.mean_energy_tau > 0.6, "en tau {}", r.mean_energy_tau);
+        assert!(r.mean_energy_rho > 0.75, "en rho {}", r.mean_energy_rho);
+    }
+}

@@ -1,0 +1,30 @@
+//! FADiff — Fusion-Aware Differentiable Optimization for DNN Scheduling on
+//! Tensor Accelerators.
+//!
+//! This crate is Layer 3 of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build-time python)** — the cost-model hot loops
+//!   (Gumbel-Softmax tiling snap, per-layer traffic accounting) as Pallas
+//!   kernels, validated against a pure-jnp oracle.
+//! * **L2 (JAX, build-time python)** — the unified differentiable
+//!   energy/latency/EDP model with penalty terms and `value_and_grad`,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — the optimizer runtime: PJRT execution of the AOT
+//!   artifacts, the Adam-based constrained gradient search, the GA / BO /
+//!   layer-wise (DOSA-like) baselines, the Timeloop-like golden tile
+//!   simulator, the DeFiNES-like depth-first fusion baseline, the workload
+//!   zoo, and the coordinator service + experiment harnesses.
+//!
+//! Python never runs on the optimization hot path: `make artifacts` lowers
+//! the JAX model once and the Rust binary is self-contained afterwards.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod experiments;
+pub mod mapping;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod util;
+pub mod workload;

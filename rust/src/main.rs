@@ -1,0 +1,164 @@
+//! `fadiff` — CLI for the FADiff scheduling optimizer.
+//!
+//! Subcommands:
+//!   optimize   run one optimization job (workload x config x method)
+//!   table1     reproduce Table 1 (all workloads/configs/methods)
+//!   fig3       reproduce Fig 3 (fusion trend vs DeFiNES-like baseline)
+//!   fig4       reproduce Fig 4 (EDP vs optimization time)
+//!   validate   reproduce Sec 4.2 (cost model vs golden simulator)
+//!   selftest   compile all AOT artifacts and smoke the runtime
+//!   serve      run the coordinator as a TCP service
+
+use std::sync::atomic::Ordering;
+
+use anyhow::{bail, Result};
+use fadiff::config::repo_root;
+use fadiff::coordinator::{self, Coordinator, JobRequest, Method};
+use fadiff::experiments::{fig3, fig4, table1, validation};
+use fadiff::runtime::Runtime;
+use fadiff::util::cli::Args;
+use fadiff::workload::zoo;
+
+const HELP: &str = "\
+fadiff — fusion-aware differentiable DNN scheduling (paper reproduction)
+
+USAGE: fadiff <subcommand> [flags]
+
+  optimize  --workload resnet18 --config large --method fadiff
+            --seconds 10 --seed 1
+            methods: fadiff | dosa | ga | bo | random
+            workloads: gpt3 vgg19 vgg16 mobilenet resnet18
+  table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
+  fig3                                           (paper Figure 3)
+  fig4      --workload resnet18 --seconds 10     (paper Figure 4)
+  validate  --samples 60 --seed 11               (paper Sec 4.2)
+  selftest                                       (compile artifacts)
+  serve     --addr 127.0.0.1:7341 --workers 2    (TCP coordinator)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{HELP}");
+        std::process::exit(2);
+    }
+    let sub = argv[0].clone();
+    let rest = &argv[1..];
+    let code = match dispatch(&sub, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["verbose", "summary"])?;
+    match sub {
+        "optimize" => cmd_optimize(&args),
+        "table1" => cmd_table1(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "validate" | "validate-model" => cmd_validate(&args),
+        "selftest" => cmd_selftest(),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{HELP}"),
+    }
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let req = JobRequest {
+        workload: args.get_or("workload", "resnet18"),
+        config: args.get_or("config", "large"),
+        method: Method::parse(&args.get_or("method", "fadiff"))?,
+        seconds: args.get_f64("seconds", 10.0)?,
+        max_iters: args.get_usize("max-iters", usize::MAX)?,
+        seed: args.get_u64("seed", 1)?,
+    };
+    let rt = Runtime::load_default()?;
+    let r = coordinator::execute_job(&rt, &req)?;
+    println!("workload        : {}", r.request.workload);
+    println!("config          : {}", r.request.config);
+    println!("method          : {}", r.request.method.name());
+    println!("EDP (replica)   : {:.4e} pJ*cycles", r.edp);
+    println!("EDP (full model): {:.4e} pJ*cycles", r.full_model_edp);
+    println!("energy          : {:.4e} pJ", r.energy);
+    println!("latency         : {:.4e} cycles", r.latency);
+    println!("iters / evals   : {} / {}", r.iters, r.evals);
+    println!("wall time       : {:.2}s", r.wall_seconds);
+    if r.fused_names.is_empty() {
+        println!("fusion groups   : none");
+    } else {
+        println!("fusion groups   :");
+        for g in &r.fused_names {
+            println!("  - {}", g.join(" -> "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let seconds = args.get_f64("seconds", 30.0)?;
+    let threads = args.get_usize("threads", 4)?;
+    let seed = args.get_u64("seed", 1)?;
+    let t = table1::run(&repo_root().join("artifacts"), seconds, threads,
+                        seed)?;
+    println!("{}", table1::render(&t));
+    Ok(())
+}
+
+fn cmd_fig3(_args: &Args) -> Result<()> {
+    let hw = fadiff::config::load_config(&repo_root(), "large")?;
+    let (two, three) = fig3::run(&hw);
+    println!("{}", fig3::render(&two));
+    println!("{}", fig3::render(&three));
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let hw = fadiff::config::load_config(&repo_root(), "large")?;
+    let name = args.get_or("workload", "resnet18");
+    let w = zoo::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {name:?}"))?;
+    let seconds = args.get_f64("seconds", 10.0)?;
+    let r = fig4::run(&rt, &w, &hw, seconds, args.get_u64("seed", 1)?)?;
+    println!("{}", fig4::render(&r));
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let hw = fadiff::config::load_config(
+        &repo_root(), &args.get_or("config", "large"))?;
+    let samples = args.get_usize("samples", 60)?;
+    let seed = args.get_u64("seed", 11)?;
+    let r = validation::run(&hw, samples, seed);
+    println!("{}", validation::render(&r));
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    for line in fadiff::runtime::selftest(&rt)? {
+        println!("{line}");
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7341");
+    let workers = args.get_usize("workers", 2)?;
+    let coord = Coordinator::new(None, workers)?;
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    let result = fadiff::coordinator::server::serve(&addr, coord);
+    eprintln!("served {} jobs total",
+              metrics.submitted.load(Ordering::SeqCst));
+    result
+}

@@ -1,0 +1,360 @@
+//! Continuous-to-discrete decoding (paper Sec 3.1 / end of Sec 3.3).
+//!
+//! After gradient convergence the relaxed parameters are decoded into
+//! integer tiling factors and binary fusion decisions:
+//!
+//! 1. **Prime allocation** — for each (layer, dim) the prime powers of
+//!    the problem size are distributed greedily across the factor slots
+//!    so each slot tracks its continuous target `2^theta` as closely as
+//!    possible *while the product exactly divides the dimension* (the
+//!    leftover becomes the DRAM co-factor). This guarantees
+//!    divisibility by construction — stronger than nearest-divisor
+//!    rounding, which can produce non-dividing products.
+//! 2. **Spatial capping** — spatial targets are clamped to the PE array
+//!    geometry before allocation.
+//! 3. **Capacity repair** — if a decoded layer overflows the scratchpad
+//!    or accumulator, factors are demoted from L2/L1 toward DRAM until it
+//!    fits; if a fusion group overflows the scratchpad, the weakest
+//!    (smallest sigma) edge in the group is cut. Repair preserves
+//!    divisibility (it only moves whole primes between slots).
+
+use crate::config::HwConfig;
+use crate::costmodel;
+use crate::mapping::{prime_factors, LayerMapping, Strategy, NSLOTS,
+                     SLOT_S, SLOT_T1, SLOT_T2};
+use crate::workload::{Workload, DIM_C, DIM_K, NDIMS};
+
+/// Continuous optimization state to decode (log2-space theta, sigmoid'd
+/// sigma in [0,1]).
+#[derive(Clone, Debug)]
+pub struct Relaxed {
+    /// `theta[l][d][slot]` in log2 space.
+    pub theta: Vec<[[f64; NSLOTS]; NDIMS]>,
+    /// `sigma[i]` in [0, 1] for edge i -> i+1.
+    pub sigma: Vec<f64>,
+}
+
+impl Relaxed {
+    /// A neutral starting point: all factors ~1, sigma 0.5.
+    pub fn neutral(w: &Workload) -> Relaxed {
+        Relaxed {
+            theta: vec![[[0.0; NSLOTS]; NDIMS]; w.len()],
+            sigma: vec![0.5; w.len().saturating_sub(1)],
+        }
+    }
+}
+
+/// Decode one dimension: snap each slot to the divisor of `n` nearest to
+/// its continuous target in log space (exactly the Gumbel-Softmax argmax
+/// the optimizer's straight-through forward evaluated, at zero noise),
+/// then *trim* excess primes until the slot product divides `n` — so the
+/// decoded point stays as close as possible to what the gradient search
+/// actually scored. Slot caps bound the snap (u64::MAX = unbounded).
+fn allocate_primes(n: u64, targets: [f64; NSLOTS], caps: [u64; NSLOTS])
+                   -> [u64; NSLOTS] {
+    let divs = crate::mapping::divisors(n);
+    let mut fac = [1u64; NSLOTS];
+    for s in 0..NSLOTS {
+        let t = targets[s].max(1.0).ln();
+        fac[s] = divs
+            .iter()
+            .copied()
+            .filter(|&d| d <= caps[s])
+            .min_by(|&a, &b| {
+                let da = ((a as f64).ln() - t).abs();
+                let db = ((b as f64).ln() - t).abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap_or(1);
+    }
+    // Trim: for every prime of n, the slots may jointly use at most its
+    // multiplicity in n. Remove excess from the slot whose factor is
+    // furthest ABOVE its target (least harm), preferring temporal slots.
+    for (p, mp) in prime_factors(n) {
+        let mult = |f: u64| -> u32 {
+            let mut f = f;
+            let mut c = 0;
+            while f % p == 0 {
+                f /= p;
+                c += 1;
+            }
+            c
+        };
+        let mut total: u32 = fac.iter().map(|&f| mult(f)).sum();
+        while total > mp {
+            // pick the slot with p available whose log-excess over target
+            // is largest
+            let s = (0..NSLOTS)
+                .filter(|&s| fac[s] % p == 0)
+                .max_by(|&a, &b| {
+                    let ea = (fac[a] as f64).ln()
+                        - targets[a].max(1.0).ln();
+                    let eb = (fac[b] as f64).ln()
+                        - targets[b].max(1.0).ln();
+                    ea.partial_cmp(&eb).unwrap()
+                })
+                .expect("some slot must hold prime p");
+            fac[s] /= p;
+            total -= 1;
+        }
+    }
+    fac
+}
+
+/// Decode one layer's theta block into a legal mapping.
+pub fn decode_layer(theta: &[[f64; NSLOTS]; NDIMS], dims: &[usize; NDIMS],
+                    hw: &HwConfig) -> LayerMapping {
+    let mut m = LayerMapping::trivial();
+    for d in 0..NDIMS {
+        let n = dims[d] as u64;
+        if n == 1 {
+            continue;
+        }
+        let mut targets = [0.0; NSLOTS];
+        for s in 0..NSLOTS {
+            targets[s] = theta[d][s].exp2().clamp(1.0, n as f64);
+        }
+        let mut caps = [u64::MAX; NSLOTS];
+        caps[SLOT_S] = match d {
+            DIM_K => hw.pe_cols as u64,
+            DIM_C => hw.pe_rows as u64,
+            _ => 1,
+        };
+        if caps[SLOT_S] == 1 {
+            targets[SLOT_S] = 1.0;
+        }
+        m.factors[d] = allocate_primes(n, targets, caps);
+    }
+    m
+}
+
+/// Demote one prime from the given slot toward DRAM (returns false when
+/// the slot is already 1). Used by capacity repair.
+fn demote_slot(m: &mut LayerMapping, d: usize, slot: usize) -> bool {
+    let f = m.factors[d][slot];
+    if f <= 1 {
+        return false;
+    }
+    let p = prime_factors(f)[0].0; // smallest prime
+    m.factors[d][slot] /= p;
+    true
+}
+
+/// Shrink a layer's on-chip residency until scratchpad + accumulator fit.
+fn repair_layer(m: &mut LayerMapping, dims: &[usize; NDIMS], hw: &HwConfig) {
+    for _ in 0..256 {
+        let c = costmodel::components(m, dims);
+        let l2 = (c.s_w2 + c.s_i2) * hw.element_bytes;
+        let l1 = c.s_o1 * hw.acc_bytes;
+        if l2 <= hw.c2_bytes && l1 <= hw.c1_bytes {
+            return;
+        }
+        // demote the dim with the largest L2-resident extent first,
+        // preferring the outermost on-chip temporal level (T2, then T1)
+        let mut done = false;
+        for slot in [SLOT_T2, SLOT_T1] {
+            let d_max = (0..NDIMS)
+                .filter(|&d| m.factors[d][slot] > 1)
+                .max_by(|&a, &b| {
+                    m.factors[a][slot].cmp(&m.factors[b][slot])
+                });
+            if let Some(d) = d_max {
+                if demote_slot(m, d, slot) {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        if !done {
+            // last resort: demote T0
+            let any = (0..NDIMS).find(|&d| m.factors[d][0] > 1);
+            match any {
+                Some(d) => {
+                    demote_slot(m, d, 0);
+                }
+                None => return, // minimal mapping; nothing left to shrink
+            }
+        }
+    }
+}
+
+/// Decode a full relaxed state into a hardware-valid [`Strategy`].
+pub fn decode(relaxed: &Relaxed, w: &Workload, hw: &HwConfig) -> Strategy {
+    assert_eq!(relaxed.theta.len(), w.len());
+    let mappings: Vec<LayerMapping> = (0..w.len())
+        .map(|l| {
+            let mut m = decode_layer(&relaxed.theta[l], &w.layers[l].dims,
+                                     hw);
+            repair_layer(&mut m, &w.layers[l].dims, hw);
+            m
+        })
+        .collect();
+
+    // fusion: threshold sigma, mask illegal edges
+    let mut fuse: Vec<bool> = (0..w.len().saturating_sub(1))
+        .map(|i| relaxed.sigma[i] > 0.5 && w.fusible[i])
+        .collect();
+
+    // group-capacity repair: cut weakest edges until every group fits
+    loop {
+        let s = Strategy { mappings: mappings.clone(), fuse: fuse.clone() };
+        let comps: Vec<costmodel::Comp> = (0..w.len())
+            .map(|i| costmodel::components(&mappings[i], &w.layers[i].dims))
+            .collect();
+        let mut violated: Option<(usize, usize)> = None;
+        for (a, b) in s.groups() {
+            if a == b {
+                continue;
+            }
+            let req: f64 = comps[a..=b]
+                .iter()
+                .map(|c| (c.s_w2 + c.s_i2) * hw.element_bytes)
+                .sum();
+            if req > hw.c2_bytes {
+                violated = Some((a, b));
+                break;
+            }
+        }
+        match violated {
+            None => break,
+            Some((a, b)) => {
+                // cut the lowest-sigma edge inside the group
+                let cut = (a..b)
+                    .filter(|&i| fuse[i])
+                    .min_by(|&x, &y| {
+                        relaxed.sigma[x]
+                            .partial_cmp(&relaxed.sigma[y])
+                            .unwrap()
+                    })
+                    .expect("multi-layer group must have a fused edge");
+                fuse[cut] = false;
+            }
+        }
+    }
+
+    Strategy { mappings, fuse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::util::prop::{check, ensure, Config};
+    use crate::util::rng::Rng;
+    use crate::workload::zoo;
+
+    fn hw() -> HwConfig {
+        load_config(&repo_root(), "large").unwrap()
+    }
+
+    #[test]
+    fn allocate_primes_exact_targets() {
+        // 64 = 2^6; targets 4,4,2,2 -> exactly that split
+        let f = allocate_primes(64, [4.0, 4.0, 2.0, 2.0],
+                                [u64::MAX; 4]);
+        assert_eq!(f.iter().product::<u64>(), 64);
+        assert_eq!(f, [4, 4, 2, 2]);
+    }
+
+    #[test]
+    fn allocate_primes_respects_caps() {
+        let f = allocate_primes(64, [64.0, 1.0, 1.0, 64.0],
+                                [u64::MAX, u64::MAX, u64::MAX, 8]);
+        assert!(f[3] <= 8);
+        assert_eq!(64 % f.iter().product::<u64>(), 0);
+    }
+
+    #[test]
+    fn allocate_primes_leftover_goes_to_dram() {
+        // all targets 1 -> nothing allocated, all in the derived factor
+        let f = allocate_primes(224, [1.0; 4], [u64::MAX; 4]);
+        assert_eq!(f, [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn decode_layer_always_divides() {
+        let hw = hw();
+        let w = zoo::vgg16();
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let l = rng.below(w.len());
+            let mut theta = [[0.0; NSLOTS]; NDIMS];
+            for d in 0..NDIMS {
+                for s in 0..NSLOTS {
+                    theta[d][s] = rng.range(-2.0, 8.0);
+                }
+            }
+            let m = decode_layer(&theta, &w.layers[l].dims, &hw);
+            for d in 0..NDIMS {
+                let n = w.layers[l].dims[d] as u64;
+                assert_eq!(n % m.inner(d), 0,
+                           "dim {d}: {:?} !| {n}", m.factors[d]);
+            }
+            assert!(m.factors[DIM_K][SLOT_S] <= hw.pe_cols as u64);
+            assert!(m.factors[DIM_C][SLOT_S] <= hw.pe_rows as u64);
+        }
+    }
+
+    #[test]
+    fn decode_strategy_always_feasible_prop() {
+        // The paper's central decoding guarantee: ANY relaxed state
+        // decodes to a hardware-valid strategy.
+        let hw = hw();
+        let suite = zoo::table1_suite();
+        check("decode-feasible", &Config { cases: 48, seed: 7 },
+              |r, size| {
+                  let w = r.below(suite.len());
+                  let workload = &suite[w];
+                  let mut relaxed = Relaxed::neutral(workload);
+                  for l in 0..workload.len() {
+                      for d in 0..NDIMS {
+                          for s in 0..NSLOTS {
+                              relaxed.theta[l][d][s] =
+                                  r.range(-3.0, 14.0 * size);
+                          }
+                      }
+                  }
+                  for i in 0..relaxed.sigma.len() {
+                      relaxed.sigma[i] = r.f64();
+                  }
+                  (w, relaxed)
+              },
+              |(wi, relaxed)| {
+                  let workload = &suite[*wi];
+                  let s = decode(relaxed, workload, &hw);
+                  costmodel::feasible(&s, workload, &hw)
+                      .map_err(|e| format!("{}: {e}", workload.name))
+              });
+    }
+
+    #[test]
+    fn decode_tracks_targets_when_feasible() {
+        let hw = hw();
+        let w = zoo::vgg16();
+        // ask for spatial 32x32 + modest L2 tiles on conv3_1
+        let mut relaxed = Relaxed::neutral(&w);
+        relaxed.theta[4][DIM_K][SLOT_S] = 5.0; // 32
+        relaxed.theta[4][DIM_C][SLOT_S] = 5.0; // 32
+        let s = decode(&relaxed, &w, &hw);
+        assert_eq!(s.mappings[4].factors[DIM_K][SLOT_S], 32);
+        assert_eq!(s.mappings[4].factors[DIM_C][SLOT_S], 32);
+    }
+
+    #[test]
+    fn group_repair_cuts_weakest_edge() {
+        let hw = hw();
+        let w = zoo::vgg16();
+        let mut relaxed = Relaxed::neutral(&w);
+        // big L2 residency on the first three layers + fuse both edges
+        for l in 0..3 {
+            for d in 0..NDIMS {
+                relaxed.theta[l][d][SLOT_T2] =
+                    (w.layers[l].dims[d] as f64).log2();
+            }
+        }
+        relaxed.sigma[0] = 0.9;
+        relaxed.sigma[1] = 0.7; // weaker: cut first if needed
+        let s = decode(&relaxed, &w, &hw);
+        costmodel::feasible(&s, &w, &hw).unwrap();
+    }
+}

@@ -1,0 +1,292 @@
+//! Mapping representation and divisor machinery.
+//!
+//! A [`LayerMapping`] holds the integer tiling factors of one layer in
+//! the paper's factorized form: temporal factors at L0/L1/L2 plus the
+//! spatial factor at the PE array; the DRAM (L3) temporal factor is the
+//! exact co-factor so that the per-dimension product always equals the
+//! problem size. A [`Strategy`] adds the binary fusion decisions.
+
+pub mod decode;
+
+use crate::workload::{Workload, DIM_C, DIM_K, NDIMS};
+
+/// Factor slots (mirror `python/compile/constants.py`).
+pub const SLOT_T0: usize = 0;
+pub const SLOT_T1: usize = 1;
+pub const SLOT_T2: usize = 2;
+pub const SLOT_S: usize = 3;
+pub const NSLOTS: usize = 4;
+
+/// Integer tiling factors of one layer: `factors[d][slot]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerMapping {
+    pub factors: [[u64; NSLOTS]; NDIMS],
+}
+
+impl LayerMapping {
+    /// The trivial mapping: everything iterated at DRAM.
+    pub fn trivial() -> LayerMapping {
+        LayerMapping { factors: [[1; NSLOTS]; NDIMS] }
+    }
+
+    /// Derived DRAM temporal factor for dim `d` of full size `n`.
+    /// Integer-exact by construction for decoded mappings.
+    pub fn t3(&self, d: usize, n: u64) -> f64 {
+        let inner: u64 = self.factors[d].iter().product();
+        n as f64 / inner as f64
+    }
+
+    /// Product of the sub-DRAM factors of dim `d`.
+    pub fn inner(&self, d: usize) -> u64 {
+        self.factors[d].iter().product()
+    }
+
+    /// Effective PEs = spatial K x spatial C.
+    pub fn pes(&self) -> u64 {
+        self.factors[DIM_K][SLOT_S] * self.factors[DIM_C][SLOT_S]
+    }
+
+    /// As an [7][4] f32 block for AOT staging.
+    pub fn to_f32(&self) -> [[f32; NSLOTS]; NDIMS] {
+        let mut out = [[1.0; NSLOTS]; NDIMS];
+        for d in 0..NDIMS {
+            for s in 0..NSLOTS {
+                out[d][s] = self.factors[d][s] as f32;
+            }
+        }
+        out
+    }
+}
+
+/// A full deployment strategy: one mapping per layer plus the binary
+/// fusion decision on every consecutive edge.
+#[derive(Clone, Debug)]
+pub struct Strategy {
+    pub mappings: Vec<LayerMapping>,
+    /// `fuse[i]` — layers i and i+1 execute as one fusion group.
+    pub fuse: Vec<bool>,
+}
+
+impl Strategy {
+    /// All-trivial, no-fusion strategy for a workload.
+    pub fn trivial(w: &Workload) -> Strategy {
+        Strategy {
+            mappings: vec![LayerMapping::trivial(); w.len()],
+            fuse: vec![false; w.len().saturating_sub(1)],
+        }
+    }
+
+    /// Fusion groups as [start, end] (inclusive) layer-index ranges.
+    pub fn groups(&self) -> Vec<(usize, usize)> {
+        let l = self.mappings.len();
+        let mut out = Vec::new();
+        let mut start = 0;
+        for i in 0..l {
+            let fused_next = i < l - 1 && self.fuse[i];
+            if !fused_next {
+                out.push((start, i));
+                start = i + 1;
+            }
+        }
+        out
+    }
+
+    /// Validity: every factor divides its dim (with exact DRAM
+    /// co-factor), and spatial stays within the PE array.
+    pub fn validate(&self, w: &Workload, pe_rows: u64, pe_cols: u64)
+                    -> Result<(), String> {
+        if self.mappings.len() != w.len() {
+            return Err("mapping count != layer count".into());
+        }
+        for (l, m) in self.mappings.iter().enumerate() {
+            for d in 0..NDIMS {
+                let n = w.layers[l].dims[d] as u64;
+                let inner = m.inner(d);
+                if inner == 0 || n % inner != 0 {
+                    return Err(format!(
+                        "layer {l} dim {d}: inner product {inner} does \
+                         not divide {n}"
+                    ));
+                }
+            }
+            if m.factors[DIM_K][SLOT_S] > pe_cols {
+                return Err(format!("layer {l}: spatial K exceeds cols"));
+            }
+            if m.factors[DIM_C][SLOT_S] > pe_rows {
+                return Err(format!("layer {l}: spatial C exceeds rows"));
+            }
+            for d in 0..NDIMS {
+                if d != DIM_K && d != DIM_C && m.factors[d][SLOT_S] != 1 {
+                    return Err(format!(
+                        "layer {l}: spatial factor on non-K/C dim {d}"
+                    ));
+                }
+            }
+        }
+        for (i, &f) in self.fuse.iter().enumerate() {
+            if f && !w.fusible[i] {
+                return Err(format!("edge {i} fused but not fusible"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// All divisors of n, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut small = Vec::new();
+    let mut big = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            small.push(i);
+            if i != n / i {
+                big.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    big.reverse();
+    small.extend(big);
+    small
+}
+
+/// Divisor candidates log-subsampled to `k_max`, mirroring
+/// `python/tests/conftest.py::divisors` (keeps 1 and n; interior evenly
+/// subsampled by index).
+pub fn divisor_candidates(n: u64, k_max: usize) -> Vec<u64> {
+    let ds = divisors(n);
+    if ds.len() <= k_max {
+        return ds;
+    }
+    let mut idx: Vec<usize> = (0..k_max)
+        .map(|i| {
+            ((i as f64) * (ds.len() - 1) as f64 / (k_max - 1) as f64)
+                .round() as usize
+        })
+        .collect();
+    idx.dedup();
+    idx.into_iter().map(|i| ds[i]).collect()
+}
+
+/// Prime factorization as (prime, multiplicity) pairs.
+pub fn prime_factors(mut n: u64) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut m = 0;
+            while n % p == 0 {
+                n /= p;
+                m += 1;
+            }
+            out.push((p, m));
+        }
+        p += 1;
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, Config};
+    use crate::workload::zoo;
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(17), vec![1, 17]);
+    }
+
+    #[test]
+    fn candidates_subsample_keeps_endpoints() {
+        let c = divisor_candidates(25088, 8);
+        assert!(c.len() <= 8);
+        assert_eq!(*c.first().unwrap(), 1);
+        assert_eq!(*c.last().unwrap(), 25088);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn prime_factors_roundtrip_prop() {
+        check("prime-factor-product", &Config::default(),
+              |r, size| 1 + r.below((65536.0 * size) as usize + 2) as u64,
+              |&n| {
+                  let product: u64 = prime_factors(n)
+                      .iter()
+                      .map(|&(p, m)| p.pow(m))
+                      .product();
+                  ensure(product == n.max(1),
+                         format!("{n} factored wrong"))
+              });
+    }
+
+    #[test]
+    fn divisors_all_divide_prop() {
+        check("divisors-divide", &Config::default(),
+              |r, size| 1 + r.below((4096.0 * size) as usize + 2) as u64,
+              |&n| {
+                  for d in divisors(n) {
+                      if n % d != 0 {
+                          return Err(format!("{d} !| {n}"));
+                      }
+                  }
+                  Ok(())
+              });
+    }
+
+    #[test]
+    fn groups_partition_layers() {
+        let w = zoo::vgg16();
+        let mut s = Strategy::trivial(&w);
+        // fuse a couple of legal edges
+        s.fuse[0] = true;
+        s.fuse[4] = true;
+        let groups = s.groups();
+        let covered: usize = groups.iter().map(|(a, b)| b - a + 1).sum();
+        assert_eq!(covered, w.len());
+        assert_eq!(groups[0], (0, 1));
+        // groups must be contiguous and ordered
+        for win in groups.windows(2) {
+            assert_eq!(win[0].1 + 1, win[1].0);
+        }
+    }
+
+    #[test]
+    fn trivial_strategy_validates() {
+        for w in zoo::table1_suite() {
+            let s = Strategy::trivial(&w);
+            s.validate(&w, 32, 32).unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_divisor() {
+        let w = zoo::vgg16();
+        let mut s = Strategy::trivial(&w);
+        s.mappings[0].factors[DIM_K][SLOT_T0] = 5; // 64 % 5 != 0
+        assert!(s.validate(&w, 32, 32).is_err());
+    }
+
+    #[test]
+    fn validate_catches_spatial_overflow() {
+        let w = zoo::vgg16();
+        let mut s = Strategy::trivial(&w);
+        s.mappings[0].factors[DIM_K][SLOT_S] = 64; // > 32 cols
+        assert!(s.validate(&w, 32, 32).is_err());
+    }
+
+    #[test]
+    fn validate_catches_illegal_fusion() {
+        let w = zoo::resnet18();
+        let mut s = Strategy::trivial(&w);
+        let bad = w.fusible.iter().position(|&f| !f).unwrap();
+        s.fuse[bad] = true;
+        assert!(s.validate(&w, 32, 32).is_err());
+    }
+}

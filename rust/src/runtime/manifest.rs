@@ -1,0 +1,141 @@
+//! `artifacts/manifest.json` — the AOT contract between L2 and L3.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor slot of an artifact interface.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Empty shape = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's interface.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// The parsed manifest: global padded sizes plus per-artifact specs.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub l_max: usize,
+    pub k_max: usize,
+    pub b_eval: usize,
+    pub nhw: usize,
+    pub ncomp: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "{path:?} missing — run `make artifacts` to AOT-compile \
+                 the JAX model first"
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            name: t.get("name")?.as_str()?.to_string(),
+                            shape: t
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|x| x.as_usize())
+                                .collect::<Result<_>>()?,
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: spec.get("file")?.as_str()?.to_string(),
+                    inputs: tensors("inputs")?,
+                    outputs: tensors("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            l_max: j.get("l_max")?.as_usize()?,
+            k_max: j.get("k_max")?.as_usize()?,
+            b_eval: j.get("b_eval")?.as_usize()?,
+            nhw: j.get("nhw")?.as_usize()?,
+            ncomp: j.get("ncomp")?.as_usize()?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+
+    #[test]
+    fn parses_generated_manifest() {
+        let m = Manifest::load(&repo_root().join("artifacts")).unwrap();
+        assert_eq!(m.l_max, 32);
+        assert_eq!(m.k_max, 32);
+        assert_eq!(m.b_eval, 64);
+        for name in ["fadiff_grad", "fadiff_eval", "fadiff_detail"] {
+            assert!(m.artifacts.contains_key(name), "{name}");
+        }
+        let grad = &m.artifacts["fadiff_grad"];
+        assert_eq!(grad.inputs[0].name, "theta");
+        assert_eq!(grad.inputs[0].shape, vec![32, 7, 4]);
+        assert_eq!(grad.output_index("grad_theta"), Some(5));
+        // scalar outputs have empty shapes but 1 element
+        assert_eq!(grad.outputs[0].elements(), 1);
+    }
+
+    #[test]
+    fn missing_dir_gives_actionable_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the ONLY place python-produced bits enter the
+//! system, and it happens at load time — never per request.
+
+pub mod manifest;
+pub mod stage;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use stage::HostTensor;
+
+/// Names of the three AOT entry points.
+pub const ART_GRAD: &str = "fadiff_grad";
+pub const ART_EVAL: &str = "fadiff_eval";
+pub const ART_DETAIL: &str = "fadiff_detail";
+
+/// A compiled artifact plus its interface description.
+pub struct Compiled {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, artifacts compiled lazily and
+/// cached. Executions from multiple coordinator workers share the client
+/// (PJRT CPU is thread-safe; compilation is serialized by the cache
+/// lock).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    root: PathBuf,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Compiled>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (usually
+    /// `<repo>/artifacts`).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            root: artifacts_dir.to_path_buf(),
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: locate artifacts under the repo root.
+    pub fn load_default() -> Result<Runtime> {
+        let root = crate::config::repo_root().join("artifacts");
+        Self::load(&root)
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Compiled>> {
+        if let Some(c) = self.compiled.lock().unwrap().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let path = self.root.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let compiled = std::sync::Arc::new(Compiled { spec, exe });
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Execute an artifact with host-staged f32 tensors; returns one
+    /// flat f32 vector per declared output (tuple decomposed), in
+    /// manifest order.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor])
+                   -> Result<Vec<Vec<f32>>> {
+        let compiled = self.get(name)?;
+        compiled.run(inputs)
+    }
+}
+
+impl Compiled {
+    /// Execute with shape checking against the manifest.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            let expect: usize = spec.shape.iter().product::<usize>().max(1);
+            if t.data.len() != expect {
+                anyhow::bail!(
+                    "input {:?}: expected {} elements for shape {:?}, \
+                     got {}",
+                    spec.name,
+                    expect,
+                    spec.shape,
+                    t.data.len()
+                );
+            }
+            literals.push(t.to_literal(&spec.shape)?);
+        }
+        self.run_literals(&literals)
+    }
+
+    /// Stage one input into a reusable `xla::Literal` (hot-loop path:
+    /// workload-constant tensors are converted once and the per-step
+    /// `run_literals` call skips the host copies entirely).
+    pub fn stage_input(&self, index: usize, t: &HostTensor)
+                       -> Result<xla::Literal> {
+        let spec = &self.spec.inputs[index];
+        let expect: usize = spec.shape.iter().product::<usize>().max(1);
+        if t.data.len() != expect {
+            anyhow::bail!("input {:?}: expected {expect} elements",
+                          spec.name);
+        }
+        t.to_literal(&spec.shape)
+    }
+
+    /// Execute with pre-staged literals (no per-call host conversion).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self, literals: &[L]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<L>(literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        if parts.len() != self.spec.outputs.len() {
+            anyhow::bail!(
+                "artifact {} declared {} outputs, produced {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// Check all manifest artifacts compile (used by `fadiff selftest` and
+/// the integration tests).
+pub fn selftest(rt: &Runtime) -> Result<Vec<String>> {
+    let mut report = Vec::new();
+    for name in rt.manifest.artifacts.keys() {
+        rt.get(name).with_context(|| format!("compiling {name}"))?;
+        report.push(format!("{name}: compiled OK"));
+    }
+    Ok(report)
+}

@@ -1,0 +1,220 @@
+//! Host-side input staging for the AOT artifacts: padding workloads to
+//! the artifact's static shapes and packing tensors into PJRT literals.
+//!
+//! `WorkloadStage` precomputes every workload-constant input (dims,
+//! divisor tables, masks, hardware vector) once per optimization job so
+//! the per-step hot loop only refreshes theta/sigma/gumbel/scalars.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::HwConfig;
+use crate::mapping::{divisor_candidates, Strategy, NSLOTS};
+use crate::workload::{Workload, NDIMS};
+
+/// A flat f32 host tensor (shape supplied by the artifact manifest).
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>) -> HostTensor {
+        HostTensor { data }
+    }
+
+    pub fn scalar(x: f32) -> HostTensor {
+        HostTensor { data: vec![x] }
+    }
+
+    /// Convert to an `xla::Literal` of the given shape.
+    pub fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+    }
+}
+
+/// Precomputed, padded artifact inputs for one (workload, hw) pair.
+#[derive(Clone, Debug)]
+pub struct WorkloadStage {
+    pub l_max: usize,
+    pub k_max: usize,
+    pub real_layers: usize,
+    pub dims: HostTensor,       // [L,7]
+    pub div: HostTensor,        // [L,7,K]
+    pub div_mask: HostTensor,   // [L,7,K]
+    pub layer_mask: HostTensor, // [L]
+    pub edge_mask: HostTensor,  // [L]
+    pub hw: HostTensor,         // [NHW]
+}
+
+impl WorkloadStage {
+    /// Build the padded staging for a workload.
+    pub fn new(w: &Workload, hw: &HwConfig, l_max: usize, k_max: usize)
+               -> Result<WorkloadStage> {
+        let l = w.len();
+        if l > l_max {
+            anyhow::bail!(
+                "workload {} has {l} layers > artifact L_MAX {l_max}",
+                w.name
+            );
+        }
+        let mut dims = vec![1.0f32; l_max * NDIMS];
+        let mut div = vec![1.0f32; l_max * NDIMS * k_max];
+        let mut div_mask = vec![0.0f32; l_max * NDIMS * k_max];
+        let mut layer_mask = vec![0.0f32; l_max];
+        let mut edge_mask = vec![0.0f32; l_max];
+        // padding rows: dim size 1 with the single divisor {1} marked
+        // valid — an all-masked candidate row would make the snap kernel
+        // emit 0 and poison downstream products with 0-size tiles.
+        for ld in 0..l_max * NDIMS {
+            div_mask[ld * k_max] = 1.0;
+        }
+        for (i, layer) in w.layers.iter().enumerate() {
+            layer_mask[i] = 1.0;
+            for d in 0..NDIMS {
+                let n = layer.dims[d] as u64;
+                dims[i * NDIMS + d] = n as f32;
+                let cands = divisor_candidates(n, k_max);
+                for (k, &c) in cands.iter().enumerate() {
+                    div[(i * NDIMS + d) * k_max + k] = c as f32;
+                    div_mask[(i * NDIMS + d) * k_max + k] = 1.0;
+                }
+            }
+        }
+        for (i, &f) in w.fusible.iter().enumerate() {
+            edge_mask[i] = if f { 1.0 } else { 0.0 };
+        }
+        Ok(WorkloadStage {
+            l_max,
+            k_max,
+            real_layers: l,
+            dims: HostTensor::new(dims),
+            div: HostTensor::new(div),
+            div_mask: HostTensor::new(div_mask),
+            layer_mask: HostTensor::new(layer_mask),
+            edge_mask: HostTensor::new(edge_mask),
+            hw: HostTensor::new(hw.to_hw_vector()),
+        })
+    }
+
+    /// Pack a discrete strategy into a padded [L,7,4] factors tensor.
+    pub fn pack_factors(&self, s: &Strategy) -> HostTensor {
+        let mut out = vec![1.0f32; self.l_max * NDIMS * NSLOTS];
+        for (l, m) in s.mappings.iter().enumerate() {
+            for d in 0..NDIMS {
+                for sl in 0..NSLOTS {
+                    out[(l * NDIMS + d) * NSLOTS + sl] =
+                        m.factors[d][sl] as f32;
+                }
+            }
+        }
+        HostTensor::new(out)
+    }
+
+    /// Pack a strategy's fusion bits into a padded [L] sigma tensor.
+    pub fn pack_sigma(&self, s: &Strategy) -> HostTensor {
+        let mut out = vec![0.0f32; self.l_max];
+        for (i, &f) in s.fuse.iter().enumerate() {
+            out[i] = if f { 1.0 } else { 0.0 };
+        }
+        HostTensor::new(out)
+    }
+
+    /// Pack a population of strategies for the batched eval artifact,
+    /// padding the batch with repeats of the first candidate.
+    pub fn pack_population(&self, pop: &[Strategy], b_eval: usize)
+                           -> Result<(HostTensor, HostTensor)> {
+        if pop.is_empty() || pop.len() > b_eval {
+            anyhow::bail!("population size {} not in 1..={}", pop.len(),
+                          b_eval);
+        }
+        let stride = self.l_max * NDIMS * NSLOTS;
+        let mut fac = vec![1.0f32; b_eval * stride];
+        let mut sig = vec![0.0f32; b_eval * self.l_max];
+        for b in 0..b_eval {
+            let s = &pop[b.min(pop.len() - 1)];
+            let f = self.pack_factors(s);
+            fac[b * stride..(b + 1) * stride].copy_from_slice(&f.data);
+            let g = self.pack_sigma(s);
+            sig[b * self.l_max..(b + 1) * self.l_max]
+                .copy_from_slice(&g.data);
+        }
+        Ok((HostTensor::new(fac), HostTensor::new(sig)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::workload::zoo;
+
+    #[test]
+    fn stage_pads_correctly() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::gpt3_6_7b();
+        let st = WorkloadStage::new(&w, &hw, 32, 32).unwrap();
+        assert_eq!(st.real_layers, 8);
+        assert_eq!(st.dims.data.len(), 32 * 7);
+        assert_eq!(st.layer_mask.data[..8], [1.0; 8]);
+        assert_eq!(st.layer_mask.data[8], 0.0);
+        // padding layers have dims 1
+        assert_eq!(st.dims.data[8 * 7], 1.0);
+        // ffn_up edge fusible
+        assert_eq!(st.edge_mask.data[6], 1.0);
+        assert_eq!(st.edge_mask.data[0], 0.0);
+    }
+
+    #[test]
+    fn divisor_tables_cover_all_dims() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let st = WorkloadStage::new(&w, &hw, 32, 32).unwrap();
+        // every real (layer, dim) has at least divisor 1 marked valid
+        for l in 0..w.len() {
+            for d in 0..NDIMS {
+                assert_eq!(st.div.data[(l * NDIMS + d) * 32], 1.0);
+                assert_eq!(st.div_mask.data[(l * NDIMS + d) * 32], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_workload_rejected() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        assert!(WorkloadStage::new(&w, &hw, 8, 32).is_err());
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let st = WorkloadStage::new(&w, &hw, 32, 32).unwrap();
+        let mut s = Strategy::trivial(&w);
+        s.mappings[2].factors[1][0] = 8;
+        s.fuse[1] = true;
+        let f = st.pack_factors(&s);
+        assert_eq!(f.data[(2 * NDIMS + 1) * NSLOTS], 8.0);
+        let g = st.pack_sigma(&s);
+        assert_eq!(g.data[1], 1.0);
+        assert_eq!(g.data[0], 0.0);
+    }
+
+    #[test]
+    fn population_padding_repeats() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let st = WorkloadStage::new(&w, &hw, 32, 32).unwrap();
+        let pop = vec![Strategy::trivial(&w); 3];
+        let (fac, sig) = st.pack_population(&pop, 64).unwrap();
+        assert_eq!(fac.data.len(), 64 * 32 * 7 * 4);
+        assert_eq!(sig.data.len(), 64 * 32);
+        assert!(st.pack_population(&[], 64).is_err());
+    }
+}

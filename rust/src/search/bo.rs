@@ -1,0 +1,135 @@
+//! Bayesian-optimization baseline (Snoek et al., paper ref [15]; the
+//! "learning-based" representative of Sec 4.3.1).
+//!
+//! BO operates on the same continuous encoding as the gradient search
+//! (normalized log2 tiling factors + fusion logits) and decodes through
+//! the identical projection, so all methods share one search space. A GP
+//! with RBF kernel models log-EDP; candidates maximize expected
+//! improvement over a random + local-perturbation pool. The O(N^3)
+//! Cholesky refit per observation is precisely the scalability wall the
+//! paper's Sec 1 attributes to BO.
+
+use anyhow::Result;
+
+use crate::config::HwConfig;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+use super::encoding::{dim, express};
+use super::gp::Gp;
+use super::{Budget, Incumbent, SearchResult};
+
+/// BO hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct BoConfig {
+    pub init_samples: usize,
+    pub candidates_per_iter: usize,
+    pub lengthscale: f64,
+    pub noise: f64,
+    pub seed: u64,
+    /// Cap on GP observations (keeps the O(N^3) refit bounded; oldest
+    /// low-quality points are dropped beyond this).
+    pub max_observations: usize,
+}
+
+impl Default for BoConfig {
+    fn default() -> Self {
+        BoConfig {
+            init_samples: 12,
+            candidates_per_iter: 256,
+            lengthscale: 0.35,
+            noise: 1e-4,
+            seed: 0xB0,
+            max_observations: 160,
+        }
+    }
+}
+
+/// Run BO under a budget.
+pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
+                budget: Budget) -> Result<SearchResult> {
+    let d = dim(w);
+    let mut rng = Rng::new(cfg.seed);
+    let mut inc = Incumbent::new(w, hw);
+    inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut iter = 0usize;
+
+    let observe =
+        |x: Vec<f64>, inc: &mut Incumbent, xs: &mut Vec<Vec<f64>>,
+         ys: &mut Vec<f64>, iter: usize| {
+            let s = express(&x, w, hw);
+            let edp = inc.offer(&s, iter);
+            // log-EDP objective; infeasible decodes cannot occur (decode
+            // repairs), but guard anyway
+            let y = if edp.is_finite() { edp.ln() } else { 1e3 };
+            xs.push(x);
+            ys.push(y);
+        };
+
+    // initial design: uniform random
+    for _ in 0..cfg.init_samples {
+        if inc.elapsed() > budget.seconds || iter >= budget.max_iters {
+            break;
+        }
+        iter += 1;
+        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        observe(x, &mut inc, &mut xs, &mut ys, iter);
+    }
+
+    while inc.elapsed() < budget.seconds && iter < budget.max_iters {
+        iter += 1;
+        // bound the O(N^3) refit
+        if xs.len() > cfg.max_observations {
+            // drop the worst half of the oldest third
+            let cut = xs.len() / 3;
+            let mut idx: Vec<usize> = (0..cut).collect();
+            idx.sort_by(|&a, &b| ys[b].partial_cmp(&ys[a]).unwrap());
+            let mut remove: Vec<usize> = idx[..cut / 2].to_vec();
+            remove.sort_unstable_by(|a, b| b.cmp(a));
+            for i in remove {
+                xs.remove(i);
+                ys.remove(i);
+            }
+        }
+        let gp = match Gp::fit(&xs, &ys, cfg.lengthscale, cfg.noise) {
+            Some(gp) => gp,
+            None => {
+                // degenerate kernel: fall back to random sampling
+                let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                observe(x, &mut inc, &mut xs, &mut ys, iter);
+                continue;
+            }
+        };
+        let best_y = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let best_x = xs[ys
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0]
+            .clone();
+
+        // acquisition: random pool + local perturbations of the best
+        let mut best_cand: Option<(f64, Vec<f64>)> = None;
+        for c in 0..cfg.candidates_per_iter {
+            let x: Vec<f64> = if c % 2 == 0 {
+                (0..d).map(|_| rng.f64()).collect()
+            } else {
+                best_x
+                    .iter()
+                    .map(|&v| (v + rng.normal() * 0.08).clamp(0.0, 1.0))
+                    .collect()
+            };
+            let ei = gp.expected_improvement(&x, best_y);
+            if best_cand.as_ref().map_or(true, |(b, _)| ei > *b) {
+                best_cand = Some((ei, x));
+            }
+        }
+        let (_, x) = best_cand.unwrap();
+        observe(x, &mut inc, &mut xs, &mut ys, iter);
+    }
+    Ok(inc.finish(iter))
+}

@@ -1,0 +1,164 @@
+//! Shared continuous encoding of the joint mapping x fusion space used
+//! by the black-box baselines (GA, BO, random): a unit-cube vector per
+//! strategy, decoded through the same projection/repair pipeline as the
+//! gradient search — all methods explore the identical design space
+//! (the paper's "same search spaces" protocol, Sec 4.3.1).
+
+use crate::config::HwConfig;
+use crate::mapping::decode::{decode, Relaxed};
+use crate::mapping::Strategy;
+use crate::workload::{Workload, NDIMS};
+
+/// Vector dimensionality for a workload.
+pub fn dim(w: &Workload) -> usize {
+    w.len() * NDIMS * 4 + w.fusible.len()
+}
+
+/// Decode a unit-cube vector into a hardware-valid strategy.
+pub fn express(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
+    let mut relaxed = Relaxed::neutral(w);
+    for l in 0..w.len() {
+        for d in 0..NDIMS {
+            let cap = (w.layers[l].dims[d] as f64).log2().max(0.0);
+            for s in 0..4 {
+                let u = x[(l * NDIMS + d) * 4 + s].clamp(0.0, 1.0);
+                relaxed.theta[l][d][s] = u * (cap + 0.5) - 0.25;
+            }
+        }
+    }
+    let base = w.len() * NDIMS * 4;
+    for i in 0..relaxed.sigma.len() {
+        relaxed.sigma[i] = x[base + i].clamp(0.0, 1.0);
+    }
+    decode(&relaxed, w, hw)
+}
+
+
+/// Naive legalization used by the heuristic GA baseline: the same
+/// unit-cube genes, but WITHOUT FADiff's snap-then-trim decode and
+/// sigma-ordered capacity repair (those embody the paper's contribution
+/// and would launder its advantage into the baseline). Each slot snaps
+/// to the nearest divisor independently; a dimension whose slot product
+/// overflows is reset to DRAM-only; a layer that overflows a buffer is
+/// reset to the trivial mapping; a fusion group that overflows drops all
+/// its edges.
+pub fn express_naive(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
+    use crate::mapping::{divisors, LayerMapping, SLOT_S};
+    use crate::workload::{DIM_C, DIM_K};
+
+    let mut mappings = Vec::with_capacity(w.len());
+    for l in 0..w.len() {
+        let mut m = LayerMapping::trivial();
+        for d in 0..NDIMS {
+            let n = w.layers[l].dims[d] as u64;
+            let divs = divisors(n);
+            let cap = (n as f64).log2().max(0.0);
+            for s in 0..4 {
+                let u = x[(l * NDIMS + d) * 4 + s].clamp(0.0, 1.0);
+                let target = (u * (cap + 0.5) - 0.25).exp2();
+                let limit = if s == SLOT_S {
+                    match d {
+                        DIM_K => hw.pe_cols as u64,
+                        DIM_C => hw.pe_rows as u64,
+                        _ => 1,
+                    }
+                } else {
+                    u64::MAX
+                };
+                m.factors[d][s] = divs
+                    .iter()
+                    .copied()
+                    .filter(|&f| f <= limit)
+                    .min_by(|&a, &b| {
+                        let da = (a as f64 - target).abs();
+                        let db = (b as f64 - target).abs();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap_or(1);
+            }
+            // naive overflow handling: product must divide n, else DRAM
+            if n % m.inner(d) != 0 || m.inner(d) > n {
+                let sp = m.factors[d][SLOT_S];
+                m.factors[d] = [1, 1, 1, if n % sp == 0 { sp } else { 1 }];
+            }
+        }
+        // per-layer capacity: reset to trivial when overflowing
+        let c = crate::costmodel::components(&m, &w.layers[l].dims);
+        if (c.s_w2 + c.s_i2) * hw.element_bytes > hw.c2_bytes
+            || c.s_o1 * hw.acc_bytes > hw.c1_bytes
+        {
+            m = LayerMapping::trivial();
+        }
+        mappings.push(m);
+    }
+    let base = w.len() * NDIMS * 4;
+    let mut fuse: Vec<bool> = (0..w.fusible.len())
+        .map(|i| w.fusible[i] && x[base + i] > 0.5)
+        .collect();
+    // naive group repair: drop every edge of an overflowing group
+    loop {
+        let s = Strategy { mappings: mappings.clone(), fuse: fuse.clone() };
+        let mut bad = None;
+        for (a, b) in s.groups() {
+            if a == b {
+                continue;
+            }
+            let req: f64 = (a..=b)
+                .map(|i| {
+                    let c = crate::costmodel::components(
+                        &mappings[i], &w.layers[i].dims);
+                    (c.s_w2 + c.s_i2) * hw.element_bytes
+                })
+                .sum();
+            if req > hw.c2_bytes {
+                bad = Some((a, b));
+                break;
+            }
+        }
+        match bad {
+            None => break,
+            Some((a, b)) => {
+                for i in a..b {
+                    fuse[i] = false;
+                }
+            }
+        }
+    }
+    Strategy { mappings, fuse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::util::rng::Rng;
+    use crate::workload::zoo;
+
+    #[test]
+    fn express_naive_always_feasible() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut rng = Rng::new(23);
+        for w in zoo::table1_suite() {
+            let d = dim(&w);
+            for _ in 0..10 {
+                let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                let s = express_naive(&x, &w, &hw);
+                crate::costmodel::feasible(&s, &w, &hw).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn express_always_feasible() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut rng = Rng::new(17);
+        for w in zoo::table1_suite() {
+            let d = dim(&w);
+            for _ in 0..10 {
+                let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                let s = express(&x, &w, &hw);
+                crate::costmodel::feasible(&s, &w, &hw).unwrap();
+            }
+        }
+    }
+}

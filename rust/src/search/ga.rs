@@ -1,0 +1,150 @@
+//! Genetic-algorithm baseline (paper ref [16]; Sec 4.3.1's heuristic
+//! representative).
+//!
+//! Operates on the shared continuous unit-cube encoding
+//! (`search::encoding`) so every method explores the identical design
+//! space (the paper's "same search spaces" protocol): tournament
+//! selection, uniform layer-granularity crossover, Gaussian + reset
+//! mutation, elitism. Every genome decodes through the same
+//! projection/repair pipeline as the gradient search, so all candidates
+//! are hardware-valid and fitness is simply the native closed-form EDP.
+
+use anyhow::Result;
+
+use crate::config::HwConfig;
+use crate::util::rng::Rng;
+use crate::workload::{Workload, NDIMS};
+
+use super::encoding::{dim, express_naive};
+use super::{Budget, Incumbent, SearchResult};
+
+/// GA hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct GaConfig {
+    pub population: usize,
+    pub tournament: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    /// Std-dev of the Gaussian gene perturbation (unit-cube space).
+    pub mutation_sigma: f64,
+    pub elitism: usize,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 48,
+            tournament: 3,
+            crossover_rate: 0.85,
+            mutation_rate: 0.10,
+            mutation_sigma: 0.15,
+            elitism: 2,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Run the GA under a budget. `_k_max` retained for interface parity
+/// with the artifact-batched evaluation path.
+pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
+                budget: Budget, _k_max: usize) -> Result<SearchResult> {
+    let d = dim(w);
+    let genes_per_layer = NDIMS * 4;
+    let mut rng = Rng::new(cfg.seed);
+    let mut inc = Incumbent::new(w, hw);
+    inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+
+    let mut pop: Vec<Vec<f64>> = (0..cfg.population)
+        .map(|_| (0..d).map(|_| rng.f64()).collect())
+        .collect();
+    let mut fitness = vec![f64::INFINITY; pop.len()];
+    let mut gen = 0usize;
+
+    while gen < budget.max_iters && inc.elapsed() < budget.seconds {
+        gen += 1;
+        for (i, g) in pop.iter().enumerate() {
+            let s = express_naive(g, w, hw);
+            fitness[i] = inc.offer(&s, gen);
+        }
+        if inc.elapsed() >= budget.seconds {
+            break;
+        }
+        // next generation
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by(|&a, &b| {
+            fitness[a].partial_cmp(&fitness[b]).unwrap()
+        });
+        let mut next: Vec<Vec<f64>> = order[..cfg.elitism.min(pop.len())]
+            .iter()
+            .map(|&i| pop[i].clone())
+            .collect();
+        while next.len() < cfg.population {
+            let pick = |rng: &mut Rng| -> usize {
+                let mut best = rng.below(pop.len());
+                for _ in 1..cfg.tournament {
+                    let c = rng.below(pop.len());
+                    if fitness[c] < fitness[best] {
+                        best = c;
+                    }
+                }
+                best
+            };
+            let a = pick(&mut rng);
+            let b = pick(&mut rng);
+            let mut child = pop[a].clone();
+            if rng.chance(cfg.crossover_rate) {
+                // uniform crossover at layer granularity (+ fusion tail)
+                for l in 0..w.len() {
+                    if rng.chance(0.5) {
+                        let lo = l * genes_per_layer;
+                        let hi = lo + genes_per_layer;
+                        child[lo..hi].copy_from_slice(&pop[b][lo..hi]);
+                    }
+                }
+                let base = w.len() * genes_per_layer;
+                for i in base..d {
+                    if rng.chance(0.5) {
+                        child[i] = pop[b][i];
+                    }
+                }
+            }
+            // mutation: mostly local Gaussian, occasionally full reset
+            for gene in child.iter_mut() {
+                if rng.chance(cfg.mutation_rate) {
+                    *gene = if rng.chance(0.2) {
+                        rng.f64()
+                    } else {
+                        (*gene + rng.normal() * cfg.mutation_sigma)
+                            .clamp(0.0, 1.0)
+                    };
+                }
+            }
+            next.push(child);
+        }
+        pop = next;
+    }
+    Ok(inc.finish(gen))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::costmodel;
+    use crate::workload::zoo;
+
+    #[test]
+    fn ga_improves_over_generations() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let trivial = costmodel::evaluate(
+            &crate::mapping::Strategy::trivial(&w), &w, &hw);
+        let r = optimize(&w, &hw, &GaConfig::default(),
+                         Budget::iters(15), 32)
+            .unwrap();
+        assert!(r.edp < trivial.edp, "{} !< {}", r.edp, trivial.edp);
+        costmodel::feasible(&r.best, &w, &hw).unwrap();
+        assert!(r.trace.len() >= 2, "GA never improved");
+    }
+}

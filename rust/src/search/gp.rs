@@ -1,0 +1,235 @@
+//! Gaussian-process substrate for the BO baseline: RBF kernel, Cholesky
+//! factorization, posterior mean/variance, log expected improvement.
+//! Hand-rolled dense linear algebra (no external crates offline).
+
+/// Dense symmetric positive-definite solver via Cholesky.
+pub struct Cholesky {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Cholesky {
+    /// Factor A (row-major n x n). Returns None if not SPD.
+    pub fn new(a: &[f64], n: usize) -> Option<Cholesky> {
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[i * n + j];
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Some(Cholesky { l, n })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[i * n + k] * y[k];
+            }
+            y[i] = sum / self.l[i * n + i];
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[k * n + i] * x[k];
+            }
+            x[i] = sum / self.l[i * n + i];
+        }
+        x
+    }
+
+    /// Solve L v = b (forward substitution only).
+    pub fn forward(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[i * n + k] * y[k];
+            }
+            y[i] = sum / self.l[i * n + i];
+        }
+        y
+    }
+}
+
+/// RBF (squared-exponential) kernel.
+pub fn rbf(a: &[f64], b: &[f64], lengthscale: f64, variance: f64) -> f64 {
+    let mut d2 = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        d2 += d * d;
+    }
+    variance * (-0.5 * d2 / (lengthscale * lengthscale)).exp()
+}
+
+/// A fitted GP posterior over observed (x, y) pairs.
+pub struct Gp {
+    xs: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    chol: Cholesky,
+    lengthscale: f64,
+    variance: f64,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl Gp {
+    /// Fit with fixed hyper-parameters + jitter; y standardized
+    /// internally.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], lengthscale: f64,
+               noise: f64) -> Option<Gp> {
+        let n = xs.len();
+        if n == 0 {
+            return None;
+        }
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let y_std = (ys.iter().map(|y| (y - y_mean).powi(2)).sum::<f64>()
+            / n as f64)
+            .sqrt()
+            .max(1e-12);
+        let yn: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_std).collect();
+        let variance = 1.0;
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = rbf(&xs[i], &xs[j], lengthscale, variance);
+                if i == j {
+                    k[i * n + j] += noise + 1e-8;
+                }
+            }
+        }
+        let chol = Cholesky::new(&k, n)?;
+        let alpha = chol.solve(&yn);
+        Some(Gp {
+            xs: xs.to_vec(),
+            alpha,
+            chol,
+            lengthscale,
+            variance,
+            y_mean,
+            y_std,
+        })
+    }
+
+    /// Posterior mean and variance at x (in original y units).
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        let kx: Vec<f64> = (0..n)
+            .map(|i| rbf(&self.xs[i], x, self.lengthscale, self.variance))
+            .collect();
+        let mean_n: f64 =
+            kx.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        let v = self.chol.forward(&kx);
+        let var_n = (self.variance - v.iter().map(|x| x * x).sum::<f64>())
+            .max(1e-12);
+        (mean_n * self.y_std + self.y_mean,
+         var_n * self.y_std * self.y_std)
+    }
+
+    /// Expected improvement (minimization) at x given the best observed y.
+    pub fn expected_improvement(&self, x: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.predict(x);
+        let sd = var.sqrt();
+        if sd < 1e-12 {
+            return 0.0;
+        }
+        let z = (best - mu) / sd;
+        let (pdf, cdf) = phi(z);
+        (best - mu) * cdf + sd * pdf
+    }
+}
+
+/// Standard normal pdf + cdf (Abramowitz–Stegun erf approximation).
+fn phi(z: f64) -> (f64, f64) {
+    let pdf = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    let cdf = 0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2));
+    (pdf, cdf)
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = [[4,2],[2,3]], b = [2, 5] => x = [-0.5, 2]
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let ch = Cholesky::new(&a, 2).unwrap();
+        let x = ch.solve(&[2.0, 5.0]);
+        assert!((x[0] + 0.5).abs() < 1e-12, "{x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(Cholesky::new(&a, 2).is_none());
+    }
+
+    #[test]
+    fn gp_interpolates_observations() {
+        let xs: Vec<Vec<f64>> =
+            vec![vec![0.0], vec![0.5], vec![1.0], vec![1.5]];
+        let ys = vec![1.0, 0.2, -0.3, 0.4];
+        let gp = Gp::fit(&xs, &ys, 0.4, 1e-6).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let (mu, var) = gp.predict(x);
+            assert!((mu - y).abs() < 1e-2, "{mu} vs {y}");
+            assert!(var < 1e-2);
+        }
+        // far away reverts to prior with much higher variance than at
+        // the observations (variance is in original y units)
+        let (_, var_near) = gp.predict(&xs[0]);
+        let (_, var_far) = gp.predict(&[10.0]);
+        assert!(var_far > 10.0 * var_near, "{var_far} vs {var_near}");
+    }
+
+    #[test]
+    fn ei_positive_where_uncertain_zero_where_known_bad() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let ys = vec![0.0, 1.0];
+        let gp = Gp::fit(&xs, &ys, 0.3, 1e-6).unwrap();
+        let ei_mid = gp.expected_improvement(&[0.5], 0.0);
+        let ei_known = gp.expected_improvement(&[1.0], 0.0);
+        assert!(ei_mid > ei_known);
+        assert!(ei_mid > 0.0);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // Abramowitz–Stegun 7.1.26 is accurate to ~1.5e-7
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
+    }
+}

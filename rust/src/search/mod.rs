@@ -1,0 +1,167 @@
+//! Search algorithms over the joint mapping x fusion space:
+//!
+//! * [`gradient`] — FADiff itself: constrained gradient descent (Adam)
+//!   over the continuous relaxation, driving the AOT `fadiff_grad`
+//!   artifact through PJRT, with tau/lambda annealing and decode-time
+//!   repair. DOSA (layer-wise, MICRO'23) is the same engine with fusion
+//!   disabled.
+//! * [`ga`] — the heuristic baseline (tournament GA, paper ref [16]).
+//! * [`bo`] — the learning-based baseline (GP + expected improvement,
+//!   paper ref [15]) on top of [`gp`].
+//! * [`random`] — uniform random sampling (sanity floor).
+
+pub mod bo;
+pub mod encoding;
+pub mod ga;
+pub mod gp;
+pub mod gradient;
+pub mod random;
+
+use std::time::Instant;
+
+use crate::config::HwConfig;
+use crate::costmodel;
+use crate::mapping::Strategy;
+use crate::workload::Workload;
+
+/// Common search budget: wall-clock (the paper compares equal time) and
+/// an iteration cap as a secondary bound.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub seconds: f64,
+    pub max_iters: usize,
+}
+
+impl Budget {
+    pub fn seconds(seconds: f64) -> Budget {
+        Budget { seconds, max_iters: usize::MAX }
+    }
+
+    pub fn iters(max_iters: usize) -> Budget {
+        Budget { seconds: f64::INFINITY, max_iters }
+    }
+}
+
+/// One point of the optimization trace (Fig 4: EDP vs time).
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub seconds: f64,
+    pub best_edp: f64,
+    pub iter: usize,
+}
+
+/// Search outcome: best feasible strategy + its native evaluation +
+/// the convergence trace.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub best: Strategy,
+    pub edp: f64,
+    pub energy: f64,
+    pub latency: f64,
+    pub trace: Vec<TracePoint>,
+    pub iters: usize,
+    pub evals: usize,
+}
+
+impl SearchResult {
+    /// EDP scaled to the full model (replica^2).
+    pub fn full_model_edp(&self, w: &Workload) -> f64 {
+        self.edp * w.replicas * w.replicas
+    }
+}
+
+/// Incumbent tracker shared by all searches: keeps the best *feasible*
+/// strategy and the (time, edp) trace.
+pub struct Incumbent<'a> {
+    w: &'a Workload,
+    hw: &'a HwConfig,
+    start: Instant,
+    pub best: Option<(Strategy, f64, f64, f64)>,
+    pub trace: Vec<TracePoint>,
+    pub evals: usize,
+}
+
+impl<'a> Incumbent<'a> {
+    pub fn new(w: &'a Workload, hw: &'a HwConfig) -> Incumbent<'a> {
+        Incumbent { w, hw, start: Instant::now(), best: None,
+                    trace: Vec::new(), evals: 0 }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Evaluate natively; record if feasible and better. Returns the EDP
+    /// (infinite when infeasible).
+    pub fn offer(&mut self, s: &Strategy, iter: usize) -> f64 {
+        self.evals += 1;
+        if costmodel::feasible(s, self.w, self.hw).is_err() {
+            return f64::INFINITY;
+        }
+        let r = costmodel::evaluate(s, self.w, self.hw);
+        let better = self
+            .best
+            .as_ref()
+            .map_or(true, |&(_, best_edp, _, _)| r.edp < best_edp);
+        if better {
+            self.best = Some((s.clone(), r.edp, r.energy, r.latency));
+            self.trace.push(TracePoint {
+                seconds: self.elapsed(),
+                best_edp: r.edp,
+                iter,
+            });
+        }
+        r.edp
+    }
+
+    /// Finish; seeds with the always-feasible trivial strategy if no
+    /// feasible candidate was ever offered.
+    pub fn finish(mut self, iters: usize) -> SearchResult {
+        if self.best.is_none() {
+            let s = Strategy::trivial(self.w);
+            self.offer(&s, iters);
+        }
+        let evals = self.evals;
+        let (best, edp, energy, latency) = self.best.unwrap();
+        SearchResult { best, edp, energy, latency, trace: self.trace,
+                       iters, evals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::workload::zoo;
+
+    #[test]
+    fn incumbent_tracks_best() {
+        let w = zoo::vgg16();
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut inc = Incumbent::new(&w, &hw);
+        let s = Strategy::trivial(&w);
+        let edp1 = inc.offer(&s, 0);
+        assert!(edp1.is_finite());
+        // fusing a legal edge on the trivial mapping improves EDP
+        let mut s2 = s.clone();
+        s2.fuse[0] = true;
+        let edp2 = inc.offer(&s2, 1);
+        assert!(edp2 < edp1);
+        let r = inc.finish(2);
+        assert_eq!(r.edp, edp2);
+        assert_eq!(r.trace.len(), 2);
+        assert!(r.trace[0].best_edp >= r.trace[1].best_edp);
+    }
+
+    #[test]
+    fn infeasible_offer_is_rejected() {
+        let w = zoo::vgg16();
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut inc = Incumbent::new(&w, &hw);
+        let mut s = Strategy::trivial(&w);
+        s.mappings[0].factors[1][3] = 64; // spatial overflow
+        assert!(inc.offer(&s, 0).is_infinite());
+        let r = inc.finish(1); // falls back to trivial
+        assert!(r.edp.is_finite());
+    }
+}

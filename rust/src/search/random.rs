@@ -1,0 +1,36 @@
+//! Uniform random search — the sanity floor every real method must beat.
+
+use anyhow::Result;
+
+use crate::config::HwConfig;
+use crate::mapping::decode::{decode, Relaxed};
+use crate::util::rng::Rng;
+use crate::workload::{Workload, NDIMS};
+
+use super::{Budget, Incumbent, SearchResult};
+
+/// Sample uniformly in the relaxed space, decode, keep the best.
+pub fn optimize(w: &Workload, hw: &HwConfig, seed: u64, budget: Budget)
+                -> Result<SearchResult> {
+    let mut rng = Rng::new(seed);
+    let mut inc = Incumbent::new(w, hw);
+    inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+    let mut iter = 0usize;
+    while inc.elapsed() < budget.seconds && iter < budget.max_iters {
+        iter += 1;
+        let mut relaxed = Relaxed::neutral(w);
+        for l in 0..w.len() {
+            for d in 0..NDIMS {
+                let cap = (w.layers[l].dims[d] as f64).log2().max(0.0);
+                for s in 0..4 {
+                    relaxed.theta[l][d][s] = rng.range(-0.5, cap + 0.5);
+                }
+            }
+        }
+        for i in 0..relaxed.sigma.len() {
+            relaxed.sigma[i] = rng.f64();
+        }
+        inc.offer(&decode(&relaxed, w, hw), iter);
+    }
+    Ok(inc.finish(iter))
+}

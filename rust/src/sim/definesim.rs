@@ -1,0 +1,218 @@
+//! DeFiNES-like depth-first fusion baseline (paper ref [2], used as the
+//! external reference for the Fig 3 trend validation).
+//!
+//! Structure follows DeFiNES's depth-first scheduling abstraction, which
+//! is *deliberately different* from both the closed-form model and the
+//! tile-walking simulator:
+//!
+//! * a fused stack executes output-tile by output-tile, depth first;
+//! * the consumer's output tile is chosen, and required input tiles are
+//!   back-propagated through the stack with R/S halo growth;
+//! * DRAM traffic = first-layer input fills + last-layer output stores +
+//!   per-layer weight streams; intermediates live entirely on chip;
+//! * latency per tile = max(compute, DRAM stream) under LB (fully-flexible
+//!   on-chip) assumptions; tiles pipeline without refill overlap.
+//!
+//! Because Fig 3 compares *Z-scored trends*, only relative movement
+//! across tile-size sweeps matters — absolute constants differ from the
+//! other models by design.
+
+use crate::config::HwConfig;
+use crate::workload::{Layer, DIM_C, DIM_K, DIM_N, DIM_P, DIM_Q, DIM_R,
+                      DIM_S};
+
+/// A depth-first schedule for a fused stack: the output tile of the LAST
+/// layer in the stack, in (p, q) spatial extents.
+#[derive(Clone, Copy, Debug)]
+pub struct DfTile {
+    pub tp: usize,
+    pub tq: usize,
+}
+
+/// Cost of one fused stack under a depth-first schedule.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DfCost {
+    pub dram_elems: f64,
+    pub onchip_elems: f64,
+    pub macs: f64,
+    pub latency: f64,
+    pub energy: f64,
+    /// Peak on-chip footprint (bytes) of the depth-first working set.
+    pub peak_bytes: f64,
+}
+
+/// Evaluate a fused stack (1..=N layers, producer first) executing
+/// depth-first with the given last-layer output tile.
+pub fn evaluate_stack(stack: &[Layer], tile: DfTile, hw: &HwConfig)
+                      -> DfCost {
+    assert!(!stack.is_empty());
+    let last = &stack[stack.len() - 1];
+    let out_p = last.dims[DIM_P];
+    let out_q = last.dims[DIM_Q];
+    let tiles_p = out_p.div_ceil(tile.tp);
+    let tiles_q = out_q.div_ceil(tile.tq);
+    let n_tiles = (tiles_p * tiles_q) as f64 * last.dims[DIM_N] as f64;
+
+    // Back-propagate tile extents through the stack (halo growth by
+    // R-1 / S-1 per layer, stride-1 model).
+    let mut tp = vec![0usize; stack.len() + 1];
+    let mut tq = vec![0usize; stack.len() + 1];
+    tp[stack.len()] = tile.tp.min(out_p);
+    tq[stack.len()] = tile.tq.min(out_q);
+    for i in (0..stack.len()).rev() {
+        tp[i] = (tp[i + 1] + stack[i].dims[DIM_R] - 1)
+            .min(stack[i].dims[DIM_P] + stack[i].dims[DIM_R] - 1);
+        tq[i] = (tq[i + 1] + stack[i].dims[DIM_S] - 1)
+            .min(stack[i].dims[DIM_Q] + stack[i].dims[DIM_S] - 1);
+    }
+
+    let first = &stack[0];
+    // DRAM traffic per tile: first-layer input tile + last-layer output
+    // tile; weights stream once per tile unless they fit resident.
+    let in_tile =
+        (tp[0] * tq[0] * first.dims[DIM_C]) as f64;
+    let out_tile = (tp[stack.len()] * tq[stack.len()]
+        * last.dims[DIM_K]) as f64;
+    let weights_total: f64 = stack
+        .iter()
+        .map(|l| {
+            (l.dims[DIM_K] * l.dims[DIM_C] * l.dims[DIM_R] * l.dims[DIM_S])
+                as f64
+        })
+        .sum();
+    let weights_bytes = weights_total * hw.element_bytes;
+
+    // Working set: per-layer intermediate tiles + weights (if resident).
+    let mut inter = 0.0f64;
+    let mut macs = 0.0f64;
+    for (i, l) in stack.iter().enumerate() {
+        inter += (tp[i + 1] * tq[i + 1] * l.dims[DIM_K]) as f64;
+        macs += (l.dims[DIM_K] * l.dims[DIM_C] * l.dims[DIM_R]
+            * l.dims[DIM_S]) as f64
+            * (tp[i + 1] * tq[i + 1]) as f64;
+    }
+    let weights_resident =
+        weights_bytes + inter * hw.element_bytes <= hw.c2_bytes;
+    let peak_bytes = inter * hw.element_bytes
+        + if weights_resident { weights_bytes } else { 0.0 };
+
+    let dram_per_tile = in_tile
+        + out_tile
+        + if weights_resident { 0.0 } else { weights_total };
+    let dram_elems = dram_per_tile * n_tiles
+        + if weights_resident { weights_total } else { 0.0 };
+    let onchip_per_tile = inter * 2.0; // produce + consume
+    let onchip_elems = onchip_per_tile * n_tiles;
+    let total_macs = macs * n_tiles;
+
+    // Latency: per-tile max(compute at full array, DRAM stream), summed.
+    let eb = hw.element_bytes;
+    let compute = macs / hw.n_pe();
+    let stream = dram_per_tile * eb / hw.bw_dram;
+    let latency = compute.max(stream) * n_tiles
+        + if weights_resident {
+            weights_bytes / hw.bw_dram
+        } else {
+            0.0
+        };
+
+    let energy = total_macs * hw.energy_per_mac
+        + dram_elems * hw.epa_dram
+        + onchip_elems * hw.epa_l2;
+
+    DfCost {
+        dram_elems,
+        onchip_elems,
+        macs: total_macs,
+        latency,
+        energy,
+        peak_bytes,
+    }
+}
+
+/// Sweep depth-first output-tile sizes for a stack, returning
+/// (tile, cost) pairs — the Fig 3 x-axis.
+pub fn sweep_tiles(stack: &[Layer], hw: &HwConfig) -> Vec<(DfTile, DfCost)> {
+    let last = &stack[stack.len() - 1];
+    let mut out = Vec::new();
+    for &t in &[1usize, 2, 4, 7, 8, 14, 16, 28, 32, 56, 112, 224] {
+        if t > last.dims[DIM_P].max(1) {
+            continue;
+        }
+        let tile = DfTile { tp: t, tq: t };
+        out.push((tile, evaluate_stack(stack, tile, hw)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::workload::{zoo, LayerKind};
+
+    fn hw() -> HwConfig {
+        load_config(&repo_root(), "large").unwrap()
+    }
+
+    fn stack2() -> Vec<Layer> {
+        let w = zoo::vgg16();
+        vec![w.layers[4].clone(), w.layers[5].clone()]
+    }
+
+    #[test]
+    fn halo_grows_backward() {
+        let s = stack2();
+        let c_small = evaluate_stack(&s, DfTile { tp: 4, tq: 4 }, &hw());
+        let c_big = evaluate_stack(&s, DfTile { tp: 28, tq: 28 }, &hw());
+        // small tiles => relatively more halo => more DRAM per output
+        let per_out_small = c_small.dram_elems / c_small.macs;
+        let per_out_big = c_big.dram_elems / c_big.macs;
+        assert!(per_out_small > per_out_big);
+    }
+
+    #[test]
+    fn fused_stack_beats_sum_of_singles_on_dram() {
+        let s = stack2();
+        let hw = hw();
+        let t = DfTile { tp: 14, tq: 14 };
+        let fused = evaluate_stack(&s, t, &hw);
+        let a = evaluate_stack(&s[..1], t, &hw);
+        let b = evaluate_stack(&s[1..], t, &hw);
+        assert!(fused.dram_elems < a.dram_elems + b.dram_elems);
+    }
+
+    #[test]
+    fn sweep_is_nonempty_and_finite() {
+        let s = stack2();
+        let pts = sweep_tiles(&s, &hw());
+        assert!(pts.len() >= 5);
+        for (_, c) in pts {
+            assert!(c.energy.is_finite() && c.latency.is_finite());
+            assert!(c.energy > 0.0 && c.latency > 0.0);
+        }
+    }
+
+    #[test]
+    fn three_layer_stack_works() {
+        let w = zoo::vgg16();
+        let s = vec![w.layers[4].clone(), w.layers[5].clone(),
+                     w.layers[6].clone()];
+        let c = evaluate_stack(&s, DfTile { tp: 14, tq: 14 }, &hw());
+        assert!(c.macs > 0.0 && c.peak_bytes > 0.0);
+    }
+
+    #[test]
+    fn fc_stack_degenerates_gracefully() {
+        let w = zoo::vgg16();
+        let fc: Vec<Layer> = w
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Fc)
+            .take(2)
+            .cloned()
+            .collect();
+        let c = evaluate_stack(&fc, DfTile { tp: 1, tq: 1 }, &hw());
+        assert!(c.energy.is_finite());
+    }
+}

@@ -1,0 +1,6 @@
+//! Independent simulators: the tile-walking golden reference
+//! (Timeloop-class, validates the differentiable model — paper Sec 4.2)
+//! and the DeFiNES-like depth-first fusion baseline (Fig 3).
+
+pub mod definesim;
+pub mod tilesim;

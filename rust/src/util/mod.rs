@@ -1,0 +1,9 @@
+//! Hand-rolled substrates for the offline build image (DESIGN.md §3):
+//! PRNG, JSON, statistics, CLI parsing, thread pool, property testing.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

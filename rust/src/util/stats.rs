@@ -1,0 +1,165 @@
+//! Statistics substrate: rank correlations and normalization used by the
+//! cost-model validation experiment (paper §4.2) and Fig 3.
+
+/// Kendall's tau-b rank correlation (handles ties).
+pub fn kendall_tau(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let (mut concordant, mut discordant) = (0i64, 0i64);
+    let (mut ties_x, mut ties_y) = (0i64, 0i64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = x[i] - x[j];
+            let dy = y[i] - y[j];
+            if dx == 0.0 && dy == 0.0 {
+                continue;
+            } else if dx == 0.0 {
+                ties_x += 1;
+            } else if dy == 0.0 {
+                ties_y += 1;
+            } else if (dx > 0.0) == (dy > 0.0) {
+                concordant += 1;
+            } else {
+                discordant += 1;
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as i64;
+    let denom = (((n0 - ties_x) as f64) * ((n0 - ties_y) as f64)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (concordant - discordant) as f64 / denom
+}
+
+/// Average ranks (ties get the mean rank), 1-based.
+fn ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let mut r = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman's rho rank correlation.
+pub fn spearman_rho(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for i in 0..x.len() {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Z-score normalization (used for the Fig 3 trend comparison).
+pub fn zscore(x: &[f64]) -> Vec<f64> {
+    let n = x.len() as f64;
+    let mean = x.iter().sum::<f64>() / n;
+    let var = x.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    let sd = var.sqrt().max(1e-30);
+    x.iter().map(|v| (v - mean) / sd).collect()
+}
+
+/// Mean of a slice.
+pub fn mean(x: &[f64]) -> f64 {
+    x.iter().sum::<f64>() / x.len().max(1) as f64
+}
+
+/// Geometric mean (EDP aggregation across workloads).
+pub fn geomean(x: &[f64]) -> f64 {
+    (x.iter().map(|v| v.max(1e-300).ln()).sum::<f64>()
+        / x.len().max(1) as f64)
+        .exp()
+}
+
+/// Symmetric mean absolute percentage accuracy in [0, 1]:
+/// `1 - mean(|a-b| / max(a,b))`; the paper's "96% prediction accuracy"
+/// metric for access counts.
+pub fn accuracy(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let denom = a[i].abs().max(b[i].abs()).max(1e-30);
+        acc += 1.0 - (a[i] - b[i]).abs() / denom;
+    }
+    acc / a.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kendall_perfect() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [10.0, 20.0, 30.0, 40.0];
+        assert!((kendall_tau(&x, &y) - 1.0).abs() < 1e-12);
+        let yr = [40.0, 30.0, 20.0, 10.0];
+        assert!((kendall_tau(&x, &yr) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_with_ties() {
+        let x = [1.0, 2.0, 2.0, 3.0];
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let t = kendall_tau(&x, &y);
+        assert!(t > 0.8 && t <= 1.0, "{t}");
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0];
+        assert!((spearman_rho(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zscore_mean_zero_sd_one() {
+        let z = zscore(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(mean(&z).abs() < 1e-12);
+        let var = z.iter().map(|v| v * v).sum::<f64>() / z.len() as f64;
+        assert!((var - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        assert!((accuracy(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+        let a = accuracy(&[100.0], &[50.0]);
+        assert!((a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_simple() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+}

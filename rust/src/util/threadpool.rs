@@ -1,0 +1,210 @@
+//! Worker-pool substrate on std threads + channels (no `tokio` offline).
+//!
+//! Provides the execution backbone of the coordinator: a fixed pool with a
+//! shared injector queue, plus a `scope`-style parallel map used by the
+//! experiment harnesses (per-Table-1-cell parallelism).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool with graceful shutdown.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+    running: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (at least 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let running = Arc::new(AtomicBool::new(true));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::Builder::new()
+                    .name(format!("fadiff-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued, running }
+    }
+
+    /// Enqueue a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Number of jobs queued or running.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Whether the pool has been shut down.
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+        drop(self.tx.take()); // close the channel; workers drain + exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map preserving input order. Spawns up to `threads` scoped
+/// workers over the items; `f` must be `Sync` (called from many threads).
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let n = items.len();
+    let items: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let results: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let item = items[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+/// A simple one-shot result slot for job handoff (used by the coordinator).
+pub struct OneShot<T> {
+    rx: Receiver<T>,
+}
+
+/// Sender half of a [`OneShot`].
+pub struct OneShotSender<T> {
+    tx: Sender<T>,
+}
+
+/// Create a one-shot channel pair.
+pub fn oneshot<T>() -> (OneShotSender<T>, OneShot<T>) {
+    let (tx, rx) = channel();
+    (OneShotSender { tx }, OneShot { rx })
+}
+
+impl<T> OneShotSender<T> {
+    pub fn send(self, v: T) {
+        let _ = self.tx.send(v);
+    }
+}
+
+impl<T> OneShot<T> {
+    /// Block until the value arrives (None if the sender was dropped).
+    pub fn wait(self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map((0..64).collect::<Vec<_>>(), 8, |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_thread() {
+        let out = par_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn oneshot_roundtrip() {
+        let (tx, rx) = oneshot();
+        std::thread::spawn(move || tx.send(42));
+        assert_eq!(rx.wait(), Some(42));
+    }
+
+    #[test]
+    fn pool_nested_submissions_via_handle() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let (tx, rx) = oneshot();
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.submit(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+            tx.send(());
+        });
+        rx.wait().unwrap();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+}

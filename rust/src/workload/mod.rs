@@ -1,0 +1,165 @@
+//! DNN workload representation: the DAG of the problem formulation
+//! (paper Sec 2.3) in the unified 7-dim problem space of Sec 3.1.1.
+
+pub mod zoo;
+
+/// Problem-dimension indices (mirror `python/compile/constants.py`).
+pub const DIM_N: usize = 0;
+pub const DIM_K: usize = 1;
+pub const DIM_C: usize = 2;
+pub const DIM_P: usize = 3;
+pub const DIM_Q: usize = 4;
+pub const DIM_R: usize = 5;
+pub const DIM_S: usize = 6;
+pub const NDIMS: usize = 7;
+pub const DIM_NAMES: [&str; 7] = ["N", "K", "C", "P", "Q", "R", "S"];
+
+/// Operator class of a layer (affects the validation operator mix and
+/// how dims were derived, not the cost equations themselves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution.
+    Conv,
+    /// Depthwise convolution (modeled as C=1 per output channel).
+    Depthwise,
+    /// 1x1 (pointwise) convolution.
+    Pointwise,
+    /// General matrix multiply (P = rows M, K = cols, C = reduction).
+    Gemm,
+    /// Fully-connected layer (GEMM with P = 1).
+    Fc,
+}
+
+/// One computational layer (a DAG vertex).
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Sizes in the unified space [N, K, C, P, Q, R, S].
+    pub dims: [usize; NDIMS],
+}
+
+impl Layer {
+    pub fn new(name: &str, kind: LayerKind, dims: [usize; NDIMS]) -> Layer {
+        debug_assert!(dims.iter().all(|&d| d >= 1));
+        Layer { name: name.to_string(), kind, dims }
+    }
+
+    /// Total MAC count.
+    pub fn ops(&self) -> f64 {
+        self.dims.iter().map(|&d| d as f64).product()
+    }
+}
+
+/// A workload: a topologically-ordered chain of layers with explicit
+/// fusion-legality on each consecutive edge. Multi-input joins (residual
+/// adds, attention score inputs) are expressed by marking the edge
+/// non-fusible (paper Sec 2.2's producer-consumer requirement).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// `fusible[i]` — may edge layers[i] -> layers[i+1] be fused?
+    pub fusible: Vec<bool>,
+    /// Whole-network replication factor (e.g. 32 transformer blocks when
+    /// `layers` describes one block). Energy and latency each scale by
+    /// this factor when reporting full-model numbers.
+    pub replicas: f64,
+}
+
+impl Workload {
+    /// Build a chain, deriving edge fusibility from producer-consumer
+    /// shape compatibility (K_i == C_{i+1}, matching N) minus the
+    /// explicitly blocked edges (joins).
+    pub fn chain(name: &str, layers: Vec<Layer>, blocked: &[usize],
+                 replicas: f64) -> Workload {
+        let mut fusible = Vec::new();
+        for i in 0..layers.len().saturating_sub(1) {
+            let a = &layers[i];
+            let b = &layers[i + 1];
+            let shape_ok = (a.dims[DIM_K] == b.dims[DIM_C]
+                            || b.kind == LayerKind::Depthwise
+                               && a.dims[DIM_K] == b.dims[DIM_K])
+                && a.dims[DIM_N] == b.dims[DIM_N];
+            fusible.push(shape_ok && !blocked.contains(&i));
+        }
+        Workload { name: name.to_string(), layers, fusible, replicas }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total MACs for one replica.
+    pub fn total_ops(&self) -> f64 {
+        self.layers.iter().map(Layer::ops).sum()
+    }
+
+    /// Dims as an [L][7] f64 matrix (AOT input staging).
+    pub fn dims_matrix(&self) -> Vec<[f64; NDIMS]> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let mut row = [0.0; NDIMS];
+                for d in 0..NDIMS {
+                    row[d] = l.dims[d] as f64;
+                }
+                row
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, k: usize, c: usize, pq: usize) -> Layer {
+        Layer::new(name, LayerKind::Conv, [1, k, c, pq, pq, 3, 3])
+    }
+
+    #[test]
+    fn chain_derives_fusibility_from_shapes() {
+        let w = Workload::chain(
+            "t",
+            vec![conv("a", 64, 3, 224), conv("b", 64, 64, 224),
+                 conv("c", 128, 64, 112)],
+            &[],
+            1.0,
+        );
+        assert_eq!(w.fusible, vec![true, true]);
+    }
+
+    #[test]
+    fn chain_respects_blocked_edges() {
+        let w = Workload::chain(
+            "t",
+            vec![conv("a", 64, 3, 224), conv("b", 64, 64, 224)],
+            &[0],
+            1.0,
+        );
+        assert_eq!(w.fusible, vec![false]);
+    }
+
+    #[test]
+    fn chain_blocks_shape_mismatch() {
+        // K=64 producer feeding C=32 consumer cannot fuse
+        let w = Workload::chain(
+            "t",
+            vec![conv("a", 64, 3, 224), conv("b", 64, 32, 224)],
+            &[],
+            1.0,
+        );
+        assert_eq!(w.fusible, vec![false]);
+    }
+
+    #[test]
+    fn ops_product() {
+        let l = Layer::new("x", LayerKind::Gemm, [2, 4, 8, 16, 1, 1, 1]);
+        assert_eq!(l.ops(), (2 * 4 * 8 * 16) as f64);
+    }
+}

@@ -1,0 +1,117 @@
+//! Integration: the coordinator service end-to-end — job queueing,
+//! worker dispatch with per-thread PJRT runtimes, metrics, and the TCP
+//! line protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+
+use fadiff::coordinator::{server, Coordinator, JobRequest, Method};
+use fadiff::util::json::Json;
+
+fn small_job(workload: &str, method: Method) -> JobRequest {
+    JobRequest {
+        workload: workload.into(),
+        config: "large".into(),
+        method,
+        seconds: 1.5,
+        max_iters: 200,
+        seed: 5,
+    }
+}
+
+#[test]
+fn coordinator_runs_jobs_and_counts() {
+    let coord = Coordinator::new(None, 2).unwrap();
+    let r = coord.run(small_job("mobilenet", Method::FADiff)).unwrap();
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert!(r.full_model_edp >= r.edp);
+    assert!(r.iters > 0);
+    assert_eq!(coord.metrics.completed.load(Ordering::SeqCst), 1);
+    assert_eq!(coord.metrics.in_flight(), 0);
+}
+
+#[test]
+fn coordinator_parallel_jobs_complete() {
+    let coord = Coordinator::new(None, 2).unwrap();
+    let handles: Vec<_> = ["resnet18", "vgg16", "mobilenet", "gpt3"]
+        .iter()
+        .map(|w| coord.submit(small_job(w, Method::Random)))
+        .collect();
+    for h in handles {
+        let r = h.wait().unwrap().unwrap();
+        assert!(r.edp.is_finite());
+    }
+    assert_eq!(coord.metrics.completed.load(Ordering::SeqCst), 4);
+}
+
+#[test]
+fn coordinator_rejects_unknown_workload() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    let err = coord.run(small_job("alexnet", Method::FADiff));
+    assert!(err.is_err());
+    assert_eq!(coord.metrics.failed.load(Ordering::SeqCst), 1);
+}
+
+fn send(addr: std::net::SocketAddr, body: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(body.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+#[test]
+fn tcp_server_full_protocol() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // ping
+    let pong = Json::parse(&send(addr, r#"{"verb": "ping"}"#)).unwrap();
+    assert_eq!(pong.get("pong").unwrap(), &Json::Bool(true));
+
+    // optimize
+    let resp = send(
+        addr,
+        r#"{"verb": "optimize", "workload": "mobilenet", "method": "random", "seconds": 1.0, "max_iters": 50, "seed": 2}"#,
+    );
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+    assert!(j.get_f64("edp").unwrap() > 0.0);
+
+    // bad requests are answered, not dropped
+    let bad = Json::parse(
+        &send(addr, r#"{"verb": "optimize", "method": "quantum"}"#))
+        .unwrap();
+    assert_eq!(bad.get("ok").unwrap(), &Json::Bool(false));
+    let garbage = Json::parse(&send(addr, "not json at all")).unwrap();
+    assert_eq!(garbage.get("ok").unwrap(), &Json::Bool(false));
+
+    // metrics reflect the one successful job
+    let m = Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
+    assert_eq!(m.get_f64("completed").unwrap(), 1.0);
+
+    // graceful shutdown
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    t.join().unwrap().unwrap();
+}
+
+#[test]
+fn method_parser_roundtrip() {
+    for (name, m) in [
+        ("fadiff", Method::FADiff),
+        ("dosa", Method::Dosa),
+        ("ga", Method::Ga),
+        ("bo", Method::Bo),
+        ("random", Method::Random),
+    ] {
+        assert_eq!(Method::parse(name).unwrap(), m);
+        assert_eq!(Method::parse(m.name()).unwrap(), m);
+    }
+    assert!(Method::parse("sgd").is_err());
+}

@@ -1,0 +1,219 @@
+//! Cross-module property tests: the system-level invariants that hold
+//! for ANY input (random workloads, random relaxed states, random
+//! hardware geometries), plus failure-injection on the runtime loader.
+
+use fadiff::config::{custom_config, load_config, repo_root};
+use fadiff::costmodel;
+use fadiff::mapping::decode::{decode, Relaxed};
+use fadiff::mapping::{divisor_candidates, divisors, Strategy};
+use fadiff::runtime::Manifest;
+use fadiff::sim::tilesim;
+use fadiff::util::prop::{check, ensure, Config};
+use fadiff::util::rng::Rng;
+use fadiff::workload::{zoo, Layer, LayerKind, Workload, NDIMS};
+
+fn random_workload(rng: &mut Rng, size: f64) -> Workload {
+    let n_layers = 2 + rng.below((10.0 * size) as usize + 1);
+    let chans = [1usize, 3, 8, 16, 32, 64, 96, 128, 256];
+    let spatial = [1usize, 7, 14, 28, 56, 112];
+    let mut layers = Vec::new();
+    let mut cin = *rng.choice(&chans);
+    for i in 0..n_layers {
+        let cout = *rng.choice(&chans);
+        let sp = *rng.choice(&spatial);
+        let rs = *rng.choice(&[1usize, 3, 5, 7]);
+        layers.push(Layer::new(&format!("l{i}"), LayerKind::Conv,
+                               [1, cout, cin, sp, sp, rs, rs]));
+        cin = cout;
+    }
+    Workload::chain("random", layers, &[], 1.0)
+}
+
+#[test]
+fn decode_feasible_on_random_workloads_and_geometries() {
+    // the central guarantee: ANY relaxed state on ANY workload decodes
+    // to a strategy that satisfies every hardware constraint, even on
+    // hostile tiny geometries
+    check("decode-universal-feasible", &Config { cases: 60, seed: 41 },
+          |rng, size| {
+              let w = random_workload(rng, size);
+              let pe = *rng.choice(&[4usize, 8, 16, 32]);
+              let l1 = *rng.choice(&[2.0f64, 8.0, 64.0]);
+              let l2 = *rng.choice(&[4.0f64, 8.0, 512.0]);
+              let mut relaxed = Relaxed::neutral(&w);
+              for l in 0..w.len() {
+                  for d in 0..NDIMS {
+                      for s in 0..4 {
+                          relaxed.theta[l][d][s] = rng.range(-3.0, 16.0);
+                      }
+                  }
+              }
+              for i in 0..relaxed.sigma.len() {
+                  relaxed.sigma[i] = rng.f64();
+              }
+              (w, pe, l1, l2, relaxed)
+          },
+          |(w, pe, l1, l2, relaxed)| {
+              let hw = custom_config(&repo_root(), *pe, *l1, *l2)
+                  .map_err(|e| e.to_string())?;
+              let s = decode(relaxed, w, &hw);
+              costmodel::feasible(&s, w, &hw)
+                  .map_err(|e| format!("{pe}x{pe}/{l1}KB/{l2}KB: {e}"))
+          });
+}
+
+#[test]
+fn simulator_never_exceeds_closed_form_anywhere() {
+    // stationarity reuse can only REMOVE traffic relative to the
+    // paper's Eq. (6) products — on any decoded mapping of any workload
+    let hw = load_config(&repo_root(), "large").unwrap();
+    check("sim-le-closed-form", &Config { cases: 60, seed: 43 },
+          |rng, size| {
+              let w = random_workload(rng, size);
+              let mut relaxed = Relaxed::neutral(&w);
+              for l in 0..w.len() {
+                  for d in 0..NDIMS {
+                      for s in 0..4 {
+                          relaxed.theta[l][d][s] = rng.range(-1.0, 10.0);
+                      }
+                  }
+              }
+              (w, relaxed)
+          },
+          |(w, relaxed)| {
+              let s = decode(relaxed, w, &hw);
+              for i in 0..w.len() {
+                  let cf = costmodel::components(&s.mappings[i],
+                                                 &w.layers[i].dims);
+                  let sim = tilesim::simulate_layer(&s.mappings[i],
+                                                    &w.layers[i].dims);
+                  ensure(sim.fill2_w <= cf.fill2_w * (1.0 + 1e-9),
+                         format!("W fills: {} > {}", sim.fill2_w,
+                                 cf.fill2_w))?;
+                  ensure(sim.fill2_i <= cf.fill2_i * (1.0 + 1e-9),
+                         "I fills exceed closed form")?;
+                  ensure(sim.wb_o <= cf.wb0_o * (1.0 + 1e-9),
+                         "O write-backs exceed closed form")?;
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn fusion_groups_partition_any_strategy() {
+    check("groups-partition", &Config { cases: 80, seed: 47 },
+          |rng, size| {
+              let w = random_workload(rng, size);
+              let mut s = Strategy::trivial(&w);
+              for i in 0..s.fuse.len() {
+                  s.fuse[i] = rng.chance(0.5);
+              }
+              (w.len(), s)
+          },
+          |(n, s)| {
+              let groups = s.groups();
+              let covered: usize =
+                  groups.iter().map(|(a, b)| b - a + 1).sum();
+              ensure(covered == *n, "groups do not cover all layers")?;
+              for w2 in groups.windows(2) {
+                  ensure(w2[0].1 + 1 == w2[1].0, "groups not contiguous")?;
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn divisor_candidates_always_sorted_dividing_bounded() {
+    check("divisor-candidates", &Config { cases: 200, seed: 53 },
+          |rng, size| {
+              (1 + rng.below((30000.0 * size) as usize + 2) as u64,
+               4 + rng.below(40))
+          },
+          |&(n, k)| {
+              let c = divisor_candidates(n, k);
+              ensure(c.len() <= k, "too many candidates")?;
+              ensure(c[0] == 1 && *c.last().unwrap() == n,
+                     "endpoints missing")?;
+              for w in c.windows(2) {
+                  ensure(w[0] < w[1], "not sorted")?;
+              }
+              for &d in &c {
+                  ensure(n % d == 0, format!("{d} does not divide {n}"))?;
+              }
+              ensure(divisors(n).len() < k || c.len() == k,
+                     "subsample did not fill k")?;
+              Ok(())
+          });
+}
+
+#[test]
+fn energy_latency_monotone_in_epa_and_bandwidth() {
+    // physics sanity on the cost model: worse memory -> no better cost
+    let w = zoo::vgg16();
+    let s = Strategy::trivial(&w);
+    let base = load_config(&repo_root(), "large").unwrap();
+    let r0 = costmodel::evaluate(&s, &w, &base);
+    let mut worse = base.clone();
+    worse.epa_dram *= 2.0;
+    let r1 = costmodel::evaluate(&s, &w, &worse);
+    assert!(r1.energy > r0.energy);
+    assert!((r1.latency - r0.latency).abs() < 1e-9);
+    let mut slower = base.clone();
+    slower.bw_dram /= 2.0;
+    let r2 = costmodel::evaluate(&s, &w, &slower);
+    assert!(r2.latency >= r0.latency);
+    assert!((r2.energy - r0.energy).abs() < 1e-9);
+}
+
+#[test]
+fn runtime_failure_injection() {
+    use std::io::Write;
+
+    // missing directory
+    assert!(Manifest::load(std::path::Path::new("/no/such/dir")).is_err());
+
+    // corrupt manifest
+    let dir = std::env::temp_dir().join("fadiff-test-corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+    f.write_all(b"{ not json").unwrap();
+    drop(f);
+    assert!(Manifest::load(&dir).is_err());
+
+    // manifest referencing a missing artifact file: loads, but artifact
+    // compilation fails with a useful error
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"l_max": 32, "k_max": 32, "b_eval": 64, "nhw": 16,
+            "ncomp": 16, "artifacts": {"ghost": {"file": "ghost.hlo.txt",
+            "inputs": [], "outputs": []}}}"#,
+    )
+    .unwrap();
+    let rt = fadiff::runtime::Runtime::load(&dir).unwrap();
+    let err = match rt.get("ghost") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("ghost artifact should not compile"),
+    };
+    assert!(err.contains("ghost"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replica_scaling_is_quadratic_everywhere() {
+    check("replica-quadratic", &Config { cases: 40, seed: 59 },
+          |rng, size| {
+              let mut w = random_workload(rng, size);
+              w.replicas = (1 + rng.below(40)) as f64;
+              w
+          },
+          |w| {
+              let hw = load_config(&repo_root(), "large")
+                  .map_err(|e| e.to_string())?;
+              let s = Strategy::trivial(w);
+              let r = costmodel::evaluate(&s, w, &hw);
+              let full = costmodel::full_model_edp(&r, w);
+              ensure((full - r.edp * w.replicas * w.replicas).abs()
+                         / full.max(1e-30) < 1e-12,
+                     "full-model EDP not replicas^2-scaled")
+          });
+}

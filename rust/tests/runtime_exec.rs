@@ -1,0 +1,178 @@
+//! Integration: the Rust runtime loads the AOT HLO artifacts, executes
+//! them on PJRT, and the numbers agree with the native closed-form model
+//! — the end-to-end L1/L2/L3 consistency proof.
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::costmodel;
+use fadiff::mapping::decode::{decode, Relaxed};
+use fadiff::mapping::Strategy;
+use fadiff::runtime::{selftest, HostTensor, Runtime, ART_DETAIL, ART_EVAL,
+                      ART_GRAD};
+use fadiff::runtime::stage::WorkloadStage;
+use fadiff::util::rng::Rng;
+use fadiff::workload::zoo;
+
+fn runtime() -> Runtime {
+    Runtime::load(&repo_root().join("artifacts")).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    )
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let rt = runtime();
+    let report = selftest(&rt).unwrap();
+    assert_eq!(report.len(), 3, "{report:?}");
+}
+
+#[test]
+fn detail_artifact_matches_native_costmodel() {
+    let rt = runtime();
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let mut rng = Rng::new(42);
+    for w in zoo::table1_suite() {
+        let stage =
+            WorkloadStage::new(&w, &hw, rt.manifest.l_max,
+                               rt.manifest.k_max)
+                .unwrap();
+        // a random decoded (therefore feasible) strategy
+        let mut relaxed = Relaxed::neutral(&w);
+        for l in 0..w.len() {
+            for d in 0..7 {
+                for s in 0..4 {
+                    relaxed.theta[l][d][s] = rng.range(0.0, 8.0);
+                }
+            }
+        }
+        for i in 0..relaxed.sigma.len() {
+            relaxed.sigma[i] = rng.f64();
+        }
+        let strat = decode(&relaxed, &w, &hw);
+
+        let native = costmodel::evaluate(&strat, &w, &hw);
+        let out = rt
+            .execute(ART_DETAIL, &[
+                stage.pack_factors(&strat),
+                stage.pack_sigma(&strat),
+                stage.dims.clone(),
+                stage.layer_mask.clone(),
+                stage.edge_mask.clone(),
+                stage.hw.clone(),
+            ])
+            .unwrap();
+        let (edp, energy, latency) =
+            (out[0][0] as f64, out[1][0] as f64, out[2][0] as f64);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-30);
+        // f32 artifact vs f64 native: keep a loose but meaningful bound
+        assert!(rel(energy, native.energy) < 1e-3,
+                "{}: energy {energy} vs {}", w.name, native.energy);
+        assert!(rel(latency, native.latency) < 1e-3,
+                "{}: latency {latency} vs {}", w.name, native.latency);
+        assert!(rel(edp, native.edp) < 2e-3,
+                "{}: edp {edp} vs {}", w.name, native.edp);
+    }
+}
+
+#[test]
+fn eval_artifact_batches_match_native() {
+    let rt = runtime();
+    let hw = load_config(&repo_root(), "small").unwrap();
+    let w = zoo::vgg16();
+    let stage = WorkloadStage::new(&w, &hw, rt.manifest.l_max,
+                                   rt.manifest.k_max)
+        .unwrap();
+    let mut rng = Rng::new(7);
+    let mut pop = Vec::new();
+    for _ in 0..5 {
+        let mut relaxed = Relaxed::neutral(&w);
+        for l in 0..w.len() {
+            for d in 0..7 {
+                for s in 0..4 {
+                    relaxed.theta[l][d][s] = rng.range(0.0, 6.0);
+                }
+            }
+        }
+        pop.push(decode(&relaxed, &w, &hw));
+    }
+    let (fac, sig) =
+        stage.pack_population(&pop, rt.manifest.b_eval).unwrap();
+    let out = rt
+        .execute(ART_EVAL, &[
+            fac,
+            sig,
+            stage.dims.clone(),
+            stage.layer_mask.clone(),
+            stage.edge_mask.clone(),
+            stage.hw.clone(),
+        ])
+        .unwrap();
+    for (i, s) in pop.iter().enumerate() {
+        let native = costmodel::evaluate(s, &w, &hw);
+        let edp = out[0][i] as f64;
+        assert!((edp - native.edp).abs() / native.edp < 2e-3,
+                "candidate {i}: {edp} vs {}", native.edp);
+        // decoded strategies are feasible: violation == 0
+        assert!(out[3][i] < 1e-6, "violation {}", out[3][i]);
+    }
+}
+
+#[test]
+fn grad_artifact_produces_finite_gradients() {
+    let rt = runtime();
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::resnet18();
+    let stage = WorkloadStage::new(&w, &hw, rt.manifest.l_max,
+                                   rt.manifest.k_max)
+        .unwrap();
+    let l = rt.manifest.l_max;
+    let k = rt.manifest.k_max;
+    let theta = HostTensor::new(vec![1.0f32; l * 7 * 4]);
+    let sigma = HostTensor::new(vec![0.0f32; l]);
+    let gumbel = HostTensor::new(vec![0.0f32; l * 7 * 4 * k]);
+    let out = rt
+        .execute(ART_GRAD, &[
+            theta,
+            sigma,
+            stage.dims.clone(),
+            stage.div.clone(),
+            stage.div_mask.clone(),
+            stage.layer_mask.clone(),
+            stage.edge_mask.clone(),
+            gumbel,
+            HostTensor::scalar(1.0),   // tau
+            HostTensor::scalar(0.05),  // alpha
+            HostTensor::scalar(1.0),   // lambda
+            stage.hw.clone(),
+        ])
+        .unwrap();
+    let loss = out[0][0];
+    assert!(loss.is_finite(), "loss {loss}");
+    assert!(out[1][0] > 0.0, "edp {}", out[1][0]);
+    let g_theta = &out[5];
+    let g_sigma = &out[6];
+    assert_eq!(g_theta.len(), l * 7 * 4);
+    assert!(g_theta.iter().all(|g| g.is_finite()));
+    assert!(g_sigma.iter().all(|g| g.is_finite()));
+    // gradient on real layers must be non-trivial
+    let norm: f32 = g_theta.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(norm > 1e-6, "gradient identically zero");
+    // fusible-edge sigma gradients push toward fusion (negative)
+    let fusible = w.fusible.iter().filter(|&&f| f).count();
+    assert!(fusible > 0);
+    let neg = w
+        .fusible
+        .iter()
+        .enumerate()
+        .filter(|&(_, &f)| f)
+        .filter(|&(i, _)| g_sigma[i] < 0.0)
+        .count();
+    assert!(neg * 2 >= fusible, "{neg}/{fusible} edges pull to fusion");
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let rt = runtime();
+    let bad = vec![HostTensor::new(vec![0.0; 3])];
+    assert!(rt.execute(ART_DETAIL, &bad).is_err());
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}

@@ -1,0 +1,82 @@
+//! Integration: the experiment harnesses reproduce the paper's
+//! qualitative results end to end (small budgets; the full-budget runs
+//! are recorded in EXPERIMENTS.md).
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::experiments::{fig3, fig4, validation};
+use fadiff::runtime::Runtime;
+use fadiff::sim::tilesim;
+use fadiff::workload::zoo;
+
+#[test]
+fn validation_report_is_complete_and_strong() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let r = validation::run(&hw, 30, 7);
+    assert_eq!(r.per_op.len(), zoo::validation_operators().len());
+    for o in &r.per_op {
+        assert!(o.access_accuracy > 0.5, "{}: {}", o.name,
+                o.access_accuracy);
+        assert!(o.latency_rho > 0.5, "{}: {}", o.name, o.latency_rho);
+    }
+    let text = validation::render(&r);
+    assert!(text.contains("**mean**"));
+}
+
+#[test]
+fn validation_holds_on_small_config_too() {
+    let hw = load_config(&repo_root(), "small").unwrap();
+    let r = validation::run(&hw, 25, 13);
+    assert!(r.mean_access_accuracy > 0.75,
+            "accuracy {}", r.mean_access_accuracy);
+    assert!(r.mean_energy_rho > 0.7, "rho {}", r.mean_energy_rho);
+}
+
+#[test]
+fn fig3_both_panels_track_definesim() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let (two, three) = fig3::run(&hw);
+    for (name, p) in [("2-layer", &two), ("3-layer", &three)] {
+        assert!(p.energy_corr > 0.7, "{name} energy {}", p.energy_corr);
+        // z-scored series have matching lengths and finite values
+        assert_eq!(p.z_energy.0.len(), p.z_energy.1.len());
+        assert!(p.z_energy.0.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn fig4_trace_endpoints_ordered() {
+    let rt = Runtime::load(&repo_root().join("artifacts")).unwrap();
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::mobilenet_v1();
+    let r = fig4::run(&rt, &w, &hw, 2.5, 3).unwrap();
+    let grad = r.methods[0].final_edp;
+    assert!(grad <= r.methods[1].final_edp * 1.05, "GA beat gradient");
+    assert!(grad <= r.methods[2].final_edp * 1.05, "BO beat gradient");
+    // render produces a complete grid
+    let text = fig4::render(&r);
+    assert!(text.matches('\n').count() > 10);
+}
+
+#[test]
+fn golden_simulator_agrees_on_optimized_strategies() {
+    // the winning strategies (not just random ones) must stay in a sane
+    // envelope of the independent simulator
+    let rt = Runtime::load(&repo_root().join("artifacts")).unwrap();
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::vgg16();
+    let r = fadiff::search::gradient::optimize(
+        &rt, &w, &hw,
+        &fadiff::search::gradient::GradientConfig::default(),
+        fadiff::search::Budget { seconds: 2.0, max_iters: usize::MAX },
+    )
+    .unwrap();
+    let native = fadiff::costmodel::evaluate(&r.best, &w, &hw);
+    let sim = tilesim::simulate(&r.best, &w, &hw);
+    let ratio = sim.edp / native.edp;
+    assert!(ratio > 0.05 && ratio < 20.0, "sim/model EDP ratio {ratio}");
+    // simulator never sees MORE traffic than the pessimistic closed form
+    for (lc, sl) in native.per_layer.iter().zip(&sim.per_layer) {
+        assert!(sl.access[3] <= lc.access[3] * 1.0001,
+                "sim DRAM > closed-form DRAM");
+    }
+}
