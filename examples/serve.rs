@@ -37,7 +37,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("coordinator serving on {addr}");
 
-    // fire a batch of concurrent optimization requests
+    // fire a batch of concurrent optimization requests; "ga" runs on
+    // the native EvalEngine so the demo works without AOT artifacts
+    // (switch to "fadiff" after `make artifacts` for the gradient path)
     let jobs = [
         ("resnet18", "large", 3.0),
         ("mobilenet", "large", 3.0),
@@ -50,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         .map(|&(wl, cfg, secs)| {
             std::thread::spawn(move || {
                 let body = format!(
-                    r#"{{"verb": "optimize", "workload": "{wl}", "config": "{cfg}", "method": "fadiff", "seconds": {secs}, "seed": 7}}"#
+                    r#"{{"verb": "optimize", "workload": "{wl}", "config": "{cfg}", "method": "ga", "seconds": {secs}, "seed": 7}}"#
                 );
                 let t = std::time::Instant::now();
                 let resp = request(addr, &body);

@@ -14,7 +14,12 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(8.0);
-    let rt = Runtime::load_default().expect("artifacts");
+    let Some(rt) = Runtime::load_if_available(&repo_root().join("artifacts"))
+    else {
+        println!("fig4 bench skipped: PJRT runtime unavailable (run \
+                  `make artifacts` with a real xla crate)");
+        return;
+    };
     let hw = load_config(&repo_root(), "large").expect("config");
     for w in [zoo::resnet18(), zoo::vgg16()] {
         println!("== Fig 4 reproduction on {} ({seconds}s budget) ==",

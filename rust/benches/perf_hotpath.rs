@@ -1,10 +1,13 @@
 //! Bench: the optimization hot paths (EXPERIMENTS.md §Perf tracks these).
 //!
-//!   * PJRT gradient step (stage + execute + fetch) — the FADiff inner
-//!     loop; dominates wall-clock per iteration.
-//!   * batched population eval through the AOT artifact (GA/BO path).
-//!   * native closed-form evaluate + decode (incumbent refresh path).
-//!   * end-to-end optimizer throughput (iters/s under a fixed budget).
+//!   * serial per-candidate evaluation (the pre-EvalEngine baseline:
+//!     feasibility + closed-form evaluate, one candidate at a time)
+//!   * EvalEngine batched parallel evaluation, cold cache
+//!   * EvalEngine batched evaluation, warm cache (memoized)
+//!   * GA-generation decode+eval throughput, serial vs engine
+//!   * decode throughput (incumbent refresh path)
+//!   * PJRT gradient step + batched artifact eval (skipped unless real
+//!     artifacts + a PJRT-backed xla crate are present)
 //!
 //! `cargo bench --bench perf_hotpath`
 
@@ -17,21 +20,128 @@ use fadiff::mapping::decode::{decode, Relaxed};
 use fadiff::mapping::Strategy;
 use fadiff::runtime::stage::WorkloadStage;
 use fadiff::runtime::{HostTensor, Runtime, ART_EVAL, ART_GRAD};
-use fadiff::search::{gradient, Budget};
+use fadiff::search::encoding::{dim, express_naive};
+use fadiff::search::EvalEngine;
 use fadiff::util::rng::Rng;
 use fadiff::workload::zoo;
 
+const POP: usize = 512;
+
 fn main() {
-    let rt = Runtime::load_default().expect("artifacts");
     let hw = load_config(&repo_root(), "large").expect("config");
     let w = zoo::resnet18();
-    let stage = WorkloadStage::new(&w, &hw, rt.manifest.l_max,
+    let mut rng = Rng::new(1);
+
+    // a diverse population of decoded (hardware-valid) strategies
+    let pop: Vec<Strategy> = (0..POP)
+        .map(|_| {
+            let mut relaxed = Relaxed::neutral(&w);
+            for l in 0..w.len() {
+                for d in 0..7 {
+                    for s in 0..4 {
+                        relaxed.theta[l][d][s] = rng.range(0.0, 8.0);
+                    }
+                }
+            }
+            for i in 0..relaxed.sigma.len() {
+                relaxed.sigma[i] = rng.f64();
+            }
+            decode(&relaxed, &w, &hw)
+        })
+        .collect();
+
+    // --- serial baseline: what every search did per candidate ----------
+    let (serial, s_min, s_max) = time(5, || {
+        for s in &pop {
+            let _ = costmodel::feasible(s, &w, &hw);
+            let _ = costmodel::evaluate(s, &w, &hw);
+        }
+    });
+    report(&format!("serial eval ({POP} candidates)"), serial, s_min,
+           s_max, &format!("{:.0}k cand/s", POP as f64 / serial / 1e3));
+
+    // --- EvalEngine: parallel, cold cache -------------------------------
+    let engine = EvalEngine::new(&w, &hw);
+    let (cold, c_min, c_max) = time(5, || {
+        engine.clear_cache();
+        let _ = engine.eval_batch(&pop);
+    });
+    report(&format!("EvalEngine cold ({} threads)", engine.threads()),
+           cold, c_min, c_max,
+           &format!("{:.0}k cand/s", POP as f64 / cold / 1e3));
+
+    // --- EvalEngine: warm cache (memoized population) -------------------
+    let _ = engine.eval_batch(&pop); // prime
+    let (warm, w_min, w_max) = time(20, || {
+        let _ = engine.eval_batch(&pop);
+    });
+    report("EvalEngine warm (all cache hits)", warm, w_min, w_max,
+           &format!("{:.0}k cand/s", POP as f64 / warm / 1e3));
+    println!(
+        "  -> speedup vs serial: {:.2}x cold (parallel), {:.2}x warm \
+         (memoized); cache {} hits / {} misses\n",
+        serial / cold, serial / warm, engine.cache_hits(),
+        engine.cache_misses()
+    );
+
+    // --- GA generation: decode + eval, serial vs engine -----------------
+    let d = dim(&w);
+    let genomes: Vec<Vec<f64>> = (0..48)
+        .map(|_| (0..d).map(|_| rng.f64()).collect())
+        .collect();
+    let (g_serial, gs_min, gs_max) = time(5, || {
+        for g in &genomes {
+            let s = express_naive(g, &w, &hw);
+            let _ = costmodel::feasible(&s, &w, &hw);
+            let _ = costmodel::evaluate(&s, &w, &hw);
+        }
+    });
+    report("GA generation serial (48 genomes)", g_serial, gs_min, gs_max,
+           "");
+    let gen_engine = EvalEngine::new(&w, &hw);
+    let (g_eng, ge_min, ge_max) = time(5, || {
+        gen_engine.clear_cache();
+        let _ = gen_engine
+            .eval_population(&genomes, |g| express_naive(g, &w, &hw));
+    });
+    report("GA generation via EvalEngine", g_eng, ge_min, ge_max,
+           &format!("{:.2}x speedup", g_serial / g_eng));
+
+    // --- decode (incumbent refresh path) --------------------------------
+    let mut relaxed = Relaxed::neutral(&w);
+    for lix in 0..w.len() {
+        for d in 0..7 {
+            for sl in 0..4 {
+                relaxed.theta[lix][d][sl] = rng.range(0.0, 6.0);
+            }
+        }
+    }
+    let (mean, min, max) = time(2000, || {
+        let _ = decode(&relaxed, &w, &hw);
+    });
+    report("decode relaxed -> valid strategy", mean, min, max,
+           &format!("{:.1}k decodes/s", 1e-3 / mean));
+
+    // --- PJRT paths (need real artifacts + a PJRT-backed xla crate) ----
+    match Runtime::load_if_available(&repo_root().join("artifacts")) {
+        Some(rt) => pjrt_benches(&rt, &w, &hw, &mut rng),
+        None => println!(
+            "\nPJRT benches skipped: artifacts / PJRT runtime \
+             unavailable (run `make artifacts` with a real xla crate)"
+        ),
+    }
+}
+
+fn pjrt_benches(rt: &Runtime, w: &fadiff::workload::Workload,
+                hw: &fadiff::config::HwConfig, rng: &mut Rng) {
+    use fadiff::search::{gradient, Budget};
+
+    let stage = WorkloadStage::new(w, hw, rt.manifest.l_max,
                                    rt.manifest.k_max)
         .expect("stage");
     let (l, k) = (rt.manifest.l_max, rt.manifest.k_max);
     let grad = rt.get(ART_GRAD).expect("grad artifact");
     let eval = rt.get(ART_EVAL).expect("eval artifact");
-    let mut rng = Rng::new(1);
 
     // --- PJRT gradient step -------------------------------------------
     let theta = vec![0.5f32; l * 7 * 4];
@@ -63,7 +173,7 @@ fn main() {
            &format!("{:.0} steps/s", 1.0 / mean));
 
     // --- batched population eval ----------------------------------------
-    let pop = vec![Strategy::trivial(&w); rt.manifest.b_eval];
+    let pop = vec![Strategy::trivial(w); rt.manifest.b_eval];
     let (fac, sig) =
         stage.pack_population(&pop, rt.manifest.b_eval).unwrap();
     let (mean, min, max) = time(100, || {
@@ -82,32 +192,10 @@ fn main() {
     report("PJRT batched eval (B=64 candidates)", mean, min, max,
            &format!("{:.0}k cand/s", 64.0 / mean / 1e3));
 
-    // --- native paths ---------------------------------------------------
-    let s = Strategy::trivial(&w);
-    let (mean, min, max) = time(5000, || {
-        let _ = costmodel::evaluate(&s, &w, &hw);
-    });
-    report("native closed-form evaluate (21 layers)", mean, min, max,
-           &format!("{:.0}k evals/s", 1e-3 / mean));
-
-    let mut relaxed = Relaxed::neutral(&w);
-    for lix in 0..w.len() {
-        for d in 0..7 {
-            for sl in 0..4 {
-                relaxed.theta[lix][d][sl] = rng.range(0.0, 6.0);
-            }
-        }
-    }
-    let (mean, min, max) = time(2000, || {
-        let _ = decode(&relaxed, &w, &hw);
-    });
-    report("decode relaxed -> valid strategy", mean, min, max,
-           &format!("{:.1}k decodes/s", 1e-3 / mean));
-
     // --- end-to-end optimizer throughput --------------------------------
     let budget = Budget { seconds: 5.0, max_iters: usize::MAX };
     let t0 = std::time::Instant::now();
-    let r = gradient::optimize(&rt, &w, &hw,
+    let r = gradient::optimize(rt, w, hw,
                                &gradient::GradientConfig::default(),
                                budget)
         .unwrap();

@@ -93,9 +93,20 @@ pub fn repo_root() -> PathBuf {
             return dir;
         }
         if !dir.pop() {
-            // fall back to the compile-time manifest dir
-            return PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            break;
         }
+    }
+    // compile-time fallback: the crate lives at `<repo>/rust`, so check
+    // the manifest dir and its parent (the workspace root)
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if manifest.join("data/hw_configs.json").exists() {
+        return manifest;
+    }
+    match manifest.parent() {
+        Some(p) if p.join("data/hw_configs.json").exists() => {
+            p.to_path_buf()
+        }
+        _ => manifest,
     }
 }
 

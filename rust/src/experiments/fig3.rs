@@ -8,9 +8,9 @@
 //! the normalized series.
 
 use crate::config::HwConfig;
-use crate::costmodel;
 use crate::mapping::{LayerMapping, Strategy, SLOT_S, SLOT_T0, SLOT_T1,
                      SLOT_T2};
+use crate::search::EvalEngine;
 use crate::sim::definesim::{self, DfTile};
 use crate::util::stats::{pearson, zscore};
 use crate::workload::{zoo, Layer, DIM_C, DIM_K, DIM_N, DIM_P, DIM_Q,
@@ -79,18 +79,24 @@ fn strategy_for_tile(stack: &[Layer], t: usize, hw: &HwConfig) -> Strategy {
     Strategy { mappings, fuse: vec![true; stack.len() - 1] }
 }
 
-/// Run one panel over a conv stack.
+/// Run one panel over a conv stack. The whole tile sweep scores as one
+/// parallel batch on the [`EvalEngine`].
 pub fn run_panel(stack: &[Layer], hw: &HwConfig) -> TrendReport {
     let w = crate::workload::Workload::chain("fig3", stack.to_vec(), &[],
                                              1.0);
+    let engine = EvalEngine::new(&w, hw);
+    let sweep = definesim::sweep_tiles(stack, hw);
+    let strategies: Vec<Strategy> = sweep
+        .iter()
+        .map(|(tile, _)| strategy_for_tile(stack, tile.tp, hw))
+        .collect();
+    let ours = engine.eval_batch(&strategies);
     let mut points = Vec::new();
-    for (tile, df) in definesim::sweep_tiles(stack, hw) {
-        let s = strategy_for_tile(stack, tile.tp, hw);
-        let ours = costmodel::evaluate(&s, &w, hw);
+    for ((tile, df), e) in sweep.iter().zip(&ours) {
         points.push(TrendPoint {
             tile: tile.tp,
-            ours_latency: ours.latency,
-            ours_energy: ours.energy,
+            ours_latency: e.latency,
+            ours_energy: e.energy,
             df_latency: df.latency,
             df_energy: df.energy,
         });

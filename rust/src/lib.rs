@@ -17,6 +17,25 @@
 //!
 //! Python never runs on the optimization hot path: `make artifacts` lowers
 //! the JAX model once and the Rust binary is self-contained afterwards.
+//!
+//! # Build layout and verification
+//!
+//! The workspace root (one directory up) holds the tier-1 verify
+//! commands: `cargo build --release && cargo test -q`. The crate has
+//! zero registry dependencies — `anyhow` and `xla` resolve to
+//! hand-rolled shims under `vendor/`; swapping `vendor/xla` for a real
+//! PJRT-backed crate (plus `make artifacts`) enables the gradient
+//! methods, which every dependent path detects at runtime via
+//! [`runtime::Runtime::load_if_available`].
+//!
+//! # Evaluation engine
+//!
+//! All native candidate scoring — GA/BO/random search, the shared
+//! [`search::Incumbent`], and the fig3/table1 harnesses — flows through
+//! [`search::EvalEngine`]: batched parallel evaluation on
+//! [`util::threadpool`] with exact keyed memoization of
+//! `(strategy) -> (energy, latency, EDP)` per `(workload, hardware)`
+//! pair, bit-for-bit identical to [`costmodel::evaluate`].
 
 pub mod config;
 pub mod coordinator;

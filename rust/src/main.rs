@@ -81,8 +81,15 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         max_iters: args.get_usize("max-iters", usize::MAX)?,
         seed: args.get_u64("seed", 1)?,
     };
-    let rt = Runtime::load_default()?;
-    let r = coordinator::execute_job(&rt, &req)?;
+    // only the gradient methods touch the PJRT runtime; probe (and
+    // compile) it only for them so native methods start instantly
+    let rt = match req.method {
+        Method::FADiff | Method::Dosa => {
+            Runtime::load_if_available(&repo_root().join("artifacts"))
+        }
+        _ => None,
+    };
+    let r = coordinator::execute_job(rt.as_ref(), &req)?;
     println!("workload        : {}", r.request.workload);
     println!("config          : {}", r.request.config);
     println!("method          : {}", r.request.method.name());

@@ -58,6 +58,39 @@ impl Runtime {
         Self::load(&root)
     }
 
+    /// Load a runtime only if it can actually execute: the manifest
+    /// parses AND the gradient artifact compiles (which also proves a
+    /// real PJRT-backed `xla` crate is linked, not the offline stub).
+    /// Tests and benches use this to skip PJRT-dependent paths cleanly.
+    ///
+    /// An absent artifacts directory is the normal case and stays
+    /// silent; artifacts that exist but fail to load/compile are a
+    /// broken state the user will want to see, so the cause is logged
+    /// before returning `None`.
+    pub fn load_if_available(artifacts_dir: &Path) -> Option<Runtime> {
+        let present = artifacts_dir.join("manifest.json").exists();
+        let rt = match Runtime::load(artifacts_dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                if present {
+                    eprintln!(
+                        "[fadiff] artifacts at {artifacts_dir:?} exist \
+                         but failed to load: {e:#}"
+                    );
+                }
+                return None;
+            }
+        };
+        if let Err(e) = rt.get(ART_GRAD) {
+            eprintln!(
+                "[fadiff] artifacts at {artifacts_dir:?} exist but the \
+                 gradient artifact is unusable: {e:#}"
+            );
+            return None;
+        }
+        Some(rt)
+    }
+
     /// Compile (or fetch cached) an artifact by name.
     pub fn get(&self, name: &str) -> Result<std::sync::Arc<Compiled>> {
         if let Some(c) = self.compiled.lock().unwrap().get(name) {

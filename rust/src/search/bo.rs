@@ -8,6 +8,11 @@
 //! improvement over a random + local-perturbation pool. The O(N^3)
 //! Cholesky refit per observation is precisely the scalability wall the
 //! paper's Sec 1 attributes to BO.
+//!
+//! Model evaluations route through the incumbent's [`super::EvalEngine`]:
+//! the initial design scores as one parallel batch and acquisition
+//! re-proposals of already-seen points resolve from the memoization
+//! cache instead of re-running the cost model.
 
 use anyhow::Result;
 
@@ -45,6 +50,16 @@ impl Default for BoConfig {
     }
 }
 
+/// log-EDP observation target; infeasible decodes cannot occur (decode
+/// repairs), but guard anyway.
+fn log_y(edp: f64) -> f64 {
+    if edp.is_finite() {
+        edp.ln()
+    } else {
+        1e3
+    }
+}
+
 /// Run BO under a budget.
 pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
                 budget: Budget) -> Result<SearchResult> {
@@ -57,26 +72,20 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
     let mut ys: Vec<f64> = Vec::new();
     let mut iter = 0usize;
 
-    let observe =
-        |x: Vec<f64>, inc: &mut Incumbent, xs: &mut Vec<Vec<f64>>,
-         ys: &mut Vec<f64>, iter: usize| {
-            let s = express(&x, w, hw);
-            let edp = inc.offer(&s, iter);
-            // log-EDP objective; infeasible decodes cannot occur (decode
-            // repairs), but guard anyway
-            let y = if edp.is_finite() { edp.ln() } else { 1e3 };
-            xs.push(x);
-            ys.push(y);
-        };
-
-    // initial design: uniform random
-    for _ in 0..cfg.init_samples {
-        if inc.elapsed() > budget.seconds || iter >= budget.max_iters {
+    // initial design: uniform random, decoded + scored as one batch
+    let init = cfg.init_samples.min(budget.max_iters);
+    let design: Vec<Vec<f64>> = (0..init)
+        .map(|_| (0..d).map(|_| rng.f64()).collect())
+        .collect();
+    let scored = inc.engine.eval_population(&design, |x| express(x, w, hw));
+    for (x, (s, e)) in design.into_iter().zip(scored) {
+        if inc.elapsed() > budget.seconds {
             break;
         }
         iter += 1;
-        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
-        observe(x, &mut inc, &mut xs, &mut ys, iter);
+        let edp = inc.offer_eval(&s, e, iter);
+        xs.push(x);
+        ys.push(log_y(edp));
     }
 
     while inc.elapsed() < budget.seconds && iter < budget.max_iters {
@@ -94,42 +103,51 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
                 ys.remove(i);
             }
         }
-        let gp = match Gp::fit(&xs, &ys, cfg.lengthscale, cfg.noise) {
-            Some(gp) => gp,
-            None => {
+        let next_x: Vec<f64> =
+            match Gp::fit(&xs, &ys, cfg.lengthscale, cfg.noise) {
+                Some(gp) => {
+                    let best_y =
+                        ys.iter().cloned().fold(f64::INFINITY, f64::min);
+                    let best_x = xs[ys
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0]
+                        .clone();
+                    // acquisition: random pool + local perturbations of
+                    // the best observation
+                    let mut best_cand: Option<(f64, Vec<f64>)> = None;
+                    for c in 0..cfg.candidates_per_iter {
+                        let x: Vec<f64> = if c % 2 == 0 {
+                            (0..d).map(|_| rng.f64()).collect()
+                        } else {
+                            best_x
+                                .iter()
+                                .map(|&v| {
+                                    (v + rng.normal() * 0.08)
+                                        .clamp(0.0, 1.0)
+                                })
+                                .collect()
+                        };
+                        let ei = gp.expected_improvement(&x, best_y);
+                        if best_cand
+                            .as_ref()
+                            .map_or(true, |(b, _)| ei > *b)
+                        {
+                            best_cand = Some((ei, x));
+                        }
+                    }
+                    best_cand.unwrap().1
+                }
                 // degenerate kernel: fall back to random sampling
-                let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
-                observe(x, &mut inc, &mut xs, &mut ys, iter);
-                continue;
-            }
-        };
-        let best_y = ys.iter().cloned().fold(f64::INFINITY, f64::min);
-        let best_x = xs[ys
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0]
-            .clone();
-
-        // acquisition: random pool + local perturbations of the best
-        let mut best_cand: Option<(f64, Vec<f64>)> = None;
-        for c in 0..cfg.candidates_per_iter {
-            let x: Vec<f64> = if c % 2 == 0 {
-                (0..d).map(|_| rng.f64()).collect()
-            } else {
-                best_x
-                    .iter()
-                    .map(|&v| (v + rng.normal() * 0.08).clamp(0.0, 1.0))
-                    .collect()
+                None => (0..d).map(|_| rng.f64()).collect(),
             };
-            let ei = gp.expected_improvement(&x, best_y);
-            if best_cand.as_ref().map_or(true, |(b, _)| ei > *b) {
-                best_cand = Some((ei, x));
-            }
-        }
-        let (_, x) = best_cand.unwrap();
-        observe(x, &mut inc, &mut xs, &mut ys, iter);
+        let s = express(&next_x, w, hw);
+        let e = inc.engine.eval(&s);
+        let edp = inc.offer_eval(&s, e, iter);
+        xs.push(next_x);
+        ys.push(log_y(edp));
     }
     Ok(inc.finish(iter))
 }

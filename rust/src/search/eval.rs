@@ -1,0 +1,391 @@
+//! The batched evaluation engine — the single entry point every search
+//! strategy and experiment harness uses to score candidate strategies.
+//!
+//! GA/BO/random search and the Table-1/Fig-3/Fig-4 harnesses spend
+//! nearly all of their time in the analytical cost model (paper
+//! Eqs. 4-19). [`EvalEngine`] makes that hot path fast two ways:
+//!
+//! * **Parallel batch scoring** — whole candidate populations decode and
+//!   evaluate concurrently on the crate's scoped worker substrate
+//!   ([`crate::util::threadpool::par_map`]), one logical chunk per
+//!   candidate with work-stealing across `threads` workers.
+//! * **Keyed memoization** — a bounded `(strategy) -> (energy, latency,
+//!   EDP)` cache per `(workload, hardware)` pair. GA elitism, BO
+//!   acquisition re-proposals and duplicate random decodes stop paying
+//!   for re-evaluation; batch-internal duplicates are computed once.
+//!
+//! Results are bit-for-bit identical to calling
+//! [`crate::costmodel::evaluate`] directly: the engine runs exactly that
+//! code per candidate, it only changes *where* and *how often* it runs.
+//!
+//! Batches currently run on scoped threads (`par_map`) spawned per
+//! call; for small populations the spawn/join overhead is measurable
+//! against the ~ms of decode+eval work. Moving to a persistent
+//! [`crate::util::threadpool::ThreadPool`] is a known follow-up once
+//! the pool grows a scoped-submit API — `perf_hotpath` tracks whether
+//! it matters.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::HwConfig;
+use crate::costmodel;
+use crate::mapping::{Strategy, NSLOTS};
+use crate::util::threadpool::par_map;
+use crate::workload::{Workload, NDIMS};
+
+/// Default bound on cached entries; the cache is cleared wholesale when
+/// it fills (simple, predictable memory ceiling). Keys are exact
+/// (layers x 7 x 4 factors, a few KB each), so 8192 entries is roughly
+/// 30-60 MB per engine — sized so several concurrent engines (table1
+/// cells, coordinator workers) stay modest.
+pub const DEFAULT_CACHE_CAPACITY: usize = 8_192;
+
+/// One scored candidate. `edp = energy * latency` always holds (also for
+/// infeasible strategies — use [`Eval::feasible`] to gate on validity;
+/// [`super::Incumbent::offer_eval`] does exactly that).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Eval {
+    pub energy: f64,
+    pub latency: f64,
+    pub edp: f64,
+    pub feasible: bool,
+}
+
+impl Eval {
+    /// EDP if feasible, `f64::INFINITY` otherwise — the fitness value
+    /// searches minimize.
+    pub fn fitness(&self) -> f64 {
+        if self.feasible {
+            self.edp
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Exact memoization key: every tiling factor plus the fusion bits.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct StrategyKey {
+    factors: Vec<u64>,
+    fuse: Vec<bool>,
+}
+
+impl StrategyKey {
+    fn of(s: &Strategy) -> StrategyKey {
+        let mut factors =
+            Vec::with_capacity(s.mappings.len() * NDIMS * NSLOTS);
+        for m in &s.mappings {
+            for d in 0..NDIMS {
+                for sl in 0..NSLOTS {
+                    factors.push(m.factors[d][sl]);
+                }
+            }
+        }
+        StrategyKey { factors, fuse: s.fuse.clone() }
+    }
+}
+
+/// Parallel, memoizing evaluator for one `(workload, hardware)` pair.
+pub struct EvalEngine<'a> {
+    w: &'a Workload,
+    hw: &'a HwConfig,
+    threads: usize,
+    cache_capacity: usize,
+    cache: Mutex<HashMap<StrategyKey, Eval>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<'a> EvalEngine<'a> {
+    /// Engine sized to the machine (capped — the cost model is
+    /// memory-light, oversubscription buys nothing).
+    pub fn new(w: &'a Workload, hw: &'a HwConfig) -> EvalEngine<'a> {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        EvalEngine::with_threads(w, hw, threads)
+    }
+
+    /// Engine with an explicit worker count (1 = fully serial; results
+    /// are identical at any thread count).
+    pub fn with_threads(w: &'a Workload, hw: &'a HwConfig, threads: usize)
+                        -> EvalEngine<'a> {
+        EvalEngine {
+            w,
+            hw,
+            threads: threads.max(1),
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Override the cache bound (entries, not bytes).
+    pub fn with_cache_capacity(mut self, capacity: usize) -> EvalEngine<'a> {
+        self.cache_capacity = capacity.max(1);
+        self
+    }
+
+    pub fn workload(&self) -> &'a Workload {
+        self.w
+    }
+
+    pub fn hw(&self) -> &'a HwConfig {
+        self.hw
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cache hits so far (includes batch-internal duplicate folding).
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Unique cost-model computations so far.
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Drop all cached results (hit/miss counters are kept).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// The raw per-candidate computation: feasibility check + closed-form
+    /// evaluation. Capacity-infeasible strategies still get real
+    /// energy/latency numbers (fig3 relies on that); strategies with the
+    /// wrong arity cannot be indexed by the cost model at all and come
+    /// back as plain infeasible instead of panicking.
+    fn compute(&self, s: &Strategy) -> Eval {
+        if s.mappings.len() != self.w.len()
+            || s.fuse.len() != self.w.len().saturating_sub(1)
+        {
+            return Eval {
+                energy: f64::INFINITY,
+                latency: f64::INFINITY,
+                edp: f64::INFINITY,
+                feasible: false,
+            };
+        }
+        let feasible = costmodel::feasible(s, self.w, self.hw).is_ok();
+        let r = costmodel::evaluate(s, self.w, self.hw);
+        Eval { energy: r.energy, latency: r.latency, edp: r.edp, feasible }
+    }
+
+    fn insert_bounded(&self, cache: &mut HashMap<StrategyKey, Eval>,
+                      key: StrategyKey, e: Eval) {
+        if cache.len() >= self.cache_capacity {
+            cache.clear();
+        }
+        cache.insert(key, e);
+    }
+
+    /// Score one strategy (cache-aware).
+    pub fn eval(&self, s: &Strategy) -> Eval {
+        let key = StrategyKey::of(s);
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *e;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let e = self.compute(s);
+        let mut cache = self.cache.lock().unwrap();
+        self.insert_bounded(&mut cache, key, e);
+        e
+    }
+
+    /// Score a whole population. Cached and batch-duplicate candidates
+    /// are not recomputed; the remaining misses evaluate in parallel.
+    /// Output order matches input order.
+    pub fn eval_batch(&self, pop: &[Strategy]) -> Vec<Eval> {
+        let mut out: Vec<Option<Eval>> = vec![None; pop.len()];
+        // indices (into `pop`) that need computing, their keys, and
+        // duplicate -> representative links (positions into `todo`)
+        let mut todo: Vec<usize> = Vec::new();
+        let mut keys: Vec<StrategyKey> = Vec::new();
+        let mut alias: Vec<(usize, usize)> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let mut seen: HashMap<StrategyKey, usize> = HashMap::new();
+            for (i, s) in pop.iter().enumerate() {
+                let key = StrategyKey::of(s);
+                if let Some(e) = cache.get(&key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    out[i] = Some(*e);
+                    continue;
+                }
+                if let Some(&pos) = seen.get(&key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    alias.push((i, pos));
+                    continue;
+                }
+                seen.insert(key.clone(), todo.len());
+                todo.push(i);
+                keys.push(key);
+            }
+        }
+        self.misses.fetch_add(todo.len() as u64, Ordering::Relaxed);
+        let computed: Vec<Eval> =
+            par_map(todo.clone(), self.threads, |i| self.compute(&pop[i]));
+        {
+            let mut cache = self.cache.lock().unwrap();
+            for (pos, &i) in todo.iter().enumerate() {
+                out[i] = Some(computed[pos]);
+                self.insert_bounded(&mut cache, keys[pos].clone(),
+                                    computed[pos]);
+            }
+        }
+        for (i, pos) in alias {
+            out[i] = Some(computed[pos]);
+        }
+        out.into_iter().map(|e| e.expect("every candidate scored"))
+            .collect()
+    }
+
+    /// Decode AND score a population in parallel: `decode` runs on the
+    /// worker threads (it is usually as hot as evaluation), then the
+    /// decoded strategies go through [`EvalEngine::eval_batch`].
+    pub fn eval_population<G, F>(&self, genomes: &[G], decode: F)
+                                 -> Vec<(Strategy, Eval)>
+    where
+        G: Sync,
+        F: Fn(&G) -> Strategy + Sync,
+    {
+        let idx: Vec<usize> = (0..genomes.len()).collect();
+        let strategies: Vec<Strategy> =
+            par_map(idx, self.threads, |i| decode(&genomes[i]));
+        let evals = self.eval_batch(&strategies);
+        strategies.into_iter().zip(evals).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::mapping::decode::{decode, Relaxed};
+    use crate::util::rng::Rng;
+    use crate::workload::zoo;
+
+    fn random_pop(w: &Workload, hw: &HwConfig, n: usize, seed: u64)
+                  -> Vec<Strategy> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut relaxed = Relaxed::neutral(w);
+                for l in 0..w.len() {
+                    for d in 0..NDIMS {
+                        for s in 0..4 {
+                            relaxed.theta[l][d][s] = rng.range(0.0, 7.0);
+                        }
+                    }
+                }
+                for i in 0..relaxed.sigma.len() {
+                    relaxed.sigma[i] = rng.f64();
+                }
+                decode(&relaxed, w, hw)
+            })
+            .collect()
+    }
+
+    // NOTE: bit-for-bit equivalence vs costmodel::evaluate and
+    // parallel-vs-serial agreement live in rust/tests/eval_engine.rs
+    // (property tests); the unit tests here cover only the engine's own
+    // mechanics (cache accounting, capacity bound, arity guard).
+
+    #[test]
+    fn cache_hit_miss_accounting() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let engine = EvalEngine::new(&w, &hw);
+        let s = Strategy::trivial(&w);
+        let a = engine.eval(&s);
+        assert_eq!(engine.cache_misses(), 1);
+        assert_eq!(engine.cache_hits(), 0);
+        let b = engine.eval(&s);
+        assert_eq!(engine.cache_misses(), 1);
+        assert_eq!(engine.cache_hits(), 1);
+        assert_eq!(a, b);
+        // a batch full of duplicates computes exactly once more
+        let mut s2 = Strategy::trivial(&w);
+        s2.fuse[0] = true;
+        let pop = vec![s2.clone(), s2.clone(), s.clone(), s2];
+        let evals = engine.eval_batch(&pop);
+        assert_eq!(engine.cache_misses(), 2, "one new unique candidate");
+        assert_eq!(engine.cache_hits(), 1 + 3);
+        assert_eq!(evals[0], evals[1]);
+        assert_eq!(evals[2], a);
+    }
+
+    #[test]
+    fn infeasible_candidates_flagged() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let engine = EvalEngine::new(&w, &hw);
+        let mut s = Strategy::trivial(&w);
+        s.mappings[0].factors[1][3] = 64; // spatial K > 32 columns
+        let e = engine.eval(&s);
+        assert!(!e.feasible);
+        assert!(e.fitness().is_infinite());
+        assert!(e.edp.is_finite(), "raw EDP still reported");
+    }
+
+    #[test]
+    fn wrong_arity_strategy_is_infeasible_not_panicking() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let engine = EvalEngine::new(&w, &hw);
+        // a strategy for a different workload (8 layers vs 16) cannot
+        // be indexed by the cost model; it must score as infeasible
+        let other = zoo::gpt3_6_7b();
+        let e = engine.eval(&Strategy::trivial(&other));
+        assert!(!e.feasible);
+        assert!(e.fitness().is_infinite());
+    }
+
+    #[test]
+    fn cache_capacity_bounds_entries() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let engine = EvalEngine::new(&w, &hw).with_cache_capacity(4);
+        for s in random_pop(&w, &hw, 10, 21) {
+            engine.eval(&s);
+        }
+        assert!(engine.cache_len() <= 4);
+    }
+
+    #[test]
+    fn eval_population_decodes_and_scores() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let engine = EvalEngine::new(&w, &hw);
+        let mut rng = Rng::new(5);
+        let genomes: Vec<Vec<f64>> = (0..8)
+            .map(|_| {
+                (0..crate::search::encoding::dim(&w))
+                    .map(|_| rng.f64())
+                    .collect()
+            })
+            .collect();
+        let scored = engine.eval_population(&genomes, |g| {
+            crate::search::encoding::express_naive(g, &w, &hw)
+        });
+        assert_eq!(scored.len(), 8);
+        for (s, e) in &scored {
+            assert!(e.feasible, "naive legalization must be feasible");
+            let r = costmodel::evaluate(s, &w, &hw);
+            assert_eq!(e.edp, r.edp);
+        }
+    }
+}

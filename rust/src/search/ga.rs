@@ -8,6 +8,11 @@
 //! mutation, elitism. Every genome decodes through the same
 //! projection/repair pipeline as the gradient search, so all candidates
 //! are hardware-valid and fitness is simply the native closed-form EDP.
+//!
+//! Each generation decodes and scores as one batch on the incumbent's
+//! [`super::EvalEngine`]: candidates evaluate in parallel and elitism /
+//! crossover duplicates resolve from the memoization cache instead of
+//! re-running the cost model.
 
 use anyhow::Result;
 
@@ -45,10 +50,9 @@ impl Default for GaConfig {
     }
 }
 
-/// Run the GA under a budget. `_k_max` retained for interface parity
-/// with the artifact-batched evaluation path.
+/// Run the GA under a budget.
 pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
-                budget: Budget, _k_max: usize) -> Result<SearchResult> {
+                budget: Budget) -> Result<SearchResult> {
     let d = dim(w);
     let genes_per_layer = NDIMS * 4;
     let mut rng = Rng::new(cfg.seed);
@@ -63,9 +67,13 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
 
     while gen < budget.max_iters && inc.elapsed() < budget.seconds {
         gen += 1;
-        for (i, g) in pop.iter().enumerate() {
-            let s = express_naive(g, w, hw);
-            fitness[i] = inc.offer(&s, gen);
+        // decode + score the whole generation in parallel (cache folds
+        // elites and crossover duplicates)
+        let scored = inc
+            .engine
+            .eval_population(&pop, |g| express_naive(g, w, hw));
+        for (i, (s, e)) in scored.iter().enumerate() {
+            fitness[i] = inc.offer_eval(s, *e, gen);
         }
         if inc.elapsed() >= budget.seconds {
             break;
@@ -141,7 +149,7 @@ mod tests {
         let trivial = costmodel::evaluate(
             &crate::mapping::Strategy::trivial(&w), &w, &hw);
         let r = optimize(&w, &hw, &GaConfig::default(),
-                         Budget::iters(15), 32)
+                         Budget::iters(15))
             .unwrap();
         assert!(r.edp < trivial.edp, "{} !< {}", r.edp, trivial.edp);
         costmodel::feasible(&r.best, &w, &hw).unwrap();

@@ -9,9 +9,16 @@
 //! * [`bo`] — the learning-based baseline (GP + expected improvement,
 //!   paper ref [15]) on top of [`gp`].
 //! * [`random`] — uniform random sampling (sanity floor).
+//!
+//! All native candidate scoring flows through [`eval::EvalEngine`] — the
+//! batched, multi-threaded, memoizing evaluator of the analytical cost
+//! model. The [`Incumbent`] owns one engine per search, so every
+//! `offer()` is cache-aware and population-based searches batch through
+//! [`eval::EvalEngine::eval_batch`] / `eval_population`.
 
 pub mod bo;
 pub mod encoding;
+pub mod eval;
 pub mod ga;
 pub mod gp;
 pub mod gradient;
@@ -20,9 +27,10 @@ pub mod random;
 use std::time::Instant;
 
 use crate::config::HwConfig;
-use crate::costmodel;
 use crate::mapping::Strategy;
 use crate::workload::Workload;
+
+pub use eval::{Eval, EvalEngine};
 
 /// Common search budget: wall-clock (the paper compares equal time) and
 /// an iteration cap as a secondary bound.
@@ -71,10 +79,11 @@ impl SearchResult {
 }
 
 /// Incumbent tracker shared by all searches: keeps the best *feasible*
-/// strategy and the (time, edp) trace.
+/// strategy and the (time, edp) trace. Owns the search's [`EvalEngine`],
+/// so offers are memoized and callers can batch-score populations via
+/// `inc.engine`.
 pub struct Incumbent<'a> {
-    w: &'a Workload,
-    hw: &'a HwConfig,
+    pub engine: EvalEngine<'a>,
     start: Instant,
     pub best: Option<(Strategy, f64, f64, f64)>,
     pub trace: Vec<TracePoint>,
@@ -83,7 +92,12 @@ pub struct Incumbent<'a> {
 
 impl<'a> Incumbent<'a> {
     pub fn new(w: &'a Workload, hw: &'a HwConfig) -> Incumbent<'a> {
-        Incumbent { w, hw, start: Instant::now(), best: None,
+        Incumbent::with_engine(EvalEngine::new(w, hw))
+    }
+
+    /// Wrap an explicitly-configured engine (thread count, cache size).
+    pub fn with_engine(engine: EvalEngine<'a>) -> Incumbent<'a> {
+        Incumbent { engine, start: Instant::now(), best: None,
                     trace: Vec::new(), evals: 0 }
     }
 
@@ -91,34 +105,41 @@ impl<'a> Incumbent<'a> {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Evaluate natively; record if feasible and better. Returns the EDP
-    /// (infinite when infeasible).
+    /// Evaluate through the engine; record if feasible and better.
+    /// Returns the EDP (infinite when infeasible).
     pub fn offer(&mut self, s: &Strategy, iter: usize) -> f64 {
+        let e = self.engine.eval(s);
+        self.offer_eval(s, e, iter)
+    }
+
+    /// Record an already-scored candidate (the batched path: score the
+    /// population via `self.engine`, then offer the results in order).
+    pub fn offer_eval(&mut self, s: &Strategy, e: Eval, iter: usize)
+                      -> f64 {
         self.evals += 1;
-        if costmodel::feasible(s, self.w, self.hw).is_err() {
+        if !e.feasible {
             return f64::INFINITY;
         }
-        let r = costmodel::evaluate(s, self.w, self.hw);
         let better = self
             .best
             .as_ref()
-            .map_or(true, |&(_, best_edp, _, _)| r.edp < best_edp);
+            .map_or(true, |&(_, best_edp, _, _)| e.edp < best_edp);
         if better {
-            self.best = Some((s.clone(), r.edp, r.energy, r.latency));
+            self.best = Some((s.clone(), e.edp, e.energy, e.latency));
             self.trace.push(TracePoint {
                 seconds: self.elapsed(),
-                best_edp: r.edp,
+                best_edp: e.edp,
                 iter,
             });
         }
-        r.edp
+        e.edp
     }
 
     /// Finish; seeds with the always-feasible trivial strategy if no
     /// feasible candidate was ever offered.
     pub fn finish(mut self, iters: usize) -> SearchResult {
         if self.best.is_none() {
-            let s = Strategy::trivial(self.w);
+            let s = Strategy::trivial(self.engine.workload());
             self.offer(&s, iters);
         }
         let evals = self.evals;
@@ -163,5 +184,19 @@ mod tests {
         assert!(inc.offer(&s, 0).is_infinite());
         let r = inc.finish(1); // falls back to trivial
         assert!(r.edp.is_finite());
+    }
+
+    #[test]
+    fn repeat_offers_hit_the_engine_cache() {
+        let w = zoo::vgg16();
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut inc = Incumbent::new(&w, &hw);
+        let s = Strategy::trivial(&w);
+        inc.offer(&s, 0);
+        inc.offer(&s, 1);
+        inc.offer(&s, 2);
+        assert_eq!(inc.engine.cache_misses(), 1);
+        assert_eq!(inc.engine.cache_hits(), 2);
+        assert_eq!(inc.evals, 3, "offers still count as evals");
     }
 }

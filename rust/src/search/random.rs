@@ -1,4 +1,8 @@
 //! Uniform random search — the sanity floor every real method must beat.
+//!
+//! Samples are drawn serially (cheap) but decoded and scored in parallel
+//! batches on the incumbent's [`super::EvalEngine`]; duplicate decodes
+//! resolve from the memoization cache.
 
 use anyhow::Result;
 
@@ -9,6 +13,25 @@ use crate::workload::{Workload, NDIMS};
 
 use super::{Budget, Incumbent, SearchResult};
 
+/// Candidates decoded + evaluated per engine batch.
+const BATCH: usize = 64;
+
+fn sample(rng: &mut Rng, w: &Workload) -> Relaxed {
+    let mut relaxed = Relaxed::neutral(w);
+    for l in 0..w.len() {
+        for d in 0..NDIMS {
+            let cap = (w.layers[l].dims[d] as f64).log2().max(0.0);
+            for s in 0..4 {
+                relaxed.theta[l][d][s] = rng.range(-0.5, cap + 0.5);
+            }
+        }
+    }
+    for i in 0..relaxed.sigma.len() {
+        relaxed.sigma[i] = rng.f64();
+    }
+    relaxed
+}
+
 /// Sample uniformly in the relaxed space, decode, keep the best.
 pub fn optimize(w: &Workload, hw: &HwConfig, seed: u64, budget: Budget)
                 -> Result<SearchResult> {
@@ -17,20 +40,22 @@ pub fn optimize(w: &Workload, hw: &HwConfig, seed: u64, budget: Budget)
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
     let mut iter = 0usize;
     while inc.elapsed() < budget.seconds && iter < budget.max_iters {
-        iter += 1;
-        let mut relaxed = Relaxed::neutral(w);
-        for l in 0..w.len() {
-            for d in 0..NDIMS {
-                let cap = (w.layers[l].dims[d] as f64).log2().max(0.0);
-                for s in 0..4 {
-                    relaxed.theta[l][d][s] = rng.range(-0.5, cap + 0.5);
-                }
+        let b = BATCH.min(budget.max_iters - iter).max(1);
+        let samples: Vec<Relaxed> =
+            (0..b).map(|_| sample(&mut rng, w)).collect();
+        let scored = inc
+            .engine
+            .eval_population(&samples, |r| decode(r, w, hw));
+        for (s, e) in &scored {
+            // keep the old per-candidate budget granularity: never
+            // record results past the deadline (the batch evaluation
+            // itself may overrun by at most one batch)
+            if inc.elapsed() >= budget.seconds {
+                break;
             }
+            iter += 1;
+            inc.offer_eval(s, *e, iter);
         }
-        for i in 0..relaxed.sigma.len() {
-            relaxed.sigma[i] = rng.f64();
-        }
-        inc.offer(&decode(&relaxed, w, hw), iter);
     }
     Ok(inc.finish(iter))
 }

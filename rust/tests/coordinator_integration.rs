@@ -1,12 +1,15 @@
 //! Integration: the coordinator service end-to-end — job queueing,
-//! worker dispatch with per-thread PJRT runtimes, metrics, and the TCP
-//! line protocol.
+//! worker dispatch, metrics, and the TCP line protocol. Native methods
+//! (GA / BO / random) score on the shared `EvalEngine` and need no AOT
+//! artifacts; gradient jobs degrade to per-job errors without them.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 
+use fadiff::config::repo_root;
 use fadiff::coordinator::{server, Coordinator, JobRequest, Method};
+use fadiff::runtime::Runtime;
 use fadiff::util::json::Json;
 
 fn small_job(workload: &str, method: Method) -> JobRequest {
@@ -23,7 +26,7 @@ fn small_job(workload: &str, method: Method) -> JobRequest {
 #[test]
 fn coordinator_runs_jobs_and_counts() {
     let coord = Coordinator::new(None, 2).unwrap();
-    let r = coord.run(small_job("mobilenet", Method::FADiff)).unwrap();
+    let r = coord.run(small_job("mobilenet", Method::Ga)).unwrap();
     assert!(r.edp.is_finite() && r.edp > 0.0);
     assert!(r.full_model_edp >= r.edp);
     assert!(r.iters > 0);
@@ -51,6 +54,36 @@ fn coordinator_rejects_unknown_workload() {
     let err = coord.run(small_job("alexnet", Method::FADiff));
     assert!(err.is_err());
     assert_eq!(coord.metrics.failed.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn gradient_jobs_error_cleanly_without_artifacts() {
+    if Runtime::load_if_available(&repo_root().join("artifacts")).is_some()
+    {
+        eprintln!("skipping: PJRT runtime present, degraded path untested");
+        return;
+    }
+    let coord = Coordinator::new(None, 1).unwrap();
+    let err = coord.run(small_job("resnet18", Method::FADiff));
+    let msg = err.unwrap_err().to_string();
+    assert!(msg.contains("artifacts"), "unexpected error: {msg}");
+    assert_eq!(coord.metrics.failed.load(Ordering::SeqCst), 1);
+    // the same coordinator still serves native methods afterwards
+    let ok = coord.run(small_job("resnet18", Method::Random)).unwrap();
+    assert!(ok.edp.is_finite());
+}
+
+#[test]
+fn coordinator_runs_gradient_jobs_when_runtime_present() {
+    if Runtime::load_if_available(&repo_root().join("artifacts")).is_none()
+    {
+        eprintln!("skipping: PJRT runtime unavailable");
+        return;
+    }
+    let coord = Coordinator::new(None, 2).unwrap();
+    let r = coord.run(small_job("mobilenet", Method::FADiff)).unwrap();
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert_eq!(coord.metrics.completed.load(Ordering::SeqCst), 1);
 }
 
 fn send(addr: std::net::SocketAddr, body: &str) -> String {

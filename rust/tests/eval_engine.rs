@@ -1,0 +1,128 @@
+//! Integration + property tests for `search::eval::EvalEngine` — the
+//! batched, memoizing evaluation entry point of every search method.
+//!
+//! Pins the tentpole guarantees: (1) batched results are bit-for-bit
+//! identical to single-candidate `costmodel::evaluate`, (2) parallel
+//! and serial engines agree exactly, (3) cache hit/miss accounting is
+//! deterministic.
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::costmodel;
+use fadiff::mapping::decode::{decode, Relaxed};
+use fadiff::mapping::Strategy;
+use fadiff::search::{ga, random, Budget, EvalEngine};
+use fadiff::util::prop::{check, Config};
+use fadiff::util::rng::Rng;
+use fadiff::workload::{zoo, NDIMS};
+
+fn random_strategy(rng: &mut Rng, w: &fadiff::workload::Workload,
+                   hw: &fadiff::config::HwConfig) -> Strategy {
+    let mut relaxed = Relaxed::neutral(w);
+    for l in 0..w.len() {
+        for d in 0..NDIMS {
+            for s in 0..4 {
+                relaxed.theta[l][d][s] = rng.range(-1.0, 9.0);
+            }
+        }
+    }
+    for i in 0..relaxed.sigma.len() {
+        relaxed.sigma[i] = rng.f64();
+    }
+    decode(&relaxed, w, hw)
+}
+
+#[test]
+fn batched_edp_matches_costmodel_bit_for_bit_prop() {
+    // the tentpole equivalence property: for ANY decoded strategy on
+    // ANY suite workload, the engine's numbers equal a direct
+    // costmodel::evaluate call exactly (same code path, memoized)
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let suite = zoo::table1_suite();
+    check("engine-matches-costmodel", &Config { cases: 48, seed: 77 },
+          |rng, _| {
+              let wi = rng.below(suite.len());
+              let s = random_strategy(rng, &suite[wi], &hw);
+              (wi, s)
+          },
+          |(wi, s)| {
+              let w = &suite[*wi];
+              let engine = EvalEngine::new(w, &hw);
+              let e = engine.eval(s);
+              let r = costmodel::evaluate(s, w, &hw);
+              if e.edp != r.edp || e.energy != r.energy
+                  || e.latency != r.latency
+              {
+                  return Err(format!(
+                      "{}: engine ({}, {}, {}) != costmodel ({}, {}, {})",
+                      w.name, e.energy, e.latency, e.edp, r.energy,
+                      r.latency, r.edp
+                  ));
+              }
+              if e.feasible != costmodel::feasible(s, w, &hw).is_ok() {
+                  return Err("feasibility flag mismatch".into());
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn parallel_and_serial_engines_agree_exactly() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::vgg16();
+    let mut rng = Rng::new(31);
+    let pop: Vec<Strategy> =
+        (0..40).map(|_| random_strategy(&mut rng, &w, &hw)).collect();
+    let serial = EvalEngine::with_threads(&w, &hw, 1);
+    let par = EvalEngine::with_threads(&w, &hw, 8);
+    let a = serial.eval_batch(&pop);
+    let b = par.eval_batch(&pop);
+    assert_eq!(a, b, "thread count must not change results");
+    // second pass: all hits, identical values
+    let c = par.eval_batch(&pop);
+    assert_eq!(b, c);
+    assert_eq!(par.cache_misses() as usize,
+               par.cache_len().min(pop.len()));
+}
+
+#[test]
+fn cache_accounting_across_batches() {
+    let hw = load_config(&repo_root(), "small").unwrap();
+    let w = zoo::gpt3_6_7b();
+    let engine = EvalEngine::new(&w, &hw);
+    let mut rng = Rng::new(8);
+    let unique: Vec<Strategy> =
+        (0..6).map(|_| random_strategy(&mut rng, &w, &hw)).collect();
+    // batch with each unique strategy twice
+    let mut pop = unique.clone();
+    pop.extend(unique.iter().cloned());
+    let evals = engine.eval_batch(&pop);
+    let uniq_keys = engine.cache_len();
+    assert_eq!(engine.cache_misses() as usize, uniq_keys);
+    assert_eq!(engine.cache_hits() as usize, pop.len() - uniq_keys);
+    for i in 0..unique.len() {
+        assert_eq!(evals[i], evals[i + unique.len()]);
+    }
+    // replay: every candidate hits
+    let before = engine.cache_misses();
+    engine.eval_batch(&pop);
+    assert_eq!(engine.cache_misses(), before, "replay must not compute");
+}
+
+#[test]
+fn searches_report_engine_consistent_results() {
+    // end-to-end: the winners reported by engine-backed searches carry
+    // exactly the native model's numbers for their best strategy
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::mobilenet_v1();
+    let rga = ga::optimize(&w, &hw, &ga::GaConfig::default(),
+                           Budget::iters(5))
+        .unwrap();
+    let check_ga = costmodel::evaluate(&rga.best, &w, &hw);
+    assert_eq!(rga.edp, check_ga.edp);
+    assert_eq!(rga.energy, check_ga.energy);
+    assert_eq!(rga.latency, check_ga.latency);
+
+    let rr = random::optimize(&w, &hw, 3, Budget::iters(64)).unwrap();
+    let check_r = costmodel::evaluate(&rr.best, &w, &hw);
+    assert_eq!(rr.edp, check_r.edp);
+}

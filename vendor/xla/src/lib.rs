@@ -1,0 +1,218 @@
+//! Offline stub of the PJRT-backed `xla` crate the FADiff runtime links
+//! against. The host-side pieces ([`Literal`] packing, shape checks) are
+//! real; anything that would need the native XLA/PJRT runtime reports
+//! itself unavailable with an actionable error instead.
+//!
+//! The contract mirrors exactly the subset `fadiff::runtime` and
+//! `fadiff::search::gradient` use. Swapping in a real PJRT-backed `xla`
+//! crate (same API) re-enables artifact execution without touching
+//! `fadiff` itself; until then, `Runtime::load` still works (manifest
+//! parsing, error paths) and compilation/execution fail gracefully so
+//! native-cost-model code paths stay fully usable.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type; call sites format it with `{:?}`.
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+
+    fn unavailable(what: &str) -> XlaError {
+        XlaError::new(format!(
+            "{what} unavailable: fadiff was built against the offline \
+             stub `xla` crate; link a PJRT-backed xla crate (and run \
+             `make artifacts`) to execute AOT artifacts"
+        ))
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Result alias matching the real crate's fallible surface.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types a [`Literal`] can be unpacked to.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+/// A host tensor: flat f32 data plus a shape (empty = scalar).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// A rank-1 literal over a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// A rank-0 (scalar) literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: vec![x], dims: Vec::new() }
+    }
+
+    /// Reinterpret under a new shape; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(XlaError::new(format!(
+                "reshape: {} elements cannot view as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Shape accessor (rank-0 = scalar).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal into its parts. The stub never produces
+    /// tuples (execution is unavailable), so this only errs.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError::unavailable("tuple decomposition"))
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+}
+
+/// Parsed HLO module text. The stub validates the file is readable and
+/// plausibly HLO text; real parsing happens in the native crate.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            XlaError::new(format!("read {path:?}: {e}"))
+        })?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// The PJRT client. Creation succeeds (so manifest-level tooling and
+/// error paths stay exercisable); compilation reports unavailability.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU client handle.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Compile a computation. Always unavailable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable("XLA compilation"))
+    }
+}
+
+/// A compiled executable. Unconstructible through the stub client, but
+/// the type exists so downstream structs and signatures compile.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with device inputs. Unreachable via the stub (no
+    /// executable can be built), kept for API parity.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L])
+                                       -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("XLA execution"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(),
+                   vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        let s = Literal::scalar(7.5);
+        assert_eq!(s.dims().len(), 0);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn client_compiles_nothing() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+
+    #[test]
+    fn missing_file_errors_with_path() {
+        let err = HloModuleProto::from_text_file("/no/such/ghost.hlo.txt")
+            .unwrap_err();
+        assert!(format!("{err:?}").contains("ghost.hlo.txt"));
+    }
+}
