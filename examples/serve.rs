@@ -74,7 +74,18 @@ fn main() -> anyhow::Result<()> {
               ({:.2} jobs/s)", jobs.len(), wall,
              jobs.len() as f64 / wall);
 
-    // metrics + graceful shutdown
+    // sweep: one request fans a method x workload x seed grid through
+    // the same queue; same-(workload, config) cells share an eval cache
+    let sweep = request(
+        addr,
+        r#"{"verb": "sweep", "workloads": ["resnet18", "mobilenet"], "methods": ["ga", "random"], "seeds": [7], "seconds": 2.0, "max_iters": 40}"#,
+    )?;
+    let j = fadiff::util::json::Json::parse(&sweep)?;
+    println!("sweep: {} jobs, {} completed, {} failed",
+             j.get_f64("jobs")?, j.get_f64("completed")?,
+             j.get_f64("failed")?);
+
+    // metrics + graceful shutdown (note the cross-job cache counters)
     println!("metrics: {}", request(addr, r#"{"verb": "metrics"}"#)?);
     let _ = request(addr, r#"{"verb": "shutdown"}"#)?;
     let _ = server_thread.join();

@@ -4,6 +4,9 @@
 //!     feasibility + closed-form evaluate, one candidate at a time)
 //!   * EvalEngine batched parallel evaluation, cold cache
 //!   * EvalEngine batched evaluation, warm cache (memoized)
+//!   * persistent-pool (scoped submit) vs per-call scoped-spawn
+//!     batching, at serving batch sizes and GA batch sizes — the
+//!     coordinator hot path
 //!   * GA-generation decode+eval throughput, serial vs engine
 //!   * decode throughput (incumbent refresh path)
 //!   * PJRT gradient step + batched artifact eval (skipped unless real
@@ -12,6 +15,8 @@
 //! `cargo bench --bench perf_hotpath`
 
 mod bench_util;
+
+use std::sync::Arc;
 
 use bench_util::{report, time};
 use fadiff::config::{load_config, repo_root};
@@ -23,6 +28,7 @@ use fadiff::runtime::{HostTensor, Runtime, ART_EVAL, ART_GRAD};
 use fadiff::search::encoding::{dim, express_naive};
 use fadiff::search::EvalEngine;
 use fadiff::util::rng::Rng;
+use fadiff::util::threadpool::ThreadPool;
 use fadiff::workload::zoo;
 
 const POP: usize = 512;
@@ -79,10 +85,48 @@ fn main() {
            &format!("{:.0}k cand/s", POP as f64 / warm / 1e3));
     println!(
         "  -> speedup vs serial: {:.2}x cold (parallel), {:.2}x warm \
-         (memoized); cache {} hits / {} misses\n",
-        serial / cold, serial / warm, engine.cache_hits(),
+         (memoized); warm/cold ratio {:.2}x; cache {} hits / {} misses\n",
+        serial / cold, serial / warm, cold / warm, engine.cache_hits(),
         engine.cache_misses()
     );
+
+    // --- persistent pool vs per-call scoped spawn -----------------------
+    // the serving path: the coordinator keeps one ThreadPool alive and
+    // engines scoped-submit batches into it, instead of spawning (and
+    // joining) `threads` OS threads on every eval_batch call
+    let pool = Arc::new(ThreadPool::new(engine.threads()));
+    let pooled = EvalEngine::new(&w, &hw).with_pool(Arc::clone(&pool));
+    let (pcold, pc_min, pc_max) = time(5, || {
+        pooled.clear_cache();
+        let _ = pooled.eval_batch(&pop);
+    });
+    report(&format!("EvalEngine cold, persistent pool ({} threads)",
+                    pool.size()),
+           pcold, pc_min, pc_max,
+           &format!("{:.0}k cand/s", POP as f64 / pcold / 1e3));
+    println!(
+        "  -> persistent pool vs scoped spawn ({POP} cands): {:.2}x\n",
+        cold / pcold
+    );
+
+    // spawn overhead matters most at small batches (one GA generation);
+    // compare both paths at population 48
+    let small: Vec<Strategy> = pop[..48].to_vec();
+    let scoped_small = EvalEngine::new(&w, &hw);
+    let (sc, sc_min, sc_max) = time(50, || {
+        scoped_small.clear_cache();
+        let _ = scoped_small.eval_batch(&small);
+    });
+    report("small batch (48) scoped spawn", sc, sc_min, sc_max, "");
+    let pooled_small =
+        EvalEngine::new(&w, &hw).with_pool(Arc::clone(&pool));
+    let (pc, p_min, p_max) = time(50, || {
+        pooled_small.clear_cache();
+        let _ = pooled_small.eval_batch(&small);
+    });
+    report("small batch (48) persistent pool", pc, p_min, p_max,
+           &format!("{:.2}x vs scoped spawn", sc / pc));
+    println!();
 
     // --- GA generation: decode + eval, serial vs engine -----------------
     let d = dim(&w);

@@ -10,6 +10,9 @@ pub struct Metrics {
     pub started: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Jobs that ended because a `cancel` arrived (whether they were
+    /// still queued or already running).
+    pub cancelled: AtomicU64,
 }
 
 impl Metrics {
@@ -17,23 +20,27 @@ impl Metrics {
     pub fn in_flight(&self) -> u64 {
         let s = self.submitted.load(Ordering::SeqCst);
         let c = self.completed.load(Ordering::SeqCst)
-            + self.failed.load(Ordering::SeqCst);
+            + self.failed.load(Ordering::SeqCst)
+            + self.cancelled.load(Ordering::SeqCst);
         s.saturating_sub(c)
     }
 
     /// Render as a one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} started={} completed={} failed={} in_flight={}",
+            "submitted={} started={} completed={} failed={} \
+             cancelled={} in_flight={}",
             self.submitted.load(Ordering::SeqCst),
             self.started.load(Ordering::SeqCst),
             self.completed.load(Ordering::SeqCst),
             self.failed.load(Ordering::SeqCst),
+            self.cancelled.load(Ordering::SeqCst),
             self.in_flight()
         )
     }
 
-    /// Render as JSON (server `metrics` verb).
+    /// Render as JSON (merged with the cache-registry stats by
+    /// [`super::Coordinator::metrics_json`] for the `metrics` verb).
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::{num, obj};
         obj(vec![
@@ -43,6 +50,8 @@ impl Metrics {
             ("completed",
              num(self.completed.load(Ordering::SeqCst) as f64)),
             ("failed", num(self.failed.load(Ordering::SeqCst) as f64)),
+            ("cancelled",
+             num(self.cancelled.load(Ordering::SeqCst) as f64)),
             ("in_flight", num(self.in_flight() as f64)),
         ])
     }

@@ -15,12 +15,35 @@
 //! AOT artifacts are absent; only the gradient methods (FADiff / DOSA)
 //! require a runtime and fail per-job with an actionable error without
 //! one.
+//!
+//! # Sweep-serving architecture
+//!
+//! The coordinator is built to serve many jobs from one warm process:
+//!
+//! * **Shared cross-job caches** — a [`CacheRegistry`] hands every job
+//!   the memoized [`crate::search::EvalCache`] for its
+//!   `(workload, config)` pair, so repeated and concurrent jobs reuse
+//!   each other's cost-model evaluations (hit/miss/eviction counters
+//!   surface via [`Coordinator::metrics_json`] / the `metrics` verb).
+//! * **Persistent evaluation pool** — one
+//!   [`crate::util::threadpool::ThreadPool`] (scoped-submit API) backs
+//!   every engine's batch scoring, replacing per-batch thread
+//!   spawn/join on the hot path.
+//! * **Tracked jobs** — [`Coordinator::submit_tracked`] returns a job
+//!   id usable with [`Coordinator::job_status`] and
+//!   [`Coordinator::cancel`]; cancellation is cooperative (queued jobs
+//!   are dropped before they start, running native jobs stop at the
+//!   next batch boundary and report their best-so-far).
+//! * **Sweeps** — the server's `sweep` verb fans a method x workload x
+//!   seed grid through the same queue and aggregates the results.
 
 pub mod metrics;
+pub mod registry;
 pub mod server;
 
+use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -30,11 +53,15 @@ use anyhow::{anyhow, Result};
 use crate::config::{load_config, repo_root};
 use crate::costmodel;
 use crate::runtime::Runtime;
-use crate::search::{bo, ga, gradient, random, Budget, SearchResult};
-use crate::util::threadpool::{oneshot, OneShot, OneShotSender};
+use crate::search::{bo, ga, gradient, random, Budget, EvalCtx,
+                    SearchResult};
+use crate::util::json::Json;
+use crate::util::threadpool::{oneshot, OneShot, OneShotSender,
+                              ThreadPool};
 use crate::workload::zoo;
 
 pub use metrics::Metrics;
+pub use registry::CacheRegistry;
 
 /// Optimization method selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -112,13 +139,135 @@ pub struct JobResult {
     pub wall_seconds: f64,
 }
 
-type Envelope = (JobRequest, OneShotSender<Result<JobResult, String>>);
+/// Lifecycle of a tracked job (see [`Coordinator::submit_tracked`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
 
-/// The coordinator: queue + worker pool + metrics.
+impl JobStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Completed => "completed",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the job can still change state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Completed | JobStatus::Failed
+                       | JobStatus::Cancelled)
+    }
+}
+
+struct TrackedJob {
+    status: JobStatus,
+    cancel: Arc<AtomicBool>,
+    result: Option<Result<JobResult, String>>,
+}
+
+/// Bound on tracked jobs. Terminal entries beyond it are pruned oldest
+/// first; when the table is full of *live* (queued/running) jobs, new
+/// tracked submissions are rejected — backpressure instead of unbounded
+/// memory growth on a flooded server.
+const MAX_TRACKED_JOBS: usize = 1024;
+
+#[derive(Default)]
+struct JobTable {
+    next: AtomicU64,
+    jobs: Mutex<HashMap<u64, TrackedJob>>,
+}
+
+impl JobTable {
+    /// Register a new queued job; `None` when the table is saturated
+    /// with live jobs (the caller should reject the submission).
+    fn insert(&self, cancel: Arc<AtomicBool>) -> Option<u64> {
+        let mut jobs = self.jobs.lock().unwrap();
+        if jobs.len() >= MAX_TRACKED_JOBS {
+            let mut terminal: Vec<u64> = jobs
+                .iter()
+                .filter(|(_, j)| j.status.is_terminal())
+                .map(|(&id, _)| id)
+                .collect();
+            if jobs.len() - terminal.len() >= MAX_TRACKED_JOBS {
+                return None; // every slot holds a live job
+            }
+            terminal.sort_unstable();
+            let excess = jobs.len() + 1 - MAX_TRACKED_JOBS;
+            for old in terminal.into_iter().take(excess) {
+                jobs.remove(&old);
+            }
+        }
+        let id = self.next.fetch_add(1, Ordering::SeqCst) + 1;
+        jobs.insert(id, TrackedJob { status: JobStatus::Queued, cancel,
+                                     result: None });
+        Some(id)
+    }
+
+    fn set_running(&self, id: u64) {
+        if let Some(j) = self.jobs.lock().unwrap().get_mut(&id) {
+            if !j.status.is_terminal() {
+                j.status = JobStatus::Running;
+            }
+        }
+    }
+
+    /// Move a job to a terminal state; returns false if it already was
+    /// terminal (so metrics count each job exactly once).
+    fn finish(&self, id: u64, status: JobStatus,
+              result: Result<JobResult, String>) -> bool {
+        let mut jobs = self.jobs.lock().unwrap();
+        match jobs.get_mut(&id) {
+            Some(j) if !j.status.is_terminal() => {
+                j.status = status;
+                j.result = Some(result);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn status(&self, id: u64)
+              -> Option<(JobStatus, Option<Result<JobResult, String>>)> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|j| (j.status, j.result.clone()))
+    }
+
+    fn cancel_flag(&self, id: u64) -> Option<Arc<AtomicBool>> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|j| Arc::clone(&j.cancel))
+    }
+}
+
+struct Envelope {
+    req: JobRequest,
+    reply: Option<OneShotSender<Result<JobResult, String>>>,
+    job_id: Option<u64>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// The coordinator: queue + worker pool + shared caches + metrics.
 pub struct Coordinator {
     tx: Option<Sender<Envelope>>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    registry: Arc<CacheRegistry>,
+    eval_pool: Arc<ThreadPool>,
+    jobs: Arc<JobTable>,
 }
 
 impl Coordinator {
@@ -144,31 +293,105 @@ impl Coordinator {
         let (tx, rx) = channel::<Envelope>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
+        let registry = Arc::new(CacheRegistry::default());
+        let jobs = Arc::new(JobTable::default());
+        // one persistent evaluation pool shared by every worker's
+        // engines: batches scoped-submit here instead of spawning
+        // threads per call
+        let eval_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        let eval_pool = Arc::new(ThreadPool::new(eval_threads));
         let workers = (0..n_workers.max(1))
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let dir = dir.clone();
                 let metrics = Arc::clone(&metrics);
+                let registry = Arc::clone(&registry);
+                let eval_pool = Arc::clone(&eval_pool);
+                let jobs = Arc::clone(&jobs);
                 std::thread::Builder::new()
                     .name(format!("fadiff-coord-{i}"))
-                    .spawn(move || worker_loop(&dir, &rx, &metrics))
+                    .spawn(move || {
+                        worker_loop(&dir, &rx, &metrics, &registry,
+                                    &eval_pool, &jobs)
+                    })
                     .expect("spawn coordinator worker")
             })
             .collect();
-        Ok(Coordinator { tx: Some(tx), workers, metrics })
+        Ok(Coordinator { tx: Some(tx), workers, metrics, registry,
+                         eval_pool, jobs })
+    }
+
+    fn enqueue(&self, req: JobRequest,
+               reply: Option<OneShotSender<Result<JobResult, String>>>,
+               job_id: Option<u64>, cancel: Arc<AtomicBool>) {
+        self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("coordinator shut down")
+            .send(Envelope { req, reply, job_id, cancel })
+            .expect("workers alive");
     }
 
     /// Submit a job; returns a handle to wait on.
     pub fn submit(&self, req: JobRequest)
                   -> OneShot<Result<JobResult, String>> {
         let (tx, rx) = oneshot();
-        self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("coordinator shut down")
-            .send((req, tx))
-            .expect("workers alive");
+        self.enqueue(req, Some(tx), None,
+                     Arc::new(AtomicBool::new(false)));
         rx
+    }
+
+    /// Submit a tracked job: returns a job id for
+    /// [`Coordinator::job_status`] / [`Coordinator::cancel`] (the
+    /// server's `submit` / `status` / `cancel` verbs). Errors when the
+    /// job table is saturated with live jobs (cancel or drain first).
+    pub fn submit_tracked(&self, req: JobRequest) -> Result<u64> {
+        let cancel = Arc::new(AtomicBool::new(false));
+        let id = self.jobs.insert(Arc::clone(&cancel)).ok_or_else(|| {
+            anyhow!(
+                "job table full ({MAX_TRACKED_JOBS} live jobs); \
+                 cancel or await existing jobs first"
+            )
+        })?;
+        self.enqueue(req, None, Some(id), cancel);
+        Ok(id)
+    }
+
+    /// Status (and, once terminal, the outcome) of a tracked job.
+    /// `None` for ids never issued or pruned.
+    #[allow(clippy::type_complexity)]
+    pub fn job_status(&self, id: u64)
+                      -> Option<(JobStatus,
+                                 Option<Result<JobResult, String>>)> {
+        self.jobs.status(id)
+    }
+
+    /// Request cancellation of a tracked job. Queued jobs are resolved
+    /// immediately; running jobs stop cooperatively at their next batch
+    /// boundary (their partial best is kept as the result). Returns the
+    /// job's status after the request, or `None` for unknown ids.
+    pub fn cancel(&self, id: u64) -> Option<JobStatus> {
+        let flag = self.jobs.cancel_flag(id)?;
+        flag.store(true, Ordering::SeqCst);
+        let (status, _) = self.jobs.status(id)?;
+        match status {
+            JobStatus::Queued => {
+                // resolve now so callers are not stuck behind whatever
+                // is ahead in the queue; the worker that later drains
+                // the envelope sees the terminal state and skips it
+                if self.jobs.finish(id, JobStatus::Cancelled,
+                                    Err("job cancelled".into())) {
+                    self.metrics
+                        .cancelled
+                        .fetch_add(1, Ordering::SeqCst);
+                }
+                Some(JobStatus::Cancelled)
+            }
+            other => Some(other),
+        }
     }
 
     /// Submit and block for the result.
@@ -181,6 +404,33 @@ impl Coordinator {
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The cross-job cache registry (shared `(workload, config)`
+    /// evaluation caches).
+    pub fn registry(&self) -> &Arc<CacheRegistry> {
+        &self.registry
+    }
+
+    /// The persistent evaluation pool batches score on.
+    pub fn eval_pool(&self) -> &Arc<ThreadPool> {
+        &self.eval_pool
+    }
+
+    /// Service metrics + cache-registry stats as one JSON object (the
+    /// `metrics` verb payload).
+    pub fn metrics_json(&self) -> Json {
+        let mut j = self.metrics.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("cache".into(), self.registry.stats_json());
+            map.insert(
+                "eval_pool_threads".into(),
+                Json::Num(self.eval_pool.size() as f64),
+            );
+            map.insert("workers".into(),
+                       Json::Num(self.n_workers() as f64));
+        }
+        j
     }
 }
 
@@ -195,7 +445,8 @@ impl Drop for Coordinator {
 
 fn worker_loop(dir: &std::path::Path,
                rx: &Arc<Mutex<Receiver<Envelope>>>,
-               metrics: &Arc<Metrics>) {
+               metrics: &Arc<Metrics>, registry: &Arc<CacheRegistry>,
+               eval_pool: &Arc<ThreadPool>, jobs: &Arc<JobTable>) {
     // One PJRT runtime per worker; artifacts compile lazily on the
     // first gradient job so native-only service pays no startup
     // compiles (the accurate degraded-mode warning is emitted once by
@@ -208,17 +459,60 @@ fn worker_loop(dir: &std::path::Path,
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let (req, reply) = match job {
+        let Envelope { req, reply, job_id, cancel } = match job {
             Ok(j) => j,
             Err(_) => break,
         };
+        // cancelled while queued: never start it
+        if cancel.load(Ordering::SeqCst) {
+            let transitioned = job_id.map_or(true, |id| {
+                jobs.finish(id, JobStatus::Cancelled,
+                            Err("job cancelled".into()))
+            });
+            if transitioned {
+                metrics.cancelled.fetch_add(1, Ordering::SeqCst);
+            }
+            if let Some(reply) = reply {
+                reply.send(Err("job cancelled".into()));
+            }
+            continue;
+        }
         metrics.started.fetch_add(1, Ordering::SeqCst);
-        let out = execute_job(rt.as_ref(), &req);
-        match &out {
-            Ok(_) => metrics.completed.fetch_add(1, Ordering::SeqCst),
-            Err(_) => metrics.failed.fetch_add(1, Ordering::SeqCst),
+        if let Some(id) = job_id {
+            jobs.set_running(id);
+        }
+        let ctx = JobCtx {
+            registry: Some(registry.as_ref()),
+            pool: Some(Arc::clone(eval_pool)),
+            cancel: Some(Arc::clone(&cancel)),
         };
-        reply.send(out.map_err(|e| e.to_string()));
+        let out = execute_job_ctx(rt.as_ref(), &req, &ctx)
+            .map_err(|e| e.to_string());
+        let was_cancelled = cancel.load(Ordering::SeqCst);
+        let status = if was_cancelled {
+            JobStatus::Cancelled
+        } else if out.is_ok() {
+            JobStatus::Completed
+        } else {
+            JobStatus::Failed
+        };
+        let transitioned = job_id.map_or(true, |id| {
+            jobs.finish(id, status, out.clone())
+        });
+        if transitioned {
+            match status {
+                JobStatus::Completed => {
+                    metrics.completed.fetch_add(1, Ordering::SeqCst)
+                }
+                JobStatus::Failed => {
+                    metrics.failed.fetch_add(1, Ordering::SeqCst)
+                }
+                _ => metrics.cancelled.fetch_add(1, Ordering::SeqCst),
+            };
+        }
+        if let Some(reply) = reply {
+            reply.send(out);
+        }
     }
 }
 
@@ -235,15 +529,47 @@ fn need_rt<'r>(rt: Option<&'r Runtime>, method: Method)
     })
 }
 
+/// Serving context for one job execution: where to find the shared
+/// per-`(workload, config)` caches, the persistent evaluation pool,
+/// and the cooperative cancel flag. `JobCtx::default()` (what the CLI
+/// uses) reproduces standalone behavior exactly.
+#[derive(Default)]
+pub struct JobCtx<'c> {
+    pub registry: Option<&'c CacheRegistry>,
+    pub pool: Option<Arc<ThreadPool>>,
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl JobCtx<'_> {
+    fn eval_ctx(&self, req: &JobRequest) -> EvalCtx {
+        EvalCtx {
+            cache: self
+                .registry
+                .map(|r| r.cache_for(&req.workload, &req.config)),
+            pool: self.pool.clone(),
+            cancel: self.cancel.clone(),
+        }
+    }
+}
+
 /// Run one job on a given (optional) runtime; also used directly by the
 /// CLI. Native methods score through the search-owned
 /// [`crate::search::EvalEngine`] and never touch the runtime.
 pub fn execute_job(rt: Option<&Runtime>, req: &JobRequest)
                    -> Result<JobResult> {
+    execute_job_ctx(rt, req, &JobCtx::default())
+}
+
+/// [`execute_job`] with a serving context: native methods pick up the
+/// shared cache for the job's `(workload, config)` pair, batch on the
+/// persistent pool, and poll the cancel flag between batches.
+pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
+                       ctx: &JobCtx) -> Result<JobResult> {
     let w = zoo::by_name(&req.workload)
         .ok_or_else(|| anyhow!("unknown workload {:?}", req.workload))?;
     let hw = load_config(&repo_root(), &req.config)?;
     let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
+    let ectx = ctx.eval_ctx(req);
     let t0 = std::time::Instant::now();
     let r: SearchResult = match req.method {
         Method::FADiff => gradient::optimize(
@@ -258,13 +584,14 @@ pub fn execute_job(rt: Option<&Runtime>, req: &JobRequest)
                 ..gradient::GradientConfig::dosa()
             },
             budget)?,
-        Method::Ga => ga::optimize(
+        Method::Ga => ga::optimize_ctx(
             &w, &hw, &ga::GaConfig { seed: req.seed, ..Default::default() },
-            budget)?,
-        Method::Bo => bo::optimize(
+            budget, &ectx)?,
+        Method::Bo => bo::optimize_ctx(
             &w, &hw, &bo::BoConfig { seed: req.seed, ..Default::default() },
-            budget)?,
-        Method::Random => random::optimize(&w, &hw, req.seed, budget)?,
+            budget, &ectx)?,
+        Method::Random => random::optimize_ctx(&w, &hw, req.seed, budget,
+                                               &ectx)?,
     };
     // final safety: the result must be hardware-valid
     costmodel::feasible(&r.best, &w, &hw)

@@ -1,0 +1,219 @@
+//! Cross-job evaluation-cache sharing: one memoized [`EvalCache`] per
+//! `(workload, config)` pair, owned by the coordinator and handed to
+//! every job's `EvalEngine`.
+//!
+//! This is what makes a warm serving process cheap: identical and
+//! concurrent jobs on the same pair stop re-paying the cost-model bill
+//! — the second `optimize` of a `(workload, config)` the process has
+//! already seen resolves duplicate candidates from the shared cache, and
+//! the `metrics` verb surfaces the hit/miss/eviction counters so the
+//! effect is observable from the wire.
+//!
+//! The registry itself is bounded: beyond `capacity` distinct pairs the
+//! least-recently-used pair is dropped (its counters are folded into
+//! retired totals so service-lifetime stats stay monotone). Engines
+//! already holding the evicted `Arc` keep using it safely; it simply
+//! stops being handed to new jobs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::search::EvalCache;
+use crate::util::json::{num, obj, Json};
+
+/// Default bound on distinct `(workload, config)` caches. Each cache is
+/// itself bounded (see [`crate::search::eval::DEFAULT_CACHE_CAPACITY`]),
+/// so this caps worst-case memory at capacity x cache-bound entries.
+pub const DEFAULT_REGISTRY_CAPACITY: usize = 32;
+
+struct Entry {
+    cache: Arc<EvalCache>,
+    last_used: u64,
+}
+
+/// Bounded LRU map of `(workload, config)` -> shared [`EvalCache`].
+pub struct CacheRegistry {
+    capacity: usize,
+    entries: Mutex<HashMap<(String, String), Entry>>,
+    clock: AtomicU64,
+    // counters folded in from evicted pairs so totals stay monotone
+    retired_hits: AtomicU64,
+    retired_misses: AtomicU64,
+    retired_evictions: AtomicU64,
+    evicted_pairs: AtomicU64,
+}
+
+impl CacheRegistry {
+    /// Registry bounded at `capacity` distinct pairs (min 1).
+    pub fn new(capacity: usize) -> CacheRegistry {
+        CacheRegistry {
+            capacity: capacity.max(1),
+            entries: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            retired_hits: AtomicU64::new(0),
+            retired_misses: AtomicU64::new(0),
+            retired_evictions: AtomicU64::new(0),
+            evicted_pairs: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared cache for `(workload, config)`, created on first use.
+    /// Marks the pair most-recently-used; may evict the LRU pair when
+    /// the registry is at capacity.
+    pub fn cache_for(&self, workload: &str, config: &str)
+                     -> Arc<EvalCache> {
+        let stamp = self.clock.fetch_add(1, Ordering::SeqCst) + 1;
+        let key = (workload.to_string(), config.to_string());
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.get_mut(&key) {
+            e.last_used = stamp;
+            return Arc::clone(&e.cache);
+        }
+        if entries.len() >= self.capacity {
+            let lru = entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = lru {
+                if let Some(e) = entries.remove(&k) {
+                    self.retired_hits
+                        .fetch_add(e.cache.hits(), Ordering::Relaxed);
+                    self.retired_misses
+                        .fetch_add(e.cache.misses(), Ordering::Relaxed);
+                    self.retired_evictions
+                        .fetch_add(e.cache.evictions(),
+                                   Ordering::Relaxed);
+                    self.evicted_pairs.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let cache = Arc::new(EvalCache::default());
+        entries.insert(key, Entry { cache: Arc::clone(&cache),
+                                    last_used: stamp });
+        cache
+    }
+
+    /// Distinct pairs currently registered.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Configured pair bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Service-lifetime cache hits (live pairs + retired pairs).
+    pub fn hits(&self) -> u64 {
+        self.fold(|c| c.hits())
+            + self.retired_hits.load(Ordering::Relaxed)
+    }
+
+    /// Service-lifetime unique computations.
+    pub fn misses(&self) -> u64 {
+        self.fold(|c| c.misses())
+            + self.retired_misses.load(Ordering::Relaxed)
+    }
+
+    /// Service-lifetime entries dropped by per-cache capacity churn.
+    pub fn evictions(&self) -> u64 {
+        self.fold(|c| c.evictions())
+            + self.retired_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Pairs dropped by registry-level LRU eviction.
+    pub fn evicted_pairs(&self) -> u64 {
+        self.evicted_pairs.load(Ordering::Relaxed)
+    }
+
+    /// Strategies currently memoized across all live pairs.
+    pub fn cached_strategies(&self) -> usize {
+        self.fold(|c| c.len() as u64) as usize
+    }
+
+    fn fold(&self, f: impl Fn(&EvalCache) -> u64) -> u64 {
+        self.entries
+            .lock()
+            .unwrap()
+            .values()
+            .map(|e| f(&e.cache))
+            .sum()
+    }
+
+    /// The `cache` block of the `metrics` verb.
+    pub fn stats_json(&self) -> Json {
+        obj(vec![
+            ("pairs", num(self.len() as f64)),
+            ("strategies", num(self.cached_strategies() as f64)),
+            ("hits", num(self.hits() as f64)),
+            ("misses", num(self.misses() as f64)),
+            ("evictions", num(self.evictions() as f64)),
+            ("evicted_pairs", num(self.evicted_pairs() as f64)),
+        ])
+    }
+}
+
+impl Default for CacheRegistry {
+    fn default() -> Self {
+        CacheRegistry::new(DEFAULT_REGISTRY_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_pair_same_cache_different_pair_different() {
+        let r = CacheRegistry::new(8);
+        let a1 = r.cache_for("resnet18", "large");
+        let a2 = r.cache_for("resnet18", "large");
+        let b = r.cache_for("resnet18", "small");
+        let c = r.cache_for("vgg16", "large");
+        assert!(Arc::ptr_eq(&a1, &a2), "same pair must share one cache");
+        assert!(!Arc::ptr_eq(&a1, &b));
+        assert!(!Arc::ptr_eq(&a1, &c));
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recently_used_pairs() {
+        let r = CacheRegistry::new(2);
+        let a = r.cache_for("w1", "c");
+        let _b = r.cache_for("w2", "c");
+        let _a_again = r.cache_for("w1", "c"); // refresh w1
+        let _c = r.cache_for("w3", "c"); // evicts w2 (LRU)
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.evicted_pairs(), 1);
+        // w1 survived: same Arc comes back
+        let a2 = r.cache_for("w1", "c");
+        assert!(Arc::ptr_eq(&a, &a2), "recently-used pair was evicted");
+    }
+
+    #[test]
+    fn capacity_is_respected_under_churn() {
+        let r = CacheRegistry::new(4);
+        for i in 0..50 {
+            let _ = r.cache_for(&format!("w{i}"), "large");
+            assert!(r.len() <= 4);
+        }
+        assert_eq!(r.evicted_pairs(), 46);
+    }
+
+    #[test]
+    fn stats_json_has_all_counters() {
+        let r = CacheRegistry::default();
+        let _ = r.cache_for("resnet18", "large");
+        let j = r.stats_json();
+        for key in ["pairs", "strategies", "hits", "misses", "evictions",
+                    "evicted_pairs"] {
+            assert!(j.get(key).is_ok(), "missing {key}");
+        }
+        assert_eq!(j.get_f64("pairs").unwrap(), 1.0);
+    }
+}

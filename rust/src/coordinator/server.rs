@@ -1,29 +1,61 @@
 //! TCP front-end for the coordinator: a line-delimited JSON protocol.
 //!
-//! Request (one line):
+//! Request (one line each):
 //!   {"verb": "optimize", "workload": "resnet18", "config": "large",
 //!    "method": "fadiff", "seconds": 5, "seed": 1}
+//!   {"verb": "sweep", "workloads": ["resnet18", "vgg16"],
+//!    "methods": ["ga", "random"], "seeds": [1, 2], "seconds": 5}
+//!   {"verb": "submit", "workload": "gpt3", "method": "ga",
+//!    "seconds": 120}
+//!   {"verb": "status", "job_id": 7}
+//!   {"verb": "cancel", "job_id": 7}
 //!   {"verb": "metrics"}
 //!   {"verb": "ping"}
 //!   {"verb": "shutdown"}
 //!
-//! Response (one line): {"ok": true, ...} or {"ok": false, "error": "..."}.
-//! Each connection may send any number of requests; the server handles
-//! connections on acceptor-spawned threads and forwards jobs to the
-//! coordinator queue.
+//! Response (one line): {"ok":true,...} or {"ok":false,"error":"..."},
+//! serialized with [`Json::compact`] so payload content can never break
+//! the framing. Each connection may send any number of requests; the
+//! server handles connections on acceptor-spawned threads and forwards
+//! jobs to the coordinator queue.
+//!
+//! `optimize` blocks the requesting connection until its job finishes;
+//! `submit` returns a job id immediately for long jobs (poll with
+//! `status`, stop with `cancel`). `sweep` fans a method x workload x
+//! seed grid through the queue and aggregates every outcome in one
+//! response. All jobs share the coordinator's cross-job evaluation
+//! caches and persistent pool, so repeated work is served warm.
+//!
+//! Robustness: requests are size-capped (oversized lines are answered
+//! with an error and drained), depth-capped (see
+//! [`crate::util::json::MAX_PARSE_DEPTH`]), tolerated when malformed or
+//! truncated (one-line error, connection stays usable), and reads poll
+//! the shutdown flag so `serve_on` can always join every connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::util::json::{num, obj, s as js, Json};
+use crate::util::json::{arr, num, obj, s as js, Json};
 
 use super::{Coordinator, JobRequest, JobResult, Method, ShutdownFlag};
 
-/// Parse one request line into a JobRequest (for the `optimize` verb).
+/// Requests larger than this (one line, bytes) are rejected without
+/// buffering the excess.
+pub const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Upper bound on the method x workload x seed grid of one `sweep`.
+pub const MAX_SWEEP_JOBS: usize = 256;
+
+/// How often blocked reads wake to poll the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(150);
+
+/// Parse one request line into a JobRequest (for the `optimize` /
+/// `submit` verbs; also supplies the per-job defaults of `sweep`).
 pub fn parse_request(j: &Json) -> Result<JobRequest> {
     let mut req = JobRequest::default();
     if let Ok(w) = j.get("workload") {
@@ -47,13 +79,78 @@ pub fn parse_request(j: &Json) -> Result<JobRequest> {
     Ok(req)
 }
 
-/// Serialize a JobResult for the wire.
-pub fn result_to_json(r: &JobResult) -> Json {
-    obj(vec![
-        ("ok", Json::Bool(true)),
+fn parse_str_list(j: &Json, key: &str, default: &str)
+                  -> Result<Vec<String>> {
+    match j.get(key) {
+        Err(_) => Ok(vec![default.to_string()]),
+        Ok(v) => {
+            let items = v.as_arr()?;
+            items
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect()
+        }
+    }
+}
+
+/// Expand a `sweep` request into its method x workload x seed grid.
+/// Scalar fields (`config`, `seconds`, `max_iters`, and the singular
+/// `workload`/`method`/`seed`) provide the shared defaults.
+pub fn parse_sweep(j: &Json) -> Result<Vec<JobRequest>> {
+    let base = parse_request(j)?;
+    let workloads = parse_str_list(j, "workloads", &base.workload)?;
+    let methods: Vec<Method> = match j.get("methods") {
+        Err(_) => vec![base.method],
+        Ok(v) => v
+            .as_arr()?
+            .iter()
+            .map(|x| Method::parse(x.as_str()?))
+            .collect::<Result<_>>()?,
+    };
+    let seeds: Vec<u64> = match j.get("seeds") {
+        Err(_) => vec![base.seed],
+        Ok(v) => v
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_f64()? as u64))
+            .collect::<Result<_>>()?,
+    };
+    let grid = (workloads.len() as u128)
+        .saturating_mul(methods.len() as u128)
+        .saturating_mul(seeds.len() as u128);
+    if grid == 0 {
+        bail!("empty sweep grid (workloads/methods/seeds)");
+    }
+    if grid > MAX_SWEEP_JOBS as u128 {
+        bail!("sweep grid of {grid} jobs exceeds the cap of \
+               {MAX_SWEEP_JOBS}");
+    }
+    let mut reqs = Vec::with_capacity(grid as usize);
+    for w in &workloads {
+        for m in &methods {
+            for &seed in &seeds {
+                reqs.push(JobRequest {
+                    workload: w.clone(),
+                    config: base.config.clone(),
+                    method: *m,
+                    seconds: base.seconds,
+                    max_iters: base.max_iters,
+                    seed,
+                });
+            }
+        }
+    }
+    Ok(reqs)
+}
+
+/// The result payload minus the envelope's `ok` flag (shared by
+/// `optimize` responses, `status` results, and `sweep` entries).
+fn result_fields(r: &JobResult) -> Vec<(&'static str, Json)> {
+    vec![
         ("workload", js(&r.request.workload)),
         ("config", js(&r.request.config)),
         ("method", js(r.request.method.name())),
+        ("seed", num(r.request.seed as f64)),
         ("edp", num(r.edp)),
         ("full_model_edp", num(r.full_model_edp)),
         ("energy_pj", num(r.energy)),
@@ -66,72 +163,296 @@ pub fn result_to_json(r: &JobResult) -> Json {
         ("iters", num(r.iters as f64)),
         ("evals", num(r.evals as f64)),
         ("wall_seconds", num(r.wall_seconds)),
-    ])
+    ]
+}
+
+/// Serialize a JobResult for the wire.
+pub fn result_to_json(r: &JobResult) -> Json {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    fields.extend(result_fields(r));
+    obj(fields)
 }
 
 fn error_json(msg: &str) -> Json {
     obj(vec![("ok", Json::Bool(false)), ("error", js(msg))])
 }
 
+fn get_job_id(j: &Json) -> Result<u64> {
+    let x = j.get("job_id")?.as_f64()?;
+    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0) {
+        bail!("job_id must be a non-negative integer");
+    }
+    Ok(x as u64)
+}
+
+fn run_sweep(j: &Json, coord: &Coordinator) -> Json {
+    let reqs = match parse_sweep(j) {
+        Err(e) => return error_json(&e.to_string()),
+        Ok(r) => r,
+    };
+    let jobs = reqs.len();
+    // fan the whole grid into the queue first, then collect: the grid
+    // runs at full worker parallelism, and same-(workload, config)
+    // cells share one evaluation cache
+    let handles: Vec<_> = reqs
+        .into_iter()
+        .map(|req| (req.clone(), coord.submit(req)))
+        .collect();
+    let mut results = Vec::with_capacity(jobs);
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for (req, h) in handles {
+        let entry = match h.wait() {
+            Some(Ok(r)) => {
+                completed += 1;
+                result_to_json(&r)
+            }
+            outcome => {
+                failed += 1;
+                let msg = match outcome {
+                    Some(Err(e)) => e,
+                    _ => "worker dropped the job".to_string(),
+                };
+                obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("workload", js(&req.workload)),
+                    ("config", js(&req.config)),
+                    ("method", js(req.method.name())),
+                    ("seed", num(req.seed as f64)),
+                    ("error", js(&msg)),
+                ])
+            }
+        };
+        results.push(entry);
+    }
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("jobs", num(jobs as f64)),
+        ("completed", num(completed as f64)),
+        ("failed", num(failed as f64)),
+        ("results", arr(results)),
+    ])
+}
+
+/// Compute the one-line response for one request line. Total: every
+/// input — malformed, unknown, oversized grids, failing jobs — maps to
+/// a JSON answer, never a dropped connection or a panic.
+fn respond(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
+           -> Json {
+    let j = match Json::parse(line) {
+        Err(e) => return error_json(&format!("bad json: {e}")),
+        Ok(j) => j,
+    };
+    if j.as_obj().is_err() {
+        return error_json("request must be a JSON object");
+    }
+    let verb = match j.get("verb") {
+        Err(_) => "optimize".to_string(),
+        Ok(v) => match v.as_str() {
+            Ok(s) => s.to_string(),
+            Err(_) => return error_json("verb must be a string"),
+        },
+    };
+    match verb.as_str() {
+        "ping" => obj(vec![("ok", Json::Bool(true)),
+                           ("pong", Json::Bool(true))]),
+        "metrics" => {
+            let mut m = coord.metrics_json();
+            if let Json::Obj(map) = &mut m {
+                map.insert("ok".into(), Json::Bool(true));
+            }
+            m
+        }
+        "shutdown" => {
+            shutdown.0.store(true, Ordering::SeqCst);
+            obj(vec![("ok", Json::Bool(true)),
+                     ("shutting_down", Json::Bool(true))])
+        }
+        "optimize" => match parse_request(&j) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(req) => match coord.run(req) {
+                Ok(r) => result_to_json(&r),
+                Err(e) => error_json(&e.to_string()),
+            },
+        },
+        "submit" => match parse_request(&j)
+            .and_then(|req| coord.submit_tracked(req))
+        {
+            Err(e) => error_json(&e.to_string()),
+            Ok(id) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("job_id", num(id as f64)),
+                ("status", js("queued")),
+            ]),
+        },
+        "status" => match get_job_id(&j) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(id) => match coord.job_status(id) {
+                None => error_json(&format!("unknown job id {id}")),
+                Some((status, result)) => {
+                    let mut fields = vec![
+                        ("ok", Json::Bool(true)),
+                        ("job_id", num(id as f64)),
+                        ("status", js(status.name())),
+                    ];
+                    match result {
+                        Some(Ok(r)) => fields
+                            .push(("result", obj(result_fields(&r)))),
+                        Some(Err(e)) => fields.push(("error", js(&e))),
+                        None => {}
+                    }
+                    obj(fields)
+                }
+            },
+        },
+        "cancel" => match get_job_id(&j) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(id) => match coord.cancel(id) {
+                None => error_json(&format!("unknown job id {id}")),
+                Some(status) => obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("job_id", num(id as f64)),
+                    ("status", js(status.name())),
+                ]),
+            },
+        },
+        "sweep" => run_sweep(&j, coord),
+        other => error_json(&format!("unknown verb {other:?}")),
+    }
+}
+
+fn write_response(stream: &mut TcpStream, j: &Json) -> Result<()> {
+    let mut text = j.compact();
+    text.push('\n');
+    stream.write_all(text.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn is_retry(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// `read_until(b'\n')` with a hard cap on retained bytes: at most
+/// `MAX_REQUEST_BYTES + 1` bytes stay in `buf`; the excess of an
+/// oversized line is consumed and dropped as it streams in, so a fast
+/// client cannot balloon server memory by never sending a newline. A
+/// newline discovered in the dropped region is still appended, so
+/// callers always see oversized lines terminate. Mirrors `read_until`'s
+/// contract otherwise: `Ok(0)` = EOF with nothing consumed, trailing
+/// bytes without `\n` = EOF mid-line, `Err(WouldBlock/TimedOut)` = no
+/// data before the read timeout (bytes read so far remain in `buf`).
+fn read_line_capped<R: BufRead>(reader: &mut R, buf: &mut Vec<u8>)
+                                -> std::io::Result<usize> {
+    let mut total = 0usize;
+    loop {
+        let (consumed, done) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                return Ok(total); // EOF
+            }
+            let newline = available.iter().position(|&b| b == b'\n');
+            let take = newline.map_or(available.len(), |i| i + 1);
+            let room =
+                (MAX_REQUEST_BYTES + 1).saturating_sub(buf.len());
+            let keep = take.min(room);
+            buf.extend_from_slice(&available[..keep]);
+            if keep < take && newline.is_some() {
+                buf.push(b'\n'); // line ended inside the dropped region
+            }
+            (take, newline.is_some())
+        };
+        reader.consume(consumed);
+        total += consumed;
+        if done {
+            return Ok(total);
+        }
+    }
+}
+
 /// Handle one client connection.
 fn handle(stream: TcpStream, coord: &Coordinator, shutdown: &ShutdownFlag)
           -> Result<()> {
     let peer = stream.peer_addr()?;
+    // short read timeout: blocked reads wake to poll the shutdown flag,
+    // so serve_on can join this thread even under idle clients
+    stream.set_read_timeout(Some(READ_POLL))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
-    let mut line = String::new();
+    // raw bytes, not String: invalid UTF-8 must degrade to a JSON error
+    // (via lossy decode), never desynchronize or kill the connection
+    let mut buf: Vec<u8> = Vec::new();
+    // true while draining the tail of an already-answered oversized line
+    let mut discarding = false;
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        if shutdown.0.load(Ordering::SeqCst) {
+            return Ok(());
         }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let response = match Json::parse(trimmed) {
-            Err(e) => error_json(&format!("bad json: {e}")),
-            Ok(j) => {
-                let verb = j
-                    .get("verb")
-                    .and_then(|v| Ok(v.as_str()?.to_string()))
-                    .unwrap_or_else(|_| "optimize".to_string());
-                match verb.as_str() {
-                    "ping" => obj(vec![("ok", Json::Bool(true)),
-                                       ("pong", Json::Bool(true))]),
-                    "metrics" => {
-                        let mut m = coord.metrics.to_json();
-                        if let Json::Obj(map) = &mut m {
-                            map.insert("ok".into(), Json::Bool(true));
-                        }
-                        m
-                    }
-                    "shutdown" => {
-                        shutdown.0.store(true, Ordering::SeqCst);
-                        obj(vec![("ok", Json::Bool(true)),
-                                 ("shutting_down", Json::Bool(true))])
-                    }
-                    "optimize" => match parse_request(&j) {
-                        Err(e) => error_json(&e.to_string()),
-                        Ok(req) => match coord.run(req) {
-                            Ok(r) => result_to_json(&r),
-                            Err(e) => error_json(&e.to_string()),
-                        },
-                    },
-                    other => error_json(&format!("unknown verb {other:?}")),
+        match read_line_capped(&mut reader, &mut buf) {
+            Err(e) if is_retry(e.kind()) => {
+                // partial line so far; bound the buffer while waiting
+                if !discarding && buf.len() > MAX_REQUEST_BYTES {
+                    write_response(
+                        &mut stream,
+                        &error_json(&format!(
+                            "request line exceeds {MAX_REQUEST_BYTES} \
+                             bytes"
+                        )),
+                    )?;
+                    discarding = true;
                 }
+                if discarding {
+                    buf.clear();
+                }
+                continue;
             }
-        };
-        let mut text = String::new();
-        // compact single-line output: strip pretty newlines
-        for ch in response.pretty().chars() {
-            if ch != '\n' {
-                text.push(ch);
-            }
+            Err(e) => return Err(e.into()),
+            // EOF: done, unless a stalled partial line is still pending
+            // — that truncated tail deserves its one-line answer below
+            Ok(0) if buf.is_empty() || discarding => return Ok(()),
+            Ok(_) => {}
         }
-        text.push('\n');
-        stream.write_all(text.as_bytes())?;
-        stream.flush()?;
+        let complete = buf.last() == Some(&b'\n');
+        if discarding {
+            if complete {
+                // oversized line finally ended; resume normal service
+                discarding = false;
+                buf.clear();
+                continue;
+            }
+            // EOF while draining
+            return Ok(());
+        }
+        if !complete && buf.is_empty() {
+            return Ok(());
+        }
+        let response = if buf.len() > MAX_REQUEST_BYTES {
+            error_json(&format!(
+                "request line exceeds {MAX_REQUEST_BYTES} bytes"
+            ))
+        } else {
+            let line = String::from_utf8_lossy(&buf);
+            let trimmed = line.trim().to_string();
+            if trimmed.is_empty() {
+                buf.clear();
+                if complete {
+                    continue;
+                }
+                return Ok(());
+            }
+            respond(&trimmed, coord, shutdown)
+        };
+        buf.clear();
+        write_response(&mut stream, &response)?;
+        if !complete {
+            // half-closed client: the truncated tail was answered
+            return Ok(());
+        }
         if shutdown.0.load(Ordering::SeqCst) {
             log_line(&format!("shutdown requested by {peer}"));
             return Ok(());
@@ -181,6 +502,8 @@ pub fn serve_on(listener: TcpListener, coord: Coordinator) -> Result<()> {
         }
         conns.retain(|c| !c.is_finished());
     }
+    // every handler polls the shutdown flag at its read timeout, so
+    // these joins complete even when clients hold connections open
     for c in conns {
         let _ = c.join();
     }
@@ -208,5 +531,75 @@ mod tests {
     fn parse_request_rejects_bad_method() {
         let j = Json::parse(r#"{"method": "quantum"}"#).unwrap();
         assert!(parse_request(&j).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_wrong_types() {
+        for body in [
+            r#"{"workload": 7}"#,
+            r#"{"seconds": "fast"}"#,
+            r#"{"max_iters": "many"}"#,
+            r#"{"method": [1]}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert!(parse_request(&j).is_err(), "{body}");
+        }
+    }
+
+    #[test]
+    fn parse_sweep_expands_full_grid() {
+        let j = Json::parse(
+            r#"{"verb": "sweep", "workloads": ["resnet18", "vgg16"],
+                "methods": ["ga", "random"], "seeds": [1, 2, 3],
+                "config": "small", "seconds": 0.5, "max_iters": 10}"#)
+            .unwrap();
+        let reqs = parse_sweep(&j).unwrap();
+        assert_eq!(reqs.len(), 2 * 2 * 3);
+        assert!(reqs.iter().all(|r| r.config == "small"));
+        assert!(reqs.iter().all(|r| r.max_iters == 10));
+        let firsts: Vec<_> = reqs
+            .iter()
+            .map(|r| (r.workload.as_str(), r.method, r.seed))
+            .collect();
+        assert!(firsts.contains(&(("vgg16"), Method::Random, 3)));
+    }
+
+    #[test]
+    fn parse_sweep_singular_defaults() {
+        let j = Json::parse(
+            r#"{"verb": "sweep", "workload": "mobilenet",
+                "method": "random"}"#)
+            .unwrap();
+        let reqs = parse_sweep(&j).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].workload, "mobilenet");
+        assert_eq!(reqs[0].method, Method::Random);
+    }
+
+    #[test]
+    fn parse_sweep_caps_grid_size() {
+        let seeds: Vec<String> =
+            (0..300).map(|i| i.to_string()).collect();
+        let j = Json::parse(&format!(
+            r#"{{"verb": "sweep", "seeds": [{}]}}"#,
+            seeds.join(",")
+        ))
+        .unwrap();
+        let err = parse_sweep(&j).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn parse_sweep_rejects_empty_and_bad_lists() {
+        let empty = Json::parse(
+            r#"{"verb": "sweep", "workloads": []}"#).unwrap();
+        assert!(parse_sweep(&empty).is_err());
+        let bad = Json::parse(
+            r#"{"verb": "sweep", "methods": ["ga", "quantum"]}"#)
+            .unwrap();
+        assert!(parse_sweep(&bad).is_err());
+        let wrong_type = Json::parse(
+            r#"{"verb": "sweep", "workloads": "resnet18"}"#).unwrap();
+        assert!(parse_sweep(&wrong_type).is_err());
     }
 }

@@ -36,6 +36,17 @@
 //! [`util::threadpool`] with exact keyed memoization of
 //! `(strategy) -> (energy, latency, EDP)` per `(workload, hardware)`
 //! pair, bit-for-bit identical to [`costmodel::evaluate`].
+//!
+//! # Serving layer
+//!
+//! `fadiff serve` runs the [`coordinator`] as a multi-tenant TCP
+//! service: a line-delimited JSON protocol (`optimize`, `sweep`,
+//! `submit`/`status`/`cancel`, `metrics`, `ping`, `shutdown`) over a
+//! worker pool whose jobs share per-`(workload, config)` evaluation
+//! caches ([`coordinator::CacheRegistry`]) and one persistent scoped
+//! thread pool — repeated or concurrent jobs on the same pair are
+//! served warm, and sweeps fan whole method x workload x seed grids
+//! through a single warm process.
 
 pub mod config;
 pub mod coordinator;

@@ -34,6 +34,9 @@ USAGE: fadiff <subcommand> [flags]
   validate  --samples 60 --seed 11               (paper Sec 4.2)
   selftest                                       (compile artifacts)
   serve     --addr 127.0.0.1:7341 --workers 2    (TCP coordinator)
+            line-delimited JSON verbs: optimize | sweep | submit |
+            status | cancel | metrics | ping | shutdown; jobs share
+            per-(workload, config) eval caches + a persistent pool
 ";
 
 fn main() {

@@ -22,7 +22,7 @@ use crate::workload::Workload;
 
 use super::encoding::{dim, express};
 use super::gp::Gp;
-use super::{Budget, Incumbent, SearchResult};
+use super::{Budget, EvalCtx, Incumbent, SearchResult};
 
 /// BO hyper-parameters.
 #[derive(Clone, Debug)]
@@ -63,9 +63,17 @@ fn log_y(edp: f64) -> f64 {
 /// Run BO under a budget.
 pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
                 budget: Budget) -> Result<SearchResult> {
+    optimize_ctx(w, hw, cfg, budget, &EvalCtx::default())
+}
+
+/// Run BO with a serving-layer context (shared cache / persistent pool
+/// / cancellation). Identical results for an empty context.
+pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
+                    budget: Budget, ctx: &EvalCtx)
+                    -> Result<SearchResult> {
     let d = dim(w);
     let mut rng = Rng::new(cfg.seed);
-    let mut inc = Incumbent::new(w, hw);
+    let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
 
     let mut xs: Vec<Vec<f64>> = Vec::new();
@@ -79,7 +87,7 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
         .collect();
     let scored = inc.engine.eval_population(&design, |x| express(x, w, hw));
     for (x, (s, e)) in design.into_iter().zip(scored) {
-        if inc.elapsed() > budget.seconds {
+        if inc.cancelled() || inc.elapsed() > budget.seconds {
             break;
         }
         iter += 1;
@@ -88,7 +96,7 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
         ys.push(log_y(edp));
     }
 
-    while inc.elapsed() < budget.seconds && iter < budget.max_iters {
+    while !inc.stopped(&budget) && iter < budget.max_iters {
         iter += 1;
         // bound the O(N^3) refit
         if xs.len() > cfg.max_observations {

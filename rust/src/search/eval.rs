@@ -6,33 +6,33 @@
 //! Eqs. 4-19). [`EvalEngine`] makes that hot path fast two ways:
 //!
 //! * **Parallel batch scoring** — whole candidate populations decode and
-//!   evaluate concurrently on the crate's scoped worker substrate
-//!   ([`crate::util::threadpool::par_map`]), one logical chunk per
-//!   candidate with work-stealing across `threads` workers.
+//!   evaluate concurrently, either on per-call scoped threads
+//!   ([`crate::util::threadpool::par_map`], the standalone default) or
+//!   on a persistent [`crate::util::threadpool::ThreadPool`] via its
+//!   scoped-submit API ([`EvalEngine::with_pool`], the serving path —
+//!   no spawn/join per batch; `perf_hotpath` reports the ratio).
 //! * **Keyed memoization** — a bounded `(strategy) -> (energy, latency,
-//!   EDP)` cache per `(workload, hardware)` pair. GA elitism, BO
-//!   acquisition re-proposals and duplicate random decodes stop paying
-//!   for re-evaluation; batch-internal duplicates are computed once.
+//!   EDP)` cache per `(workload, hardware)` pair, held in a shareable
+//!   [`EvalCache`]. GA elitism, BO acquisition re-proposals and
+//!   duplicate random decodes stop paying for re-evaluation;
+//!   batch-internal duplicates are computed once. The coordinator hands
+//!   engines a shared cache per `(workload, config)`
+//!   ([`crate::coordinator::CacheRegistry`]), so repeated and
+//!   concurrent jobs on the same pair reuse each other's work across
+//!   job and connection boundaries.
 //!
 //! Results are bit-for-bit identical to calling
 //! [`crate::costmodel::evaluate`] directly: the engine runs exactly that
 //! code per candidate, it only changes *where* and *how often* it runs.
-//!
-//! Batches currently run on scoped threads (`par_map`) spawned per
-//! call; for small populations the spawn/join overhead is measurable
-//! against the ~ms of decode+eval work. Moving to a persistent
-//! [`crate::util::threadpool::ThreadPool`] is a known follow-up once
-//! the pool grows a scoped-submit API — `perf_hotpath` tracks whether
-//! it matters.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::config::HwConfig;
 use crate::costmodel;
 use crate::mapping::{Strategy, NSLOTS};
-use crate::util::threadpool::par_map;
+use crate::util::threadpool::{par_map, ThreadPool};
 use crate::workload::{Workload, NDIMS};
 
 /// Default bound on cached entries; the cache is cleared wholesale when
@@ -87,15 +87,95 @@ impl StrategyKey {
     }
 }
 
+/// The memoization store of an [`EvalEngine`]: a bounded strategy ->
+/// [`Eval`] map plus lock-free hit/miss/eviction counters.
+///
+/// An `EvalCache` is valid for exactly one `(workload, hardware)` pair —
+/// the key encodes tiling factors and fusion bits only. Wrap it in an
+/// [`Arc`] and hand it to several engines via
+/// [`EvalEngine::with_shared_cache`] to share memoized results across
+/// searches/jobs, but **only** among engines built for that same pair
+/// (the coordinator's `CacheRegistry` enforces this by construction).
+pub struct EvalCache {
+    capacity: usize,
+    map: Mutex<HashMap<StrategyKey, Eval>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl EvalCache {
+    /// An empty cache bounded at `capacity` entries (min 1). When full
+    /// it is cleared wholesale (simple, predictable memory ceiling);
+    /// each entry dropped that way counts as one eviction.
+    pub fn new(capacity: usize) -> EvalCache {
+        EvalCache {
+            capacity: capacity.max(1),
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Cache hits so far (across every sharing engine).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Unique cost-model computations so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries dropped by capacity-triggered wholesale clears.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently cached (always <= the capacity bound).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Configured entry bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drop all entries (counters are kept; not counted as evictions).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+
+    fn insert_bounded(&self, map: &mut HashMap<StrategyKey, Eval>,
+                      key: StrategyKey, e: Eval) {
+        if map.len() >= self.capacity {
+            self.evictions
+                .fetch_add(map.len() as u64, Ordering::Relaxed);
+            map.clear();
+        }
+        map.insert(key, e);
+    }
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new(DEFAULT_CACHE_CAPACITY)
+    }
+}
+
 /// Parallel, memoizing evaluator for one `(workload, hardware)` pair.
 pub struct EvalEngine<'a> {
     w: &'a Workload,
     hw: &'a HwConfig,
     threads: usize,
-    cache_capacity: usize,
-    cache: Mutex<HashMap<StrategyKey, Eval>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    cache: Arc<EvalCache>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl<'a> EvalEngine<'a> {
@@ -117,17 +197,40 @@ impl<'a> EvalEngine<'a> {
             w,
             hw,
             threads: threads.max(1),
-            cache_capacity: DEFAULT_CACHE_CAPACITY,
-            cache: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            cache: Arc::new(EvalCache::default()),
+            pool: None,
         }
     }
 
-    /// Override the cache bound (entries, not bytes).
+    /// Override the cache bound (entries, not bytes) by swapping in a
+    /// fresh private cache of that capacity.
     pub fn with_cache_capacity(mut self, capacity: usize) -> EvalEngine<'a> {
-        self.cache_capacity = capacity.max(1);
+        self.cache = Arc::new(EvalCache::new(capacity));
         self
+    }
+
+    /// Memoize through `cache` instead of a private one. The cache must
+    /// belong to this engine's exact `(workload, hardware)` pair — see
+    /// [`EvalCache`]. Sharing one cache across concurrent engines is
+    /// safe (internally locked) and is how the coordinator lets
+    /// repeated/concurrent jobs reuse each other's evaluations.
+    pub fn with_shared_cache(mut self, cache: Arc<EvalCache>)
+                             -> EvalEngine<'a> {
+        self.cache = cache;
+        self
+    }
+
+    /// Run batch computations on a persistent pool (scoped submit)
+    /// instead of spawning scoped threads per call. Results are
+    /// identical; only spawn/join overhead disappears.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> EvalEngine<'a> {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The memoization store (shared or private).
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
     }
 
     pub fn workload(&self) -> &'a Workload {
@@ -143,23 +246,24 @@ impl<'a> EvalEngine<'a> {
     }
 
     /// Cache hits so far (includes batch-internal duplicate folding).
+    /// With a shared cache this counts across every sharing engine.
     pub fn cache_hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.cache.hits()
     }
 
     /// Unique cost-model computations so far.
     pub fn cache_misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.cache.misses()
     }
 
     /// Entries currently cached.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.len()
     }
 
     /// Drop all cached results (hit/miss counters are kept).
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        self.cache.clear();
     }
 
     /// The raw per-candidate computation: feasibility check + closed-form
@@ -183,25 +287,30 @@ impl<'a> EvalEngine<'a> {
         Eval { energy: r.energy, latency: r.latency, edp: r.edp, feasible }
     }
 
-    fn insert_bounded(&self, cache: &mut HashMap<StrategyKey, Eval>,
-                      key: StrategyKey, e: Eval) {
-        if cache.len() >= self.cache_capacity {
-            cache.clear();
+    /// Run the heavy per-index closure over `n` indices: persistent
+    /// pool when configured, per-call scoped threads otherwise.
+    fn run_indexed<R, F>(&self, idx: Vec<usize>, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        match &self.pool {
+            Some(pool) => pool.scoped_map(idx, f),
+            None => par_map(idx, self.threads, f),
         }
-        cache.insert(key, e);
     }
 
     /// Score one strategy (cache-aware).
     pub fn eval(&self, s: &Strategy) -> Eval {
         let key = StrategyKey::of(s);
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(e) = self.cache.map.lock().unwrap().get(&key) {
+            self.cache.hits.fetch_add(1, Ordering::Relaxed);
             return *e;
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
         let e = self.compute(s);
-        let mut cache = self.cache.lock().unwrap();
-        self.insert_bounded(&mut cache, key, e);
+        let mut map = self.cache.map.lock().unwrap();
+        self.cache.insert_bounded(&mut map, key, e);
         e
     }
 
@@ -216,17 +325,17 @@ impl<'a> EvalEngine<'a> {
         let mut keys: Vec<StrategyKey> = Vec::new();
         let mut alias: Vec<(usize, usize)> = Vec::new();
         {
-            let cache = self.cache.lock().unwrap();
+            let map = self.cache.map.lock().unwrap();
             let mut seen: HashMap<StrategyKey, usize> = HashMap::new();
             for (i, s) in pop.iter().enumerate() {
                 let key = StrategyKey::of(s);
-                if let Some(e) = cache.get(&key) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                if let Some(e) = map.get(&key) {
+                    self.cache.hits.fetch_add(1, Ordering::Relaxed);
                     out[i] = Some(*e);
                     continue;
                 }
                 if let Some(&pos) = seen.get(&key) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.cache.hits.fetch_add(1, Ordering::Relaxed);
                     alias.push((i, pos));
                     continue;
                 }
@@ -235,15 +344,17 @@ impl<'a> EvalEngine<'a> {
                 keys.push(key);
             }
         }
-        self.misses.fetch_add(todo.len() as u64, Ordering::Relaxed);
+        self.cache
+            .misses
+            .fetch_add(todo.len() as u64, Ordering::Relaxed);
         let computed: Vec<Eval> =
-            par_map(todo.clone(), self.threads, |i| self.compute(&pop[i]));
+            self.run_indexed(todo.clone(), |i| self.compute(&pop[i]));
         {
-            let mut cache = self.cache.lock().unwrap();
+            let mut map = self.cache.map.lock().unwrap();
             for (pos, &i) in todo.iter().enumerate() {
                 out[i] = Some(computed[pos]);
-                self.insert_bounded(&mut cache, keys[pos].clone(),
-                                    computed[pos]);
+                self.cache.insert_bounded(&mut map, keys[pos].clone(),
+                                          computed[pos]);
             }
         }
         for (i, pos) in alias {
@@ -264,7 +375,7 @@ impl<'a> EvalEngine<'a> {
     {
         let idx: Vec<usize> = (0..genomes.len()).collect();
         let strategies: Vec<Strategy> =
-            par_map(idx, self.threads, |i| decode(&genomes[i]));
+            self.run_indexed(idx, |i| decode(&genomes[i]));
         let evals = self.eval_batch(&strategies);
         strategies.into_iter().zip(evals).collect()
     }
@@ -363,6 +474,40 @@ mod tests {
             engine.eval(&s);
         }
         assert!(engine.cache_len() <= 4);
+        assert!(engine.cache().evictions() > 0,
+                "capacity churn must be visible in the counter");
+    }
+
+    #[test]
+    fn shared_cache_carries_results_between_engines() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let cache = std::sync::Arc::new(EvalCache::default());
+        let pop = random_pop(&w, &hw, 6, 33);
+        let first = EvalEngine::new(&w, &hw)
+            .with_shared_cache(std::sync::Arc::clone(&cache));
+        let a = first.eval_batch(&pop);
+        let misses_after_first = cache.misses();
+        // a brand-new engine on the same cache sees only hits
+        let second = EvalEngine::new(&w, &hw)
+            .with_shared_cache(std::sync::Arc::clone(&cache));
+        let b = second.eval_batch(&pop);
+        assert_eq!(a, b);
+        assert_eq!(cache.misses(), misses_after_first,
+                   "second engine must not recompute");
+        assert!(cache.hits() >= pop.len() as u64);
+    }
+
+    #[test]
+    fn pooled_engine_matches_scoped_engine() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 24, 90);
+        let scoped = EvalEngine::with_threads(&w, &hw, 4);
+        let pool = std::sync::Arc::new(
+            crate::util::threadpool::ThreadPool::new(4));
+        let pooled = EvalEngine::new(&w, &hw).with_pool(pool);
+        assert_eq!(scoped.eval_batch(&pop), pooled.eval_batch(&pop));
     }
 
     #[test]

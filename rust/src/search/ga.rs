@@ -21,7 +21,7 @@ use crate::util::rng::Rng;
 use crate::workload::{Workload, NDIMS};
 
 use super::encoding::{dim, express_naive};
-use super::{Budget, Incumbent, SearchResult};
+use super::{Budget, EvalCtx, Incumbent, SearchResult};
 
 /// GA hyper-parameters.
 #[derive(Clone, Debug)]
@@ -53,10 +53,18 @@ impl Default for GaConfig {
 /// Run the GA under a budget.
 pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
                 budget: Budget) -> Result<SearchResult> {
+    optimize_ctx(w, hw, cfg, budget, &EvalCtx::default())
+}
+
+/// Run the GA with a serving-layer context (shared cache / persistent
+/// pool / cancellation). Identical results for an empty context.
+pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
+                    budget: Budget, ctx: &EvalCtx)
+                    -> Result<SearchResult> {
     let d = dim(w);
     let genes_per_layer = NDIMS * 4;
     let mut rng = Rng::new(cfg.seed);
-    let mut inc = Incumbent::new(w, hw);
+    let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
 
     let mut pop: Vec<Vec<f64>> = (0..cfg.population)
@@ -65,7 +73,7 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
     let mut fitness = vec![f64::INFINITY; pop.len()];
     let mut gen = 0usize;
 
-    while gen < budget.max_iters && inc.elapsed() < budget.seconds {
+    while gen < budget.max_iters && !inc.stopped(&budget) {
         gen += 1;
         // decode + score the whole generation in parallel (cache folds
         // elites and crossover duplicates)
@@ -75,7 +83,7 @@ pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
         for (i, (s, e)) in scored.iter().enumerate() {
             fitness[i] = inc.offer_eval(s, *e, gen);
         }
-        if inc.elapsed() >= budget.seconds {
+        if inc.stopped(&budget) {
             break;
         }
         // next generation

@@ -15,6 +15,11 @@
 //! model. The [`Incumbent`] owns one engine per search, so every
 //! `offer()` is cache-aware and population-based searches batch through
 //! [`eval::EvalEngine::eval_batch`] / `eval_population`.
+//!
+//! Each native method also exposes an `optimize_ctx` entry point taking
+//! an [`EvalCtx`] — the seam the coordinator uses to inject a shared
+//! cross-job [`EvalCache`], a persistent worker pool, and a cooperative
+//! cancellation flag without changing standalone behavior.
 
 pub mod bo;
 pub mod encoding;
@@ -24,13 +29,45 @@ pub mod gp;
 pub mod gradient;
 pub mod random;
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::HwConfig;
 use crate::mapping::Strategy;
+use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
 
-pub use eval::{Eval, EvalEngine};
+pub use eval::{Eval, EvalCache, EvalEngine};
+
+/// Cross-job evaluation context handed to the `optimize_ctx` entry
+/// points by a serving layer: an optional shared memoization cache
+/// (must match the job's `(workload, hardware)` pair — see
+/// [`EvalCache`]), an optional persistent worker pool for batch
+/// scoring, and an optional cooperative cancellation flag polled by the
+/// search loops. `EvalCtx::default()` reproduces the standalone
+/// behavior exactly (private cache, scoped threads, no cancel).
+#[derive(Clone, Default)]
+pub struct EvalCtx {
+    pub cache: Option<Arc<EvalCache>>,
+    pub pool: Option<Arc<ThreadPool>>,
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl EvalCtx {
+    /// Build the engine this context prescribes for `(w, hw)`.
+    pub fn engine<'a>(&self, w: &'a Workload, hw: &'a HwConfig)
+                      -> EvalEngine<'a> {
+        let mut engine = EvalEngine::new(w, hw);
+        if let Some(cache) = &self.cache {
+            engine = engine.with_shared_cache(Arc::clone(cache));
+        }
+        if let Some(pool) = &self.pool {
+            engine = engine.with_pool(Arc::clone(pool));
+        }
+        engine
+    }
+}
 
 /// Common search budget: wall-clock (the paper compares equal time) and
 /// an iteration cap as a secondary bound.
@@ -85,6 +122,7 @@ impl SearchResult {
 pub struct Incumbent<'a> {
     pub engine: EvalEngine<'a>,
     start: Instant,
+    cancel: Option<Arc<AtomicBool>>,
     pub best: Option<(Strategy, f64, f64, f64)>,
     pub trace: Vec<TracePoint>,
     pub evals: usize,
@@ -97,12 +135,35 @@ impl<'a> Incumbent<'a> {
 
     /// Wrap an explicitly-configured engine (thread count, cache size).
     pub fn with_engine(engine: EvalEngine<'a>) -> Incumbent<'a> {
-        Incumbent { engine, start: Instant::now(), best: None,
-                    trace: Vec::new(), evals: 0 }
+        Incumbent { engine, start: Instant::now(), cancel: None,
+                    best: None, trace: Vec::new(), evals: 0 }
+    }
+
+    /// Incumbent + engine as prescribed by a serving-layer [`EvalCtx`]
+    /// (shared cache, persistent pool, cancellation flag).
+    pub fn with_ctx(w: &'a Workload, hw: &'a HwConfig, ctx: &EvalCtx)
+                    -> Incumbent<'a> {
+        let mut inc = Incumbent::with_engine(ctx.engine(w, hw));
+        inc.cancel = ctx.cancel.clone();
+        inc
     }
 
     pub fn elapsed(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
+    }
+
+    /// Whether a serving layer has requested this search stop early.
+    pub fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::SeqCst))
+    }
+
+    /// The loop condition every native search polls between batches:
+    /// budget exhausted or cancellation requested. On `true` the search
+    /// finishes immediately with its best-so-far.
+    pub fn stopped(&self, budget: &Budget) -> bool {
+        self.cancelled() || self.elapsed() >= budget.seconds
     }
 
     /// Evaluate through the engine; record if feasible and better.

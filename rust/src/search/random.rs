@@ -11,7 +11,7 @@ use crate::mapping::decode::{decode, Relaxed};
 use crate::util::rng::Rng;
 use crate::workload::{Workload, NDIMS};
 
-use super::{Budget, Incumbent, SearchResult};
+use super::{Budget, EvalCtx, Incumbent, SearchResult};
 
 /// Candidates decoded + evaluated per engine batch.
 const BATCH: usize = 64;
@@ -35,11 +35,19 @@ fn sample(rng: &mut Rng, w: &Workload) -> Relaxed {
 /// Sample uniformly in the relaxed space, decode, keep the best.
 pub fn optimize(w: &Workload, hw: &HwConfig, seed: u64, budget: Budget)
                 -> Result<SearchResult> {
+    optimize_ctx(w, hw, seed, budget, &EvalCtx::default())
+}
+
+/// Random search with a serving-layer context (shared cache /
+/// persistent pool / cancellation).
+pub fn optimize_ctx(w: &Workload, hw: &HwConfig, seed: u64,
+                    budget: Budget, ctx: &EvalCtx)
+                    -> Result<SearchResult> {
     let mut rng = Rng::new(seed);
-    let mut inc = Incumbent::new(w, hw);
+    let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
     let mut iter = 0usize;
-    while inc.elapsed() < budget.seconds && iter < budget.max_iters {
+    while !inc.stopped(&budget) && iter < budget.max_iters {
         let b = BATCH.min(budget.max_iters - iter).max(1);
         let samples: Vec<Relaxed> =
             (0..b).map(|_| sample(&mut rng, w)).collect();
@@ -50,7 +58,7 @@ pub fn optimize(w: &Workload, hw: &HwConfig, seed: u64, budget: Budget)
             // keep the old per-candidate budget granularity: never
             // record results past the deadline (the batch evaluation
             // itself may overrun by at most one batch)
-            if inc.elapsed() >= budget.seconds {
+            if inc.stopped(&budget) {
                 break;
             }
             iter += 1;

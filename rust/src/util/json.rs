@@ -23,8 +23,13 @@ pub enum Json {
 
 impl Json {
     /// Parse a JSON document from text.
+    ///
+    /// Nesting is bounded at [`MAX_PARSE_DEPTH`] so hostile inputs (a
+    /// megabyte of `[`) fail with an error instead of overflowing the
+    /// recursive parser's stack — the TCP server feeds untrusted lines
+    /// straight into this function.
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -103,6 +108,50 @@ impl Json {
         s
     }
 
+    /// Serialize onto exactly one line (no literal newlines anywhere —
+    /// control characters inside strings are escaped). This is the wire
+    /// encoding of the coordinator's line-delimited protocol, where one
+    /// response must be one `\n`-terminated line regardless of payload
+    /// content.
+    pub fn compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                out.push_str(if *b { "true" } else { "false" })
+            }
+            Json::Num(x) => write_num(out, *x),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         let pad = "  ".repeat(indent + 1);
         let pad0 = "  ".repeat(indent);
@@ -111,13 +160,7 @@ impl Json {
             Json::Bool(b) => {
                 out.push_str(if *b { "true" } else { "false" })
             }
-            Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
-                    let _ = write!(out, "{}", *x as i64);
-                } else {
-                    let _ = write!(out, "{x}");
-                }
-            }
+            Json::Num(x) => write_num(out, *x),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) if v.is_empty() => out.push_str("[]"),
             Json::Arr(v) => {
@@ -170,6 +213,14 @@ pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }
 
+fn write_num(out: &mut String, x: f64) {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -188,9 +239,15 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting accepted by [`Json::parse`]. Generous for
+/// any legitimate payload (our deepest documents nest ~6 levels) while
+/// keeping worst-case parser recursion far below stack limits.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -217,6 +274,14 @@ impl<'a> Parser<'a> {
         Ok(())
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            bail!("nesting deeper than {MAX_PARSE_DEPTH} levels");
+        }
+        Ok(())
+    }
+
     fn value(&mut self) -> Result<Json> {
         match self.peek()? {
             b'{' => self.object(),
@@ -239,11 +304,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek()? == b'}' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -259,6 +326,7 @@ impl<'a> Parser<'a> {
                 b',' => self.i += 1,
                 b'}' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 c => bail!("expected , or }} got {:?}", c as char),
@@ -267,11 +335,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.ws();
         if self.peek()? == b']' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -282,6 +352,7 @@ impl<'a> Parser<'a> {
                 b',' => self.i += 1,
                 b']' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 c => bail!("expected , or ] got {:?}", c as char),
@@ -310,6 +381,9 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
                             let hex = std::str::from_utf8(
                                 &self.b[self.i..self.i + 4],
                             )?;
@@ -330,6 +404,9 @@ impl<'a> Parser<'a> {
                     } else {
                         let start = self.i - 1;
                         let len = utf8_len(c);
+                        if start + len > self.b.len() {
+                            bail!("truncated UTF-8 sequence");
+                        }
                         let chunk = std::str::from_utf8(
                             &self.b[start..start + len],
                         )?;
@@ -404,6 +481,78 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn compact_is_one_line_and_round_trips() {
+        // the exact bug class the wire format must survive: payload
+        // strings containing newlines, quotes, tabs, and unicode
+        let j = obj(vec![
+            ("msg", s("line one\nline two\r\n\t\"quoted\" \\ end")),
+            ("uni", s("é café – τ ✓")),
+            ("nested", obj(vec![("arr", arr(vec![num(1.0), s("a\nb")]))])),
+            ("pi", num(3.25)),
+            ("none", Json::Null),
+        ]);
+        let wire = j.compact();
+        assert!(!wire.contains('\n'), "compact must be newline-free");
+        assert!(!wire.contains('\r'));
+        let back = Json::parse(&wire).unwrap();
+        assert_eq!(back, j, "compact must round-trip exactly");
+        // the value survives untouched — the guarantee the historical
+        // pretty()+strip-'\n' wire encoding only upheld by accident of
+        // the escaper (one escaping change away from corruption)
+        assert_eq!(
+            back.get("msg").unwrap().as_str().unwrap(),
+            "line one\nline two\r\n\t\"quoted\" \\ end"
+        );
+    }
+
+    #[test]
+    fn compact_escapes_control_chars() {
+        let j = s("a\u{01}b\u{1f}c");
+        let wire = j.compact();
+        assert!(wire.contains("\\u0001") && wire.contains("\\u001f"));
+        assert_eq!(Json::parse(&wire).unwrap(), j);
+    }
+
+    #[test]
+    fn compact_matches_pretty_semantics() {
+        let src = r#"{"x": [1, 2.5, "s"], "y": {"z": true, "w": null}}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(Json::parse(&j.compact()).unwrap(),
+                   Json::parse(&j.pretty()).unwrap());
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_fatal() {
+        // within the bound: fine
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+        // beyond the bound: an error, not a stack overflow
+        let deep = format!("{}1{}", "[".repeat(100_000),
+                           "]".repeat(100_000));
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+        let deep_obj =
+            "{\"a\":".repeat(100_000) + "1" + &"}".repeat(100_000);
+        assert!(Json::parse(&deep_obj).is_err());
+    }
+
+    #[test]
+    fn truncated_inputs_error_cleanly() {
+        for bad in [
+            "\"abc", "\"ab\\", "\"ab\\u00", "{\"a\": ", "[1, 2",
+            "\"caf\u{e9}", // string cut inside a multibyte char
+        ] {
+            // byte-level truncation of the multibyte case
+            let bytes = bad.as_bytes();
+            let cut = &bytes[..bytes.len().saturating_sub(1)];
+            if let Ok(text) = std::str::from_utf8(cut) {
+                assert!(Json::parse(text).is_err(), "{text:?}");
+            }
+            assert!(Json::parse(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -3,6 +3,22 @@
 //! Provides the execution backbone of the coordinator: a fixed pool with a
 //! shared injector queue, plus a `scope`-style parallel map used by the
 //! experiment harnesses (per-Table-1-cell parallelism).
+//!
+//! Two ways to run a borrowed parallel map:
+//!
+//! * [`par_map`] — spawns scoped threads per call (`std::thread::scope`).
+//!   Simple, but each call pays thread spawn/join, measurable against
+//!   the ~ms of work in a small evaluation batch.
+//! * [`ThreadPool::scoped_run`] / [`ThreadPool::scoped_map`] — the same
+//!   borrowed-closure semantics on the *persistent* pool: tasks fan out
+//!   over the long-lived workers and the call blocks until every index
+//!   is processed. This is the serving hot path —
+//!   [`crate::search::EvalEngine`] routes batches here when the
+//!   coordinator hands it a pool (`perf_hotpath` reports the ratio).
+//!
+//! Workers survive panicking jobs: a panic is caught, the job is counted
+//! as done, and scoped callers observe it as a re-raised panic after the
+//! batch drains — the pool itself never loses threads.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -40,7 +56,12 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
+                                // contain panics: a poisoned job must
+                                // not shrink the pool or wedge the
+                                // `queued` accounting
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
                                 queued.fetch_sub(1, Ordering::SeqCst);
                             }
                             Err(_) => break, // all senders dropped
@@ -75,6 +96,103 @@ impl ThreadPool {
     /// Number of workers.
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Run `f(0)`, `f(1)`, ... `f(n - 1)` across the persistent workers,
+    /// blocking until every index has been processed. Indices are
+    /// work-stolen from a shared counter exactly like [`par_map`]; only
+    /// the thread source differs (no spawn/join per call).
+    ///
+    /// If any `f(i)` panics, the remaining indices claimed by that task
+    /// are skipped, the other tasks drain normally, and the panic is
+    /// re-raised here — matching `std::thread::scope` semantics closely
+    /// enough for callers to treat both paths interchangeably.
+    ///
+    /// Must not be called from inside a pool job of the *same* pool: the
+    /// caller blocks on pool capacity it may itself be occupying.
+    pub fn scoped_run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let fanout = self.size().min(n);
+        let next = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let (done_tx, done_rx) = channel::<()>();
+        // SAFETY: the forged 'static lifetime never outlives `f`. Every
+        // dispatched task signals `done_tx` when it finishes — via the
+        // `SignalOnDrop` guard, so the signal fires even if the task
+        // body unwinds — and this function blocks below until all
+        // `fanout` signals have arrived. No reference to `f` (or
+        // anything it borrows) survives past that barrier.
+        let f: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        for _ in 0..fanout {
+            let next = Arc::clone(&next);
+            let panicked = Arc::clone(&panicked);
+            let signal = SignalOnDrop(done_tx.clone());
+            self.submit(move || {
+                let _signal = signal;
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let ok = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| f(i)),
+                    )
+                    .is_ok();
+                    if !ok {
+                        panicked.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            });
+        }
+        drop(done_tx);
+        for _ in 0..fanout {
+            done_rx
+                .recv()
+                .expect("pool worker vanished mid-scope");
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("a task panicked in ThreadPool::scoped_run");
+        }
+    }
+
+    /// Parallel map over `items` on the persistent pool, preserving
+    /// input order. Drop-in equivalent of [`par_map`] (identical
+    /// results at any pool size) minus the per-call thread spawn/join.
+    pub fn scoped_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let slots: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+        let results: Vec<Mutex<Option<R>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let run = |i: usize| {
+            let item = slots[i].lock().unwrap().take().unwrap();
+            let r = f(item);
+            *results[i].lock().unwrap() = Some(r);
+        };
+        self.scoped_run(n, &run);
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("slot filled"))
+            .collect()
+    }
+}
+
+/// Sends `()` on drop — the completion signal of a scoped task, fired
+/// even when the task body unwinds.
+struct SignalOnDrop(Sender<()>);
+
+impl Drop for SignalOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.send(());
     }
 }
 
@@ -192,6 +310,105 @@ mod tests {
         let (tx, rx) = oneshot();
         std::thread::spawn(move || tx.send(42));
         assert_eq!(rx.wait(), Some(42));
+    }
+
+    #[test]
+    fn scoped_map_matches_par_map() {
+        let pool = ThreadPool::new(4);
+        let items: Vec<i64> = (0..257).collect();
+        let a = pool.scoped_map(items.clone(), |x| x * x - 3);
+        let b = par_map(items, 4, |x| x * x - 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_state() {
+        // the whole point of the scoped API: closures over stack data
+        let pool = ThreadPool::new(3);
+        let offsets: Vec<u64> = (0..32).collect();
+        let base = 100u64; // borrowed, not 'static
+        let out = pool.scoped_map(offsets, |x| x + base);
+        assert_eq!(out, (100..132).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_run_empty_and_oversubscribed() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_run(0, &|_| panic!("never called"));
+        let hits = AtomicU64::new(0);
+        let bump = |_: usize| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        };
+        pool.scoped_run(1000, &bump); // far more tasks than workers
+        assert_eq!(hits.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn concurrent_scoped_runs_share_one_pool() {
+        // the serving regime: several jobs batch through one pool at once
+        let pool = Arc::new(ThreadPool::new(4));
+        let total = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    let local = AtomicU64::new(0);
+                    let bump = |i: usize| {
+                        local.fetch_add(i as u64 + 1, Ordering::SeqCst);
+                    };
+                    pool.scoped_run(50, &bump);
+                    total.fetch_add(local.load(Ordering::SeqCst),
+                                    Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 6 * (50 * 51 / 2));
+    }
+
+    #[test]
+    fn scoped_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let boom = |i: usize| {
+            if i == 3 {
+                panic!("task 3 exploded");
+            }
+        };
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| pool.scoped_run(8, &boom)));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // the pool is still fully functional afterwards
+        let out = pool.scoped_map(vec![1, 2, 3], |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+        // `queued` decrements just after the completion signal; give the
+        // workers a beat before asserting the accounting drained
+        for _ in 0..200 {
+            if pool.pending() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(pool.pending(), 0, "queued accounting intact");
+    }
+
+    #[test]
+    fn plain_submit_panic_does_not_shrink_pool() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.submit(|| panic!("bad job"));
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 16);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Property tests for the cross-job cache architecture: shared
+//! [`EvalCache`]s, the coordinator's [`CacheRegistry`], and the
+//! persistent-pool evaluation path.
+//!
+//! Pins the serving-layer guarantees: sharing a cache (or a pool)
+//! never changes a single bit of any result, capacity bounds hold
+//! under churn, and a warm coordinator really does serve repeated
+//! `(workload, config)` jobs from cache.
+
+use std::sync::Arc;
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::coordinator::{Coordinator, JobRequest, Method};
+use fadiff::mapping::decode::{decode, Relaxed};
+use fadiff::mapping::Strategy;
+use fadiff::search::{EvalCache, EvalEngine};
+use fadiff::util::prop::{check, Config};
+use fadiff::util::rng::Rng;
+use fadiff::util::threadpool::ThreadPool;
+use fadiff::workload::{zoo, NDIMS};
+
+fn random_strategy(rng: &mut Rng, w: &fadiff::workload::Workload,
+                   hw: &fadiff::config::HwConfig) -> Strategy {
+    let mut relaxed = Relaxed::neutral(w);
+    for l in 0..w.len() {
+        for d in 0..NDIMS {
+            for s in 0..4 {
+                relaxed.theta[l][d][s] = rng.range(-1.0, 9.0);
+            }
+        }
+    }
+    for i in 0..relaxed.sigma.len() {
+        relaxed.sigma[i] = rng.f64();
+    }
+    decode(&relaxed, w, hw)
+}
+
+#[test]
+fn shared_cache_results_equal_fresh_engine_prop() {
+    // ANY strategy population, split across two engines sharing one
+    // cache (second engine sees a cache warmed by the first), must
+    // score bit-for-bit identically to a fresh private-cache engine
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::mobilenet_v1();
+    check("shared-cache-equivalence", &Config { cases: 24, seed: 1234 },
+          |rng, size| {
+              let n = 2 + (size * 14.0) as usize;
+              let pop: Vec<Strategy> = (0..n)
+                  .map(|_| random_strategy(rng, &w, &hw))
+                  .collect();
+              let split = rng.below(pop.len().max(1)).max(1);
+              (pop, split)
+          },
+          |(pop, split)| {
+              let fresh = EvalEngine::new(&w, &hw);
+              let want = fresh.eval_batch(pop);
+
+              let cache = Arc::new(EvalCache::default());
+              let first = EvalEngine::new(&w, &hw)
+                  .with_shared_cache(Arc::clone(&cache));
+              let a = first.eval_batch(&pop[..*split]);
+              let second = EvalEngine::new(&w, &hw)
+                  .with_shared_cache(Arc::clone(&cache));
+              let b = second.eval_batch(pop); // overlaps the warm half
+
+              if a[..] != want[..*split] {
+                  return Err("first engine diverged".into());
+              }
+              if b != want {
+                  return Err(
+                      "warm shared-cache engine diverged".into());
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn cache_capacity_bound_holds_under_churn_prop() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::vgg16();
+    check("cache-capacity-churn", &Config { cases: 12, seed: 77 },
+          |rng, size| {
+              let cap = 2 + rng.below(6);
+              let n = 8 + (size * 24.0) as usize;
+              let pop: Vec<Strategy> = (0..n)
+                  .map(|_| random_strategy(rng, &w, &hw))
+                  .collect();
+              (cap, pop)
+          },
+          |(cap, pop)| {
+              let cache = Arc::new(EvalCache::new(*cap));
+              let a = EvalEngine::new(&w, &hw)
+                  .with_shared_cache(Arc::clone(&cache));
+              let b = EvalEngine::new(&w, &hw)
+                  .with_shared_cache(Arc::clone(&cache));
+              for (i, s) in pop.iter().enumerate() {
+                  let e = if i % 2 == 0 { &a } else { &b };
+                  let _ = e.eval(s);
+                  if cache.len() > *cap {
+                      return Err(format!(
+                          "cache grew to {} over capacity {}",
+                          cache.len(), cap
+                      ));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn persistent_pool_batch_equals_serial_prop() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::resnet18();
+    let pool = Arc::new(ThreadPool::new(4));
+    check("pool-equals-serial", &Config { cases: 16, seed: 4242 },
+          |rng, size| {
+              let n = 1 + (size * 23.0) as usize;
+              (0..n)
+                  .map(|_| random_strategy(rng, &w, &hw))
+                  .collect::<Vec<_>>()
+          },
+          |pop| {
+              let serial = EvalEngine::with_threads(&w, &hw, 1);
+              let pooled = EvalEngine::new(&w, &hw)
+                  .with_pool(Arc::clone(&pool));
+              if serial.eval_batch(pop) != pooled.eval_batch(pop) {
+                  return Err(
+                      "pool batch != serial batch".into());
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn coordinator_serves_repeat_jobs_from_cache() {
+    let coord = Coordinator::new(None, 2).unwrap();
+    let req = JobRequest {
+        workload: "mobilenet".into(),
+        config: "large".into(),
+        method: Method::Random,
+        seconds: 3600.0,
+        max_iters: 48,
+        seed: 9,
+    };
+    let r1 = coord.run(req.clone()).unwrap();
+    let hits1 = coord.registry().hits();
+    let misses1 = coord.registry().misses();
+    assert!(misses1 > 0);
+
+    // identical job again: same seed => same candidates => all hits
+    let r2 = coord.run(req.clone()).unwrap();
+    assert_eq!(r1.edp, r2.edp, "cached result must be identical");
+    assert_eq!(r1.energy, r2.energy);
+    assert_eq!(r1.latency, r2.latency);
+    assert_eq!(r1.groups, r2.groups);
+    assert_eq!(coord.registry().misses(), misses1,
+               "repeat job recomputed instead of hitting the cache");
+    assert!(coord.registry().hits() > hits1,
+            "repeat job produced no cross-job cache hits");
+
+    // a different seed still reuses the pair's cache object
+    let mut req3 = req.clone();
+    req3.seed = 10;
+    let _ = coord.run(req3).unwrap();
+    assert_eq!(coord.registry().len(), 1,
+               "same (workload, config) must share one cache");
+
+    // a different config gets its own cache
+    let mut req4 = req;
+    req4.config = "small".into();
+    let _ = coord.run(req4).unwrap();
+    assert_eq!(coord.registry().len(), 2);
+}
+
+#[test]
+fn pooled_coordinator_results_match_standalone_search() {
+    // end-to-end determinism: the serving stack (shared cache +
+    // persistent pool) must reproduce the standalone optimizer exactly
+    let coord = Coordinator::new(None, 1).unwrap();
+    let req = JobRequest {
+        workload: "resnet18".into(),
+        config: "large".into(),
+        method: Method::Ga,
+        seconds: 3600.0,
+        max_iters: 4,
+        seed: 21,
+    };
+    let served = coord.run(req).unwrap();
+
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::resnet18();
+    let standalone = fadiff::search::ga::optimize(
+        &w, &hw,
+        &fadiff::search::ga::GaConfig { seed: 21,
+                                        ..Default::default() },
+        fadiff::search::Budget::iters(4),
+    )
+    .unwrap();
+    assert_eq!(served.edp, standalone.edp);
+    assert_eq!(served.energy, standalone.energy);
+    assert_eq!(served.latency, standalone.latency);
+}

@@ -6,9 +6,11 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
 use fadiff::config::repo_root;
-use fadiff::coordinator::{server, Coordinator, JobRequest, Method};
+use fadiff::coordinator::{server, Coordinator, JobRequest, JobStatus,
+                          Method};
 use fadiff::runtime::Runtime;
 use fadiff::util::json::Json;
 
@@ -129,6 +131,186 @@ fn tcp_server_full_protocol() {
     assert_eq!(m.get_f64("completed").unwrap(), 1.0);
 
     // graceful shutdown
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    t.join().unwrap().unwrap();
+}
+
+/// Poll a tracked job until it reaches a terminal state.
+fn wait_terminal(coord: &Coordinator, id: u64) -> JobStatus {
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = coord.job_status(id).expect("known job");
+        if status.is_terminal() {
+            return status;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "job {id} stuck in {status:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn tracked_jobs_report_status_and_results() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    let id = coord.submit_tracked(small_job("mobilenet", Method::Random))
+        .unwrap();
+    assert_eq!(wait_terminal(&coord, id), JobStatus::Completed);
+    let (_, result) = coord.job_status(id).unwrap();
+    let r = result.unwrap().unwrap();
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    // failures land in the table too
+    let bad = coord.submit_tracked(small_job("alexnet", Method::Random))
+        .unwrap();
+    assert_eq!(wait_terminal(&coord, bad), JobStatus::Failed);
+    let (_, result) = coord.job_status(bad).unwrap();
+    assert!(result.unwrap().unwrap_err().contains("unknown workload"));
+    // unknown ids stay unknown
+    assert!(coord.job_status(10_000).is_none());
+    assert!(coord.cancel(10_000).is_none());
+}
+
+#[test]
+fn cancel_resolves_queued_jobs_immediately() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    // occupy the single worker...
+    let blocker = coord.submit(JobRequest {
+        seconds: 2.0,
+        max_iters: usize::MAX,
+        ..small_job("mobilenet", Method::Random)
+    });
+    // ...so this one queues behind it
+    let id = coord.submit_tracked(small_job("vgg16", Method::Random))
+        .unwrap();
+    let cancelled = coord.cancel(id).unwrap();
+    // cancel resolves without waiting for the blocker (cooperatively if
+    // the worker had already picked the job up)
+    assert_eq!(wait_terminal(&coord, id), JobStatus::Cancelled);
+    assert!(matches!(cancelled, JobStatus::Cancelled
+                                | JobStatus::Running));
+    let _ = blocker.wait();
+    assert_eq!(coord.metrics.cancelled.load(Ordering::SeqCst), 1);
+    // cancelling a terminal job is a no-op
+    assert_eq!(coord.cancel(id), Some(JobStatus::Cancelled));
+    assert_eq!(coord.metrics.cancelled.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn cancel_stops_a_running_job_early() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    // a job that would run for a very long time without cancellation
+    let id = coord.submit_tracked(JobRequest {
+        workload: "mobilenet".into(),
+        config: "large".into(),
+        method: Method::Random,
+        seconds: 3600.0,
+        max_iters: usize::MAX,
+        seed: 3,
+    });
+    // wait until it is actually running
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = coord.job_status(id).unwrap();
+        if status == JobStatus::Running {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let t_cancel = Instant::now();
+    coord.cancel(id).unwrap();
+    assert_eq!(wait_terminal(&coord, id), JobStatus::Cancelled);
+    assert!(t_cancel.elapsed() < Duration::from_secs(30),
+            "cooperative cancel took too long");
+    // the partial best-so-far is preserved as the job's result
+    let (_, result) = coord.job_status(id).unwrap();
+    let r = result.unwrap().expect("cancelled job keeps partial best");
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert_eq!(coord.metrics.cancelled.load(Ordering::SeqCst), 1);
+    assert_eq!(coord.metrics.in_flight(), 0);
+}
+
+#[test]
+fn tcp_sweep_verb_serves_a_grid() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 2).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    let resp = send(
+        addr,
+        r#"{"verb": "sweep", "workloads": ["mobilenet", "resnet18"], "methods": ["random"], "seeds": [1, 2], "seconds": 3600, "max_iters": 24}"#,
+    );
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+    assert_eq!(j.get_f64("jobs").unwrap(), 4.0);
+    assert_eq!(j.get_f64("completed").unwrap(), 4.0);
+    assert_eq!(j.get_f64("failed").unwrap(), 0.0);
+    let results = j.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 4);
+    for r in results {
+        assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
+        assert!(r.get_f64("edp").unwrap() > 0.0);
+        assert!(r.get("workload").unwrap().as_str().is_ok());
+        assert!(r.get_f64("seed").unwrap() >= 1.0);
+    }
+
+    // two seeds per (workload, config) pair: the second shares the
+    // pair's cache, so the metrics verb must show cross-job hits
+    let m = Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
+    assert_eq!(m.get_f64("completed").unwrap(), 4.0);
+    let cache = m.get("cache").unwrap();
+    assert!(cache.get_f64("hits").unwrap() > 0.0, "{m:?}");
+    assert_eq!(cache.get_f64("pairs").unwrap(), 2.0);
+
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    t.join().unwrap().unwrap();
+}
+
+#[test]
+fn tcp_submit_status_cancel_roundtrip() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    let sub = Json::parse(&send(
+        addr,
+        r#"{"verb": "submit", "workload": "mobilenet", "method": "random", "seconds": 3600, "max_iters": 1000000000000}"#,
+    ))
+    .unwrap();
+    assert_eq!(sub.get("ok").unwrap(), &Json::Bool(true));
+    let id = sub.get_f64("job_id").unwrap() as u64;
+
+    let cancel = Json::parse(&send(
+        addr,
+        &format!(r#"{{"verb": "cancel", "job_id": {id}}}"#),
+    ))
+    .unwrap();
+    assert_eq!(cancel.get("ok").unwrap(), &Json::Bool(true));
+
+    // poll until terminal; must be cancelled, fast
+    let t0 = Instant::now();
+    loop {
+        let st = Json::parse(&send(
+            addr,
+            &format!(r#"{{"verb": "status", "job_id": {id}}}"#),
+        ))
+        .unwrap();
+        assert_eq!(st.get("ok").unwrap(), &Json::Bool(true));
+        let status = st.get("status").unwrap().as_str().unwrap()
+            .to_string();
+        if status == "cancelled" {
+            break;
+        }
+        assert!(matches!(status.as_str(), "queued" | "running"),
+                "unexpected status {status}");
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "cancel never landed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
     assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
     t.join().unwrap().unwrap();

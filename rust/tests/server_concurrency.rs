@@ -1,0 +1,139 @@
+//! Concurrency battery for the TCP serving layer: many client threads
+//! firing mixed verbs at one warm server over persistent connections.
+//!
+//! Pins the sweep-serving guarantees: every response parses as one
+//! JSON line, cross-job cache hit counters are monotone (and actually
+//! nonzero when identical jobs repeat), all jobs are accounted for,
+//! and shutdown joins every connection — including idle ones that
+//! never send another byte.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use fadiff::coordinator::{server, Coordinator};
+use fadiff::util::json::Json;
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    /// One request -> one parsed one-line response.
+    fn request(&mut self, body: &str) -> Json {
+        self.stream.write_all(body.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        assert!(line.ends_with('\n'), "unterminated response: {line:?}");
+        Json::parse(line.trim()).unwrap_or_else(|e| {
+            panic!("unparseable response {line:?}: {e}")
+        })
+    }
+}
+
+fn cache_hits(metrics: &Json) -> f64 {
+    metrics.get("cache").unwrap().get_f64("hits").unwrap()
+}
+
+#[test]
+fn concurrent_clients_mixed_verbs() {
+    const CLIENTS: usize = 6;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 2).unwrap();
+    let server_thread =
+        std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // an idle connection held open across the whole test: shutdown must
+    // still join its handler thread
+    let mut idle = Client::connect(addr);
+    let pong = idle.request(r#"{"verb": "ping"}"#);
+    assert_eq!(pong.get("pong").unwrap(), &Json::Bool(true));
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut cl = Client::connect(addr);
+
+                // 1. ping
+                let r = cl.request(r#"{"verb": "ping"}"#);
+                assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
+
+                // 2. metrics (baseline for monotonicity)
+                let m0 = cl.request(r#"{"verb": "metrics"}"#);
+                assert_eq!(m0.get("ok").unwrap(), &Json::Bool(true));
+                let h0 = cache_hits(&m0);
+
+                // 3. optimize — identical across clients, so the shared
+                //    (workload, config) cache must produce cross-job hits
+                let o = cl.request(
+                    r#"{"verb": "optimize", "workload": "mobilenet",
+                        "method": "random", "seconds": 3600,
+                        "max_iters": 40, "seed": 11}"#
+                        .replace('\n', " ")
+                        .as_str(),
+                );
+                assert_eq!(o.get("ok").unwrap(), &Json::Bool(true),
+                           "client {c}: {o:?}");
+                assert!(o.get_f64("edp").unwrap() > 0.0);
+
+                // 4. garbage interleaved — answered, not fatal
+                let g = cl.request("not json at all");
+                assert_eq!(g.get("ok").unwrap(), &Json::Bool(false));
+
+                // 5. sweep: a 2-point grid through the same queue
+                let s = cl.request(
+                    r#"{"verb": "sweep", "workloads": ["mobilenet"],
+                        "methods": ["random"], "seeds": [11, 12],
+                        "seconds": 3600, "max_iters": 24}"#
+                        .replace('\n', " ")
+                        .as_str(),
+                );
+                assert_eq!(s.get("ok").unwrap(), &Json::Bool(true),
+                           "client {c}: {s:?}");
+                assert_eq!(s.get_f64("jobs").unwrap(), 2.0);
+                assert_eq!(s.get_f64("completed").unwrap(), 2.0);
+                assert_eq!(
+                    s.get("results").unwrap().as_arr().unwrap().len(),
+                    2
+                );
+
+                // 6. metrics again: hit counter is monotone from this
+                //    client's point of view
+                let m1 = cl.request(r#"{"verb": "metrics"}"#);
+                let h1 = cache_hits(&m1);
+                assert!(h1 >= h0,
+                        "cache hits went backwards: {h1} < {h0}");
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // every job accounted for: per client 1 optimize + 2 sweep cells
+    let mut cl = Client::connect(addr);
+    let m = cl.request(r#"{"verb": "metrics"}"#);
+    assert_eq!(m.get_f64("completed").unwrap(), (CLIENTS * 3) as f64);
+    assert_eq!(m.get_f64("failed").unwrap(), 0.0);
+    assert_eq!(m.get_f64("in_flight").unwrap(), 0.0);
+    // identical jobs repeated across clients: the shared cache must
+    // have produced real cross-job hits
+    assert!(cache_hits(&m) > 0.0, "no cross-job cache hits: {m:?}");
+    assert!(m.get("cache").unwrap().get_f64("pairs").unwrap() >= 1.0);
+
+    // shutdown must terminate the server thread even though `idle` (and
+    // `cl`) still hold open connections
+    let s = cl.request(r#"{"verb": "shutdown"}"#);
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    server_thread.join().unwrap().unwrap();
+}

@@ -1,0 +1,205 @@
+//! Robustness battery for `parse_request`/`handle`: hostile and broken
+//! inputs must always produce a one-line `{"ok":false,...}` answer and
+//! must never panic the server, kill the connection, or desynchronize
+//! the line protocol.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+
+use fadiff::coordinator::{server, Coordinator};
+use fadiff::util::json::Json;
+
+fn start_server() -> (std::net::SocketAddr,
+                      std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+    (addr, t)
+}
+
+fn shutdown_server(addr: std::net::SocketAddr,
+                   t: std::thread::JoinHandle<anyhow::Result<()>>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"{\"verb\": \"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    t.join().unwrap().unwrap();
+}
+
+/// Send one line on a fresh connection, read one line back.
+fn send_once(addr: std::net::SocketAddr, body: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(body).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+fn assert_err_response(resp: &str) {
+    let j = Json::parse(resp)
+        .unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"));
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(false), "{resp}");
+    assert!(j.get("error").unwrap().as_str().is_ok());
+}
+
+#[test]
+fn malformed_requests_get_one_line_errors() {
+    let (addr, t) = start_server();
+    for bad in [
+        "not json at all",
+        "{\"verb\":",
+        "{\"verb\": \"optimize\", \"method\": \"quantum\"}",
+        "{\"verb\": 42}",
+        "{\"verb\": \"frobnicate\"}",
+        "[]",
+        "[1, 2, 3]",
+        "null",
+        "123",
+        "\"just a string\"",
+        "{\"verb\": \"optimize\", \"workload\": \"not-a-net\"}",
+        "{\"verb\": \"optimize\", \"config\": \"not-a-config\", \
+         \"method\": \"random\", \"max_iters\": 1}",
+        "{\"verb\": \"optimize\", \"seconds\": \"fast\"}",
+        "{\"verb\": \"status\"}",
+        "{\"verb\": \"status\", \"job_id\": 99999}",
+        "{\"verb\": \"status\", \"job_id\": -3}",
+        "{\"verb\": \"status\", \"job_id\": 7.9}",
+        "{\"verb\": \"cancel\", \"job_id\": 1e300}",
+        "{\"verb\": \"cancel\", \"job_id\": 424242}",
+        "{\"verb\": \"sweep\", \"workloads\": []}",
+        "{\"verb\": \"sweep\", \"methods\": [\"ga\", \"quantum\"]}",
+    ] {
+        assert_err_response(&send_once(addr, bad.as_bytes()));
+    }
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn connection_survives_a_barrage_of_garbage() {
+    let (addr, t) = start_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut ask = |body: &str| -> Json {
+        stream.write_all(body.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    for _ in 0..3 {
+        assert_eq!(ask("garbage").get("ok").unwrap(),
+                   &Json::Bool(false));
+        assert_eq!(ask("{\"verb\": \"nope\"}").get("ok").unwrap(),
+                   &Json::Bool(false));
+        // blank lines produce no response and do not desynchronize
+        stream.write_all(b"\n   \n").unwrap();
+        let pong = ask("{\"verb\": \"ping\"}");
+        assert_eq!(pong.get("pong").unwrap(), &Json::Bool(true));
+    }
+    drop(stream);
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn deeply_nested_payloads_are_rejected_not_fatal() {
+    let (addr, t) = start_server();
+    let deep_arr = format!("{}1{}", "[".repeat(50_000),
+                           "]".repeat(50_000));
+    assert_err_response(&send_once(addr, deep_arr.as_bytes()));
+    let deep_obj =
+        "{\"a\":".repeat(50_000) + "1" + &"}".repeat(50_000);
+    assert_err_response(&send_once(addr, deep_obj.as_bytes()));
+    // a verb wrapped in legal-but-deep junk still answers
+    let mixed = format!(
+        "{{\"verb\": \"ping\", \"junk\": {}1{}}}",
+        "[".repeat(200), "]".repeat(200)
+    );
+    assert_err_response(&send_once(addr, mixed.as_bytes()));
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn oversized_lines_are_answered_and_drained() {
+    let (addr, t) = start_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // 2 MiB of non-JSON on one line (over the 1 MiB cap)
+    let huge = vec![b'a'; 2 * server::MAX_REQUEST_BYTES];
+    stream.write_all(&huge).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_err_response(line.trim());
+    assert!(line.contains("exceeds"), "{line}");
+    // the same connection is immediately usable again
+    stream.write_all(b"{\"verb\": \"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("pong").unwrap(), &Json::Bool(true));
+    drop(stream);
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn truncated_line_gets_an_answer_on_half_close() {
+    let (addr, t) = start_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // no trailing newline, then half-close: the server must treat the
+    // tail as a (broken) request and still answer on one line
+    stream.write_all(b"{\"verb\": \"ping\"").unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut resp = String::new();
+    BufReader::new(stream).read_to_string(&mut resp).unwrap();
+    let first = resp.lines().next().unwrap_or("");
+    assert_err_response(first);
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn invalid_utf8_degrades_to_json_error() {
+    let (addr, t) = start_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"\xff\xfe\xfd{\"verb\": \"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_err_response(line.trim());
+    // connection still fine
+    stream.write_all(b"{\"verb\": \"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(line.trim()).unwrap().get("pong").unwrap(),
+               &Json::Bool(true));
+    drop(stream);
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn sweep_with_failing_cells_reports_per_job_errors() {
+    let (addr, t) = start_server();
+    let resp = send_once(
+        addr,
+        b"{\"verb\": \"sweep\", \
+           \"workloads\": [\"mobilenet\", \"not-a-net\"], \
+           \"methods\": [\"random\"], \"seeds\": [1], \
+           \"seconds\": 3600, \"max_iters\": 8}",
+    );
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+    assert_eq!(j.get_f64("jobs").unwrap(), 2.0);
+    assert_eq!(j.get_f64("completed").unwrap(), 1.0);
+    assert_eq!(j.get_f64("failed").unwrap(), 1.0);
+    let results = j.get("results").unwrap().as_arr().unwrap();
+    let oks: Vec<bool> = results
+        .iter()
+        .map(|r| r.get("ok").unwrap() == &Json::Bool(true))
+        .collect();
+    assert!(oks.contains(&true) && oks.contains(&false));
+    shutdown_server(addr, t);
+}
