@@ -31,13 +31,14 @@ fn main() -> anyhow::Result<()> {
               strategy ===");
     // re-run FADiff quickly per cell and verify the winning strategies
     // against the independent tile-walking simulator
-    let rt = fadiff::runtime::Runtime::load_default()?;
+    let rt = fadiff::runtime::Runtime::load_if_available(
+        &repo.join("artifacts"));
     let mut checked = 0;
     for config in ["large", "small"] {
         let hw = load_config(&repo, config)?;
         for w in zoo::table1_suite() {
             let r = fadiff::search::gradient::optimize(
-                &rt, &w, &hw,
+                rt.as_ref(), &w, &hw,
                 &fadiff::search::gradient::GradientConfig::default(),
                 fadiff::search::Budget { seconds: 2.0,
                                          max_iters: usize::MAX })?;

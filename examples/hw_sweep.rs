@@ -11,7 +11,7 @@ use fadiff::search::{gradient, Budget};
 use fadiff::workload::zoo;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load_default()?;
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
     let w = zoo::mobilenet_v1();
     let budget = Budget { seconds: 4.0, max_iters: usize::MAX };
     println!("workload: {} ({:.2} GMACs)\n", w.name,
@@ -24,7 +24,8 @@ fn main() -> anyhow::Result<()> {
     for pe in [8usize, 16, 32, 64] {
         let hw = custom_config(&repo_root(), pe, 64.0, 512.0)?;
         let r = gradient::optimize(
-            &rt, &w, &hw, &gradient::GradientConfig::default(), budget)?;
+            rt.as_ref(), &w, &hw, &gradient::GradientConfig::default(),
+            budget)?;
         let trend = match prev {
             Some(p) if r.edp < p => "improving",
             Some(_) => "diminishing",
@@ -40,7 +41,8 @@ fn main() -> anyhow::Result<()> {
     for l2 in [32.0, 128.0, 512.0, 2048.0] {
         let hw = custom_config(&repo_root(), 32, 64.0, l2)?;
         let r = gradient::optimize(
-            &rt, &w, &hw, &gradient::GradientConfig::default(), budget)?;
+            rt.as_ref(), &w, &hw, &gradient::GradientConfig::default(),
+            budget)?;
         let fused = r.best.fuse.iter().filter(|&&f| f).count();
         println!("{:>8} {:>14.4e} {:>12}", l2, r.edp, fused);
     }

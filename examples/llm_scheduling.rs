@@ -11,7 +11,7 @@ use fadiff::search::{gradient, Budget};
 use fadiff::workload::zoo;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load_default()?;
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
     let w = zoo::gpt3_6_7b();
     println!("workload: {} — one decoder block, replicated {}x",
              w.name, w.replicas);
@@ -35,9 +35,11 @@ fn main() -> anyhow::Result<()> {
                  hw.pe_rows, hw.pe_cols, hw.c2_bytes / 1024.0);
 
         let fadiff = gradient::optimize(
-            &rt, &w, &hw, &gradient::GradientConfig::default(), budget)?;
+            rt.as_ref(), &w, &hw, &gradient::GradientConfig::default(),
+            budget)?;
         let dosa = gradient::optimize(
-            &rt, &w, &hw, &gradient::GradientConfig::dosa(), budget)?;
+            rt.as_ref(), &w, &hw, &gradient::GradientConfig::dosa(),
+            budget)?;
 
         let scale = w.replicas * w.replicas;
         println!("  DOSA  (layer-wise): EDP {:.4e}", dosa.edp * scale);

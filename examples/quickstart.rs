@@ -2,7 +2,8 @@
 //! FADiff and print the resulting strategy.
 //!
 //! Run with:  cargo run --release --example quickstart
-//! (requires `make artifacts` once beforehand)
+//! (runs everywhere on the native differentiable backend; `make
+//! artifacts` once beforehand lets PJRT accelerate the inner loop)
 
 use fadiff::config::{load_config, repo_root};
 use fadiff::costmodel;
@@ -11,8 +12,14 @@ use fadiff::search::{gradient, Budget};
 use fadiff::workload::{zoo, DIM_NAMES};
 
 fn main() -> anyhow::Result<()> {
-    // 1. load the AOT-compiled differentiable cost model
-    let rt = Runtime::load_default()?;
+    // 1. probe the optional PJRT accelerator (native backend otherwise)
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
+    let backend = if rt.is_some() {
+        "PJRT (AOT artifacts)"
+    } else {
+        "native differentiable model"
+    };
+    println!("gradient backend: {backend}");
 
     // 2. pick a workload and a hardware configuration
     let workload = zoo::resnet18();
@@ -26,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. run the fusion-aware gradient search (10 s budget)
     let result = gradient::optimize(
-        &rt, &workload, &hw,
+        rt.as_ref(), &workload, &hw,
         &gradient::GradientConfig::default(),
         Budget { seconds: 10.0, max_iters: usize::MAX },
     )?;

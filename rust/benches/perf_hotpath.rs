@@ -1,18 +1,26 @@
 //! Bench: the optimization hot paths (EXPERIMENTS.md §Perf tracks these).
 //!
-//!   * serial per-candidate evaluation (the pre-EvalEngine baseline:
-//!     feasibility + closed-form evaluate, one candidate at a time)
-//!   * EvalEngine batched parallel evaluation, cold cache
-//!   * EvalEngine batched evaluation, warm cache (memoized)
+//!   * serial per-candidate evaluation (the PR-2 path: two-pass
+//!     feasibility + closed-form evaluate, one candidate at a time),
+//!     with and without a reused `CostScratch` (isolates the
+//!     allocation cost from the double-components cost)
+//!   * the SoA batch kernel (`costmodel::batch`), same single thread —
+//!     components once per layer, zero per-candidate allocation
+//!   * EvalEngine batched parallel evaluation, cold + warm cache
 //!   * persistent-pool (scoped submit) vs per-call scoped-spawn
 //!     batching, at serving batch sizes and GA batch sizes — the
 //!     coordinator hot path
 //!   * GA-generation decode+eval throughput, serial vs engine
-//!   * decode throughput (incumbent refresh path)
+//!   * decode throughput: standalone (re-factoring per call) vs the
+//!     shared `WorkloadTables` path (incumbent refresh hot path)
+//!   * native differentiable model: gradient steps/sec + a short
+//!     end-to-end native FADiff run
 //!   * PJRT gradient step + batched artifact eval (skipped unless real
 //!     artifacts + a PJRT-backed xla crate are present)
 //!
-//! `cargo bench --bench perf_hotpath`
+//! `cargo bench --bench perf_hotpath` — pass `-- --json` to also write
+//! the headline numbers to `BENCH_hotpath.json` (CI uploads it as an
+//! artifact so the perf trajectory is tracked PR-over-PR).
 
 mod bench_util;
 
@@ -20,13 +28,15 @@ use std::sync::Arc;
 
 use bench_util::{report, time};
 use fadiff::config::{load_config, repo_root};
-use fadiff::costmodel;
-use fadiff::mapping::decode::{decode, Relaxed};
+use fadiff::costmodel::grad::{GradModel, GradScratch, SnapMode};
+use fadiff::costmodel::{self, batch, WorkloadTables};
+use fadiff::mapping::decode::{decode, decode_with, Relaxed};
 use fadiff::mapping::Strategy;
 use fadiff::runtime::stage::WorkloadStage;
 use fadiff::runtime::{HostTensor, Runtime, ART_EVAL, ART_GRAD};
 use fadiff::search::encoding::{dim, express_naive};
-use fadiff::search::EvalEngine;
+use fadiff::search::{gradient, Budget, EvalEngine};
+use fadiff::util::json::{num, obj};
 use fadiff::util::rng::Rng;
 use fadiff::util::threadpool::ThreadPool;
 use fadiff::workload::zoo;
@@ -34,11 +44,13 @@ use fadiff::workload::zoo;
 const POP: usize = 512;
 
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
     let hw = load_config(&repo_root(), "large").expect("config");
     let w = zoo::resnet18();
     let mut rng = Rng::new(1);
 
     // a diverse population of decoded (hardware-valid) strategies
+    let tables = WorkloadTables::new(&w);
     let pop: Vec<Strategy> = (0..POP)
         .map(|_| {
             let mut relaxed = Relaxed::neutral(&w);
@@ -52,7 +64,7 @@ fn main() {
             for i in 0..relaxed.sigma.len() {
                 relaxed.sigma[i] = rng.f64();
             }
-            decode(&relaxed, &w, &hw)
+            decode_with(&relaxed, &w, &hw, &tables)
         })
         .collect();
 
@@ -65,6 +77,30 @@ fn main() {
     });
     report(&format!("serial eval ({POP} candidates)"), serial, s_min,
            s_max, &format!("{:.0}k cand/s", POP as f64 / serial / 1e3));
+
+    // --- same two-pass math, reused CostScratch (allocation win only) ---
+    let mut cscratch = costmodel::CostScratch::new();
+    let (sscr, ss_min, ss_max) = time(5, || {
+        for s in &pop {
+            let _ = costmodel::feasible_with(s, &w, &hw, &mut cscratch);
+            let _ = costmodel::evaluate_with(s, &w, &hw, &mut cscratch);
+        }
+    });
+    report(&format!("serial eval, reused CostScratch ({POP})"), sscr,
+           ss_min, ss_max,
+           &format!("{:.2}x vs allocating", serial / sscr));
+
+    // --- SoA batch kernel, same single thread ---------------------------
+    let mut scratch = batch::SoaScratch::new();
+    let mut out = Vec::new();
+    let (soa, soa_min, soa_max) = time(5, || {
+        batch::eval_batch_into(&pop, &w, &hw, &mut scratch, &mut out);
+    });
+    report(&format!("SoA batch kernel ({POP} candidates, 1 thread)"),
+           soa, soa_min, soa_max,
+           &format!("{:.0}k cand/s", POP as f64 / soa / 1e3));
+    println!("  -> SoA kernel vs per-candidate path: {:.2}x\n",
+             serial / soa);
 
     // --- EvalEngine: parallel, cold cache -------------------------------
     let engine = EvalEngine::new(&w, &hw);
@@ -145,41 +181,113 @@ fn main() {
     let gen_engine = EvalEngine::new(&w, &hw);
     let (g_eng, ge_min, ge_max) = time(5, || {
         gen_engine.clear_cache();
-        let _ = gen_engine
-            .eval_population(&genomes, |g| express_naive(g, &w, &hw));
+        let gen_tables = Arc::clone(gen_engine.tables());
+        let _ = gen_engine.eval_population(&genomes, |g| {
+            fadiff::search::encoding::express_naive_with(g, &w, &hw,
+                                                         &gen_tables)
+        });
     });
     report("GA generation via EvalEngine", g_eng, ge_min, ge_max,
            &format!("{:.2}x speedup", g_serial / g_eng));
 
-    // --- decode (incumbent refresh path) --------------------------------
+    // --- decode (incumbent refresh path): memoized tables vs not --------
     let mut relaxed = Relaxed::neutral(&w);
     for lix in 0..w.len() {
-        for d in 0..7 {
+        for di in 0..7 {
             for sl in 0..4 {
-                relaxed.theta[lix][d][sl] = rng.range(0.0, 6.0);
+                relaxed.theta[lix][di][sl] = rng.range(0.0, 6.0);
             }
         }
     }
-    let (mean, min, max) = time(2000, || {
+    let (dmean, d_min, d_max) = time(500, || {
         let _ = decode(&relaxed, &w, &hw);
     });
-    report("decode relaxed -> valid strategy", mean, min, max,
-           &format!("{:.1}k decodes/s", 1e-3 / mean));
+    // (the standalone path already dedupes per distinct dim size when
+    // it builds its throwaway tables, so this baseline is no slower
+    // than the PR-2 per-(layer, dim) factoring it replaced)
+    report("decode standalone (tables per call)", dmean, d_min, d_max,
+           &format!("{:.1}k decodes/s", 1e-3 / dmean));
+    let (dtmean, dt_min, dt_max) = time(2000, || {
+        let _ = decode_with(&relaxed, &w, &hw, &tables);
+    });
+    report("decode via shared WorkloadTables", dtmean, dt_min, dt_max,
+           &format!("{:.1}k decodes/s, {:.2}x vs standalone",
+                    1e-3 / dtmean, dmean / dtmean));
+    println!();
+
+    // --- native differentiable model: gradient step ---------------------
+    let model = GradModel::new(&w, &hw, &tables, 2.0, true,
+                               SnapMode::Straight);
+    let theta: Vec<f64> =
+        (0..model.n_theta()).map(|_| rng.range(0.0, 5.0)).collect();
+    let sigma: Vec<f64> =
+        (0..model.n_sigma()).map(|_| rng.range(-2.0, 2.0)).collect();
+    let gumbel: Vec<f64> =
+        (0..model.n_gumbel()).map(|_| rng.gumbel()).collect();
+    let mut gscratch = GradScratch::new();
+    let mut g_theta = vec![0.0; model.n_theta()];
+    let mut g_sigma = vec![0.0; model.n_sigma()];
+    let (gmean, g_min, g_max) = time(300, || {
+        let out = model.loss_and_grad(&theta, &sigma, &gumbel, 1.0, 1.0,
+                                      &mut gscratch, &mut g_theta,
+                                      &mut g_sigma);
+        assert!(out.loss.is_finite());
+    });
+    report("native gradient step (resnet18)", gmean, g_min, g_max,
+           &format!("{:.0} steps/s", 1.0 / gmean));
+
+    // --- end-to-end native FADiff (short run) ---------------------------
+    let t0 = std::time::Instant::now();
+    let r = gradient::optimize(
+        None, &w, &hw,
+        &gradient::GradientConfig { restarts: 1, ..Default::default() },
+        Budget::iters(120))
+        .expect("native gradient run");
+    let wall = t0.elapsed().as_secs_f64();
+    let native_ips = r.iters as f64 / wall;
+    println!("\nend-to-end native FADiff on resnet18: {} iters in \
+              {:.2}s = {:.0} iters/s, best EDP {:.3e}\n",
+             r.iters, wall, native_ips, r.edp);
+
+    if json_mode {
+        let j = obj(vec![
+            ("pop", num(POP as f64)),
+            ("threads", num(engine.threads() as f64)),
+            ("serial_evals_per_sec", num(POP as f64 / serial)),
+            ("serial_scratch_evals_per_sec", num(POP as f64 / sscr)),
+            ("soa_batch_evals_per_sec", num(POP as f64 / soa)),
+            ("soa_vs_serial_speedup", num(serial / soa)),
+            ("engine_cold_evals_per_sec", num(POP as f64 / cold)),
+            ("engine_warm_evals_per_sec", num(POP as f64 / warm)),
+            ("engine_pool_cold_evals_per_sec",
+             num(POP as f64 / pcold)),
+            ("decode_standalone_per_sec", num(1.0 / dmean)),
+            ("decode_tables_per_sec", num(1.0 / dtmean)),
+            ("decode_tables_speedup", num(dmean / dtmean)),
+            ("native_grad_steps_per_sec", num(1.0 / gmean)),
+            ("native_grad_search_iters_per_sec", num(native_ips)),
+        ]);
+        // cargo runs benches with CWD = the package root (rust/);
+        // anchor at the repo root so CI finds the file
+        let path = repo_root().join("BENCH_hotpath.json");
+        std::fs::write(&path, j.pretty())
+            .expect("write BENCH_hotpath.json");
+        println!("wrote {}", path.display());
+    }
 
     // --- PJRT paths (need real artifacts + a PJRT-backed xla crate) ----
     match Runtime::load_if_available(&repo_root().join("artifacts")) {
         Some(rt) => pjrt_benches(&rt, &w, &hw, &mut rng),
         None => println!(
             "\nPJRT benches skipped: artifacts / PJRT runtime \
-             unavailable (run `make artifacts` with a real xla crate)"
+             unavailable (run `make artifacts` with a real xla crate); \
+             the gradient numbers above are the native backend"
         ),
     }
 }
 
 fn pjrt_benches(rt: &Runtime, w: &fadiff::workload::Workload,
                 hw: &fadiff::config::HwConfig, rng: &mut Rng) {
-    use fadiff::search::{gradient, Budget};
-
     let stage = WorkloadStage::new(w, hw, rt.manifest.l_max,
                                    rt.manifest.k_max)
         .expect("stage");
@@ -239,12 +347,12 @@ fn pjrt_benches(rt: &Runtime, w: &fadiff::workload::Workload,
     // --- end-to-end optimizer throughput --------------------------------
     let budget = Budget { seconds: 5.0, max_iters: usize::MAX };
     let t0 = std::time::Instant::now();
-    let r = gradient::optimize(rt, w, hw,
+    let r = gradient::optimize(Some(rt), w, hw,
                                &gradient::GradientConfig::default(),
                                budget)
         .unwrap();
     let wall = t0.elapsed().as_secs_f64();
-    println!("\nend-to-end FADiff on resnet18: {} iters in {:.1}s = \
-              {:.0} iters/s, best EDP {:.3e}",
+    println!("\nend-to-end PJRT FADiff on resnet18: {} iters in {:.1}s \
+              = {:.0} iters/s, best EDP {:.3e}",
              r.iters, wall, r.iters as f64 / wall, r.edp);
 }

@@ -13,6 +13,14 @@ pub struct Metrics {
     /// Jobs that ended because a `cancel` arrived (whether they were
     /// still queued or already running).
     pub cancelled: AtomicU64,
+    /// Cumulative candidate evaluations reported by finished jobs
+    /// (`JobResult::evals`, i.e. candidates offered to each search's
+    /// incumbent — memoization-cache hits included; gradient jobs
+    /// count their decode refreshes, not inner gradient steps). The
+    /// coordinator divides by uptime for the `metrics` verb's
+    /// `throughput.evals_per_sec` ("since start", so idle time
+    /// dilutes the rate by design).
+    pub evals: AtomicU64,
 }
 
 impl Metrics {
@@ -53,6 +61,7 @@ impl Metrics {
             ("cancelled",
              num(self.cancelled.load(Ordering::SeqCst) as f64)),
             ("in_flight", num(self.in_flight() as f64)),
+            ("evals", num(self.evals.load(Ordering::SeqCst) as f64)),
         ])
     }
 }

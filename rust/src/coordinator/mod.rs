@@ -10,11 +10,13 @@
 //! queueing, metrics, and graceful shutdown. Python never runs here —
 //! workers execute the AOT artifacts.
 //!
-//! The PJRT runtime is OPTIONAL: all native methods (GA / BO / random)
-//! score through [`crate::search::EvalEngine`] and serve even when the
-//! AOT artifacts are absent; only the gradient methods (FADiff / DOSA)
-//! require a runtime and fail per-job with an actionable error without
-//! one.
+//! The PJRT runtime is OPTIONAL for every method: GA / BO / random
+//! score through [`crate::search::EvalEngine`], and the gradient
+//! methods (FADiff / DOSA) run on the pure-Rust differentiable model
+//! (`costmodel::grad`) whenever the AOT artifacts are absent — the
+//! runtime, when present, only accelerates their inner loop. The
+//! `metrics` verb therefore lists every method as served
+//! unconditionally.
 //!
 //! # Sweep-serving architecture
 //!
@@ -268,12 +270,14 @@ pub struct Coordinator {
     registry: Arc<CacheRegistry>,
     eval_pool: Arc<ThreadPool>,
     jobs: Arc<JobTable>,
+    started: std::time::Instant,
 }
 
 impl Coordinator {
     /// Spawn `n_workers` workers, each loading its own PJRT runtime
     /// from `artifacts_dir` (defaults to `<repo>/artifacts`). Missing
-    /// artifacts degrade the service to native methods only.
+    /// artifacts cost nothing but the PJRT acceleration: gradient jobs
+    /// fall back to the native differentiable backend.
     pub fn new(artifacts_dir: Option<PathBuf>, n_workers: usize)
                -> Result<Coordinator> {
         let dir = artifacts_dir
@@ -287,7 +291,8 @@ impl Coordinator {
         if Runtime::load_if_available(&dir).is_none() {
             eprintln!(
                 "[fadiff-coord] PJRT runtime unavailable under {dir:?}; \
-                 serving native methods (ga/bo/random) only"
+                 gradient methods run on the native differentiable \
+                 backend (all methods remain served)"
             );
         }
         let (tx, rx) = channel::<Envelope>();
@@ -321,7 +326,8 @@ impl Coordinator {
             })
             .collect();
         Ok(Coordinator { tx: Some(tx), workers, metrics, registry,
-                         eval_pool, jobs })
+                         eval_pool, jobs,
+                         started: std::time::Instant::now() })
     }
 
     fn enqueue(&self, req: JobRequest,
@@ -417,9 +423,15 @@ impl Coordinator {
         &self.eval_pool
     }
 
-    /// Service metrics + cache-registry stats as one JSON object (the
-    /// `metrics` verb payload).
+    /// Seconds since this coordinator started serving.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Service metrics + cache-registry stats + evaluator throughput
+    /// as one JSON object (the `metrics` verb payload).
     pub fn metrics_json(&self) -> Json {
+        use crate::util::json::{num, obj};
         let mut j = self.metrics.to_json();
         if let Json::Obj(map) = &mut j {
             map.insert("cache".into(), self.registry.stats_json());
@@ -429,6 +441,17 @@ impl Coordinator {
             );
             map.insert("workers".into(),
                        Json::Num(self.n_workers() as f64));
+            let uptime = self.uptime_seconds();
+            let evals = self.metrics.evals.load(Ordering::SeqCst);
+            map.insert(
+                "throughput".into(),
+                obj(vec![
+                    ("evals_total", num(evals as f64)),
+                    ("evals_per_sec",
+                     num(evals as f64 / uptime.max(1e-9))),
+                    ("uptime_seconds", num(uptime)),
+                ]),
+            );
         }
         j
     }
@@ -488,6 +511,9 @@ fn worker_loop(dir: &std::path::Path,
         };
         let out = execute_job_ctx(rt.as_ref(), &req, &ctx)
             .map_err(|e| e.to_string());
+        if let Ok(r) = &out {
+            metrics.evals.fetch_add(r.evals as u64, Ordering::SeqCst);
+        }
         let was_cancelled = cancel.load(Ordering::SeqCst);
         let status = if was_cancelled {
             JobStatus::Cancelled
@@ -516,19 +542,6 @@ fn worker_loop(dir: &std::path::Path,
     }
 }
 
-/// Require a runtime for the gradient methods.
-fn need_rt<'r>(rt: Option<&'r Runtime>, method: Method)
-               -> Result<&'r Runtime> {
-    rt.ok_or_else(|| {
-        anyhow!(
-            "method {:?} needs the AOT artifacts and a PJRT-backed xla \
-             crate (run `make artifacts`); native methods ga/bo/random \
-             remain available",
-            method
-        )
-    })
-}
-
 /// Serving context for one job execution: where to find the shared
 /// per-`(workload, config)` caches, the persistent evaluation pool,
 /// and the cooperative cancel flag. `JobCtx::default()` (what the CLI
@@ -552,9 +565,11 @@ impl JobCtx<'_> {
     }
 }
 
-/// Run one job on a given (optional) runtime; also used directly by the
-/// CLI. Native methods score through the search-owned
-/// [`crate::search::EvalEngine`] and never touch the runtime.
+/// Run one job on a given (optional) runtime; also used directly by
+/// the CLI. GA/BO/random score through the search-owned
+/// [`crate::search::EvalEngine`] and never touch the runtime; the
+/// gradient methods use it as an accelerator when present and run the
+/// native differentiable model otherwise.
 pub fn execute_job(rt: Option<&Runtime>, req: &JobRequest)
                    -> Result<JobResult> {
     execute_job_ctx(rt, req, &JobCtx::default())
@@ -572,18 +587,18 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     let ectx = ctx.eval_ctx(req);
     let t0 = std::time::Instant::now();
     let r: SearchResult = match req.method {
-        Method::FADiff => gradient::optimize(
-            need_rt(rt, req.method)?, &w, &hw,
+        Method::FADiff => gradient::optimize_ctx(
+            rt, &w, &hw,
             &gradient::GradientConfig { seed: req.seed,
                                         ..Default::default() },
-            budget)?,
-        Method::Dosa => gradient::optimize(
-            need_rt(rt, req.method)?, &w, &hw,
+            budget, &ectx)?,
+        Method::Dosa => gradient::optimize_ctx(
+            rt, &w, &hw,
             &gradient::GradientConfig {
                 seed: req.seed,
                 ..gradient::GradientConfig::dosa()
             },
-            budget)?,
+            budget, &ectx)?,
         Method::Ga => ga::optimize_ctx(
             &w, &hw, &ga::GaConfig { seed: req.seed, ..Default::default() },
             budget, &ectx)?,

@@ -1,0 +1,199 @@
+//! Allocation-free batched evaluation of decoded strategies — the
+//! native scoring hot path behind [`crate::search::EvalEngine`].
+//!
+//! The pre-batch path paid for every candidate three times over:
+//! `feasible` ran [`super::components`] across all layers (collecting a
+//! `Vec`) and allocated the fusion-group list, then `evaluate` ran the
+//! same components again and allocated `per_layer`/`comps` vectors.
+//! [`eval_into`] produces the identical numbers in a single pass:
+//! components run once per layer, the energy/latency sums, the
+//! accumulator check and the fusion-group scratchpad scan all consume
+//! them on the spot, and the only storage is a reusable
+//! structure-of-arrays scratch ([`SoaScratch`]) whose per-layer byte
+//! columns are also what decode's group repair iterates over. After the
+//! scratch warms to the workload's layer count, evaluating a candidate
+//! performs zero heap allocation.
+//!
+//! Equivalence is bit-for-bit: the per-layer math is literally
+//! [`super::components`] + [`super::layer_cost`], summed in the same
+//! order as [`super::evaluate`], and the feasibility verdict matches
+//! [`super::feasible`] (validity, accumulator bound, per-group
+//! scratchpad bound). `rust/tests/eval_engine.rs` pins this property.
+
+use crate::config::HwConfig;
+use crate::costmodel::{components, layer_cost};
+use crate::mapping::Strategy;
+use crate::workload::Workload;
+
+/// Scalar outcome of one candidate evaluation (the batch kernel's
+/// output row; [`crate::search::eval::Eval`] mirrors it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub energy: f64,
+    pub latency: f64,
+    pub edp: f64,
+    pub feasible: bool,
+}
+
+/// Reusable structure-of-arrays per-layer columns. One instance serves
+/// any number of candidates of the same workload; buffers grow once and
+/// are reused thereafter.
+#[derive(Debug, Default)]
+pub struct SoaScratch {
+    /// `(s_w2 + s_i2) * element_bytes` per layer (fusion-group scan).
+    pub l2_bytes: Vec<f64>,
+    /// `s_o1 * acc_bytes` per layer (accumulator bound).
+    pub acc_bytes: Vec<f64>,
+}
+
+impl SoaScratch {
+    pub fn new() -> SoaScratch {
+        SoaScratch::default()
+    }
+
+    fn reset(&mut self, l: usize) {
+        self.l2_bytes.clear();
+        self.l2_bytes.resize(l, 0.0);
+        self.acc_bytes.clear();
+        self.acc_bytes.resize(l, 0.0);
+    }
+}
+
+/// Evaluate one candidate in a single pass (see module docs). The
+/// strategy's arity must match the workload (the engine guards this).
+pub fn eval_into(s: &Strategy, w: &Workload, hw: &HwConfig,
+                 scratch: &mut SoaScratch) -> Summary {
+    let l = w.len();
+    scratch.reset(l);
+    let valid =
+        s.validate(w, hw.pe_rows as u64, hw.pe_cols as u64).is_ok();
+    let (mut energy, mut latency) = (0.0, 0.0);
+    let mut caps_ok = true;
+    for i in 0..l {
+        let c = components(&s.mappings[i], &w.layers[i].dims);
+        scratch.l2_bytes[i] = (c.s_w2 + c.s_i2) * hw.element_bytes;
+        scratch.acc_bytes[i] = c.s_o1 * hw.acc_bytes;
+        if scratch.acc_bytes[i] > hw.c1_bytes {
+            caps_ok = false;
+        }
+        let sig_out = if i < l - 1 && s.fuse[i] { 1.0 } else { 0.0 };
+        let sig_in = if i > 0 && s.fuse[i - 1] { 1.0 } else { 0.0 };
+        let lc = layer_cost(&c, sig_out, sig_in, hw);
+        energy += lc.energy;
+        latency += lc.latency;
+    }
+    // fusion-group scratchpad footprints (shared group-walk semantics,
+    // see `costmodel::first_group_overflow`)
+    if crate::costmodel::first_group_overflow(
+        l, &s.fuse, hw.c2_bytes, false, |i| scratch.l2_bytes[i])
+        .is_some()
+    {
+        caps_ok = false;
+    }
+    Summary {
+        energy,
+        latency,
+        edp: energy * latency,
+        feasible: valid && caps_ok,
+    }
+}
+
+/// Evaluate a population serially over one reusable scratch; `out` is
+/// cleared and refilled in input order. This is the per-worker chunk
+/// kernel (the engine's parallel path runs it per thread) and the
+/// serial baseline `perf_hotpath` reports.
+pub fn eval_batch_into(pop: &[Strategy], w: &Workload, hw: &HwConfig,
+                       scratch: &mut SoaScratch, out: &mut Vec<Summary>) {
+    out.clear();
+    out.reserve(pop.len());
+    for s in pop {
+        out.push(eval_into(s, w, hw, scratch));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::costmodel;
+    use crate::mapping::decode::{decode, Relaxed};
+    use crate::util::rng::Rng;
+    use crate::workload::zoo;
+    use crate::workload::NDIMS;
+
+    fn random_pop(w: &Workload, hw: &HwConfig, n: usize, seed: u64)
+                  -> Vec<Strategy> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut relaxed = Relaxed::neutral(w);
+                for l in 0..w.len() {
+                    for d in 0..NDIMS {
+                        for s in 0..4 {
+                            relaxed.theta[l][d][s] = rng.range(-1.0, 9.0);
+                        }
+                    }
+                }
+                for i in 0..relaxed.sigma.len() {
+                    relaxed.sigma[i] = rng.f64();
+                }
+                decode(&relaxed, w, hw)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_kernel_matches_two_pass_path_bit_for_bit() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut scratch = SoaScratch::new();
+        for w in [zoo::vgg16(), zoo::gpt3_6_7b()] {
+            for s in random_pop(&w, &hw, 24, 0xBA7C4) {
+                let fast = eval_into(&s, &w, &hw, &mut scratch);
+                let slow = costmodel::evaluate(&s, &w, &hw);
+                assert_eq!(fast.energy, slow.energy);
+                assert_eq!(fast.latency, slow.latency);
+                assert_eq!(fast.edp, slow.edp);
+                assert_eq!(fast.feasible,
+                           costmodel::feasible(&s, &w, &hw).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernel_flags_infeasible_variants() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let mut scratch = SoaScratch::new();
+        // spatial overflow -> validate fails
+        let mut s = Strategy::trivial(&w);
+        s.mappings[0].factors[1][3] = 64;
+        assert!(!eval_into(&s, &w, &hw, &mut scratch).feasible);
+        // oversized fused group -> group scan fails
+        let mut s = Strategy::trivial(&w);
+        for d in 0..NDIMS {
+            s.mappings[0].factors[d][2] = w.layers[0].dims[d] as u64;
+            s.mappings[1].factors[d][2] = w.layers[1].dims[d] as u64;
+        }
+        s.fuse[0] = true;
+        let sm = eval_into(&s, &w, &hw, &mut scratch);
+        assert!(!sm.feasible);
+        assert!(sm.edp.is_finite(), "costs still reported");
+    }
+
+    #[test]
+    fn batch_matches_singles_and_scratch_is_reused() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 16, 9);
+        let mut scratch = SoaScratch::new();
+        let mut out = Vec::new();
+        eval_batch_into(&pop, &w, &hw, &mut scratch, &mut out);
+        assert_eq!(out.len(), pop.len());
+        let cap_before = scratch.l2_bytes.capacity();
+        for (s, sm) in pop.iter().zip(&out) {
+            assert_eq!(*sm, eval_into(s, &w, &hw, &mut scratch));
+        }
+        assert_eq!(scratch.l2_bytes.capacity(), cap_before,
+                   "scratch must not regrow for a fixed workload");
+    }
+}

@@ -7,6 +7,26 @@
 //! Rust model to the AOT artifacts. It is *not* the validation reference —
 //! that role belongs to the independent tile-walking simulator in
 //! `crate::sim`.
+//!
+//! Submodules:
+//!
+//! * [`tables`] — workload-invariant precomputation (divisor/prime
+//!   memoization, snap candidate sets, per-layer MAC products) shared
+//!   by decode, the candidate encoders and the gradient model.
+//! * [`batch`] — the allocation-free single-pass batch kernel behind
+//!   `search::EvalEngine` (components once per layer, inline
+//!   feasibility, reusable SoA scratch).
+//! * [`grad`] — the pure-Rust forward + reverse-mode implementation of
+//!   the *relaxed* cost model (Gumbel-Softmax snap, fusion sigma
+//!   modulation, penalty terms), the native backend of the FADiff
+//!   gradient search. The PJRT artifact is an optional accelerator of
+//!   the same math.
+
+pub mod batch;
+pub mod grad;
+pub mod tables;
+
+pub use tables::WorkloadTables;
 
 use crate::config::HwConfig;
 use crate::mapping::{LayerMapping, Strategy, SLOT_S, SLOT_T0, SLOT_T1,
@@ -145,12 +165,36 @@ pub fn layer_cost(c: &Comp, sig_out: f64, sig_in: f64, hw: &HwConfig)
     LayerCost { access: [a0, a1, a2, a3], latency, energy }
 }
 
-/// Evaluate a full strategy (per-replica totals; callers multiply by
-/// `workload.replicas` for full-model numbers).
-pub fn evaluate(s: &Strategy, w: &Workload, hw: &HwConfig) -> CostReport {
+/// Reusable per-layer buffers for the `_with` evaluation entry points
+/// (the shared implementation of [`evaluate`] / [`feasible`], which
+/// allocate a fresh scratch per call). Repeated single-candidate
+/// callers that need the full per-layer breakdown keep one scratch
+/// alive instead of paying `comps`/`per_layer` allocations per call;
+/// the engine's scoring hot path goes further and uses the leaner
+/// single-pass [`batch`] kernel with its [`batch::SoaScratch`]
+/// (`perf_hotpath` reports both lanes against the allocating path).
+#[derive(Debug, Default)]
+pub struct CostScratch {
+    pub comps: Vec<Comp>,
+    pub per_layer: Vec<LayerCost>,
+}
+
+impl CostScratch {
+    pub fn new() -> CostScratch {
+        CostScratch::default()
+    }
+}
+
+/// [`evaluate`] into a reusable scratch: fills `scratch.comps` /
+/// `scratch.per_layer` and returns `(energy, latency)` without heap
+/// allocation once the scratch has warmed to the layer count.
+pub fn evaluate_with(s: &Strategy, w: &Workload, hw: &HwConfig,
+                     scratch: &mut CostScratch) -> (f64, f64) {
     let l = w.len();
-    let mut comps = Vec::with_capacity(l);
-    let mut per_layer = Vec::with_capacity(l);
+    scratch.comps.clear();
+    scratch.comps.reserve(l);
+    scratch.per_layer.clear();
+    scratch.per_layer.reserve(l);
     let (mut energy, mut latency) = (0.0, 0.0);
     for i in 0..l {
         let c = components(&s.mappings[i], &w.layers[i].dims);
@@ -159,10 +203,24 @@ pub fn evaluate(s: &Strategy, w: &Workload, hw: &HwConfig) -> CostReport {
         let lc = layer_cost(&c, sig_out, sig_in, hw);
         energy += lc.energy;
         latency += lc.latency;
-        comps.push(c);
-        per_layer.push(lc);
+        scratch.comps.push(c);
+        scratch.per_layer.push(lc);
     }
-    CostReport { energy, latency, edp: energy * latency, per_layer, comps }
+    (energy, latency)
+}
+
+/// Evaluate a full strategy (per-replica totals; callers multiply by
+/// `workload.replicas` for full-model numbers).
+pub fn evaluate(s: &Strategy, w: &Workload, hw: &HwConfig) -> CostReport {
+    let mut scratch = CostScratch::new();
+    let (energy, latency) = evaluate_with(s, w, hw, &mut scratch);
+    CostReport {
+        energy,
+        latency,
+        edp: energy * latency,
+        per_layer: scratch.per_layer,
+        comps: scratch.comps,
+    }
 }
 
 /// EDP scaled to the full model (replicas^2: energy x latency each scale).
@@ -170,15 +228,50 @@ pub fn full_model_edp(report: &CostReport, w: &Workload) -> f64 {
     report.edp * w.replicas * w.replicas
 }
 
-/// Feasibility check (hard constraints of Sec 3.3): per-fusion-group L2
-/// footprint (Eq. 24-25), per-layer accumulator footprint, PE bounds.
-pub fn feasible(s: &Strategy, w: &Workload, hw: &HwConfig)
-                -> Result<(), String> {
+/// First fusion group (maximal run of fused edges — this walk is the
+/// allocation-free equivalent of [`Strategy::groups`]) whose summed L2
+/// footprint exceeds `cap`, as `(start, end, bytes)`. `l2_bytes(i)`
+/// supplies layer i's footprint; `multi_only` skips single-layer
+/// groups (decode's group repair handles those per layer). The single
+/// definition of group-capacity semantics shared by [`feasible_with`],
+/// [`batch::eval_into`] and `decode_with`.
+pub(crate) fn first_group_overflow<F>(layers: usize, fuse: &[bool],
+                                      cap: f64, multi_only: bool,
+                                      l2_bytes: F)
+                                      -> Option<(usize, usize, f64)>
+where
+    F: Fn(usize) -> f64,
+{
+    let mut start = 0usize;
+    let mut req = 0.0;
+    for i in 0..layers {
+        req += l2_bytes(i);
+        let fused_next = i + 1 < layers && fuse[i];
+        if !fused_next {
+            if (!multi_only || i > start) && req > cap {
+                return Some((start, i, req));
+            }
+            start = i + 1;
+            req = 0.0;
+        }
+    }
+    None
+}
+
+/// [`feasible`] into a reusable scratch (fills `scratch.comps`; does
+/// not touch `per_layer`). No heap allocation once warmed.
+pub fn feasible_with(s: &Strategy, w: &Workload, hw: &HwConfig,
+                     scratch: &mut CostScratch) -> Result<(), String> {
     s.validate(w, hw.pe_rows as u64, hw.pe_cols as u64)?;
-    let comps: Vec<Comp> = (0..w.len())
-        .map(|i| components(&s.mappings[i], &w.layers[i].dims))
-        .collect();
-    for c in &comps {
+    let l = w.len();
+    scratch.comps.clear();
+    scratch.comps.reserve(l);
+    for i in 0..l {
+        scratch
+            .comps
+            .push(components(&s.mappings[i], &w.layers[i].dims));
+    }
+    for c in &scratch.comps {
         let bytes = c.s_o1 * hw.acc_bytes;
         if bytes > hw.c1_bytes {
             return Err(format!(
@@ -187,20 +280,25 @@ pub fn feasible(s: &Strategy, w: &Workload, hw: &HwConfig)
             ));
         }
     }
-    for (a, b) in s.groups() {
-        let req: f64 = comps[a..=b]
-            .iter()
-            .map(|c| (c.s_w2 + c.s_i2) * hw.element_bytes)
-            .sum();
-        if req > hw.c2_bytes {
-            return Err(format!(
-                "fusion group [{a},{b}] scratchpad overflow: \
-                 {req:.0} B > {:.0} B",
-                hw.c2_bytes
-            ));
-        }
+    if let Some((a, b, req)) = first_group_overflow(
+        l, &s.fuse, hw.c2_bytes, false,
+        |i| (scratch.comps[i].s_w2 + scratch.comps[i].s_i2)
+            * hw.element_bytes)
+    {
+        return Err(format!(
+            "fusion group [{a},{b}] scratchpad overflow: \
+             {req:.0} B > {:.0} B",
+            hw.c2_bytes
+        ));
     }
     Ok(())
+}
+
+/// Feasibility check (hard constraints of Sec 3.3): per-fusion-group L2
+/// footprint (Eq. 24-25), per-layer accumulator footprint, PE bounds.
+pub fn feasible(s: &Strategy, w: &Workload, hw: &HwConfig)
+                -> Result<(), String> {
+    feasible_with(s, w, hw, &mut CostScratch::new())
 }
 
 #[cfg(test)]

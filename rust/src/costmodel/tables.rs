@@ -1,0 +1,181 @@
+//! Workload-invariant precomputation shared by the evaluation hot
+//! paths.
+//!
+//! Decoding a candidate used to recompute `mapping::divisors` and
+//! `mapping::prime_factors` for every (layer, dim) of every candidate —
+//! the same integers, factored thousands of times per search.
+//! [`WorkloadTables`] hoists all of it out of the per-candidate loop:
+//!
+//! * the full divisor list and prime factorization of every distinct
+//!   problem-dimension size (deduplicated — a VGG tower shares a handful
+//!   of sizes across dozens of (layer, dim) slots),
+//! * the log-subsampled divisor-candidate sets (and their log2 values)
+//!   the Gumbel-Softmax relaxation snaps onto ([`crate::costmodel::grad`]
+//!   and the AOT staging use the identical subsampling),
+//! * per-layer MAC products and the fusible-edge mask as floats.
+//!
+//! One instance per `(search, workload)` is shared by decode
+//! ([`crate::mapping::decode::decode_with`]), the candidate encoders
+//! (`search::encoding::*_with`), and the native differentiable model
+//! ([`crate::costmodel::grad::GradModel`]); the
+//! [`crate::search::EvalEngine`] owns one per engine and hands it out
+//! via `EvalEngine::tables`.
+
+use std::collections::HashMap;
+
+use crate::mapping::{divisor_candidates, divisors, prime_factors};
+use crate::workload::{Workload, NDIMS};
+
+/// Candidate bound per (dim, slot); mirrors the AOT artifacts' `K_MAX`
+/// so the native gradient model and the PJRT kernels snap onto the same
+/// divisor sets.
+pub const DEFAULT_K_MAX: usize = 32;
+
+/// Divisor/prime machinery of one problem-dimension size `n`.
+#[derive(Clone, Debug)]
+pub struct DimTable {
+    pub n: u64,
+    /// All divisors of `n`, ascending.
+    pub divisors: Vec<u64>,
+    /// `(prime, multiplicity)` pairs, primes ascending.
+    pub primes: Vec<(u64, u32)>,
+    /// Divisor candidates log-subsampled to `k_max` (the snap set).
+    pub cands: Vec<f64>,
+    /// `log2` of each candidate (snap logits live in log space).
+    pub log2_cands: Vec<f64>,
+}
+
+/// Precomputed per-workload tables (see module docs).
+#[derive(Clone, Debug)]
+pub struct WorkloadTables {
+    k_max: usize,
+    /// Unique tables, one per distinct dimension size.
+    tables: Vec<DimTable>,
+    /// `(layer, dim) -> tables` index.
+    idx: Vec<[usize; NDIMS]>,
+    /// Per-layer MAC products (same fold order as
+    /// [`crate::costmodel::components`]).
+    pub ops: Vec<f64>,
+    /// Edge fusibility as 1.0/0.0, length `L - 1`.
+    pub edge_mask: Vec<f64>,
+}
+
+impl WorkloadTables {
+    /// Tables with the default candidate bound ([`DEFAULT_K_MAX`]).
+    pub fn new(w: &Workload) -> WorkloadTables {
+        WorkloadTables::with_k_max(w, DEFAULT_K_MAX)
+    }
+
+    /// Tables with an explicit candidate bound (min 2).
+    pub fn with_k_max(w: &Workload, k_max: usize) -> WorkloadTables {
+        let k_max = k_max.max(2);
+        let mut by_n: HashMap<u64, usize> = HashMap::new();
+        let mut tables: Vec<DimTable> = Vec::new();
+        let mut idx = Vec::with_capacity(w.len());
+        for layer in &w.layers {
+            let mut row = [0usize; NDIMS];
+            for (d, slot) in row.iter_mut().enumerate() {
+                let n = layer.dims[d] as u64;
+                *slot = *by_n.entry(n).or_insert_with(|| {
+                    let cands: Vec<f64> = divisor_candidates(n, k_max)
+                        .iter()
+                        .map(|&c| c as f64)
+                        .collect();
+                    tables.push(DimTable {
+                        n,
+                        divisors: divisors(n),
+                        primes: prime_factors(n),
+                        log2_cands: cands.iter().map(|c| c.log2())
+                                         .collect(),
+                        cands,
+                    });
+                    tables.len() - 1
+                });
+            }
+            idx.push(row);
+        }
+        let ops = w
+            .layers
+            .iter()
+            .map(|l| l.dims.iter().map(|&d| d as f64).product())
+            .collect();
+        let edge_mask = w
+            .fusible
+            .iter()
+            .map(|&f| if f { 1.0 } else { 0.0 })
+            .collect();
+        WorkloadTables { k_max, tables, idx, ops, edge_mask }
+    }
+
+    /// The table of `(layer, dim)`.
+    #[inline]
+    pub fn dim(&self, l: usize, d: usize) -> &DimTable {
+        &self.tables[self.idx[l][d]]
+    }
+
+    /// Configured candidate bound.
+    pub fn k_max(&self) -> usize {
+        self.k_max
+    }
+
+    /// Layer count the tables were built for.
+    pub fn layers(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Distinct dimension sizes across the workload.
+    pub fn unique_sizes(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn tables_match_direct_computation() {
+        let w = zoo::vgg16();
+        let t = WorkloadTables::new(&w);
+        assert_eq!(t.layers(), w.len());
+        for l in 0..w.len() {
+            for d in 0..NDIMS {
+                let n = w.layers[l].dims[d] as u64;
+                let dt = t.dim(l, d);
+                assert_eq!(dt.n, n);
+                assert_eq!(dt.divisors, divisors(n));
+                assert_eq!(dt.primes, prime_factors(n));
+                let cands = divisor_candidates(n, DEFAULT_K_MAX);
+                assert_eq!(dt.cands.len(), cands.len());
+                for (a, &b) in dt.cands.iter().zip(&cands) {
+                    assert_eq!(*a, b as f64);
+                }
+            }
+        }
+        assert_eq!(t.ops[0], w.layers[0].ops());
+        assert_eq!(t.edge_mask.len(), w.len() - 1);
+    }
+
+    #[test]
+    fn duplicate_sizes_share_one_table() {
+        let w = zoo::vgg16();
+        let t = WorkloadTables::new(&w);
+        // vgg16 reuses a handful of sizes (1, 3, 64, 112, ...) across
+        // 16 layers x 7 dims = 112 slots
+        assert!(t.unique_sizes() < 20, "{} unique", t.unique_sizes());
+        // conv4_2 and conv4_3 share every dim size
+        for d in 0..NDIMS {
+            assert!(std::ptr::eq(t.dim(8, d), t.dim(9, d)));
+        }
+    }
+
+    #[test]
+    fn edge_mask_mirrors_fusibility() {
+        let w = zoo::gpt3_6_7b();
+        let t = WorkloadTables::new(&w);
+        for (i, &f) in w.fusible.iter().enumerate() {
+            assert_eq!(t.edge_mask[i] > 0.5, f);
+        }
+    }
+}

@@ -24,9 +24,11 @@ pub struct Fig4Report {
     pub methods: Vec<MethodTrace>,
 }
 
-/// Run all three methods with the same budget and seed base.
-pub fn run(rt: &Runtime, w: &Workload, hw: &HwConfig, seconds: f64,
-           seed: u64) -> Result<Fig4Report> {
+/// Run all three methods with the same budget and seed base. The
+/// gradient trace uses PJRT when `rt` is `Some` and the native
+/// differentiable backend otherwise.
+pub fn run(rt: Option<&Runtime>, w: &Workload, hw: &HwConfig,
+           seconds: f64, seed: u64) -> Result<Fig4Report> {
     let budget = Budget { seconds, max_iters: usize::MAX };
 
     let rg = gradient::optimize(
@@ -117,7 +119,7 @@ mod tests {
         };
         let hw = load_config(&repo_root(), "large").unwrap();
         let w = zoo::resnet18();
-        let r = run(&rt, &w, &hw, 3.0, 99).unwrap();
+        let r = run(Some(&rt), &w, &hw, 3.0, 99).unwrap();
         assert_eq!(r.methods.len(), 3);
         let grad = r.methods[0].final_edp;
         for m in &r.methods[1..] {

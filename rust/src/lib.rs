@@ -9,11 +9,13 @@
 //! * **L2 (JAX, build-time python)** — the unified differentiable
 //!   energy/latency/EDP model with penalty terms and `value_and_grad`,
 //!   AOT-lowered to HLO text under `artifacts/`.
-//! * **L3 (this crate)** — the optimizer runtime: PJRT execution of the AOT
-//!   artifacts, the Adam-based constrained gradient search, the GA / BO /
-//!   layer-wise (DOSA-like) baselines, the Timeloop-like golden tile
-//!   simulator, the DeFiNES-like depth-first fusion baseline, the workload
-//!   zoo, and the coordinator service + experiment harnesses.
+//! * **L3 (this crate)** — the optimizer runtime: the Adam-based
+//!   constrained gradient search over a pure-Rust differentiable cost
+//!   model ([`costmodel::grad`], always available; the AOT artifacts
+//!   on PJRT are an optional accelerator of the same math), the GA /
+//!   BO / layer-wise (DOSA-like) baselines, the Timeloop-like golden
+//!   tile simulator, the DeFiNES-like depth-first fusion baseline, the
+//!   workload zoo, and the coordinator service + experiment harnesses.
 //!
 //! Python never runs on the optimization hot path: `make artifacts` lowers
 //! the JAX model once and the Rust binary is self-contained afterwards.
@@ -23,9 +25,11 @@
 //! The workspace root (one directory up) holds the tier-1 verify
 //! commands: `cargo build --release && cargo test -q`. The crate has
 //! zero registry dependencies — `anyhow` and `xla` resolve to
-//! hand-rolled shims under `vendor/`; swapping `vendor/xla` for a real
-//! PJRT-backed crate (plus `make artifacts`) enables the gradient
-//! methods, which every dependent path detects at runtime via
+//! hand-rolled shims under `vendor/`. Every search method (including
+//! the gradient ones) runs in this configuration; swapping
+//! `vendor/xla` for a real PJRT-backed crate (plus `make artifacts`)
+//! adds the PJRT accelerator for the gradient inner loop, which every
+//! dependent path detects at runtime via
 //! [`runtime::Runtime::load_if_available`].
 //!
 //! # Evaluation engine
@@ -35,7 +39,12 @@
 //! [`search::EvalEngine`]: batched parallel evaluation on
 //! [`util::threadpool`] with exact keyed memoization of
 //! `(strategy) -> (energy, latency, EDP)` per `(workload, hardware)`
-//! pair, bit-for-bit identical to [`costmodel::evaluate`].
+//! pair. Per candidate the engine runs the single-pass allocation-free
+//! [`costmodel::batch`] kernel over per-thread reusable scratch,
+//! bit-for-bit identical to [`costmodel::evaluate`] +
+//! [`costmodel::feasible`]; per-workload divisor/prime tables
+//! ([`costmodel::WorkloadTables`]) are shared across decode, the
+//! candidate encoders and the native gradient model.
 //!
 //! # Serving layer
 //!

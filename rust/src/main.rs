@@ -28,6 +28,8 @@ USAGE: fadiff <subcommand> [flags]
             --seconds 10 --seed 1
             methods: fadiff | dosa | ga | bo | random
             workloads: gpt3 vgg19 vgg16 mobilenet resnet18
+            (every method runs without AOT artifacts; when present,
+            PJRT accelerates the gradient methods)
   table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
   fig3                                           (paper Figure 3)
   fig4      --workload resnet18 --seconds 10     (paper Figure 4)
@@ -132,13 +134,16 @@ fn cmd_fig3(_args: &Args) -> Result<()> {
 }
 
 fn cmd_fig4(args: &Args) -> Result<()> {
-    let rt = Runtime::load_default()?;
+    // PJRT accelerates the gradient trace when available; the native
+    // differentiable backend serves it otherwise
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
     let hw = fadiff::config::load_config(&repo_root(), "large")?;
     let name = args.get_or("workload", "resnet18");
     let w = zoo::by_name(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload {name:?}"))?;
     let seconds = args.get_f64("seconds", 10.0)?;
-    let r = fig4::run(&rt, &w, &hw, seconds, args.get_u64("seed", 1)?)?;
+    let r = fig4::run(rt.as_ref(), &w, &hw, seconds,
+                      args.get_u64("seed", 1)?)?;
     println!("{}", fig4::render(&r));
     Ok(())
 }

@@ -20,8 +20,10 @@
 
 use crate::config::HwConfig;
 use crate::costmodel;
-use crate::mapping::{prime_factors, LayerMapping, Strategy, NSLOTS,
-                     SLOT_S, SLOT_T1, SLOT_T2};
+use crate::costmodel::tables::{DimTable, WorkloadTables};
+use crate::mapping::{divisors, prime_factors, smallest_prime_factor,
+                     LayerMapping, Strategy, NSLOTS, SLOT_S, SLOT_T1,
+                     SLOT_T2};
 use crate::workload::{Workload, DIM_C, DIM_K, NDIMS};
 
 /// Continuous optimization state to decode (log2-space theta, sigmoid'd
@@ -52,7 +54,15 @@ impl Relaxed {
 /// actually scored. Slot caps bound the snap (u64::MAX = unbounded).
 fn allocate_primes(n: u64, targets: [f64; NSLOTS], caps: [u64; NSLOTS])
                    -> [u64; NSLOTS] {
-    let divs = crate::mapping::divisors(n);
+    allocate_primes_from(&divisors(n), &prime_factors(n), targets, caps)
+}
+
+/// [`allocate_primes`] over precomputed divisor/prime tables (the
+/// shared [`WorkloadTables`] hands these out, so batch decoding stops
+/// re-factoring the same dimension sizes per candidate).
+fn allocate_primes_from(divs: &[u64], primes: &[(u64, u32)],
+                        targets: [f64; NSLOTS], caps: [u64; NSLOTS])
+                        -> [u64; NSLOTS] {
     let mut fac = [1u64; NSLOTS];
     for s in 0..NSLOTS {
         let t = targets[s].max(1.0).ln();
@@ -70,7 +80,7 @@ fn allocate_primes(n: u64, targets: [f64; NSLOTS], caps: [u64; NSLOTS])
     // Trim: for every prime of n, the slots may jointly use at most its
     // multiplicity in n. Remove excess from the slot whose factor is
     // furthest ABOVE its target (least harm), preferring temporal slots.
-    for (p, mp) in prime_factors(n) {
+    for &(p, mp) in primes {
         let mult = |f: u64| -> u32 {
             let mut f = f;
             let mut c = 0;
@@ -101,7 +111,9 @@ fn allocate_primes(n: u64, targets: [f64; NSLOTS], caps: [u64; NSLOTS])
     fac
 }
 
-/// Decode one layer's theta block into a legal mapping.
+/// Decode one layer's theta block into a legal mapping (standalone:
+/// factors the dimension sizes itself; batch callers go through
+/// [`decode_with`] and the shared tables instead).
 pub fn decode_layer(theta: &[[f64; NSLOTS]; NDIMS], dims: &[usize; NDIMS],
                     hw: &HwConfig) -> LayerMapping {
     let mut m = LayerMapping::trivial();
@@ -110,22 +122,46 @@ pub fn decode_layer(theta: &[[f64; NSLOTS]; NDIMS], dims: &[usize; NDIMS],
         if n == 1 {
             continue;
         }
-        let mut targets = [0.0; NSLOTS];
-        for s in 0..NSLOTS {
-            targets[s] = theta[d][s].exp2().clamp(1.0, n as f64);
-        }
-        let mut caps = [u64::MAX; NSLOTS];
-        caps[SLOT_S] = match d {
-            DIM_K => hw.pe_cols as u64,
-            DIM_C => hw.pe_rows as u64,
-            _ => 1,
-        };
-        if caps[SLOT_S] == 1 {
-            targets[SLOT_S] = 1.0;
-        }
-        m.factors[d] = allocate_primes(n, targets, caps);
+        m.factors[d] = allocate_slots(theta, d, n, hw, &divisors(n),
+                                      &prime_factors(n));
     }
     m
+}
+
+/// [`decode_layer`] over the shared per-workload tables.
+fn decode_layer_with(theta: &[[f64; NSLOTS]; NDIMS], l: usize,
+                     hw: &HwConfig, tables: &WorkloadTables)
+                     -> LayerMapping {
+    let mut m = LayerMapping::trivial();
+    for d in 0..NDIMS {
+        let dt: &DimTable = tables.dim(l, d);
+        if dt.n == 1 {
+            continue;
+        }
+        m.factors[d] =
+            allocate_slots(theta, d, dt.n, hw, &dt.divisors, &dt.primes);
+    }
+    m
+}
+
+/// Shared slot allocation for one dimension (targets + caps + snap).
+fn allocate_slots(theta: &[[f64; NSLOTS]; NDIMS], d: usize, n: u64,
+                  hw: &HwConfig, divs: &[u64],
+                  primes: &[(u64, u32)]) -> [u64; NSLOTS] {
+    let mut targets = [0.0; NSLOTS];
+    for s in 0..NSLOTS {
+        targets[s] = theta[d][s].exp2().clamp(1.0, n as f64);
+    }
+    let mut caps = [u64::MAX; NSLOTS];
+    caps[SLOT_S] = match d {
+        DIM_K => hw.pe_cols as u64,
+        DIM_C => hw.pe_rows as u64,
+        _ => 1,
+    };
+    if caps[SLOT_S] == 1 {
+        targets[SLOT_S] = 1.0;
+    }
+    allocate_primes_from(divs, primes, targets, caps)
 }
 
 /// Demote one prime from the given slot toward DRAM (returns false when
@@ -135,8 +171,7 @@ fn demote_slot(m: &mut LayerMapping, d: usize, slot: usize) -> bool {
     if f <= 1 {
         return false;
     }
-    let p = prime_factors(f)[0].0; // smallest prime
-    m.factors[d][slot] /= p;
+    m.factors[d][slot] /= smallest_prime_factor(f);
     true
 }
 
@@ -178,46 +213,57 @@ fn repair_layer(m: &mut LayerMapping, dims: &[usize; NDIMS], hw: &HwConfig) {
     }
 }
 
-/// Decode a full relaxed state into a hardware-valid [`Strategy`].
+/// Decode a full relaxed state into a hardware-valid [`Strategy`]
+/// (standalone entry point: builds the divisor/prime tables for this
+/// one call). Searches that decode many candidates of the same
+/// workload should build one [`WorkloadTables`] and use
+/// [`decode_with`] — the tables are exactly the per-dimension
+/// factorizations this function otherwise recomputes per candidate.
 pub fn decode(relaxed: &Relaxed, w: &Workload, hw: &HwConfig) -> Strategy {
+    decode_with(relaxed, w, hw, &WorkloadTables::new(w))
+}
+
+/// [`decode`] over shared precomputed tables (the per-candidate hot
+/// path of every search). Besides the memoized factorizations, the
+/// fusion-group repair here is allocation-light: the per-layer L2
+/// footprints are computed once (mappings never change during edge
+/// cutting) and the group scan walks the fuse bits directly instead of
+/// cloning the strategy per iteration.
+pub fn decode_with(relaxed: &Relaxed, w: &Workload, hw: &HwConfig,
+                   tables: &WorkloadTables) -> Strategy {
     assert_eq!(relaxed.theta.len(), w.len());
-    let mappings: Vec<LayerMapping> = (0..w.len())
+    let l_n = w.len();
+    let mappings: Vec<LayerMapping> = (0..l_n)
         .map(|l| {
-            let mut m = decode_layer(&relaxed.theta[l], &w.layers[l].dims,
-                                     hw);
+            let mut m = decode_layer_with(&relaxed.theta[l], l, hw,
+                                          tables);
             repair_layer(&mut m, &w.layers[l].dims, hw);
             m
         })
         .collect();
 
     // fusion: threshold sigma, mask illegal edges
-    let mut fuse: Vec<bool> = (0..w.len().saturating_sub(1))
+    let mut fuse: Vec<bool> = (0..l_n.saturating_sub(1))
         .map(|i| relaxed.sigma[i] > 0.5 && w.fusible[i])
+        .collect();
+
+    // per-layer L2 footprints: invariant under edge cutting
+    let l2_bytes: Vec<f64> = (0..l_n)
+        .map(|i| {
+            let c = costmodel::components(&mappings[i],
+                                          &w.layers[i].dims);
+            (c.s_w2 + c.s_i2) * hw.element_bytes
+        })
         .collect();
 
     // group-capacity repair: cut weakest edges until every group fits
     loop {
-        let s = Strategy { mappings: mappings.clone(), fuse: fuse.clone() };
-        let comps: Vec<costmodel::Comp> = (0..w.len())
-            .map(|i| costmodel::components(&mappings[i], &w.layers[i].dims))
-            .collect();
-        let mut violated: Option<(usize, usize)> = None;
-        for (a, b) in s.groups() {
-            if a == b {
-                continue;
-            }
-            let req: f64 = comps[a..=b]
-                .iter()
-                .map(|c| (c.s_w2 + c.s_i2) * hw.element_bytes)
-                .sum();
-            if req > hw.c2_bytes {
-                violated = Some((a, b));
-                break;
-            }
-        }
+        // first violating multi-layer group (maximal fused run)
+        let violated = costmodel::first_group_overflow(
+            l_n, &fuse, hw.c2_bytes, true, |i| l2_bytes[i]);
         match violated {
             None => break,
-            Some((a, b)) => {
+            Some((a, b, _)) => {
                 // cut the lowest-sigma edge inside the group
                 let cut = (a..b)
                     .filter(|&i| fuse[i])
@@ -325,6 +371,33 @@ mod tests {
                   costmodel::feasible(&s, workload, &hw)
                       .map_err(|e| format!("{}: {e}", workload.name))
               });
+    }
+
+    #[test]
+    fn decode_with_tables_matches_standalone() {
+        let hw = hw();
+        let mut rng = Rng::new(0xD0);
+        for w in zoo::table1_suite() {
+            let tables = WorkloadTables::new(&w);
+            for _ in 0..8 {
+                let mut relaxed = Relaxed::neutral(&w);
+                for l in 0..w.len() {
+                    for d in 0..NDIMS {
+                        for s in 0..NSLOTS {
+                            relaxed.theta[l][d][s] =
+                                rng.range(-3.0, 12.0);
+                        }
+                    }
+                }
+                for i in 0..relaxed.sigma.len() {
+                    relaxed.sigma[i] = rng.f64();
+                }
+                let a = decode(&relaxed, &w, &hw);
+                let b = decode_with(&relaxed, &w, &hw, &tables);
+                assert_eq!(a.mappings, b.mappings, "{}", w.name);
+                assert_eq!(a.fuse, b.fuse, "{}", w.name);
+            }
+        }
     }
 
     #[test]

@@ -169,6 +169,23 @@ pub fn divisor_candidates(n: u64, k_max: usize) -> Vec<u64> {
     idx.into_iter().map(|i| ds[i]).collect()
 }
 
+/// Smallest prime factor of `n` (`n` for primes, 1 for `n <= 1`).
+/// Allocation-free — the decode capacity-repair loop calls this per
+/// demotion, where materializing the full factorization was pure churn.
+pub fn smallest_prime_factor(n: u64) -> u64 {
+    if n <= 1 {
+        return 1;
+    }
+    let mut p = 2;
+    while p * p <= n {
+        if n % p == 0 {
+            return p;
+        }
+        p += 1;
+    }
+    n
+}
+
 /// Prime factorization as (prime, multiplicity) pairs.
 pub fn prime_factors(mut n: u64) -> Vec<(u64, u32)> {
     let mut out = Vec::new();
@@ -210,6 +227,17 @@ mod tests {
         assert_eq!(*c.first().unwrap(), 1);
         assert_eq!(*c.last().unwrap(), 25088);
         assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn smallest_prime_factor_matches_factorization() {
+        for n in 1..2000u64 {
+            let expect = prime_factors(n)
+                .first()
+                .map(|&(p, _)| p)
+                .unwrap_or(1);
+            assert_eq!(smallest_prime_factor(n), expect, "n={n}");
+        }
     }
 
     #[test]

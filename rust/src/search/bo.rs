@@ -20,7 +20,7 @@ use crate::config::HwConfig;
 use crate::util::rng::Rng;
 use crate::workload::Workload;
 
-use super::encoding::{dim, express};
+use super::encoding::{dim, express_with};
 use super::gp::Gp;
 use super::{Budget, EvalCtx, Incumbent, SearchResult};
 
@@ -85,7 +85,10 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
     let design: Vec<Vec<f64>> = (0..init)
         .map(|_| (0..d).map(|_| rng.f64()).collect())
         .collect();
-    let scored = inc.engine.eval_population(&design, |x| express(x, w, hw));
+    let tables = std::sync::Arc::clone(inc.engine.tables());
+    let scored = inc
+        .engine
+        .eval_population(&design, |x| express_with(x, w, hw, &tables));
     for (x, (s, e)) in design.into_iter().zip(scored) {
         if inc.cancelled() || inc.elapsed() > budget.seconds {
             break;
@@ -151,7 +154,7 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
                 // degenerate kernel: fall back to random sampling
                 None => (0..d).map(|_| rng.f64()).collect(),
             };
-        let s = express(&next_x, w, hw);
+        let s = express_with(&next_x, w, hw, &tables);
         let e = inc.engine.eval(&s);
         let edp = inc.offer_eval(&s, e, iter);
         xs.push(next_x);

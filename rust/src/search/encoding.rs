@@ -5,7 +5,8 @@
 //! (the paper's "same search spaces" protocol, Sec 4.3.1).
 
 use crate::config::HwConfig;
-use crate::mapping::decode::{decode, Relaxed};
+use crate::costmodel::WorkloadTables;
+use crate::mapping::decode::{decode_with, Relaxed};
 use crate::mapping::Strategy;
 use crate::workload::{Workload, NDIMS};
 
@@ -14,8 +15,17 @@ pub fn dim(w: &Workload) -> usize {
     w.len() * NDIMS * 4 + w.fusible.len()
 }
 
-/// Decode a unit-cube vector into a hardware-valid strategy.
+/// Decode a unit-cube vector into a hardware-valid strategy
+/// (standalone: builds the workload tables for this one call).
 pub fn express(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
+    express_with(x, w, hw, &WorkloadTables::new(w))
+}
+
+/// [`express`] over shared precomputed tables (the BO hot path — one
+/// [`WorkloadTables`] per search instead of one factorization sweep
+/// per candidate; `EvalEngine::tables` provides it).
+pub fn express_with(x: &[f64], w: &Workload, hw: &HwConfig,
+                    tables: &WorkloadTables) -> Strategy {
     let mut relaxed = Relaxed::neutral(w);
     for l in 0..w.len() {
         for d in 0..NDIMS {
@@ -30,7 +40,7 @@ pub fn express(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
     for i in 0..relaxed.sigma.len() {
         relaxed.sigma[i] = x[base + i].clamp(0.0, 1.0);
     }
-    decode(&relaxed, w, hw)
+    decode_with(&relaxed, w, hw, tables)
 }
 
 
@@ -43,7 +53,13 @@ pub fn express(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
 /// reset to the trivial mapping; a fusion group that overflows drops all
 /// its edges.
 pub fn express_naive(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
-    use crate::mapping::{divisors, LayerMapping, SLOT_S};
+    express_naive_with(x, w, hw, &WorkloadTables::new(w))
+}
+
+/// [`express_naive`] over shared precomputed tables (the GA hot path).
+pub fn express_naive_with(x: &[f64], w: &Workload, hw: &HwConfig,
+                          tables: &WorkloadTables) -> Strategy {
+    use crate::mapping::{LayerMapping, SLOT_S};
     use crate::workload::{DIM_C, DIM_K};
 
     let mut mappings = Vec::with_capacity(w.len());
@@ -51,7 +67,7 @@ pub fn express_naive(x: &[f64], w: &Workload, hw: &HwConfig) -> Strategy {
         let mut m = LayerMapping::trivial();
         for d in 0..NDIMS {
             let n = w.layers[l].dims[d] as u64;
-            let divs = divisors(n);
+            let divs = &tables.dim(l, d).divisors;
             let cap = (n as f64).log2().max(0.0);
             for s in 0..4 {
                 let u = x[(l * NDIMS + d) * 4 + s].clamp(0.0, 1.0);

@@ -3,7 +3,7 @@
 //!
 //! GA/BO/random search and the Table-1/Fig-3/Fig-4 harnesses spend
 //! nearly all of their time in the analytical cost model (paper
-//! Eqs. 4-19). [`EvalEngine`] makes that hot path fast two ways:
+//! Eqs. 4-19). [`EvalEngine`] makes that hot path fast three ways:
 //!
 //! * **Parallel batch scoring** — whole candidate populations decode and
 //!   evaluate concurrently, either on per-call scoped threads
@@ -20,20 +20,41 @@
 //!   ([`crate::coordinator::CacheRegistry`]), so repeated and
 //!   concurrent jobs on the same pair reuse each other's work across
 //!   job and connection boundaries.
+//! * **Single-pass allocation-free scoring** — each candidate runs the
+//!   [`crate::costmodel::batch`] kernel: components once per layer,
+//!   feasibility folded into the same pass, per-thread reusable SoA
+//!   scratch. The pre-batch path computed components twice (feasible +
+//!   evaluate) and allocated four vectors per candidate.
 //!
 //! Results are bit-for-bit identical to calling
-//! [`crate::costmodel::evaluate`] directly: the engine runs exactly that
-//! code per candidate, it only changes *where* and *how often* it runs.
+//! [`crate::costmodel::evaluate`] + [`crate::costmodel::feasible`]
+//! directly — the batch kernel runs exactly that math per candidate, it
+//! only changes *where* and *how often* it runs (pinned by the property
+//! tests in `rust/tests/eval_engine.rs`).
+//!
+//! Each engine also owns the shared [`WorkloadTables`] of its workload
+//! (divisor/prime memoization); decode-and-score callers
+//! ([`EvalEngine::eval_population`]) fetch them via
+//! [`EvalEngine::tables`] so candidate decoding stops re-factoring
+//! dimension sizes.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::HwConfig;
-use crate::costmodel;
+use crate::costmodel::{batch, WorkloadTables};
 use crate::mapping::{Strategy, NSLOTS};
 use crate::util::threadpool::{par_map, ThreadPool};
 use crate::workload::{Workload, NDIMS};
+
+thread_local! {
+    /// Per-thread scratch for the batch kernel: engine scoring is
+    /// allocation-free on every worker after the first candidate.
+    static EVAL_SCRATCH: RefCell<batch::SoaScratch> =
+        RefCell::new(batch::SoaScratch::new());
+}
 
 /// Default bound on cached entries; the cache is cleared wholesale when
 /// it fills (simple, predictable memory ceiling). Keys are exact
@@ -176,6 +197,7 @@ pub struct EvalEngine<'a> {
     threads: usize,
     cache: Arc<EvalCache>,
     pool: Option<Arc<ThreadPool>>,
+    tables: Arc<WorkloadTables>,
 }
 
 impl<'a> EvalEngine<'a> {
@@ -199,6 +221,7 @@ impl<'a> EvalEngine<'a> {
             threads: threads.max(1),
             cache: Arc::new(EvalCache::default()),
             pool: None,
+            tables: Arc::new(WorkloadTables::new(w)),
         }
     }
 
@@ -231,6 +254,14 @@ impl<'a> EvalEngine<'a> {
     /// The memoization store (shared or private).
     pub fn cache(&self) -> &Arc<EvalCache> {
         &self.cache
+    }
+
+    /// The shared workload tables (divisor/prime memoization). Decode
+    /// closures handed to [`EvalEngine::eval_population`] should use
+    /// these (`decode_with`, `express_with`, ...) instead of
+    /// re-factoring dimension sizes per candidate.
+    pub fn tables(&self) -> &Arc<WorkloadTables> {
+        &self.tables
     }
 
     pub fn workload(&self) -> &'a Workload {
@@ -266,11 +297,13 @@ impl<'a> EvalEngine<'a> {
         self.cache.clear();
     }
 
-    /// The raw per-candidate computation: feasibility check + closed-form
-    /// evaluation. Capacity-infeasible strategies still get real
-    /// energy/latency numbers (fig3 relies on that); strategies with the
-    /// wrong arity cannot be indexed by the cost model at all and come
-    /// back as plain infeasible instead of panicking.
+    /// The raw per-candidate computation: the single-pass batch kernel
+    /// (feasibility + closed-form evaluation over a per-thread reusable
+    /// scratch — zero allocation per candidate). Capacity-infeasible
+    /// strategies still get real energy/latency numbers (fig3 relies on
+    /// that); strategies with the wrong arity cannot be indexed by the
+    /// cost model at all and come back as plain infeasible instead of
+    /// panicking.
     fn compute(&self, s: &Strategy) -> Eval {
         if s.mappings.len() != self.w.len()
             || s.fuse.len() != self.w.len().saturating_sub(1)
@@ -282,9 +315,16 @@ impl<'a> EvalEngine<'a> {
                 feasible: false,
             };
         }
-        let feasible = costmodel::feasible(s, self.w, self.hw).is_ok();
-        let r = costmodel::evaluate(s, self.w, self.hw);
-        Eval { energy: r.energy, latency: r.latency, edp: r.edp, feasible }
+        EVAL_SCRATCH.with(|sc| {
+            let sm = batch::eval_into(s, self.w, self.hw,
+                                      &mut sc.borrow_mut());
+            Eval {
+                energy: sm.energy,
+                latency: sm.latency,
+                edp: sm.edp,
+                feasible: sm.feasible,
+            }
+        })
     }
 
     /// Run the heavy per-index closure over `n` indices: persistent
@@ -385,6 +425,7 @@ impl<'a> EvalEngine<'a> {
 mod tests {
     use super::*;
     use crate::config::{load_config, repo_root};
+    use crate::costmodel;
     use crate::mapping::decode::{decode, Relaxed};
     use crate::util::rng::Rng;
     use crate::workload::zoo;

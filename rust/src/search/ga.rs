@@ -20,7 +20,7 @@ use crate::config::HwConfig;
 use crate::util::rng::Rng;
 use crate::workload::{Workload, NDIMS};
 
-use super::encoding::{dim, express_naive};
+use super::encoding::{dim, express_naive_with};
 use super::{Budget, EvalCtx, Incumbent, SearchResult};
 
 /// GA hyper-parameters.
@@ -73,13 +73,15 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
     let mut fitness = vec![f64::INFINITY; pop.len()];
     let mut gen = 0usize;
 
+    let tables = std::sync::Arc::clone(inc.engine.tables());
     while gen < budget.max_iters && !inc.stopped(&budget) {
         gen += 1;
         // decode + score the whole generation in parallel (cache folds
         // elites and crossover duplicates)
         let scored = inc
             .engine
-            .eval_population(&pop, |g| express_naive(g, w, hw));
+            .eval_population(&pop,
+                             |g| express_naive_with(g, w, hw, &tables));
         for (i, (s, e)) in scored.iter().enumerate() {
             fitness[i] = inc.offer_eval(s, *e, gen);
         }

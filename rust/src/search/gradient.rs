@@ -1,15 +1,24 @@
-//! The FADiff optimizer (paper Sec 3.3): constrained gradient descent on
-//! the continuous relaxation, executed against the AOT `fadiff_grad`
-//! artifact via PJRT.
+//! The FADiff optimizer (paper Sec 3.3): constrained gradient descent
+//! on the continuous relaxation.
 //!
-//! Per step: Rust samples Gumbel noise, stages `theta`/`sigma_logit`
-//! (workload constants are staged once), executes one PJRT call for
-//! loss + gradients, and applies an Adam update. The Gumbel-Softmax
+//! Per step: sample Gumbel noise, evaluate loss + gradients of the
+//! relaxed cost model, apply an Adam update. The Gumbel-Softmax
 //! temperature anneals `tau0 -> tau_min` geometrically and the penalty
 //! weight lambda ramps up, exactly as Sec 3.1.1/3.3 describe. The
 //! incumbent is refreshed by decoding the relaxed state (Sec 3.1's
 //! continuous-to-discrete projection + capacity repair) and evaluating
-//! natively.
+//! natively through the search's `EvalEngine`.
+//!
+//! Two interchangeable backends compute the loss/gradient step:
+//!
+//! * **Native** (the default, always available) — the pure-Rust
+//!   forward + reverse model in [`crate::costmodel::grad`], f64, zero
+//!   allocation per step. Selected whenever no runtime is passed.
+//! * **PJRT** (optional accelerator) — the AOT `fadiff_grad` artifact
+//!   executed via PJRT, exactly as before. Callers probe it with
+//!   [`Runtime::load_if_available`] and pass `Some(rt)`; environments
+//!   without artifacts pass `None` and lose nothing but the
+//!   accelerator.
 //!
 //! The DOSA baseline (layer-wise gradient, MICRO'23 [8]) is this same
 //! engine with `fuse_enabled = false`: sigma is pinned to 0 via the edge
@@ -19,13 +28,14 @@
 use anyhow::Result;
 
 use crate::config::HwConfig;
-use crate::mapping::decode::{decode, Relaxed};
+use crate::costmodel::grad::{GradModel, GradScratch, SnapMode};
+use crate::mapping::decode::{decode_with, Relaxed};
 use crate::runtime::stage::WorkloadStage;
 use crate::runtime::{HostTensor, Runtime, ART_GRAD};
 use crate::util::rng::{GumbelPool, Rng};
 use crate::workload::{Workload, NDIMS};
 
-use super::{Budget, Incumbent, SearchResult};
+use super::{Budget, EvalCtx, Incumbent, SearchResult};
 
 /// Hyper-parameters of the gradient search.
 #[derive(Clone, Debug)]
@@ -138,17 +148,143 @@ fn init_theta(w: &Workload, hw: &HwConfig, rng: &mut Rng, l_max: usize)
     theta
 }
 
-/// Run the FADiff (or DOSA) gradient search.
-pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
+/// Penalty-ramp progress in [0, 1]: fraction of the iteration budget
+/// consumed, or of the wall-clock budget — whichever is further along.
+/// Under pure seconds budgets `max_iters` is effectively unbounded, so
+/// the iteration fraction alone stays ~0 and the lambda ramp of
+/// Sec 3.1.1 would never engage (penalties stuck at `lambda0` for the
+/// whole run); the wall-clock fraction drives it there instead.
+fn ramp_progress(it: usize, per_restart: usize, inc: &Incumbent,
+                 budget: &Budget) -> f64 {
+    let by_iter = it as f64 / per_restart.max(1) as f64;
+    let by_time = if budget.seconds.is_finite() {
+        inc.elapsed() / budget.seconds.max(1e-9)
+    } else {
+        0.0
+    };
+    by_iter.max(by_time).min(1.0)
+}
+
+/// Clamp parameters into the numerically safe box the optimizer
+/// explores (theta per-dim capped at the problem size, sigma bounded).
+fn clamp_params(theta: &mut [f64], sigma: &mut [f64], w: &Workload) {
+    for (l, layer) in w.layers.iter().enumerate() {
+        for d in 0..NDIMS {
+            let cap = (layer.dims[d] as f64).log2().max(0.0) + 0.5;
+            for s in 0..4 {
+                let idx = (l * NDIMS + d) * 4 + s;
+                theta[idx] = theta[idx].clamp(-2.0, cap);
+            }
+        }
+    }
+    for s in sigma.iter_mut() {
+        *s = s.clamp(-8.0, 8.0);
+    }
+}
+
+/// Run the FADiff (or DOSA) gradient search. `rt` selects the backend:
+/// `Some` runs the AOT artifact on PJRT, `None` runs the pure-Rust
+/// differentiable model — same optimizer, same annealing, same decode.
+pub fn optimize(rt: Option<&Runtime>, w: &Workload, hw: &HwConfig,
                 cfg: &GradientConfig, budget: Budget)
                 -> Result<SearchResult> {
+    optimize_ctx(rt, w, hw, cfg, budget, &EvalCtx::default())
+}
+
+/// [`optimize`] with a serving-layer context (shared cache / persistent
+/// pool / cooperative cancellation for the incumbent refreshes).
+pub fn optimize_ctx(rt: Option<&Runtime>, w: &Workload, hw: &HwConfig,
+                    cfg: &GradientConfig, budget: Budget, ctx: &EvalCtx)
+                    -> Result<SearchResult> {
+    match rt {
+        Some(rt) => optimize_pjrt(rt, w, hw, cfg, budget, ctx),
+        None => optimize_native(w, hw, cfg, budget, ctx),
+    }
+}
+
+/// The native backend: Adam over the pure-Rust differentiable model.
+fn optimize_native(w: &Workload, hw: &HwConfig, cfg: &GradientConfig,
+                   budget: Budget, ctx: &EvalCtx)
+                   -> Result<SearchResult> {
+    let mut rng = Rng::new(cfg.seed);
+    let gumbel_pool = GumbelPool::new(cfg.seed ^ 0x6789, 16);
+    let mut inc = Incumbent::with_ctx(w, hw, ctx);
+    inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+
+    let tables = std::sync::Arc::clone(inc.engine.tables());
+    let model = GradModel::new(w, hw, &tables, cfg.alpha,
+                               cfg.fuse_enabled, SnapMode::Straight);
+    let n_theta = model.n_theta();
+    let n_sigma = model.n_sigma();
+    let mut scratch = GradScratch::new();
+    let mut g_theta = vec![0.0f64; n_theta];
+    let mut g_sigma = vec![0.0f64; n_sigma];
+    let mut gumbel = vec![0.0f64; model.n_gumbel()];
+    let mut total_iters = 0usize;
+
+    let per_restart_iters = budget.max_iters
+        .saturating_div(cfg.restarts.max(1))
+        .max(1);
+
+    for _restart in 0..cfg.restarts.max(1) {
+        let mut theta = init_theta(w, hw, &mut rng, w.len());
+        // start mostly-unfused (sigma ~= 0.12): a 0.5 init inflates the
+        // soft group-footprint scan and distorts mappings on small
+        // scratchpads even when fusion is eventually rejected
+        let mut sigma = vec![-2.0f64; n_sigma];
+        let mut adam_t = Adam::new(n_theta, cfg.beta1, cfg.beta2);
+        let mut adam_s = Adam::new(n_sigma, cfg.beta1, cfg.beta2);
+        let mut tau = cfg.tau0;
+
+        for it in 0..per_restart_iters {
+            if inc.stopped(&budget) {
+                break;
+            }
+            total_iters += 1;
+            gumbel_pool.fill_f64(&mut rng, &mut gumbel);
+            let progress =
+                ramp_progress(it, per_restart_iters, &inc, &budget);
+            let lambda = cfg.lambda0
+                + (cfg.lambda_max - cfg.lambda0) * progress;
+
+            model.loss_and_grad(&theta, &sigma, &gumbel, tau, lambda,
+                                &mut scratch, &mut g_theta,
+                                &mut g_sigma);
+            adam_t.step(&mut theta, &g_theta, cfg.lr);
+            if cfg.fuse_enabled {
+                adam_s.step(&mut sigma, &g_sigma, cfg.lr_sigma);
+            }
+            clamp_params(&mut theta, &mut sigma, w);
+            tau = (tau * cfg.tau_decay).max(cfg.tau_min);
+
+            if it % cfg.decode_every == 0 || it + 1 == per_restart_iters
+            {
+                offer_decodes(&theta, &sigma, w, hw, cfg, &mut inc,
+                              total_iters);
+            }
+        }
+        // final decode of this restart
+        offer_decodes(&theta, &sigma, w, hw, cfg, &mut inc, total_iters);
+        if inc.stopped(&budget) {
+            break;
+        }
+    }
+    Ok(inc.finish(total_iters))
+}
+
+/// The PJRT backend: one artifact call per step for loss + gradients.
+/// Rust stages `theta`/`sigma_logit` (workload constants are staged
+/// once — ~150 KB of host copies per step otherwise; §Perf).
+fn optimize_pjrt(rt: &Runtime, w: &Workload, hw: &HwConfig,
+                 cfg: &GradientConfig, budget: Budget, ctx: &EvalCtx)
+                 -> Result<SearchResult> {
     let l_max = rt.manifest.l_max;
     let k_max = rt.manifest.k_max;
     let stage = WorkloadStage::new(w, hw, l_max, k_max)?;
     let grad_art = rt.get(ART_GRAD)?;
     let mut rng = Rng::new(cfg.seed);
     let gumbel_pool = GumbelPool::new(cfg.seed ^ 0x6789, 16);
-    let mut inc = Incumbent::new(w, hw);
+    let mut inc = Incumbent::with_ctx(w, hw, ctx);
 
     // always have a baseline incumbent
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
@@ -163,8 +299,7 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
         HostTensor::new(vec![0.0; l_max])
     };
 
-    // Pre-stage every workload-constant operand as a PJRT literal ONCE
-    // (~150 KB of host copies per step otherwise — §Perf).
+    // Pre-stage every workload-constant operand as a PJRT literal ONCE.
     let lit_dims = grad_art.stage_input(2, &stage.dims)?;
     let lit_div = grad_art.stage_input(3, &stage.div)?;
     let lit_div_mask = grad_art.stage_input(4, &stage.div_mask)?;
@@ -174,16 +309,13 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
         grad_art.stage_input(9, &HostTensor::scalar(cfg.alpha as f32))?;
     let lit_hw = grad_art.stage_input(11, &stage.hw)?;
 
-    let deadline = budget.seconds;
     let per_restart_iters = budget.max_iters
         .saturating_div(cfg.restarts.max(1))
         .max(1);
 
     for restart in 0..cfg.restarts.max(1) {
         let mut theta = init_theta(w, hw, &mut rng, l_max);
-        // start mostly-unfused (sigma ~= 0.12): a 0.5 init inflates the
-        // soft group-footprint scan and distorts mappings on small
-        // scratchpads even when fusion is eventually rejected
+        // see optimize_native for the sigma init rationale
         let mut sigma = vec![-2.0f64; l_max];
         let mut adam_t = Adam::new(n_theta, cfg.beta1, cfg.beta2);
         let mut adam_s = Adam::new(l_max, cfg.beta1, cfg.beta2);
@@ -194,7 +326,7 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
         let mut gumbel = vec![0.0f32; n_theta * k_max];
 
         for it in 0..per_restart_iters {
-            if inc.elapsed() > deadline {
+            if inc.stopped(&budget) {
                 break;
             }
             total_iters += 1;
@@ -206,9 +338,10 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
                 sigma_f32[i] = sigma[i] as f32;
             }
             gumbel_pool.fill(&mut rng, &mut gumbel);
-            let progress = it as f64 / per_restart_iters.max(1) as f64;
+            let progress =
+                ramp_progress(it, per_restart_iters, &inc, &budget);
             let lambda = cfg.lambda0
-                + (cfg.lambda_max - cfg.lambda0) * progress.min(1.0);
+                + (cfg.lambda_max - cfg.lambda0) * progress;
 
             // stage only the step-varying operands
             let lit_theta = xla::Literal::vec1(&theta_f32)
@@ -234,19 +367,7 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
             if cfg.fuse_enabled {
                 adam_s.step(&mut sigma, &g_sigma, cfg.lr_sigma);
             }
-            // keep parameters in a numerically safe box
-            for (l, layer) in w.layers.iter().enumerate() {
-                for d in 0..NDIMS {
-                    let cap = (layer.dims[d] as f64).log2().max(0.0) + 0.5;
-                    for s in 0..4 {
-                        let idx = (l * NDIMS + d) * 4 + s;
-                        theta[idx] = theta[idx].clamp(-2.0, cap);
-                    }
-                }
-            }
-            for s in sigma.iter_mut() {
-                *s = s.clamp(-8.0, 8.0);
-            }
+            clamp_params(&mut theta, &mut sigma, w);
             tau = (tau * cfg.tau_decay).max(cfg.tau_min);
 
             if it % cfg.decode_every == 0 || it + 1 == per_restart_iters {
@@ -257,7 +378,7 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
         // final decode of this restart
         offer_decodes(&theta, &sigma, w, hw, cfg, &mut inc, total_iters);
         let _ = restart;
-        if inc.elapsed() > deadline {
+        if inc.stopped(&budget) {
             break;
         }
     }
@@ -273,8 +394,9 @@ pub fn optimize(rt: &Runtime, w: &Workload, hw: &HwConfig,
 /// search never lose to its own layer-wise ablation.
 fn offer_decodes(theta: &[f64], sigma: &[f64], w: &Workload, hw: &HwConfig,
                  cfg: &GradientConfig, inc: &mut Incumbent, iter: usize) {
+    let tables = std::sync::Arc::clone(inc.engine.tables());
     let relaxed = relaxed_from(theta, sigma, w, cfg);
-    inc.offer(&decode(&relaxed, w, hw), iter);
+    inc.offer(&decode_with(&relaxed, w, hw, &tables), iter);
     if cfg.fuse_enabled {
         let mut greedy = relaxed.clone();
         for (i, s) in greedy.sigma.iter_mut().enumerate() {
@@ -283,7 +405,7 @@ fn offer_decodes(theta: &[f64], sigma: &[f64], w: &Workload, hw: &HwConfig,
                 *s = 0.51 + 0.49 * *s;
             }
         }
-        inc.offer(&decode(&greedy, w, hw), iter);
+        inc.offer(&decode_with(&greedy, w, hw, &tables), iter);
     }
 }
 

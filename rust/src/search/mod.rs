@@ -1,9 +1,11 @@
 //! Search algorithms over the joint mapping x fusion space:
 //!
 //! * [`gradient`] — FADiff itself: constrained gradient descent (Adam)
-//!   over the continuous relaxation, driving the AOT `fadiff_grad`
-//!   artifact through PJRT, with tau/lambda annealing and decode-time
-//!   repair. DOSA (layer-wise, MICRO'23) is the same engine with fusion
+//!   over the continuous relaxation, with tau/lambda annealing and
+//!   decode-time repair. Runs natively everywhere on the pure-Rust
+//!   differentiable model (`costmodel::grad`); the AOT `fadiff_grad`
+//!   artifact on PJRT is an optional accelerator of the same math.
+//!   DOSA (layer-wise, MICRO'23) is the same engine with fusion
 //!   disabled.
 //! * [`ga`] — the heuristic baseline (tournament GA, paper ref [16]).
 //! * [`bo`] — the learning-based baseline (GP + expected improvement,

@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::config::HwConfig;
-use crate::mapping::decode::{decode, Relaxed};
+use crate::mapping::decode::{decode_with, Relaxed};
 use crate::util::rng::Rng;
 use crate::workload::{Workload, NDIMS};
 
@@ -46,6 +46,7 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, seed: u64,
     let mut rng = Rng::new(seed);
     let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+    let tables = std::sync::Arc::clone(inc.engine.tables());
     let mut iter = 0usize;
     while !inc.stopped(&budget) && iter < budget.max_iters {
         let b = BATCH.min(budget.max_iters - iter).max(1);
@@ -53,7 +54,8 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, seed: u64,
             (0..b).map(|_| sample(&mut rng, w)).collect();
         let scored = inc
             .engine
-            .eval_population(&samples, |r| decode(r, w, hw));
+            .eval_population(&samples,
+                             |r| decode_with(r, w, hw, &tables));
         for (s, e) in &scored {
             // keep the old per-candidate budget granularity: never
             // record results past the deadline (the batch evaluation

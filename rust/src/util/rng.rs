@@ -119,6 +119,18 @@ impl GumbelPool {
             }
         }
     }
+
+    /// [`GumbelPool::fill`] into an f64 buffer (the native gradient
+    /// model computes in f64; same table, same index stream).
+    pub fn fill_f64(&self, rng: &mut Rng, out: &mut [f64]) {
+        for chunk in out.chunks_mut(4) {
+            let mut bits = rng.next_u64();
+            for v in chunk {
+                *v = self.table[(bits as usize) & self.mask] as f64;
+                bits >>= 16;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -3,9 +3,10 @@
 //! small budget — FADiff <= DOSA, and both gradient methods beat
 //! GA/BO/random under equal (tiny) budgets.
 //!
-//! The gradient methods execute AOT artifacts on PJRT; those tests skip
-//! cleanly when the artifacts (or a real `xla` crate) are unavailable.
-//! The native methods (GA / BO / random) run unconditionally.
+//! The gradient tests here exercise the PJRT-accelerated backend and
+//! skip cleanly when the artifacts (or a real `xla` crate) are
+//! unavailable; the always-on native gradient backend has its own
+//! suite in `gradient_native.rs`. GA / BO / random run unconditionally.
 
 use fadiff::config::{load_config, repo_root};
 use fadiff::costmodel;
@@ -72,7 +73,8 @@ fn gradient_search_improves_over_trivial() {
         restarts: 1,
         ..Default::default()
     };
-    let r = gradient::optimize(&rt, &w, &hw, &cfg, Budget::iters(60))
+    let r = gradient::optimize(Some(&rt), &w, &hw, &cfg,
+                                Budget::iters(60))
         .unwrap();
     assert!(r.edp < trivial.edp * 0.01,
             "gradient should crush trivial: {} vs {}", r.edp, trivial.edp);
@@ -93,10 +95,10 @@ fn fadiff_beats_or_matches_dosa() {
         restarts: 1,
         ..gradient::GradientConfig::dosa()
     };
-    let rf = gradient::optimize(&rt, &w, &hw, &fadiff_cfg,
+    let rf = gradient::optimize(Some(&rt), &w, &hw, &fadiff_cfg,
                                 Budget::iters(80))
         .unwrap();
-    let rd = gradient::optimize(&rt, &w, &hw, &dosa_cfg,
+    let rd = gradient::optimize(Some(&rt), &w, &hw, &dosa_cfg,
                                 Budget::iters(80))
         .unwrap();
     // the paper's core claim, qualitatively: joint fusion+mapping never
@@ -118,7 +120,7 @@ fn ga_and_bo_work_but_lag_gradient() {
     let budget = Budget { seconds: 3.0, max_iters: usize::MAX };
 
     let rg = gradient::optimize(
-        &rt, &w, &hw,
+        Some(&rt), &w, &hw,
         &gradient::GradientConfig { restarts: 1, ..Default::default() },
         budget,
     )
@@ -151,7 +153,7 @@ fn traces_are_monotone_and_timestamped() {
 
     let Some(rt) = runtime() else { return };
     let rg = gradient::optimize(
-        &rt, &w, &hw,
+        Some(&rt), &w, &hw,
         &gradient::GradientConfig { restarts: 1, ..Default::default() },
         Budget::iters(40),
     )
@@ -180,9 +182,11 @@ fn small_config_tighter_than_large() {
 
     let Some(rt) = runtime() else { return };
     let cfg = gradient::GradientConfig { restarts: 1, ..Default::default() };
-    let gl = gradient::optimize(&rt, &w, &large, &cfg, Budget::iters(60))
+    let gl = gradient::optimize(Some(&rt), &w, &large, &cfg,
+                                Budget::iters(60))
         .unwrap();
-    let gs = gradient::optimize(&rt, &w, &small, &cfg, Budget::iters(60))
+    let gs = gradient::optimize(Some(&rt), &w, &small, &cfg,
+                                Budget::iters(60))
         .unwrap();
     assert!(gl.edp < gs.edp,
             "large {} should beat small {}", gl.edp, gs.edp);

@@ -56,7 +56,7 @@ fn fig4_trace_endpoints_ordered() {
     let Some(rt) = runtime() else { return };
     let hw = load_config(&repo_root(), "large").unwrap();
     let w = zoo::mobilenet_v1();
-    let r = fig4::run(&rt, &w, &hw, 2.5, 3).unwrap();
+    let r = fig4::run(Some(&rt), &w, &hw, 2.5, 3).unwrap();
     let grad = r.methods[0].final_edp;
     assert!(grad <= r.methods[1].final_edp * 1.05, "GA beat gradient");
     assert!(grad <= r.methods[2].final_edp * 1.05, "BO beat gradient");
@@ -84,7 +84,7 @@ fn golden_simulator_agrees_on_optimized_strategies() {
 
     let Some(rt) = runtime() else { return };
     let r = fadiff::search::gradient::optimize(
-        &rt, &w, &hw,
+        Some(&rt), &w, &hw,
         &fadiff::search::gradient::GradientConfig::default(),
         fadiff::search::Budget { seconds: 2.0, max_iters: usize::MAX },
     )
