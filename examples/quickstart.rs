@@ -31,10 +31,14 @@ fn main() -> anyhow::Result<()> {
              hw.pe_rows, hw.pe_cols,
              hw.c2_bytes / 1024.0, hw.c1_bytes / 1024.0);
 
-    // 3. run the fusion-aware gradient search (10 s budget)
+    // 3. run the fusion-aware gradient search (10 s budget). On the
+    //    native backend the default config's 8 restarts step as
+    //    parallel chains — each gets the full schedule and the worst
+    //    half periodically respawns from the best chain.
+    let cfg = gradient::GradientConfig::default();
+    println!("parallel chains: {}", cfg.chain_count());
     let result = gradient::optimize(
-        rt.as_ref(), &workload, &hw,
-        &gradient::GradientConfig::default(),
+        rt.as_ref(), &workload, &hw, &cfg,
         Budget { seconds: 10.0, max_iters: usize::MAX },
     )?;
 

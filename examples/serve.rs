@@ -37,9 +37,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("coordinator serving on {addr}");
 
-    // fire a batch of concurrent optimization requests; "ga" runs on
-    // the native EvalEngine so the demo works without AOT artifacts
-    // (switch to "fadiff" after `make artifacts` for the gradient path)
+    // fire a batch of concurrent optimization requests. "ga" keeps the
+    // demo snappy; "fadiff" also serves everywhere (native multi-chain
+    // backend — add "chains": N to size its parallel restart fan-out)
     let jobs = [
         ("resnet18", "large", 3.0),
         ("mobilenet", "large", 3.0),

@@ -15,6 +15,11 @@
 //!     shared `WorkloadTables` path (incumbent refresh hot path)
 //!   * native differentiable model: gradient steps/sec + a short
 //!     end-to-end native FADiff run
+//!   * parallel multi-chain gradient search: C=8 chains vs the C=1
+//!     serial baseline at equal wall-clock on two zoo workloads
+//!     (best-loss + aggregate grad-steps/sec — the CI-gated lanes)
+//!   * batched decode offers: per-chain serial decode+eval vs one
+//!     `eval_population` pass over all banked snapshots
 //!   * PJRT gradient step + batched artifact eval (skipped unless real
 //!     artifacts + a PJRT-backed xla crate are present)
 //!
@@ -240,7 +245,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let r = gradient::optimize(
         None, &w, &hw,
-        &gradient::GradientConfig { restarts: 1, ..Default::default() },
+        &gradient::GradientConfig { chains: 1, ..Default::default() },
         Budget::iters(120))
         .expect("native gradient run");
     let wall = t0.elapsed().as_secs_f64();
@@ -248,6 +253,116 @@ fn main() {
     println!("\nend-to-end native FADiff on resnet18: {} iters in \
               {:.2}s = {:.0} iters/s, best EDP {:.3e}\n",
              r.iters, wall, native_ips, r.edp);
+
+    // --- parallel multi-chain gradient search (equal wall-clock) --------
+    // the tentpole lanes CI gates: 8 parallel chains (full schedule
+    // each, cull/respawn on) vs the single-chain baseline on two zoo
+    // workloads — best-loss must not regress and aggregate
+    // grad-steps/sec must scale with the cores
+    let chain_secs = 1.0;
+    let chain_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let chain_run =
+        |wl: &fadiff::workload::Workload, chains: usize, seed: u64| {
+            let t0 = std::time::Instant::now();
+            let r = gradient::optimize(
+                None, wl, &hw,
+                &gradient::GradientConfig { chains, seed,
+                                            ..Default::default() },
+                Budget::seconds(chain_secs))
+                .expect("multi-chain run");
+            let wall = t0.elapsed().as_secs_f64();
+            (r.edp, r.iters as f64 / wall)
+        };
+    // the best-loss race is a probabilistic claim over 1 s samples:
+    // give it two independent attempts (fresh seed each) so the CI
+    // gate only reddens when C=8 loses BOTH — a real regression does,
+    // a scheduling hiccup does not (tolerance 1.001 matches
+    // tests/gradient_native.rs)
+    let chain_lane = |wl: &fadiff::workload::Workload| {
+        let mut out = (f64::NAN, f64::NAN, f64::NAN, f64::NAN, false);
+        for attempt in 0..2u64 {
+            let (e1, s1) = chain_run(wl, 1, 11 + attempt);
+            let (e8, s8) = chain_run(wl, 8, 11 + attempt);
+            out = (e1, e8, s1, s8, e8 <= e1 * 1.001);
+            if out.4 {
+                break;
+            }
+        }
+        out
+    };
+    let wl_vgg = zoo::vgg16();
+    let wl_gpt = zoo::gpt3_6_7b();
+    let (edp1_vgg, edp8_vgg, sps1_vgg, sps8_vgg, won_vgg) =
+        chain_lane(&wl_vgg);
+    let (edp1_gpt, edp8_gpt, sps1_gpt, sps8_gpt, won_gpt) =
+        chain_lane(&wl_gpt);
+    let mut better = 0;
+    for (name, e1, e8, s1, s8, won) in [
+        ("vgg16", edp1_vgg, edp8_vgg, sps1_vgg, sps8_vgg, won_vgg),
+        ("gpt3", edp1_gpt, edp8_gpt, sps1_gpt, sps8_gpt, won_gpt),
+    ] {
+        if won {
+            better += 1;
+        }
+        println!(
+            "multi-chain {name} ({chain_secs}s, {chain_threads} \
+             cores): C=1 edp {e1:.3e} @ {s1:.0} steps/s | C=8 edp \
+             {e8:.3e} @ {s8:.0} steps/s ({:.2}x steps, edp {:.3}x)",
+            s8 / s1, e1 / e8
+        );
+    }
+    let chain_speedup = (sps8_vgg / sps1_vgg).min(sps8_gpt / sps1_gpt);
+    println!(
+        "  -> C=8 better best-loss on {better}/2 workloads, \
+         grad-steps/sec speedup {chain_speedup:.2}x (min over \
+         workloads)\n"
+    );
+
+    // --- batched decode offers (multi-chain incumbent refresh) ----------
+    // 16 banked relaxed snapshots: per-chain serial decode_with + eval
+    // vs one eval_population pass (decode on the workers, one SoA
+    // eval_batch sweep)
+    let snaps: Vec<Relaxed> = (0..16)
+        .map(|_| {
+            let mut r = Relaxed::neutral(&w);
+            for l in 0..w.len() {
+                for d in 0..7 {
+                    for s in 0..4 {
+                        r.theta[l][d][s] = rng.range(0.0, 6.0);
+                    }
+                }
+            }
+            for i in 0..r.sigma.len() {
+                r.sigma[i] = rng.f64();
+            }
+            r
+        })
+        .collect();
+    let offer_engine = EvalEngine::new(&w, &hw);
+    let offer_tables = Arc::clone(offer_engine.tables());
+    let (od_ser, od_ser_min, od_ser_max) = time(20, || {
+        offer_engine.clear_cache();
+        for r in &snaps {
+            let s = decode_with(r, &w, &hw, &offer_tables);
+            let _ = offer_engine.eval(&s);
+        }
+    });
+    report("decode offers serial (16 snapshots)", od_ser, od_ser_min,
+           od_ser_max,
+           &format!("{:.1}k offers/s", 16.0 / od_ser / 1e3));
+    let (od_bat, od_bat_min, od_bat_max) = time(20, || {
+        offer_engine.clear_cache();
+        let _ = offer_engine.eval_population(&snaps, |r| {
+            decode_with(r, &w, &hw, &offer_tables)
+        });
+    });
+    report("decode offers batched (one engine pass)", od_bat,
+           od_bat_min, od_bat_max,
+           &format!("{:.1}k offers/s, {:.2}x vs serial",
+                    16.0 / od_bat / 1e3, od_ser / od_bat));
+    println!();
 
     if json_mode {
         let j = obj(vec![
@@ -266,6 +381,20 @@ fn main() {
             ("decode_tables_speedup", num(dmean / dtmean)),
             ("native_grad_steps_per_sec", num(1.0 / gmean)),
             ("native_grad_search_iters_per_sec", num(native_ips)),
+            ("chain_threads", num(chain_threads as f64)),
+            ("single_chain_edp_vgg16", num(edp1_vgg)),
+            ("multi_chain_edp_vgg16", num(edp8_vgg)),
+            ("single_chain_edp_gpt3", num(edp1_gpt)),
+            ("multi_chain_edp_gpt3", num(edp8_gpt)),
+            ("single_chain_steps_per_sec_vgg16", num(sps1_vgg)),
+            ("multi_chain_steps_per_sec_vgg16", num(sps8_vgg)),
+            ("single_chain_steps_per_sec_gpt3", num(sps1_gpt)),
+            ("multi_chain_steps_per_sec_gpt3", num(sps8_gpt)),
+            ("parallel_grad_steps_speedup", num(chain_speedup)),
+            ("multi_chain_better_workloads", num(better as f64)),
+            ("decode_offer_serial_per_sec", num(16.0 / od_ser)),
+            ("decode_offer_batched_per_sec", num(16.0 / od_bat)),
+            ("batched_decode_offer_speedup", num(od_ser / od_bat)),
         ]);
         // cargo runs benches with CWD = the package root (rust/);
         // anchor at the repo root so CI finds the file

@@ -21,6 +21,12 @@ pub struct Metrics {
     /// `throughput.evals_per_sec` ("since start", so idle time
     /// dilutes the rate by design).
     pub evals: AtomicU64,
+    /// Cumulative inner gradient steps reported by finished FADiff /
+    /// DOSA jobs (`JobResult::iters`, summed across their parallel
+    /// chains). Surfaced as `throughput.grad_steps_total` /
+    /// `grad_steps_per_sec` in the `metrics` verb — the direct
+    /// quality-per-second lever of the multi-chain optimizer.
+    pub grad_steps: AtomicU64,
 }
 
 impl Metrics {
@@ -62,6 +68,8 @@ impl Metrics {
              num(self.cancelled.load(Ordering::SeqCst) as f64)),
             ("in_flight", num(self.in_flight() as f64)),
             ("evals", num(self.evals.load(Ordering::SeqCst) as f64)),
+            ("grad_steps",
+             num(self.grad_steps.load(Ordering::SeqCst) as f64)),
         ])
     }
 }

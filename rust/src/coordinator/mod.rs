@@ -107,6 +107,10 @@ pub struct JobRequest {
     pub seconds: f64,
     pub max_iters: usize,
     pub seed: u64,
+    /// Parallel chain count for the gradient methods' native backend
+    /// (`0` = the method default — one chain per configured restart).
+    /// Ignored by GA / BO / random.
+    pub chains: usize,
 }
 
 impl Default for JobRequest {
@@ -118,6 +122,7 @@ impl Default for JobRequest {
             seconds: 10.0,
             max_iters: usize::MAX,
             seed: 0xFAD1FF,
+            chains: 0,
         }
     }
 }
@@ -443,12 +448,17 @@ impl Coordinator {
                        Json::Num(self.n_workers() as f64));
             let uptime = self.uptime_seconds();
             let evals = self.metrics.evals.load(Ordering::SeqCst);
+            let gsteps =
+                self.metrics.grad_steps.load(Ordering::SeqCst);
             map.insert(
                 "throughput".into(),
                 obj(vec![
                     ("evals_total", num(evals as f64)),
                     ("evals_per_sec",
                      num(evals as f64 / uptime.max(1e-9))),
+                    ("grad_steps_total", num(gsteps as f64)),
+                    ("grad_steps_per_sec",
+                     num(gsteps as f64 / uptime.max(1e-9))),
                     ("uptime_seconds", num(uptime)),
                 ]),
             );
@@ -513,6 +523,14 @@ fn worker_loop(dir: &std::path::Path,
             .map_err(|e| e.to_string());
         if let Ok(r) = &out {
             metrics.evals.fetch_add(r.evals as u64, Ordering::SeqCst);
+            // for the gradient methods `iters` counts inner gradient
+            // steps (summed across parallel chains)
+            if matches!(r.request.method, Method::FADiff | Method::Dosa)
+            {
+                metrics
+                    .grad_steps
+                    .fetch_add(r.iters as u64, Ordering::SeqCst);
+            }
         }
         let was_cancelled = cancel.load(Ordering::SeqCst);
         let status = if was_cancelled {
@@ -590,12 +608,14 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         Method::FADiff => gradient::optimize_ctx(
             rt, &w, &hw,
             &gradient::GradientConfig { seed: req.seed,
+                                        chains: req.chains,
                                         ..Default::default() },
             budget, &ectx)?,
         Method::Dosa => gradient::optimize_ctx(
             rt, &w, &hw,
             &gradient::GradientConfig {
                 seed: req.seed,
+                chains: req.chains,
                 ..gradient::GradientConfig::dosa()
             },
             budget, &ectx)?,

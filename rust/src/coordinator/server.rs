@@ -2,9 +2,14 @@
 //!
 //! Request (one line each):
 //!   {"verb": "optimize", "workload": "resnet18", "config": "large",
-//!    "method": "fadiff", "seconds": 5, "seed": 1}
+//!    "method": "fadiff", "seconds": 5, "seed": 1, "chains": 8}
 //!   {"verb": "sweep", "workloads": ["resnet18", "vgg16"],
 //!    "methods": ["ga", "random"], "seeds": [1, 2], "seconds": 5}
+//!
+//! `chains` (optional, default 0 = method default) sets the parallel
+//! chain count of the gradient methods' native backend; it applies to
+//! `optimize`/`submit` and to every cell of a `sweep`. GA / BO /
+//! random ignore it.
 //!   {"verb": "submit", "workload": "gpt3", "method": "ga",
 //!    "seconds": 120}
 //!   {"verb": "status", "job_id": 7}
@@ -51,6 +56,11 @@ pub const MAX_REQUEST_BYTES: usize = 1 << 20;
 /// Upper bound on the method x workload x seed grid of one `sweep`.
 pub const MAX_SWEEP_JOBS: usize = 256;
 
+/// Upper bound on the per-request parallel chain count: each chain
+/// allocates ~100 KB of SoA state on a large workload, so an
+/// unclamped value would let one request OOM the server.
+pub const MAX_CHAINS: usize = 256;
+
 /// How often blocked reads wake to poll the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(150);
 
@@ -75,6 +85,13 @@ pub fn parse_request(j: &Json) -> Result<JobRequest> {
     }
     if let Ok(sd) = j.get("seed") {
         req.seed = sd.as_f64()? as u64;
+    }
+    if let Ok(c) = j.get("chains") {
+        req.chains = c.as_usize()?;
+        if req.chains > MAX_CHAINS {
+            bail!("chains {} exceeds the cap of {MAX_CHAINS}",
+                  req.chains);
+        }
     }
     Ok(req)
 }
@@ -136,6 +153,7 @@ pub fn parse_sweep(j: &Json) -> Result<Vec<JobRequest>> {
                     seconds: base.seconds,
                     max_iters: base.max_iters,
                     seed,
+                    chains: base.chains,
                 });
             }
         }
@@ -151,6 +169,7 @@ fn result_fields(r: &JobResult) -> Vec<(&'static str, Json)> {
         ("config", js(&r.request.config)),
         ("method", js(r.request.method.name())),
         ("seed", num(r.request.seed as f64)),
+        ("chains", num(r.request.chains as f64)),
         ("edp", num(r.edp)),
         ("full_model_edp", num(r.full_model_edp)),
         ("energy_pj", num(r.energy)),
@@ -525,6 +544,23 @@ mod tests {
         assert_eq!(r.method, Method::Ga);
         assert_eq!(r.seconds, 2.5);
         assert_eq!(r.config, "large"); // default
+        assert_eq!(r.chains, 0); // default: method decides
+        let j = Json::parse(r#"{"method": "fadiff", "chains": 4}"#)
+            .unwrap();
+        assert_eq!(parse_request(&j).unwrap().chains, 4);
+    }
+
+    #[test]
+    fn parse_request_caps_chains() {
+        // an absurd chain count is a one-line error, not a giant
+        // ChainBatch allocation (remote-OOM guard)
+        for body in [r#"{"chains": 257}"#, r#"{"chains": 1e18}"#] {
+            let j = Json::parse(body).unwrap();
+            let err = parse_request(&j).unwrap_err().to_string();
+            assert!(err.contains("cap"), "{body}: {err}");
+        }
+        let j = Json::parse(r#"{"chains": 256}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().chains, 256);
     }
 
     #[test]
@@ -551,12 +587,15 @@ mod tests {
         let j = Json::parse(
             r#"{"verb": "sweep", "workloads": ["resnet18", "vgg16"],
                 "methods": ["ga", "random"], "seeds": [1, 2, 3],
-                "config": "small", "seconds": 0.5, "max_iters": 10}"#)
+                "config": "small", "seconds": 0.5, "max_iters": 10,
+                "chains": 4}"#)
             .unwrap();
         let reqs = parse_sweep(&j).unwrap();
         assert_eq!(reqs.len(), 2 * 2 * 3);
         assert!(reqs.iter().all(|r| r.config == "small"));
         assert!(reqs.iter().all(|r| r.max_iters == 10));
+        assert!(reqs.iter().all(|r| r.chains == 4),
+                "chains is a shared sweep default");
         let firsts: Vec<_> = reqs
             .iter()
             .map(|r| (r.workload.as_str(), r.method, r.seed))

@@ -34,10 +34,21 @@
 //! the artifact by a bounded amount while both remain descent
 //! directions.
 
+use std::cell::RefCell;
+
 use crate::config::HwConfig;
 use crate::costmodel::tables::WorkloadTables;
 use crate::costmodel::{I_DIMS, O_DIMS, W_DIMS};
 use crate::workload::{Workload, DIM_C, DIM_K, DIM_P, DIM_Q, NDIMS};
+
+thread_local! {
+    /// Per-worker scratch for [`GradModel::loss_and_grad_pooled`]: the
+    /// parallel multi-chain optimizer steps many chains per worker
+    /// thread, each reusing this one warm scratch — zero allocation
+    /// per step at any chain count.
+    static POOLED_SCRATCH: RefCell<GradScratch> =
+        RefCell::new(GradScratch::new());
+}
 
 /// Numerical epsilon shared with the python model (`constants.EPS`).
 const EPS: f64 = 1e-9;
@@ -275,6 +286,24 @@ impl<'a> GradModel<'a> {
                 }
             }
         }
+    }
+
+    /// [`GradModel::loss_and_grad`] over a per-thread scratch: the
+    /// chain-indexed entry point of the parallel multi-chain optimizer
+    /// (`search::gradient`). Each chain passes its own parameter and
+    /// gradient strides; the scratch is thread-local, so any number of
+    /// chains can step concurrently — one warm [`GradScratch`] per
+    /// worker thread, no allocation per step, no sharing hazards.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_and_grad_pooled(&self, theta: &[f64],
+                                sigma_logit: &[f64], gumbel: &[f64],
+                                tau: f64, lambda: f64,
+                                g_theta: &mut [f64],
+                                g_sigma: &mut [f64]) -> StepOut {
+        POOLED_SCRATCH.with(|sc| {
+            self.loss_and_grad(theta, sigma_logit, gumbel, tau, lambda,
+                               &mut sc.borrow_mut(), g_theta, g_sigma)
+        })
     }
 
     /// One loss + gradient evaluation. `theta` is `[L*7*4]` (log2

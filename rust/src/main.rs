@@ -25,11 +25,12 @@ fadiff — fusion-aware differentiable DNN scheduling (paper reproduction)
 USAGE: fadiff <subcommand> [flags]
 
   optimize  --workload resnet18 --config large --method fadiff
-            --seconds 10 --seed 1
+            --seconds 10 --seed 1 --chains 8
             methods: fadiff | dosa | ga | bo | random
             workloads: gpt3 vgg19 vgg16 mobilenet resnet18
             (every method runs without AOT artifacts; when present,
-            PJRT accelerates the gradient methods)
+            PJRT accelerates the gradient methods; --chains sets the
+            native gradient backend's parallel chain count, 0 = auto)
   table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
   fig3                                           (paper Figure 3)
   fig4      --workload resnet18 --seconds 10     (paper Figure 4)
@@ -85,6 +86,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         seconds: args.get_f64("seconds", 10.0)?,
         max_iters: args.get_usize("max-iters", usize::MAX)?,
         seed: args.get_u64("seed", 1)?,
+        chains: args.get_usize("chains", 0)?,
     };
     // only the gradient methods touch the PJRT runtime; probe (and
     // compile) it only for them so native methods start instantly

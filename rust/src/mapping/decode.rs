@@ -213,6 +213,23 @@ fn repair_layer(m: &mut LayerMapping, dims: &[usize; NDIMS], hw: &HwConfig) {
     }
 }
 
+/// Lift every fusible edge of a relaxed state above the decode
+/// threshold while preserving the learned sigma ordering — the
+/// fusion-greedy incumbent variant of the gradient search: all legal
+/// edges fuse, and the group-capacity repair then cuts lowest-sigma
+/// edges first, so the gradient's ranking still decides which fusions
+/// survive.
+pub fn fusion_greedy(relaxed: &Relaxed, w: &Workload) -> Relaxed {
+    let mut greedy = relaxed.clone();
+    for (i, s) in greedy.sigma.iter_mut().enumerate() {
+        if w.fusible[i] {
+            // keep ordering information, lift above the threshold
+            *s = 0.51 + 0.49 * *s;
+        }
+    }
+    greedy
+}
+
 /// Decode a full relaxed state into a hardware-valid [`Strategy`]
 /// (standalone entry point: builds the divisor/prime tables for this
 /// one call). Searches that decode many candidates of the same

@@ -1,9 +1,13 @@
 //! The batched evaluation engine — the single entry point every search
 //! strategy and experiment harness uses to score candidate strategies.
 //!
-//! GA/BO/random search and the Table-1/Fig-3/Fig-4 harnesses spend
-//! nearly all of their time in the analytical cost model (paper
-//! Eqs. 4-19). [`EvalEngine`] makes that hot path fast three ways:
+//! GA/BO/random search, the multi-chain gradient optimizer's banked
+//! decode offers ([`crate::search::gradient`] routes every chain's
+//! threshold + fusion-greedy snapshots through one
+//! [`EvalEngine::eval_population`] pass per block), and the
+//! Table-1/Fig-3/Fig-4 harnesses spend nearly all of their time in
+//! the analytical cost model (paper Eqs. 4-19). [`EvalEngine`] makes
+//! that hot path fast three ways:
 //!
 //! * **Parallel batch scoring** — whole candidate populations decode and
 //!   evaluate concurrently, either on per-call scoped threads

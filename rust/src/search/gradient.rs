@@ -14,8 +14,22 @@
 //! * **Native** (the default, always available) — the pure-Rust
 //!   forward + reverse model in [`crate::costmodel::grad`], f64, zero
 //!   allocation per step. Selected whenever no runtime is passed.
+//!   Restarts run as **parallel chains**: `C` independent Adam chains
+//!   (one per restart, or [`GradientConfig::chains`]) live in a single
+//!   SoA [`ChainBatch`] and step concurrently across the worker
+//!   threads — each chain gets the *full* iteration schedule instead
+//!   of `budget / restarts`, with deterministic per-chain RNG streams
+//!   (`seed ^ splitmix(chain)`), so results are bit-identical for any
+//!   worker count. Incumbent refresh is batched: every chain banks its
+//!   relaxed snapshot and one engine pass decodes + scores all of them
+//!   (threshold + fusion-greedy variants) in a single SoA sweep. Once
+//!   the lambda ramp passes [`CULL_RAMP_THRESHOLD`], the worst half of
+//!   the chains (by most recent relaxed loss) periodically respawn as
+//!   jittered clones of the best chain — a cheap exploit/explore
+//!   schedule that costs nothing serial.
 //! * **PJRT** (optional accelerator) — the AOT `fadiff_grad` artifact
-//!   executed via PJRT, exactly as before. Callers probe it with
+//!   executed via PJRT, exactly as before: serial round-robin restarts
+//!   splitting the budget. Callers probe it with
 //!   [`Runtime::load_if_available`] and pass `Some(rt)`; environments
 //!   without artifacts pass `None` and lose nothing but the
 //!   accelerator.
@@ -25,17 +39,33 @@
 //! mask, which makes the loss separable per layer — i.e. exactly
 //! layer-independent mapping search.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::HwConfig;
-use crate::costmodel::grad::{GradModel, GradScratch, SnapMode};
-use crate::mapping::decode::{decode_with, Relaxed};
+use crate::costmodel::grad::{GradModel, SnapMode};
+use crate::costmodel::tables::WorkloadTables;
+use crate::mapping::decode::{decode_with, fusion_greedy, Relaxed};
 use crate::runtime::stage::WorkloadStage;
 use crate::runtime::{HostTensor, Runtime, ART_GRAD};
 use crate::util::rng::{GumbelPool, Rng};
+use crate::util::threadpool::par_map;
 use crate::workload::{Workload, NDIMS};
 
 use super::{Budget, EvalCtx, Incumbent, SearchResult};
+
+/// Lambda-ramp progress after which the chain cull/respawn schedule
+/// engages (the exploit phase of the native multi-chain optimizer).
+pub const CULL_RAMP_THRESHOLD: f64 = 0.5;
+
+/// Decode blocks between cull/respawn passes.
+const CULL_EVERY_BLOCKS: usize = 4;
+
+/// Respawn jitter scale (log2-space theta / logit-space sigma).
+const RESPAWN_JITTER: f64 = 0.3;
 
 /// Hyper-parameters of the gradient search.
 #[derive(Clone, Debug)]
@@ -57,8 +87,16 @@ pub struct GradientConfig {
     /// Adam moments.
     pub beta1: f64,
     pub beta2: f64,
-    /// Random restarts share the budget round-robin.
+    /// Restart count. The native backend runs one *parallel chain* per
+    /// restart, each with the full iteration schedule (which is why the
+    /// default is now 8 — parallel chains are nearly free on a
+    /// multicore); the PJRT backend keeps the historical serial
+    /// round-robin budget split.
     pub restarts: usize,
+    /// Explicit parallel-chain count for the native backend. `0` (the
+    /// default) derives the count from `restarts`; any positive value
+    /// overrides it. Exposed as the coordinator's `chains` parameter.
+    pub chains: usize,
 }
 
 impl Default for GradientConfig {
@@ -77,7 +115,8 @@ impl Default for GradientConfig {
             fuse_enabled: true,
             beta1: 0.9,
             beta2: 0.999,
-            restarts: 2,
+            restarts: 8,
+            chains: 0,
         }
     }
 }
@@ -86,6 +125,12 @@ impl GradientConfig {
     /// The DOSA (layer-wise) ablation of this optimizer.
     pub fn dosa() -> GradientConfig {
         GradientConfig { fuse_enabled: false, ..Default::default() }
+    }
+
+    /// Effective native chain count: `chains` when set, else one chain
+    /// per restart.
+    pub fn chain_count(&self) -> usize {
+        if self.chains > 0 { self.chains } else { self.restarts.max(1) }
     }
 }
 
@@ -104,19 +149,30 @@ impl Adam {
 
     fn step(&mut self, params: &mut [f64], grads: &[f64], lr: f64) {
         self.t += 1;
-        let b1c = 1.0 - self.beta1.powi(self.t as i32);
-        let b2c = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..params.len() {
-            let g = grads[i];
-            if !g.is_finite() {
-                continue;
-            }
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
-            let mhat = self.m[i] / b1c;
-            let vhat = self.v[i] / b2c;
-            params[i] -= lr * mhat / (vhat.sqrt() + 1e-8);
+        adam_update(params, grads, &mut self.m, &mut self.v, self.t,
+                    lr, self.beta1, self.beta2);
+    }
+}
+
+/// One bias-corrected Adam update over borrowed moment buffers (the
+/// chain batch stores moments as SoA strides, so the update is a free
+/// function shared with the legacy [`Adam`] holder).
+#[allow(clippy::too_many_arguments)]
+fn adam_update(params: &mut [f64], grads: &[f64], m: &mut [f64],
+               v: &mut [f64], t: usize, lr: f64, beta1: f64,
+               beta2: f64) {
+    let b1c = 1.0 - beta1.powi(t as i32);
+    let b2c = 1.0 - beta2.powi(t as i32);
+    for i in 0..params.len() {
+        let g = grads[i];
+        if !g.is_finite() {
+            continue;
         }
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g;
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g * g;
+        let mhat = m[i] / b1c;
+        let vhat = v[i] / b2c;
+        params[i] -= lr * mhat / (vhat.sqrt() + 1e-8);
     }
 }
 
@@ -148,21 +204,44 @@ fn init_theta(w: &Workload, hw: &HwConfig, rng: &mut Rng, l_max: usize)
     theta
 }
 
-/// Penalty-ramp progress in [0, 1]: fraction of the iteration budget
-/// consumed, or of the wall-clock budget — whichever is further along.
-/// Under pure seconds budgets `max_iters` is effectively unbounded, so
-/// the iteration fraction alone stays ~0 and the lambda ramp of
-/// Sec 3.1.1 would never engage (penalties stuck at `lambda0` for the
-/// whole run); the wall-clock fraction drives it there instead.
-fn ramp_progress(it: usize, per_restart: usize, inc: &Incumbent,
+/// Penalty-ramp progress in [0, 1]. An explicit iteration cap defines
+/// the annealing schedule alone — mixing in wall-clock progress would
+/// make iteration-budgeted runs (and identical-seed serving jobs)
+/// timing-dependent, breaking the multi-chain determinism contract.
+/// Under *pure* seconds budgets `max_iters` is unbounded, the
+/// iteration fraction stays ~0 and the lambda ramp of Sec 3.1.1 would
+/// never engage (penalties stuck at `lambda0` for the whole run), so
+/// there the wall-clock fraction drives it instead.
+///
+/// Contract for mixed budgets (both bounds finite): `max_iters` owns
+/// the annealing schedule and `seconds` acts as a plain timeout. Set
+/// `max_iters` near the step count you expect to complete; a cap set
+/// orders of magnitude above what the timeout allows leaves the ramp
+/// partly unengaged when the clock fires first. (The alternative —
+/// blending wall-clock in — was rejected: once the clock feeds
+/// lambda, two identical iteration-bound requests diverge bit-wise at
+/// step 0, and when the clock genuinely binds the run is
+/// timing-dependent either way. Decodes always repair to feasible
+/// strategies regardless of how far the ramp got.)
+fn ramp_progress(it: usize, per_restart: usize, elapsed: f64,
                  budget: &Budget) -> f64 {
     let by_iter = it as f64 / per_restart.max(1) as f64;
-    let by_time = if budget.seconds.is_finite() {
-        inc.elapsed() / budget.seconds.max(1e-9)
+    let by_time = if budget.max_iters == usize::MAX
+        && budget.seconds.is_finite()
+    {
+        elapsed / budget.seconds.max(1e-9)
     } else {
         0.0
     };
     by_iter.max(by_time).min(1.0)
+}
+
+/// Tau at a given lockstep step index: `tau0 * decay^it`, floored at
+/// `tau_min`. A pure function of the step so respawned chains stay on
+/// the shared annealing schedule.
+fn tau_at(cfg: &GradientConfig, it: usize) -> f64 {
+    (cfg.tau0 * cfg.tau_decay.powi(it.min(i32::MAX as usize) as i32))
+        .max(cfg.tau_min)
 }
 
 /// Clamp parameters into the numerically safe box the optimizer
@@ -179,6 +258,303 @@ fn clamp_params(theta: &mut [f64], sigma: &mut [f64], w: &Workload) {
     }
     for s in sigma.iter_mut() {
         *s = s.clamp(-8.0, 8.0);
+    }
+}
+
+/// Deterministic per-chain seed stream: SplitMix-mixed chain id XORed
+/// onto the search seed (chain 0 keeps the seed itself, preserving the
+/// historical single-restart trajectory).
+fn chain_seed(seed: u64, chain: usize) -> u64 {
+    seed ^ (chain as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Shared stop/ramp context polled by the chain workers: wall-clock
+/// budget, cooperative cancellation (the serving layer's `EvalCtx`
+/// flag), and the lambda-ramp progress.
+struct ChainStop {
+    start: Instant,
+    budget: Budget,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl ChainStop {
+    fn new(budget: Budget, ctx: &EvalCtx) -> ChainStop {
+        ChainStop {
+            start: Instant::now(),
+            budget,
+            cancel: ctx.cancel.clone(),
+        }
+    }
+
+    fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn stopped(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::SeqCst))
+            || self.elapsed() >= self.budget.seconds
+    }
+
+    fn ramp(&self, it: usize, per_chain: usize) -> f64 {
+        ramp_progress(it, per_chain, self.elapsed(), &self.budget)
+    }
+}
+
+/// SoA state of `C` concurrent Adam chains. Every per-chain buffer
+/// (theta, sigma logits, first/second Adam moments, gradient and
+/// Gumbel scratch) is a contiguous stride of one flat vector; the
+/// strides are carved into disjoint [`ChainView`]s for the worker
+/// threads each block, so chains mutate in parallel with no locks and
+/// no allocation per step.
+struct ChainBatch {
+    c_n: usize,
+    n_theta: usize,
+    n_sigma: usize,
+    theta: Vec<f64>,
+    sigma: Vec<f64>,
+    m_t: Vec<f64>,
+    v_t: Vec<f64>,
+    m_s: Vec<f64>,
+    v_s: Vec<f64>,
+    g_theta: Vec<f64>,
+    g_sigma: Vec<f64>,
+    gumbel: Vec<f64>,
+    adam_t: Vec<usize>,
+    /// Relaxed loss at each chain's most recent step (the cull key).
+    last_loss: Vec<f64>,
+    rng: Vec<Rng>,
+}
+
+/// One chain's disjoint mutable window into the [`ChainBatch`] SoA
+/// buffers, moved onto a worker thread for a block of steps.
+struct ChainView<'a> {
+    theta: &'a mut [f64],
+    sigma: &'a mut [f64],
+    m_t: &'a mut [f64],
+    v_t: &'a mut [f64],
+    m_s: &'a mut [f64],
+    v_s: &'a mut [f64],
+    g_theta: &'a mut [f64],
+    g_sigma: &'a mut [f64],
+    gumbel: &'a mut [f64],
+    adam_t: &'a mut usize,
+    last_loss: &'a mut f64,
+    rng: &'a mut Rng,
+}
+
+/// Split `v` into `c_n` disjoint mutable strides of `n` elements.
+fn carve(mut v: &mut [f64], n: usize, c_n: usize)
+         -> Vec<&mut [f64]> {
+    let mut out = Vec::with_capacity(c_n);
+    for _ in 0..c_n {
+        let (head, tail) = v.split_at_mut(n);
+        out.push(head);
+        v = tail;
+    }
+    out
+}
+
+impl ChainBatch {
+    /// Initialize `c_n` chains: theta from the hardware prior under
+    /// each chain's own seed stream, sigma mostly-unfused (~0.12 — a
+    /// 0.5 init inflates the soft group-footprint scan and distorts
+    /// mappings on small scratchpads even when fusion is eventually
+    /// rejected).
+    fn new(w: &Workload, hw: &HwConfig, cfg: &GradientConfig,
+           model: &GradModel<'_>, c_n: usize) -> ChainBatch {
+        let n_theta = model.n_theta();
+        let n_sigma = model.n_sigma();
+        let n_gumbel = model.n_gumbel();
+        let mut theta = Vec::with_capacity(c_n * n_theta);
+        let mut rng = Vec::with_capacity(c_n);
+        for c in 0..c_n {
+            let mut r = Rng::new(chain_seed(cfg.seed, c));
+            theta.extend(init_theta(w, hw, &mut r, w.len()));
+            rng.push(r);
+        }
+        ChainBatch {
+            c_n,
+            n_theta,
+            n_sigma,
+            theta,
+            sigma: vec![-2.0; c_n * n_sigma],
+            m_t: vec![0.0; c_n * n_theta],
+            v_t: vec![0.0; c_n * n_theta],
+            m_s: vec![0.0; c_n * n_sigma],
+            v_s: vec![0.0; c_n * n_sigma],
+            g_theta: vec![0.0; c_n * n_theta],
+            g_sigma: vec![0.0; c_n * n_sigma],
+            gumbel: vec![0.0; c_n * n_gumbel],
+            adam_t: vec![0; c_n],
+            last_loss: vec![f64::INFINITY; c_n],
+            rng,
+        }
+    }
+
+    fn theta_of(&self, c: usize) -> &[f64] {
+        &self.theta[c * self.n_theta..(c + 1) * self.n_theta]
+    }
+
+    fn sigma_of(&self, c: usize) -> &[f64] {
+        &self.sigma[c * self.n_sigma..(c + 1) * self.n_sigma]
+    }
+
+    /// Carve the SoA buffers into one disjoint view per chain.
+    fn views(&mut self) -> Vec<ChainView<'_>> {
+        let c_n = self.c_n;
+        let n_gumbel = self.gumbel.len() / c_n.max(1);
+        let mut theta = carve(&mut self.theta, self.n_theta, c_n);
+        let mut sigma = carve(&mut self.sigma, self.n_sigma, c_n);
+        let mut m_t = carve(&mut self.m_t, self.n_theta, c_n);
+        let mut v_t = carve(&mut self.v_t, self.n_theta, c_n);
+        let mut m_s = carve(&mut self.m_s, self.n_sigma, c_n);
+        let mut v_s = carve(&mut self.v_s, self.n_sigma, c_n);
+        let mut g_theta = carve(&mut self.g_theta, self.n_theta, c_n);
+        let mut g_sigma = carve(&mut self.g_sigma, self.n_sigma, c_n);
+        let mut gumbel = carve(&mut self.gumbel, n_gumbel, c_n);
+        let mut adam_t: Vec<&mut usize> =
+            self.adam_t.iter_mut().collect();
+        let mut last_loss: Vec<&mut f64> =
+            self.last_loss.iter_mut().collect();
+        let mut rng: Vec<&mut Rng> = self.rng.iter_mut().collect();
+        let mut out = Vec::with_capacity(c_n);
+        for _ in 0..c_n {
+            out.push(ChainView {
+                theta: theta.pop().unwrap(),
+                sigma: sigma.pop().unwrap(),
+                m_t: m_t.pop().unwrap(),
+                v_t: v_t.pop().unwrap(),
+                m_s: m_s.pop().unwrap(),
+                v_s: v_s.pop().unwrap(),
+                g_theta: g_theta.pop().unwrap(),
+                g_sigma: g_sigma.pop().unwrap(),
+                gumbel: gumbel.pop().unwrap(),
+                adam_t: adam_t.pop().unwrap(),
+                last_loss: last_loss.pop().unwrap(),
+                rng: rng.pop().unwrap(),
+            });
+        }
+        out.reverse();
+        out
+    }
+
+    /// Exploit/explore schedule: the worst half of the chains (by most
+    /// recent relaxed loss, index-tie-broken) respawn as jittered
+    /// clones of the best chain. Adam moments reset; the perturbation
+    /// draws from each respawned chain's own RNG stream, so the
+    /// outcome is identical for any worker count.
+    fn cull_and_respawn(&mut self, w: &Workload) {
+        let c_n = self.c_n;
+        if c_n < 2 {
+            return;
+        }
+        let mut order: Vec<usize> = (0..c_n).collect();
+        order.sort_by(|&a, &b| {
+            self.last_loss[a]
+                .partial_cmp(&self.last_loss[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let best = order[0];
+        let nt = self.n_theta;
+        let ns = self.n_sigma;
+        for &c in &order[c_n - c_n / 2..] {
+            self.theta.copy_within(best * nt..(best + 1) * nt, c * nt);
+            self.sigma.copy_within(best * ns..(best + 1) * ns, c * ns);
+            for buf in [&mut self.m_t, &mut self.v_t] {
+                buf[c * nt..(c + 1) * nt].fill(0.0);
+            }
+            for buf in [&mut self.m_s, &mut self.v_s] {
+                buf[c * ns..(c + 1) * ns].fill(0.0);
+            }
+            self.adam_t[c] = 0;
+            let rng = &mut self.rng[c];
+            for x in &mut self.theta[c * nt..(c + 1) * nt] {
+                *x += rng.normal() * RESPAWN_JITTER;
+            }
+            for x in &mut self.sigma[c * ns..(c + 1) * ns] {
+                *x += rng.normal() * RESPAWN_JITTER;
+            }
+            clamp_params(&mut self.theta[c * nt..(c + 1) * nt],
+                         &mut self.sigma[c * ns..(c + 1) * ns], w);
+            self.last_loss[c] = self.last_loss[best];
+        }
+    }
+}
+
+/// Advance one chain by up to `block` steps (fewer when the budget or
+/// a cancellation stops it mid-block). Entirely chain-local: the only
+/// shared state is immutable (model, Gumbel table) or monotone (the
+/// stop flag), so results are bit-identical for any worker count. The
+/// loss/gradient evaluation runs over a per-worker-thread scratch
+/// ([`GradModel::loss_and_grad_pooled`]) — zero allocation per step.
+#[allow(clippy::too_many_arguments)]
+fn step_chain_block(view: &mut ChainView<'_>, model: &GradModel<'_>,
+                    gumbel_pool: &GumbelPool, w: &Workload,
+                    cfg: &GradientConfig, stop: &ChainStop,
+                    start_it: usize, block: usize,
+                    per_chain_iters: usize) -> usize {
+    let mut done = 0usize;
+    for k in 0..block {
+        let it = start_it + k;
+        if it >= per_chain_iters || stop.stopped() {
+            break;
+        }
+        gumbel_pool.fill_f64(view.rng, view.gumbel);
+        let tau = tau_at(cfg, it);
+        let progress = stop.ramp(it, per_chain_iters);
+        let lambda =
+            cfg.lambda0 + (cfg.lambda_max - cfg.lambda0) * progress;
+        let out = model.loss_and_grad_pooled(view.theta, view.sigma,
+                                             view.gumbel, tau, lambda,
+                                             view.g_theta,
+                                             view.g_sigma);
+        *view.adam_t += 1;
+        adam_update(view.theta, view.g_theta, view.m_t, view.v_t,
+                    *view.adam_t, cfg.lr, cfg.beta1, cfg.beta2);
+        if cfg.fuse_enabled {
+            adam_update(view.sigma, view.g_sigma, view.m_s, view.v_s,
+                        *view.adam_t, cfg.lr_sigma, cfg.beta1,
+                        cfg.beta2);
+        }
+        clamp_params(view.theta, view.sigma, w);
+        *view.last_loss = out.loss;
+        done += 1;
+    }
+    done
+}
+
+/// Bank every chain's relaxed snapshot and refresh the incumbent in
+/// one batched engine pass: the threshold decode plus (in fusion mode)
+/// the fusion-greedy variant per chain all decode on the worker
+/// threads and score in a single `EvalEngine` SoA sweep, then the
+/// offers land in fixed chain order — one deterministic trace
+/// regardless of worker count.
+fn offer_chain_decodes(batch: &ChainBatch, w: &Workload, hw: &HwConfig,
+                       cfg: &GradientConfig, inc: &mut Incumbent<'_>,
+                       iter: usize, tables: &Arc<WorkloadTables>) {
+    let mut variants: Vec<Relaxed> =
+        Vec::with_capacity(2 * batch.c_n);
+    for c in 0..batch.c_n {
+        let relaxed = relaxed_from(batch.theta_of(c), batch.sigma_of(c),
+                                   w, cfg);
+        let greedy = if cfg.fuse_enabled {
+            Some(fusion_greedy(&relaxed, w))
+        } else {
+            None
+        };
+        variants.push(relaxed);
+        if let Some(g) = greedy {
+            variants.push(g);
+        }
+    }
+    let scored = inc.engine.eval_population(&variants, |r| {
+        decode_with(r, w, hw, tables)
+    });
+    for (s, e) in scored {
+        inc.offer_eval(&s, e, iter);
     }
 }
 
@@ -202,71 +578,56 @@ pub fn optimize_ctx(rt: Option<&Runtime>, w: &Workload, hw: &HwConfig,
     }
 }
 
-/// The native backend: Adam over the pure-Rust differentiable model.
+/// The native backend: `C` parallel Adam chains over the pure-Rust
+/// differentiable model. Chains step concurrently in lockstep blocks
+/// of `decode_every` iterations (on the serving layer's persistent
+/// pool when the context carries one, on scoped threads otherwise);
+/// between blocks the main thread batches all chains' decode offers
+/// through the engine and, late in the lambda ramp, respawns the worst
+/// half of the chains from the best one.
 fn optimize_native(w: &Workload, hw: &HwConfig, cfg: &GradientConfig,
                    budget: Budget, ctx: &EvalCtx)
                    -> Result<SearchResult> {
-    let mut rng = Rng::new(cfg.seed);
+    let c_n = cfg.chain_count();
+    let stop = ChainStop::new(budget, ctx);
     let gumbel_pool = GumbelPool::new(cfg.seed ^ 0x6789, 16);
     let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
 
-    let tables = std::sync::Arc::clone(inc.engine.tables());
+    let tables = Arc::clone(inc.engine.tables());
     let model = GradModel::new(w, hw, &tables, cfg.alpha,
                                cfg.fuse_enabled, SnapMode::Straight);
-    let n_theta = model.n_theta();
-    let n_sigma = model.n_sigma();
-    let mut scratch = GradScratch::new();
-    let mut g_theta = vec![0.0f64; n_theta];
-    let mut g_sigma = vec![0.0f64; n_sigma];
-    let mut gumbel = vec![0.0f64; model.n_gumbel()];
+    let mut batch = ChainBatch::new(w, hw, cfg, &model, c_n);
+    let per_chain_iters = budget.max_iters.max(1);
+    let block = cfg.decode_every.max(1);
+    let threads = inc.engine.threads().min(c_n);
+    let mut it = 0usize; // lockstep per-chain step index
     let mut total_iters = 0usize;
+    let mut blocks_done = 0usize;
 
-    let per_restart_iters = budget.max_iters
-        .saturating_div(cfg.restarts.max(1))
-        .max(1);
-
-    for _restart in 0..cfg.restarts.max(1) {
-        let mut theta = init_theta(w, hw, &mut rng, w.len());
-        // start mostly-unfused (sigma ~= 0.12): a 0.5 init inflates the
-        // soft group-footprint scan and distorts mappings on small
-        // scratchpads even when fusion is eventually rejected
-        let mut sigma = vec![-2.0f64; n_sigma];
-        let mut adam_t = Adam::new(n_theta, cfg.beta1, cfg.beta2);
-        let mut adam_s = Adam::new(n_sigma, cfg.beta1, cfg.beta2);
-        let mut tau = cfg.tau0;
-
-        for it in 0..per_restart_iters {
-            if inc.stopped(&budget) {
-                break;
-            }
-            total_iters += 1;
-            gumbel_pool.fill_f64(&mut rng, &mut gumbel);
-            let progress =
-                ramp_progress(it, per_restart_iters, &inc, &budget);
-            let lambda = cfg.lambda0
-                + (cfg.lambda_max - cfg.lambda0) * progress;
-
-            model.loss_and_grad(&theta, &sigma, &gumbel, tau, lambda,
-                                &mut scratch, &mut g_theta,
-                                &mut g_sigma);
-            adam_t.step(&mut theta, &g_theta, cfg.lr);
-            if cfg.fuse_enabled {
-                adam_s.step(&mut sigma, &g_sigma, cfg.lr_sigma);
-            }
-            clamp_params(&mut theta, &mut sigma, w);
-            tau = (tau * cfg.tau_decay).max(cfg.tau_min);
-
-            if it % cfg.decode_every == 0 || it + 1 == per_restart_iters
-            {
-                offer_decodes(&theta, &sigma, w, hw, cfg, &mut inc,
-                              total_iters);
-            }
-        }
-        // final decode of this restart
-        offer_decodes(&theta, &sigma, w, hw, cfg, &mut inc, total_iters);
-        if inc.stopped(&budget) {
-            break;
+    while it < per_chain_iters && !inc.stopped(&budget) {
+        let todo = block.min(per_chain_iters - it);
+        let start_it = it;
+        let step = |mut view| {
+            step_chain_block(&mut view, &model, &gumbel_pool, w, cfg,
+                             &stop, start_it, todo, per_chain_iters)
+        };
+        let views = batch.views();
+        let counts: Vec<usize> = match &ctx.pool {
+            Some(pool) => pool.scoped_map(views, step),
+            None => par_map(views, threads, step),
+        };
+        total_iters += counts.iter().sum::<usize>();
+        it += todo;
+        offer_chain_decodes(&batch, w, hw, cfg, &mut inc, total_iters,
+                            &tables);
+        blocks_done += 1;
+        if it < per_chain_iters
+            && !inc.stopped(&budget)
+            && stop.ramp(it, per_chain_iters) >= CULL_RAMP_THRESHOLD
+            && blocks_done % CULL_EVERY_BLOCKS == 0
+        {
+            batch.cull_and_respawn(w);
         }
     }
     Ok(inc.finish(total_iters))
@@ -313,9 +674,14 @@ fn optimize_pjrt(rt: &Runtime, w: &Workload, hw: &HwConfig,
         .saturating_div(cfg.restarts.max(1))
         .max(1);
 
+    // step-output copies land in reusable buffers (re-collecting
+    // fresh Vecs every step was measurable allocation churn)
+    let mut g_theta = vec![0.0f64; n_theta];
+    let mut g_sigma = vec![0.0f64; l_max];
+
     for restart in 0..cfg.restarts.max(1) {
         let mut theta = init_theta(w, hw, &mut rng, l_max);
-        // see optimize_native for the sigma init rationale
+        // see ChainBatch::new for the sigma init rationale
         let mut sigma = vec![-2.0f64; l_max];
         let mut adam_t = Adam::new(n_theta, cfg.beta1, cfg.beta2);
         let mut adam_s = Adam::new(l_max, cfg.beta1, cfg.beta2);
@@ -338,8 +704,8 @@ fn optimize_pjrt(rt: &Runtime, w: &Workload, hw: &HwConfig,
                 sigma_f32[i] = sigma[i] as f32;
             }
             gumbel_pool.fill(&mut rng, &mut gumbel);
-            let progress =
-                ramp_progress(it, per_restart_iters, &inc, &budget);
+            let progress = ramp_progress(it, per_restart_iters,
+                                         inc.elapsed(), &budget);
             let lambda = cfg.lambda0
                 + (cfg.lambda_max - cfg.lambda0) * progress;
 
@@ -358,10 +724,12 @@ fn optimize_pjrt(rt: &Runtime, w: &Workload, hw: &HwConfig,
                 &lit_div_mask, &lit_layer_mask, &lit_edge_mask,
                 &lit_gumbel, &lit_tau, &lit_alpha, &lit_lam, &lit_hw,
             ])?;
-            let g_theta: Vec<f64> =
-                out[5].iter().map(|&x| x as f64).collect();
-            let g_sigma: Vec<f64> =
-                out[6].iter().map(|&x| x as f64).collect();
+            for (dst, &src) in g_theta.iter_mut().zip(out[5].iter()) {
+                *dst = src as f64;
+            }
+            for (dst, &src) in g_sigma.iter_mut().zip(out[6].iter()) {
+                *dst = src as f64;
+            }
 
             adam_t.step(&mut theta, &g_theta, cfg.lr);
             if cfg.fuse_enabled {
@@ -391,20 +759,16 @@ fn optimize_pjrt(rt: &Runtime, w: &Workload, hw: &HwConfig,
 /// the capacity repair cutting lowest-sigma edges first. The sigma
 /// values learned by the gradient still order the greedy variant's cut
 /// priority; keeping the better feasible decode makes the fusion-aware
-/// search never lose to its own layer-wise ablation.
+/// search never lose to its own layer-wise ablation. (The PJRT serial
+/// path; the native chains batch the same two variants per chain
+/// through [`offer_chain_decodes`].)
 fn offer_decodes(theta: &[f64], sigma: &[f64], w: &Workload, hw: &HwConfig,
                  cfg: &GradientConfig, inc: &mut Incumbent, iter: usize) {
     let tables = std::sync::Arc::clone(inc.engine.tables());
     let relaxed = relaxed_from(theta, sigma, w, cfg);
     inc.offer(&decode_with(&relaxed, w, hw, &tables), iter);
     if cfg.fuse_enabled {
-        let mut greedy = relaxed.clone();
-        for (i, s) in greedy.sigma.iter_mut().enumerate() {
-            if w.fusible[i] {
-                // keep ordering information, lift above the threshold
-                *s = 0.51 + 0.49 * *s;
-            }
-        }
+        let greedy = fusion_greedy(&relaxed, w);
         inc.offer(&decode_with(&greedy, w, hw, &tables), iter);
     }
 }

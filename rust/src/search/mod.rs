@@ -3,10 +3,13 @@
 //! * [`gradient`] — FADiff itself: constrained gradient descent (Adam)
 //!   over the continuous relaxation, with tau/lambda annealing and
 //!   decode-time repair. Runs natively everywhere on the pure-Rust
-//!   differentiable model (`costmodel::grad`); the AOT `fadiff_grad`
-//!   artifact on PJRT is an optional accelerator of the same math.
-//!   DOSA (layer-wise, MICRO'23) is the same engine with fusion
-//!   disabled.
+//!   differentiable model (`costmodel::grad`), as `C` *parallel
+//!   chains* in one SoA batch — restarts step concurrently on the
+//!   worker threads (deterministic per-chain RNG streams; results are
+//!   bit-identical at any pool size) and their decode offers score in
+//!   one batched engine pass. The AOT `fadiff_grad` artifact on PJRT
+//!   is an optional accelerator of the same math. DOSA (layer-wise,
+//!   MICRO'23) is the same engine with fusion disabled.
 //! * [`ga`] — the heuristic baseline (tournament GA, paper ref [16]).
 //! * [`bo`] — the learning-based baseline (GP + expected improvement,
 //!   paper ref [15]) on top of [`gp`].
@@ -73,6 +76,13 @@ impl EvalCtx {
 
 /// Common search budget: wall-clock (the paper compares equal time) and
 /// an iteration cap as a secondary bound.
+///
+/// For the gradient searches the two bounds have distinct roles: a
+/// finite `max_iters` owns the lambda-annealing schedule (keeping
+/// iteration-budgeted runs bit-deterministic), while `seconds` is the
+/// timeout — and under a pure seconds budget (`max_iters` unbounded)
+/// the wall clock drives the ramp instead. See
+/// `gradient::ramp_progress` for the full contract.
 #[derive(Clone, Copy, Debug)]
 pub struct Budget {
     pub seconds: f64,

@@ -14,7 +14,10 @@
 //!   over the long-lived workers and the call blocks until every index
 //!   is processed. This is the serving hot path —
 //!   [`crate::search::EvalEngine`] routes batches here when the
-//!   coordinator hands it a pool (`perf_hotpath` reports the ratio).
+//!   coordinator hands it a pool (`perf_hotpath` reports the ratio),
+//!   and the native multi-chain gradient optimizer steps its chain
+//!   views through `scoped_map` each block (chains are chain-local, so
+//!   any worker count yields bit-identical results).
 //!
 //! Workers survive panicking jobs: a panic is caught, the job is counted
 //! as done, and scoped callers observe it as a re-raised panic after the

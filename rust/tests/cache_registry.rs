@@ -141,6 +141,7 @@ fn coordinator_serves_repeat_jobs_from_cache() {
         seconds: 3600.0,
         max_iters: 48,
         seed: 9,
+        chains: 0,
     };
     let r1 = coord.run(req.clone()).unwrap();
     let hits1 = coord.registry().hits();
@@ -184,6 +185,7 @@ fn pooled_coordinator_results_match_standalone_search() {
         seconds: 3600.0,
         max_iters: 4,
         seed: 21,
+        chains: 0,
     };
     let served = coord.run(req).unwrap();
 

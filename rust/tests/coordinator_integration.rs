@@ -23,6 +23,7 @@ fn small_job(workload: &str, method: Method) -> JobRequest {
         seconds: 1.5,
         max_iters: 200,
         seed: 5,
+        chains: 0,
     }
 }
 
@@ -227,6 +228,7 @@ fn cancel_stops_a_running_job_early() {
         seconds: 3600.0,
         max_iters: usize::MAX,
         seed: 3,
+        chains: 0,
     });
     // wait until it is actually running
     let t0 = Instant::now();
@@ -283,6 +285,54 @@ fn tcp_sweep_verb_serves_a_grid() {
     let cache = m.get("cache").unwrap();
     assert!(cache.get_f64("hits").unwrap() > 0.0, "{m:?}");
     assert_eq!(cache.get_f64("pairs").unwrap(), 2.0);
+
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    t.join().unwrap().unwrap();
+}
+
+#[test]
+fn tcp_sweep_fadiff_chains_deterministic_with_grad_step_metrics() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 2).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // identical-seed cells must produce identical results at every
+    // chain count: the native multi-chain backend is deterministic
+    // even with both cells running concurrently on the coordinator's
+    // shared persistent pool (an iteration cap pins the annealing
+    // schedule off the wall clock)
+    let mut expected_steps = 0.0;
+    for chains in [1usize, 4] {
+        let body = format!(
+            r#"{{"verb": "sweep", "workload": "mobilenet", "methods": ["fadiff"], "seeds": [9, 9], "seconds": 3600, "max_iters": 40, "chains": {chains}}}"#
+        );
+        let j = Json::parse(&send(addr, &body)).unwrap();
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{j:?}");
+        assert_eq!(j.get_f64("completed").unwrap(), 2.0);
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        let edp0 = results[0].get_f64("edp").unwrap();
+        let edp1 = results[1].get_f64("edp").unwrap();
+        assert!(edp0 > 0.0 && edp0.is_finite());
+        assert_eq!(edp0, edp1,
+                   "identical-seed cells diverged at chains={chains}");
+        for r in results {
+            assert_eq!(r.get_f64("chains").unwrap(), chains as f64);
+        }
+
+        // every chain runs the full 40-step schedule in both cells,
+        // and the metrics verb's grad-step counter is monotone exact
+        let m =
+            Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
+        let tp = m.get("throughput").unwrap();
+        let steps = tp.get_f64("grad_steps_total").unwrap();
+        expected_steps += 2.0 * chains as f64 * 40.0;
+        assert_eq!(steps, expected_steps,
+                   "grad_steps_total must count chain-steps exactly");
+        assert!(tp.get_f64("grad_steps_per_sec").unwrap() > 0.0);
+    }
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
     assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));

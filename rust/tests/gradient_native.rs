@@ -1,8 +1,11 @@
 //! Validation of the native differentiable backend
 //! (`costmodel::grad`): finite-difference gradient checks, end-to-end
-//! native gradient search vs random search at equal eval budgets, and
-//! (when real AOT artifacts are present) parity against the PJRT
-//! `fadiff_grad` artifact.
+//! native gradient search vs random search at equal eval budgets,
+//! parallel multi-chain determinism (same seed + same chain count =>
+//! bit-identical results at any worker-pool size) and the
+//! multi-chain-beats-single-chain wall-clock property, and (when real
+//! AOT artifacts are present) parity against the PJRT `fadiff_grad`
+//! artifact.
 //!
 //! The finite-difference protocol (points, step sizes, tolerances) is
 //! cross-validated offline against JAX autodiff of the identical f64
@@ -11,14 +14,17 @@
 //! < 3e-8 at these settings — the 1e-6 bound asserted here has > 30x
 //! margin.
 
+use std::sync::Arc;
+
 use fadiff::config::{load_config, repo_root};
 use fadiff::costmodel;
 use fadiff::costmodel::grad::{GradModel, GradScratch, SnapMode};
 use fadiff::costmodel::WorkloadTables;
 use fadiff::runtime::stage::WorkloadStage;
 use fadiff::runtime::{HostTensor, Runtime, ART_GRAD};
-use fadiff::search::{gradient, random, Budget};
+use fadiff::search::{gradient, random, Budget, EvalCtx, SearchResult};
 use fadiff::util::rng::Rng;
+use fadiff::util::threadpool::ThreadPool;
 use fadiff::workload::{Workload, NDIMS};
 
 /// Deterministic test point: theta/sigma/gumbel drawn from the repo
@@ -196,6 +202,142 @@ fn native_fadiff_not_worse_than_native_dosa() {
     assert!(rf.edp <= rd.edp * 1.02,
             "native FADiff {} should not lose to DOSA {}", rf.edp,
             rd.edp);
+}
+
+/// The timing-free fingerprint of a [`SearchResult`]: everything the
+/// determinism contract covers (trace timestamps are wall-clock and
+/// legitimately vary run-to-run).
+fn fingerprint(r: &SearchResult) -> (u64, usize, usize, Vec<u64>) {
+    (r.edp.to_bits(), r.iters, r.evals,
+     r.trace.iter().map(|t| t.best_edp.to_bits()).collect())
+}
+
+#[test]
+fn parallel_chains_bit_identical_across_pool_sizes() {
+    // the multi-chain contract: same seed + same `chains` => the same
+    // SearchResult no matter how many workers step the chains. Chains
+    // are chain-local state machines with per-chain RNG streams and
+    // the banked decodes are offered in fixed chain order, so pool
+    // sizes 1, 2 and 8 (and the pool-less scoped path) must agree
+    // bit-for-bit. An iteration budget keeps the lambda ramp (and the
+    // cull/respawn schedule, which engages past 50% here) off the
+    // wall clock.
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = fadiff::workload::zoo::vgg16();
+    let cfg = gradient::GradientConfig {
+        chains: 4,
+        seed: 0xC0FFEE,
+        ..Default::default()
+    };
+    let budget = Budget::iters(60);
+    let base = gradient::optimize(None, &w, &hw, &cfg, budget).unwrap();
+    assert!(base.edp.is_finite());
+    costmodel::feasible(&base.best, &w, &hw).unwrap();
+    for pool_size in [1usize, 2, 8] {
+        let ctx = EvalCtx {
+            pool: Some(Arc::new(ThreadPool::new(pool_size))),
+            ..Default::default()
+        };
+        let r = gradient::optimize_ctx(None, &w, &hw, &cfg, budget,
+                                       &ctx)
+            .unwrap();
+        assert_eq!(r.best.mappings, base.best.mappings,
+                   "mappings diverged at pool size {pool_size}");
+        assert_eq!(r.best.fuse, base.best.fuse,
+                   "fusion diverged at pool size {pool_size}");
+        assert_eq!(fingerprint(&r), fingerprint(&base),
+                   "result diverged at pool size {pool_size}");
+    }
+}
+
+#[test]
+fn different_chain_counts_explore_differently() {
+    // sanity on the chain seeding: extra chains are real extra
+    // trajectories, not copies — C=4 must do 4x the gradient steps of
+    // C=1 under the same per-chain iteration schedule and can only
+    // improve (or tie) the incumbent, since chain 0's stream is
+    // shared. The superset argument needs chain 0 untouched by the
+    // cull/respawn schedule, so the budget stays at 3 decode blocks
+    // (30 iters / decode_every=10) — strictly below the 4-block
+    // minimum at which the first cull can ever fire.
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = fadiff::workload::zoo::vgg16();
+    let budget = Budget::iters(30);
+    let one = gradient::optimize(
+        None, &w, &hw,
+        &gradient::GradientConfig { chains: 1, ..Default::default() },
+        budget)
+        .unwrap();
+    let four = gradient::optimize(
+        None, &w, &hw,
+        &gradient::GradientConfig { chains: 4, ..Default::default() },
+        budget)
+        .unwrap();
+    assert_eq!(one.iters, 30);
+    assert_eq!(four.iters, 4 * 30);
+    assert!(four.edp <= one.edp,
+            "a superset of chains regressed: {} > {}", four.edp,
+            one.edp);
+}
+
+#[test]
+fn multi_chain_beats_single_chain_at_equal_wall_clock() {
+    // the tentpole claim: under the paper's equal-wall-clock protocol,
+    // 8 parallel chains (full schedule each, cull/respawn on) reach a
+    // best-loss at least as good as one chain on multiple zoo
+    // workloads. The strict comparison needs real parallelism; on a
+    // small runner (< 4 cores) the chains timeshare one or two cores
+    // and the property is not guaranteed, so there we only require
+    // both runs to complete feasibly.
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    for w in [fadiff::workload::zoo::vgg16(),
+              fadiff::workload::zoo::gpt3_6_7b()] {
+        // equal-wall-clock races are inherently noisy (parallel test
+        // neighbors steal cores mid-sample), so the probabilistic
+        // claim gets two independent attempts — a true regression
+        // loses both; a scheduling hiccup does not
+        let budget = Budget::seconds(1.5);
+        let mut won = false;
+        let mut last = (f64::INFINITY, f64::INFINITY);
+        for attempt in 0..2u64 {
+            let single = gradient::optimize(
+                None, &w, &hw,
+                &gradient::GradientConfig { chains: 1,
+                                            seed: 3 + attempt,
+                                            ..Default::default() },
+                budget)
+                .unwrap();
+            let multi = gradient::optimize(
+                None, &w, &hw,
+                &gradient::GradientConfig { chains: 8,
+                                            seed: 3 + attempt,
+                                            ..Default::default() },
+                budget)
+                .unwrap();
+            costmodel::feasible(&single.best, &w, &hw).unwrap();
+            costmodel::feasible(&multi.best, &w, &hw).unwrap();
+            last = (multi.edp, single.edp);
+            if multi.edp <= single.edp * 1.001 {
+                won = true;
+                break;
+            }
+        }
+        if cores >= 4 {
+            assert!(won,
+                    "{}: C=8 ({:.4e}) lost to C=1 ({:.4e}) at equal \
+                     wall-clock on {cores} cores in both attempts",
+                    w.name, last.0, last.1);
+        } else if !won {
+            eprintln!(
+                "{}: only {cores} cores — multi-vs-single strictness \
+                 skipped (C=8 {:.4e}, C=1 {:.4e})",
+                w.name, last.0, last.1
+            );
+        }
+    }
 }
 
 #[test]
