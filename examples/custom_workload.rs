@@ -1,0 +1,76 @@
+//! Custom workloads end-to-end: define a model as a JSON workload spec
+//! (no code, no rebuild), validate it, and run every search method on
+//! it through the coordinator — exactly what the serving layer does
+//! with the protocol's `workload_spec` parameter or a
+//! `data/workloads/*.json` file.
+//!
+//! Run with:  cargo run --release --example custom_workload
+
+use std::sync::Arc;
+
+use fadiff::coordinator::{execute_job, JobRequest, Method};
+use fadiff::workload::spec;
+
+/// A small edge-vision backbone that exists nowhere in the zoo: a
+/// depthwise-separable stem feeding a pooled classifier head. The
+/// `blocked` edge marks the flatten boundary (not producer-consumer).
+const SPEC: &str = r#"{
+  "name": "edge-backbone",
+  "replicas": 1,
+  "layers": [
+    {"name": "stem",    "kind": "conv",
+     "dims": [1, 32, 3, 112, 112, 3, 3]},
+    {"name": "dw1",     "kind": "depthwise",
+     "dims": [1, 32, 1, 112, 112, 3, 3]},
+    {"name": "pw1",     "kind": "pointwise",
+     "dims": [1, 64, 32, 112, 112, 1, 1]},
+    {"name": "dw2",     "kind": "depthwise",
+     "dims": [1, 64, 1, 56, 56, 3, 3]},
+    {"name": "pw2",     "kind": "pointwise",
+     "dims": [1, 128, 64, 56, 56, 1, 1]},
+    {"name": "head",    "kind": "fc",
+     "dims": [1, 100, 128, 1, 1, 1, 1]}
+  ],
+  "blocked": [4]
+}"#;
+
+fn main() -> anyhow::Result<()> {
+    // 1. parse + validate the spec (any malformed document errors here,
+    //    with the same validation the TCP server applies to inline
+    //    workload_spec requests)
+    let workload = spec::from_str(SPEC)?;
+    println!("workload  : {} ({} layers, {:.3} GMACs, fingerprint {})",
+             workload.name, workload.len(),
+             workload.total_ops() / 1e9,
+             spec::fingerprint(&workload));
+    println!("fusible   : {:?}", workload.fusible);
+
+    // 2. run every search method on it — inline specs ride in
+    //    JobRequest::spec; no zoo registration anywhere
+    let spec_arc = Arc::new(workload);
+    println!("\n{:<8} {:>12} {:>8} {:>8}", "method", "EDP", "iters",
+             "evals");
+    for method in [Method::FADiff, Method::Dosa, Method::Ga, Method::Bo,
+                   Method::Random] {
+        let req = JobRequest {
+            workload: spec_arc.name.clone(),
+            method,
+            seconds: 2.0,
+            max_iters: 60,
+            seed: 7,
+            spec: Some(Arc::clone(&spec_arc)),
+            ..Default::default()
+        };
+        let r = execute_job(None, &req)?;
+        println!("{:<8} {:>12.4e} {:>8} {:>8}", method.name(), r.edp,
+                 r.iters, r.evals);
+    }
+
+    // 3. the same document would be served over TCP as:
+    //    {"verb": "optimize", "method": "fadiff",
+    //     "workload_spec": { ... }}
+    //    or dropped into data/workloads/edge-backbone.json and run as
+    //    {"verb": "optimize", "workload": "edge-backbone"}
+    println!("\n(see docs/protocol.md for the wire form)");
+    Ok(())
+}

@@ -14,40 +14,62 @@ use epa::EpaMlp;
 /// Indices into the `hw` vector handed to the AOT artifacts.
 /// MUST mirror `python/compile/constants.py`.
 pub mod hwvec {
+    /// PE-array rows.
     pub const PE_ROWS: usize = 0;
+    /// PE-array columns.
     pub const PE_COLS: usize = 1;
+    /// L1 accumulator capacity (bytes).
     pub const C1: usize = 2;
+    /// L2 scratchpad capacity (bytes).
     pub const C2: usize = 3;
+    /// DRAM bandwidth (bytes/cycle).
     pub const BW3: usize = 4;
+    /// L2 bandwidth (bytes/cycle).
     pub const BW2: usize = 5;
+    /// L1 bandwidth (bytes/cycle).
     pub const BW1: usize = 6;
+    /// DRAM energy per access (pJ).
     pub const EPA3: usize = 7;
+    /// L2 energy per access (pJ).
     pub const EPA2: usize = 8;
+    /// L1 energy per access (pJ).
     pub const EPA1: usize = 9;
+    /// Register-file energy per access (pJ).
     pub const EPA0: usize = 10;
+    /// Energy per MAC (pJ).
     pub const EPO: usize = 11;
+    /// Bytes per element.
     pub const EB: usize = 12;
+    /// Total vector length (padded).
     pub const NHW: usize = 16;
 }
 
 /// A fully-resolved accelerator configuration.
 #[derive(Clone, Debug)]
 pub struct HwConfig {
+    /// Configuration name ("large" / "small" / custom).
     pub name: String,
+    /// PE-array rows (spatial C bound).
     pub pe_rows: usize,
+    /// PE-array columns (spatial K bound).
     pub pe_cols: usize,
     /// L1 accumulator capacity, bytes.
     pub c1_bytes: f64,
     /// L2 scratchpad capacity, bytes.
     pub c2_bytes: f64,
-    /// Bandwidths, bytes per cycle (1 GHz clock).
+    /// DRAM bandwidth, bytes per cycle (1 GHz clock).
     pub bw_dram: f64,
+    /// L2 bandwidth, bytes per cycle.
     pub bw_l2: f64,
+    /// L1 bandwidth, bytes per cycle.
     pub bw_l1: f64,
-    /// Energy per element access, pJ.
+    /// DRAM energy per element access, pJ.
     pub epa_dram: f64,
+    /// L2 energy per element access, pJ (from the EPA MLP).
     pub epa_l2: f64,
+    /// L1 energy per element access, pJ (from the EPA MLP).
     pub epa_l1: f64,
+    /// Register-file energy per element access, pJ.
     pub epa_reg: f64,
     /// Energy per MAC, pJ.
     pub energy_per_mac: f64,

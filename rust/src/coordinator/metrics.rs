@@ -6,9 +6,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Service counters.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Jobs accepted into the queue.
     pub submitted: AtomicU64,
+    /// Jobs a worker began executing.
     pub started: AtomicU64,
+    /// Jobs that finished successfully.
     pub completed: AtomicU64,
+    /// Jobs that finished with an error.
     pub failed: AtomicU64,
     /// Jobs that ended because a `cancel` arrived (whether they were
     /// still queued or already running).

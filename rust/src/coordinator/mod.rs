@@ -60,7 +60,7 @@ use crate::search::{bo, ga, gradient, random, Budget, EvalCtx,
 use crate::util::json::Json;
 use crate::util::threadpool::{oneshot, OneShot, OneShotSender,
                               ThreadPool};
-use crate::workload::zoo;
+use crate::workload::{spec, zoo, Workload};
 
 pub use metrics::Metrics;
 pub use registry::CacheRegistry;
@@ -68,14 +68,20 @@ pub use registry::CacheRegistry;
 /// Optimization method selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
+    /// The paper's joint mapping + fusion gradient search.
     FADiff,
+    /// Layer-wise gradient ablation (no fusion; MICRO'23 DOSA-like).
     Dosa,
+    /// Genetic-algorithm baseline.
     Ga,
+    /// Bayesian-optimization baseline.
     Bo,
+    /// Uniform random search (sanity floor).
     Random,
 }
 
 impl Method {
+    /// Parse a protocol/CLI method name (aliases included).
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "fadiff" | "gradient" => Method::FADiff,
@@ -87,6 +93,7 @@ impl Method {
         })
     }
 
+    /// Canonical wire name.
     pub fn name(&self) -> &'static str {
         match self {
             Method::FADiff => "fadiff",
@@ -101,16 +108,30 @@ impl Method {
 /// A deployment-optimization request.
 #[derive(Clone, Debug)]
 pub struct JobRequest {
+    /// Workload name: a zoo model, a `data/workloads/*.json` spec
+    /// stem, or (when [`JobRequest::spec`] is set) the inline spec's
+    /// own name, kept for display.
     pub workload: String,
+    /// Hardware configuration name (`data/hw_configs.json`).
     pub config: String,
+    /// Search method to run.
     pub method: Method,
+    /// Wall-clock budget in seconds.
     pub seconds: f64,
+    /// Iteration cap (see [`crate::search::Budget`] for how the two
+    /// bounds interact on the gradient methods).
     pub max_iters: usize,
+    /// PRNG seed — same seed, same request, same result.
     pub seed: u64,
     /// Parallel chain count for the gradient methods' native backend
     /// (`0` = the method default — one chain per configured restart).
     /// Ignored by GA / BO / random.
     pub chains: usize,
+    /// Inline custom workload (the protocol's `workload_spec`
+    /// parameter / the CLI's `--workload-file`). When set it overrides
+    /// the `workload` name lookup entirely; evaluation caches key on
+    /// the spec's content fingerprint (see [`JobRequest::cache_key`]).
+    pub spec: Option<Arc<Workload>>,
 }
 
 impl Default for JobRequest {
@@ -123,6 +144,28 @@ impl Default for JobRequest {
             max_iters: usize::MAX,
             seed: 0xFAD1FF,
             chains: 0,
+            spec: None,
+        }
+    }
+}
+
+impl JobRequest {
+    /// The workload half of this job's evaluation-cache key, given the
+    /// workload the job actually resolved to. Zoo names key by name
+    /// (builders are immutable in-process); everything *mutable* —
+    /// inline specs and `data/workloads/*.json` files, which can
+    /// change under a running server — keys by content fingerprint as
+    /// `spec:<fingerprint>`, so (a) two different specs can never
+    /// share one [`crate::search::EvalCache`] even when they share a
+    /// display name, (b) editing a spec file invalidates its cache
+    /// pair instead of serving stale evaluations, and (c) a spec can
+    /// never collide with a zoo name (`:` is not valid there).
+    pub fn cache_key(&self, resolved: &Workload) -> String {
+        if self.spec.is_none() && zoo::by_name(&self.workload).is_some()
+        {
+            self.workload.clone()
+        } else {
+            format!("spec:{}", spec::fingerprint(resolved))
         }
     }
 }
@@ -130,33 +173,45 @@ impl Default for JobRequest {
 /// The outcome handed back to the requester.
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// The request this result answers.
     pub request: JobRequest,
     /// Per-replica EDP (pJ * cycles).
     pub edp: f64,
     /// Full-model EDP (replica^2-scaled, Table-1 units).
     pub full_model_edp: f64,
+    /// Energy, pJ (per replica).
     pub energy: f64,
+    /// Latency, cycles (per replica).
     pub latency: f64,
     /// Fusion groups as (start, end) inclusive layer ranges.
     pub groups: Vec<(usize, usize)>,
     /// Layer names per fused group of size > 1.
     pub fused_names: Vec<Vec<String>>,
+    /// Search iterations executed.
     pub iters: usize,
+    /// Candidate evaluations (cache hits included).
     pub evals: usize,
+    /// Wall-clock job duration.
     pub wall_seconds: f64,
 }
 
 /// Lifecycle of a tracked job (see [`Coordinator::submit_tracked`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobStatus {
+    /// Accepted, waiting for a worker.
     Queued,
+    /// Executing on a worker.
     Running,
+    /// Finished successfully (result available).
     Completed,
+    /// Finished with an error (message available).
     Failed,
+    /// Stopped by a cancel request (partial best kept when running).
     Cancelled,
 }
 
 impl JobStatus {
+    /// Canonical wire name.
     pub fn name(&self) -> &'static str {
         match self {
             JobStatus::Queued => "queued",
@@ -271,6 +326,7 @@ struct Envelope {
 pub struct Coordinator {
     tx: Option<Sender<Envelope>>,
     workers: Vec<JoinHandle<()>>,
+    /// Service counters (shared with the TCP server's `metrics` verb).
     pub metrics: Arc<Metrics>,
     registry: Arc<CacheRegistry>,
     eval_pool: Arc<ThreadPool>,
@@ -413,6 +469,7 @@ impl Coordinator {
             .map_err(|e| anyhow!(e))
     }
 
+    /// Number of job workers this coordinator runs.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
@@ -566,21 +623,69 @@ fn worker_loop(dir: &std::path::Path,
 /// uses) reproduces standalone behavior exactly.
 #[derive(Default)]
 pub struct JobCtx<'c> {
+    /// Cross-job cache registry (shared per-pair evaluation caches).
     pub registry: Option<&'c CacheRegistry>,
+    /// Persistent evaluation pool for batch scoring.
     pub pool: Option<Arc<ThreadPool>>,
+    /// Cooperative cancellation flag.
     pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl JobCtx<'_> {
-    fn eval_ctx(&self, req: &JobRequest) -> EvalCtx {
+    fn eval_ctx(&self, req: &JobRequest, resolved: &Workload) -> EvalCtx {
         EvalCtx {
-            cache: self
-                .registry
-                .map(|r| r.cache_for(&req.workload, &req.config)),
+            cache: self.registry.map(|r| {
+                r.cache_for(&req.cache_key(resolved), &req.config)
+            }),
             pool: self.pool.clone(),
             cancel: self.cancel.clone(),
         }
     }
+}
+
+/// Resolve a workload name: built-in zoo models first
+/// ([`zoo::by_name`]), then the checked-in spec files under
+/// `data/workloads/` ([`spec::load_named`]) — so dropping a JSON file
+/// there serves a new scenario without a rebuild.
+pub fn resolve_workload(name: &str) -> Result<Workload> {
+    if let Some(w) = zoo::by_name(name) {
+        return Ok(w);
+    }
+    match spec::load_named(&repo_root(), name) {
+        Some(r) => r,
+        None => Err(anyhow!(
+            "unknown workload {name:?} (not a zoo model or a \
+             data/workloads/*.json spec)"
+        )),
+    }
+}
+
+/// Everything servable, as `(name, source, load outcome)` rows: the
+/// zoo builders (source `"zoo"`) followed by the `data/workloads/`
+/// spec files (source `"spec"`, excluding stems a zoo builder shadows
+/// in resolution). Broken spec files surface as their `Err` instead
+/// of being hidden. The single listing consumed by both the server's
+/// `workloads` verb and the CLI's `workloads` subcommand, so the two
+/// can never diverge.
+#[allow(clippy::type_complexity)]
+pub fn workload_catalog()
+    -> Vec<(String, &'static str, Result<Workload>)> {
+    let mut rows = Vec::new();
+    for name in zoo::names() {
+        if let Some(w) = zoo::by_name(name) {
+            rows.push((name.to_string(), "zoo", Ok(w)));
+        }
+    }
+    let repo = repo_root();
+    for name in spec::list_spec_names(&repo) {
+        if zoo::by_name(&name).is_some() {
+            continue; // the zoo builder shadows the file in resolution
+        }
+        if let Some(r) = spec::load_named(&repo, &name) {
+            rows.push((name, "spec", r));
+        }
+    }
+    rows
 }
 
 /// Run one job on a given (optional) runtime; also used directly by
@@ -598,21 +703,27 @@ pub fn execute_job(rt: Option<&Runtime>, req: &JobRequest)
 /// persistent pool, and poll the cancel flag between batches.
 pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
                        ctx: &JobCtx) -> Result<JobResult> {
-    let w = zoo::by_name(&req.workload)
-        .ok_or_else(|| anyhow!("unknown workload {:?}", req.workload))?;
+    let resolved;
+    let w: &Workload = match &req.spec {
+        Some(inline) => inline.as_ref(),
+        None => {
+            resolved = resolve_workload(&req.workload)?;
+            &resolved
+        }
+    };
     let hw = load_config(&repo_root(), &req.config)?;
     let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
-    let ectx = ctx.eval_ctx(req);
+    let ectx = ctx.eval_ctx(req, w);
     let t0 = std::time::Instant::now();
     let r: SearchResult = match req.method {
         Method::FADiff => gradient::optimize_ctx(
-            rt, &w, &hw,
+            rt, w, &hw,
             &gradient::GradientConfig { seed: req.seed,
                                         chains: req.chains,
                                         ..Default::default() },
             budget, &ectx)?,
         Method::Dosa => gradient::optimize_ctx(
-            rt, &w, &hw,
+            rt, w, &hw,
             &gradient::GradientConfig {
                 seed: req.seed,
                 chains: req.chains,
@@ -620,16 +731,16 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
             },
             budget, &ectx)?,
         Method::Ga => ga::optimize_ctx(
-            &w, &hw, &ga::GaConfig { seed: req.seed, ..Default::default() },
+            w, &hw, &ga::GaConfig { seed: req.seed, ..Default::default() },
             budget, &ectx)?,
         Method::Bo => bo::optimize_ctx(
-            &w, &hw, &bo::BoConfig { seed: req.seed, ..Default::default() },
+            w, &hw, &bo::BoConfig { seed: req.seed, ..Default::default() },
             budget, &ectx)?,
-        Method::Random => random::optimize_ctx(&w, &hw, req.seed, budget,
+        Method::Random => random::optimize_ctx(w, &hw, req.seed, budget,
                                                &ectx)?,
     };
     // final safety: the result must be hardware-valid
-    costmodel::feasible(&r.best, &w, &hw)
+    costmodel::feasible(&r.best, w, &hw)
         .map_err(|e| anyhow!("coordinator produced invalid strategy: {e}"))?;
     let groups = r.best.groups();
     let fused_names = groups
@@ -642,7 +753,7 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     Ok(JobResult {
         request: req.clone(),
         edp: r.edp,
-        full_model_edp: r.full_model_edp(&w),
+        full_model_edp: r.full_model_edp(w),
         energy: r.energy,
         latency: r.latency,
         groups,
@@ -654,7 +765,10 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
 }
 
 /// Graceful-shutdown flag shared with the TCP server.
-pub struct ShutdownFlag(pub Arc<AtomicBool>);
+pub struct ShutdownFlag(
+    /// Set to true to stop accepting and join every connection.
+    pub Arc<AtomicBool>,
+);
 
 impl Default for ShutdownFlag {
     fn default() -> Self {

@@ -99,6 +99,7 @@ impl CacheRegistry {
         self.entries.lock().unwrap().len()
     }
 
+    /// Whether no pair has been registered yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -1,22 +1,33 @@
 //! TCP front-end for the coordinator: a line-delimited JSON protocol.
 //!
-//! Request (one line each):
+//! The complete wire reference (every verb, parameter, limit and error
+//! shape, with example request/response lines) lives in
+//! `docs/protocol.md`; the short form:
+//!
 //!   {"verb": "optimize", "workload": "resnet18", "config": "large",
 //!    "method": "fadiff", "seconds": 5, "seed": 1, "chains": 8}
 //!   {"verb": "sweep", "workloads": ["resnet18", "vgg16"],
 //!    "methods": ["ga", "random"], "seeds": [1, 2], "seconds": 5}
+//!   {"verb": "submit", "workload": "gpt3", "method": "ga",
+//!    "seconds": 120}
+//!   {"verb": "status", "job_id": 7}
+//!   {"verb": "cancel", "job_id": 7}
+//!   {"verb": "workloads"}                       (list the zoo + specs)
+//!   {"verb": "workloads", "describe": "vgg16"}  (full description)
+//!   {"verb": "metrics"}
+//!   {"verb": "ping"}
+//!   {"verb": "shutdown"}
 //!
 //! `chains` (optional, default 0 = method default) sets the parallel
 //! chain count of the gradient methods' native backend; it applies to
 //! `optimize`/`submit` and to every cell of a `sweep`. GA / BO /
 //! random ignore it.
-//!   {"verb": "submit", "workload": "gpt3", "method": "ga",
-//!    "seconds": 120}
-//!   {"verb": "status", "job_id": 7}
-//!   {"verb": "cancel", "job_id": 7}
-//!   {"verb": "metrics"}
-//!   {"verb": "ping"}
-//!   {"verb": "shutdown"}
+//!
+//! `workload` accepts zoo names and `data/workloads/*.json` spec
+//! stems; alternatively `workload_spec` carries a full inline workload
+//! document (the JSON DSL of [`crate::workload::spec`]), validated and
+//! size-capped at parse time, on `optimize` / `submit` / `sweep`
+//! (where it applies to every cell and excludes a `workloads` list).
 //!
 //! Response (one line): {"ok":true,...} or {"ok":false,"error":"..."},
 //! serialized with [`Json::compact`] so payload content can never break
@@ -46,8 +57,10 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::util::json::{arr, num, obj, s as js, Json};
+use crate::workload::spec;
 
-use super::{Coordinator, JobRequest, JobResult, Method, ShutdownFlag};
+use super::{resolve_workload, workload_catalog, Coordinator,
+            JobRequest, JobResult, Method, ShutdownFlag};
 
 /// Requests larger than this (one line, bytes) are rejected without
 /// buffering the excess.
@@ -93,6 +106,13 @@ pub fn parse_request(j: &Json) -> Result<JobRequest> {
                   req.chains);
         }
     }
+    if let Ok(spec_j) = j.get("workload_spec") {
+        // size-capped and fully validated at parse time, like `chains`:
+        // a bad spec is a one-line error before any job is queued
+        let w = spec::parse_inline(spec_j)?;
+        req.workload = w.name.clone();
+        req.spec = Some(Arc::new(w));
+    }
     Ok(req)
 }
 
@@ -115,6 +135,10 @@ fn parse_str_list(j: &Json, key: &str, default: &str)
 /// `workload`/`method`/`seed`) provide the shared defaults.
 pub fn parse_sweep(j: &Json) -> Result<Vec<JobRequest>> {
     let base = parse_request(j)?;
+    if base.spec.is_some() && j.get("workloads").is_ok() {
+        bail!("a sweep takes either an inline workload_spec (applied \
+               to every cell) or a workloads list, not both");
+    }
     let workloads = parse_str_list(j, "workloads", &base.workload)?;
     let methods: Vec<Method> = match j.get("methods") {
         Err(_) => vec![base.method],
@@ -154,6 +178,7 @@ pub fn parse_sweep(j: &Json) -> Result<Vec<JobRequest>> {
                     max_iters: base.max_iters,
                     seed,
                     chains: base.chains,
+                    spec: base.spec.clone(),
                 });
             }
         }
@@ -202,6 +227,60 @@ fn get_job_id(j: &Json) -> Result<u64> {
         bail!("job_id must be a non-negative integer");
     }
     Ok(x as u64)
+}
+
+/// The `workloads` verb: list every servable workload (zoo builders +
+/// checked-in spec files, via the shared
+/// [`super::workload_catalog`]), or — with `describe` (a name) or an
+/// inline `workload_spec` — return one workload's full description
+/// (the canonical spec plus derived summary fields).
+fn run_workloads(j: &Json) -> Json {
+    if let Ok(spec_j) = j.get("workload_spec") {
+        // describe-an-inline-spec doubles as a validation endpoint
+        return match spec::parse_inline(spec_j) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(w) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("workload", spec::describe_json(&w)),
+            ]),
+        };
+    }
+    if let Ok(name_j) = j.get("describe") {
+        let name = match name_j.as_str() {
+            Err(_) => return error_json("describe must be a string"),
+            Ok(n) => n,
+        };
+        return match resolve_workload(name) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(w) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("workload", spec::describe_json(&w)),
+            ]),
+        };
+    }
+    let rows = workload_catalog()
+        .into_iter()
+        .map(|(name, source, outcome)| match outcome {
+            Ok(w) => obj(vec![
+                ("name", js(&name)),
+                ("source", js(source)),
+                ("layers", num(w.len() as f64)),
+                ("replicas", num(w.replicas)),
+                ("total_macs", num(w.total_ops())),
+            ]),
+            // a broken checked-in file should be visible, not hidden
+            Err(e) => obj(vec![
+                ("name", js(&name)),
+                ("source", js(source)),
+                ("error", js(&e.to_string())),
+            ]),
+        })
+        .collect::<Vec<_>>();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("count", num(rows.len() as f64)),
+        ("workloads", arr(rows)),
+    ])
 }
 
 fn run_sweep(j: &Json, coord: &Coordinator) -> Json {
@@ -336,6 +415,7 @@ fn respond(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
             },
         },
         "sweep" => run_sweep(&j, coord),
+        "workloads" => run_workloads(&j),
         other => error_json(&format!("unknown verb {other:?}")),
     }
 }
@@ -626,6 +706,67 @@ mod tests {
         .unwrap();
         let err = parse_sweep(&j).unwrap_err().to_string();
         assert!(err.contains("cap"), "{err}");
+    }
+
+    const SPEC_BODY: &str = r#"{"name": "custom-mlp",
+        "layers": [
+            {"name": "fc1", "kind": "fc",
+             "dims": [1, 256, 784, 1, 1, 1, 1]},
+            {"name": "fc2", "kind": "fc",
+             "dims": [1, 10, 256, 1, 1, 1, 1]}
+        ]}"#;
+
+    #[test]
+    fn parse_request_accepts_inline_workload_spec() {
+        let j = Json::parse(&format!(
+            r#"{{"method": "random", "workload_spec": {SPEC_BODY}}}"#
+        ))
+        .unwrap();
+        let r = parse_request(&j).unwrap();
+        let w = Arc::clone(r.spec.as_ref().expect("inline spec parsed"));
+        assert_eq!(w.name, "custom-mlp");
+        assert_eq!(r.workload, "custom-mlp", "display name follows spec");
+        assert_eq!(w.len(), 2);
+        assert!(r.cache_key(&w).starts_with("spec:"),
+                "inline specs must not key caches by display name");
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_inline_specs() {
+        for body in [
+            r#"{"workload_spec": {"name": "x", "layers": []}}"#,
+            r#"{"workload_spec": {"layers": [1]}}"#,
+            r#"{"workload_spec": "vgg16"}"#,
+            r#"{"workload_spec": {"name": "x", "layers": [
+                {"name": "a", "kind": "fc",
+                 "dims": [1, 8, 8, 1, 1, 1, 1, 1]}]}}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert!(parse_request(&j).is_err(), "{body}");
+        }
+    }
+
+    #[test]
+    fn parse_sweep_carries_inline_spec_to_every_cell() {
+        let j = Json::parse(&format!(
+            r#"{{"verb": "sweep", "methods": ["random", "ga"],
+                 "seeds": [1, 2], "workload_spec": {SPEC_BODY}}}"#
+        ))
+        .unwrap();
+        let reqs = parse_sweep(&j).unwrap();
+        assert_eq!(reqs.len(), 4);
+        for r in &reqs {
+            assert_eq!(r.workload, "custom-mlp");
+            assert!(r.spec.is_some());
+        }
+        // spec + workloads list is ambiguous and must be rejected
+        let j = Json::parse(&format!(
+            r#"{{"verb": "sweep", "workloads": ["vgg16"],
+                 "workload_spec": {SPEC_BODY}}}"#
+        ))
+        .unwrap();
+        let err = parse_sweep(&j).unwrap_err().to_string();
+        assert!(err.contains("not both"), "{err}");
     }
 
     #[test]

@@ -29,9 +29,13 @@ use crate::workload::Workload;
 /// output row; [`crate::search::eval::Eval`] mirrors it).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
+    /// Total energy, pJ (reported even for infeasible candidates).
     pub energy: f64,
+    /// Total latency, cycles.
     pub latency: f64,
+    /// `energy * latency`.
     pub edp: f64,
+    /// Validity + accumulator bound + fusion-group scratchpad bound.
     pub feasible: bool,
 }
 
@@ -47,6 +51,7 @@ pub struct SoaScratch {
 }
 
 impl SoaScratch {
+    /// An empty scratch (columns grow on first use).
     pub fn new() -> SoaScratch {
         SoaScratch::default()
     }

@@ -70,10 +70,15 @@ pub enum SnapMode {
 /// Scalar outputs of one loss evaluation.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepOut {
+    /// The augmented loss `ln(EDP + eps) + lambda * penalty`.
     pub loss: f64,
+    /// Relaxed EDP (pJ * cycles).
     pub edp: f64,
+    /// Relaxed energy, pJ.
     pub energy: f64,
+    /// Relaxed latency, cycles.
     pub latency: f64,
+    /// Total penalty term (Eqs. 20-26).
     pub penalty: f64,
 }
 
@@ -141,6 +146,7 @@ fn fill(v: &mut Vec<f64>, n: usize) {
 }
 
 impl GradScratch {
+    /// An empty scratch (buffers size themselves on first use).
     pub fn new() -> GradScratch {
         GradScratch::default()
     }

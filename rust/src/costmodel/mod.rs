@@ -34,29 +34,49 @@ use crate::mapping::{LayerMapping, Strategy, SLOT_S, SLOT_T0, SLOT_T1,
 use crate::workload::{Workload, DIM_C, DIM_K, DIM_P, DIM_Q, DIM_R, DIM_S,
                       DIM_N, NDIMS};
 
-/// Dims of each tensor (mirror of constants.py membership masks).
+// Dims of each tensor (mirror of constants.py membership masks).
+
+/// Dimensions the weight tensor varies over.
 pub const W_DIMS: [usize; 4] = [DIM_K, DIM_C, DIM_R, DIM_S];
+/// Dimensions the input tensor varies over.
 pub const I_DIMS: [usize; 6] = [DIM_N, DIM_C, DIM_P, DIM_Q, DIM_R, DIM_S];
+/// Dimensions the output tensor varies over.
 pub const O_DIMS: [usize; 4] = [DIM_N, DIM_K, DIM_P, DIM_Q];
 
 /// Per-layer traffic components (paper Eqs. (4)-(12)); element counts.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Comp {
+    /// Total MACs of the layer.
     pub ops: f64,
+    /// Effective PEs (spatial K x spatial C).
     pub pes: f64,
+    /// Input elements filled into L2 from DRAM (Eq. 6).
     pub fill2_i: f64,
+    /// Weight elements filled into L2 from DRAM (Eq. 6).
     pub fill2_w: f64,
+    /// Weight elements filled into the register file (Eq. 7).
     pub fill0_w: f64,
+    /// Input elements streamed through the PE array (Eq. 8).
     pub read_pe_i: f64,
+    /// Output partial-sum accumulate/write-back traffic at L1 (Eq. 9).
     pub accwb_o: f64,
+    /// Output elements drained from L1 (Eq. 10).
     pub wb0_o: f64,
+    /// Weight-tile L2 footprint, elements (Eq. 24 operand).
     pub s_w2: f64,
+    /// Input-tile L2 footprint, elements (Eq. 24 operand).
     pub s_i2: f64,
+    /// Output-tile L1 (accumulator) footprint, elements (Eq. 25).
     pub s_o1: f64,
+    /// L2-resident extent of P (alignment penalty operand, Eq. 26).
     pub tp2: f64,
+    /// L2-resident extent of Q.
     pub tq2: f64,
+    /// L2-resident extent of K.
     pub tk2: f64,
+    /// L2-resident extent of C.
     pub tc2: f64,
+    /// Weight reads at the register file (= ops).
     pub read0_w: f64,
 }
 
@@ -74,10 +94,15 @@ pub struct LayerCost {
 /// Whole-strategy evaluation result.
 #[derive(Clone, Debug)]
 pub struct CostReport {
+    /// Total energy, pJ (per replica).
     pub energy: f64,
+    /// Total latency, cycles (per replica).
     pub latency: f64,
+    /// `energy * latency`.
     pub edp: f64,
+    /// Fusion-modulated cost per layer.
     pub per_layer: Vec<LayerCost>,
+    /// Raw traffic components per layer.
     pub comps: Vec<Comp>,
 }
 
@@ -175,11 +200,15 @@ pub fn layer_cost(c: &Comp, sig_out: f64, sig_in: f64, hw: &HwConfig)
 /// (`perf_hotpath` reports both lanes against the allocating path).
 #[derive(Debug, Default)]
 pub struct CostScratch {
+    /// Per-layer traffic components of the last evaluation.
     pub comps: Vec<Comp>,
+    /// Per-layer costs of the last evaluation (untouched by
+    /// [`feasible_with`]).
     pub per_layer: Vec<LayerCost>,
 }
 
 impl CostScratch {
+    /// An empty scratch (buffers grow on first use).
     pub fn new() -> CostScratch {
         CostScratch::default()
     }

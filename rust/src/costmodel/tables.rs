@@ -34,6 +34,7 @@ pub const DEFAULT_K_MAX: usize = 32;
 /// Divisor/prime machinery of one problem-dimension size `n`.
 #[derive(Clone, Debug)]
 pub struct DimTable {
+    /// The dimension size these tables were built for.
     pub n: u64,
     /// All divisors of `n`, ascending.
     pub divisors: Vec<u64>,

@@ -19,22 +19,32 @@ use crate::workload::{zoo, Layer, DIM_C, DIM_K, DIM_N, DIM_P, DIM_Q,
 /// One swept point.
 #[derive(Clone, Debug)]
 pub struct TrendPoint {
+    /// Output-tile edge size of the sweep point.
     pub tile: usize,
+    /// Closed-form model latency, cycles.
     pub ours_latency: f64,
+    /// Closed-form model energy, pJ.
     pub ours_energy: f64,
+    /// DeFiNES-like baseline latency, cycles.
     pub df_latency: f64,
+    /// DeFiNES-like baseline energy, pJ.
     pub df_energy: f64,
 }
 
 /// One panel of Fig 3 (two-layer or three-layer fusion).
 #[derive(Clone, Debug)]
 pub struct TrendReport {
+    /// Fused-stack depth of this panel.
     pub stack_len: usize,
+    /// Swept points in tile order.
     pub points: Vec<TrendPoint>,
+    /// Pearson correlation of the z-scored latency trends.
     pub latency_corr: f64,
+    /// Pearson correlation of the z-scored energy trends.
     pub energy_corr: f64,
-    /// Z-scored series in sweep order: (ours, definesim).
+    /// Z-scored latency series in sweep order: (ours, definesim).
     pub z_latency: (Vec<f64>, Vec<f64>),
+    /// Z-scored energy series in sweep order: (ours, definesim).
     pub z_energy: (Vec<f64>, Vec<f64>),
 }
 

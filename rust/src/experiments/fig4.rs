@@ -11,16 +11,22 @@ use crate::workload::Workload;
 /// One method's convergence trace.
 #[derive(Clone, Debug)]
 pub struct MethodTrace {
+    /// Method name.
     pub method: String,
+    /// Best full-model EDP at budget exhaustion.
     pub final_edp: f64,
+    /// Incumbent-improvement trace.
     pub trace: Vec<TracePoint>,
 }
 
 /// The full figure: one trace per method.
 #[derive(Clone, Debug)]
 pub struct Fig4Report {
+    /// Workload the traces were collected on.
     pub workload: String,
+    /// Shared wall-clock budget per method.
     pub budget_seconds: f64,
+    /// One trace per method.
     pub methods: Vec<MethodTrace>,
 }
 

@@ -11,27 +11,35 @@ use crate::search::{bo, ga, gradient, Budget};
 use crate::util::stats::geomean;
 use crate::workload::{zoo, Workload};
 
+/// Methods of the Table-1 comparison, in column order.
 pub const METHODS: [&str; 4] = ["DOSA", "BO", "GA", "FADiff"];
 
 /// One table cell.
 #[derive(Clone, Debug)]
 pub struct Cell {
+    /// Workload name (row).
     pub workload: String,
+    /// Hardware configuration name (panel).
     pub config: String,
+    /// Method name (column).
     pub method: String,
     /// Full-model EDP (replica-scaled).
     pub edp: f64,
+    /// Wall-clock time the cell's search took.
     pub seconds: f64,
 }
 
 /// The reproduced table.
 #[derive(Clone, Debug)]
 pub struct Table1 {
+    /// Every (workload, config, method) cell.
     pub cells: Vec<Cell>,
+    /// Per-cell search budget.
     pub budget_seconds: f64,
 }
 
 impl Table1 {
+    /// Look up one cell.
     pub fn get(&self, workload: &str, config: &str, method: &str)
                -> Option<&Cell> {
         self.cells.iter().find(|c| {

@@ -19,22 +19,34 @@ use crate::workload::{zoo, NDIMS};
 /// Validation metrics per operator.
 #[derive(Clone, Debug)]
 pub struct OperatorValidation {
+    /// Operator name.
     pub name: String,
+    /// Access-count prediction accuracy vs the simulator, in [0, 1].
     pub access_accuracy: f64,
+    /// Kendall tau of latency ranking.
     pub latency_tau: f64,
+    /// Spearman rho of latency ranking.
     pub latency_rho: f64,
+    /// Kendall tau of energy ranking.
     pub energy_tau: f64,
+    /// Spearman rho of energy ranking.
     pub energy_rho: f64,
 }
 
 /// Aggregate report.
 #[derive(Clone, Debug)]
 pub struct ValidationReport {
+    /// Per-operator metrics.
     pub per_op: Vec<OperatorValidation>,
+    /// Mean access-count accuracy across operators.
     pub mean_access_accuracy: f64,
+    /// Mean latency Kendall tau.
     pub mean_latency_tau: f64,
+    /// Mean latency Spearman rho.
     pub mean_latency_rho: f64,
+    /// Mean energy Kendall tau.
     pub mean_energy_tau: f64,
+    /// Mean energy Spearman rho.
     pub mean_energy_rho: f64,
 }
 

@@ -50,12 +50,29 @@
 //!
 //! `fadiff serve` runs the [`coordinator`] as a multi-tenant TCP
 //! service: a line-delimited JSON protocol (`optimize`, `sweep`,
-//! `submit`/`status`/`cancel`, `metrics`, `ping`, `shutdown`) over a
-//! worker pool whose jobs share per-`(workload, config)` evaluation
-//! caches ([`coordinator::CacheRegistry`]) and one persistent scoped
-//! thread pool — repeated or concurrent jobs on the same pair are
-//! served warm, and sweeps fan whole method x workload x seed grids
-//! through a single warm process.
+//! `submit`/`status`/`cancel`, `workloads`, `metrics`, `ping`,
+//! `shutdown` — full reference in `docs/protocol.md`) over a worker
+//! pool whose jobs share per-`(workload, config)` evaluation caches
+//! ([`coordinator::CacheRegistry`]) and one persistent scoped thread
+//! pool — repeated or concurrent jobs on the same pair are served
+//! warm, and sweeps fan whole method x workload x seed grids through
+//! a single warm process.
+//!
+//! # Workloads as data
+//!
+//! Workloads come from the built-in [`workload::zoo`] builders or from
+//! the JSON workload-spec DSL ([`workload::spec`]): checked-in
+//! `data/workloads/*.json` files are servable by file stem with no
+//! rebuild, `--workload-file` runs a local spec, and the protocol's
+//! `workload_spec` parameter carries one inline — all through a single
+//! validating parser, with evaluation caches keyed by content
+//! fingerprint for inline specs.
+//!
+//! A map of the crate (module -> file -> data flow) is maintained in
+//! `docs/ARCHITECTURE.md`; the paper-equation-to-code correspondence
+//! of the cost model lives in `docs/costmodel.md`.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

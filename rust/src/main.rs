@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   optimize   run one optimization job (workload x config x method)
+//!   workloads  list / describe servable workloads (zoo + spec files)
 //!   table1     reproduce Table 1 (all workloads/configs/methods)
 //!   fig3       reproduce Fig 3 (fusion trend vs DeFiNES-like baseline)
 //!   fig4       reproduce Fig 4 (EDP vs optimization time)
@@ -17,7 +18,7 @@ use fadiff::coordinator::{self, Coordinator, JobRequest, Method};
 use fadiff::experiments::{fig3, fig4, table1, validation};
 use fadiff::runtime::Runtime;
 use fadiff::util::cli::Args;
-use fadiff::workload::zoo;
+use fadiff::workload::{spec, zoo};
 
 const HELP: &str = "\
 fadiff — fusion-aware differentiable DNN scheduling (paper reproduction)
@@ -27,19 +28,21 @@ USAGE: fadiff <subcommand> [flags]
   optimize  --workload resnet18 --config large --method fadiff
             --seconds 10 --seed 1 --chains 8
             methods: fadiff | dosa | ga | bo | random
-            workloads: gpt3 vgg19 vgg16 mobilenet resnet18
+            workloads: zoo names (gpt3 vgg19 vgg16 mobilenet resnet18)
+            or any data/workloads/*.json spec stem (llama7b-decode,
+            bert-base-block, ...); --workload-file my_model.json runs
+            a custom JSON workload spec (see docs/protocol.md)
             (every method runs without AOT artifacts; when present,
             PJRT accelerates the gradient methods; --chains sets the
             native gradient backend's parallel chain count, 0 = auto)
+  workloads [--describe name]   list servable workloads / show one
   table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
   fig3                                           (paper Figure 3)
   fig4      --workload resnet18 --seconds 10     (paper Figure 4)
   validate  --samples 60 --seed 11               (paper Sec 4.2)
   selftest                                       (compile artifacts)
   serve     --addr 127.0.0.1:7341 --workers 2    (TCP coordinator)
-            line-delimited JSON verbs: optimize | sweep | submit |
-            status | cancel | metrics | ping | shutdown; jobs share
-            per-(workload, config) eval caches + a persistent pool
+            line-delimited JSON protocol — see docs/protocol.md
 ";
 
 fn main() {
@@ -64,6 +67,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &["verbose", "summary"])?;
     match sub {
         "optimize" => cmd_optimize(&args),
+        "workloads" => cmd_workloads(&args),
         "table1" => cmd_table1(&args),
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args),
@@ -79,7 +83,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
 }
 
 fn cmd_optimize(args: &Args) -> Result<()> {
-    let req = JobRequest {
+    let mut req = JobRequest {
         workload: args.get_or("workload", "resnet18"),
         config: args.get_or("config", "large"),
         method: Method::parse(&args.get_or("method", "fadiff"))?,
@@ -87,7 +91,13 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         max_iters: args.get_usize("max-iters", usize::MAX)?,
         seed: args.get_u64("seed", 1)?,
         chains: args.get_usize("chains", 0)?,
+        spec: None,
     };
+    if let Some(path) = args.get("workload-file") {
+        let w = spec::load_file(std::path::Path::new(path))?;
+        req.workload = w.name.clone();
+        req.spec = Some(std::sync::Arc::new(w));
+    }
     // only the gradient methods touch the PJRT runtime; probe (and
     // compile) it only for them so native methods start instantly
     let rt = match req.method {
@@ -112,6 +122,25 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         println!("fusion groups   :");
         for g in &r.fused_names {
             println!("  - {}", g.join(" -> "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_workloads(args: &Args) -> Result<()> {
+    if let Some(name) = args.get("describe") {
+        let w = coordinator::resolve_workload(name)?;
+        println!("{}", spec::describe_json(&w).pretty());
+        return Ok(());
+    }
+    println!("{:<22} {:>7} {:>9} {:>12}  source", "name", "layers",
+             "replicas", "GMACs");
+    for (name, source, outcome) in coordinator::workload_catalog() {
+        match outcome {
+            Ok(w) => println!("{:<22} {:>7} {:>9} {:>12.2}  {}", name,
+                              w.len(), w.replicas,
+                              w.total_ops() / 1e9, source),
+            Err(e) => println!("{name:<22} INVALID: {e}"),
         }
     }
     Ok(())

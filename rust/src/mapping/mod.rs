@@ -10,16 +10,23 @@ pub mod decode;
 
 use crate::workload::{Workload, DIM_C, DIM_K, NDIMS};
 
-/// Factor slots (mirror `python/compile/constants.py`).
+// Factor slots (mirror `python/compile/constants.py`).
+
+/// Innermost (register-level) temporal factor slot.
 pub const SLOT_T0: usize = 0;
+/// L1-level temporal factor slot.
 pub const SLOT_T1: usize = 1;
+/// L2-level temporal factor slot.
 pub const SLOT_T2: usize = 2;
+/// Spatial (PE-array) factor slot.
 pub const SLOT_S: usize = 3;
+/// Number of factor slots per dimension.
 pub const NSLOTS: usize = 4;
 
 /// Integer tiling factors of one layer: `factors[d][slot]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerMapping {
+    /// `factors[dim][slot]`; the DRAM co-factor is derived, not stored.
     pub factors: [[u64; NSLOTS]; NDIMS],
 }
 
@@ -62,6 +69,7 @@ impl LayerMapping {
 /// fusion decision on every consecutive edge.
 #[derive(Clone, Debug)]
 pub struct Strategy {
+    /// One tiling mapping per layer.
     pub mappings: Vec<LayerMapping>,
     /// `fuse[i]` — layers i and i+1 execute as one fusion group.
     pub fuse: Vec<bool>,

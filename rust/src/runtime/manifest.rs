@@ -10,12 +10,14 @@ use crate::util::json::Json;
 /// One tensor slot of an artifact interface.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Slot name (e.g. "theta", "gumbel").
     pub name: String,
     /// Empty shape = scalar.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Flat element count (1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -24,9 +26,13 @@ impl TensorSpec {
 /// One artifact's interface.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// HLO text file, relative to the artifacts directory.
     pub file: String,
+    /// Input tensor slots, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor slots, in tuple order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -45,11 +51,17 @@ impl ArtifactSpec {
 /// The parsed manifest: global padded sizes plus per-artifact specs.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Padded layer count every artifact was lowered for.
     pub l_max: usize,
+    /// Padded divisor-candidate count per (dim, slot).
     pub k_max: usize,
+    /// Batch size of the batched eval artifact.
     pub b_eval: usize,
+    /// Length of the packed hardware vector.
     pub nhw: usize,
+    /// Length of the per-layer component vector (detail artifact).
     pub ncomp: usize,
+    /// Interface of every artifact, keyed by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 

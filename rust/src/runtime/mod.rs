@@ -15,13 +15,18 @@ use anyhow::{anyhow, Context, Result};
 pub use manifest::{ArtifactSpec, Manifest};
 pub use stage::HostTensor;
 
-/// Names of the three AOT entry points.
+// Names of the three AOT entry points.
+
+/// The loss + gradients artifact (the gradient search's inner loop).
 pub const ART_GRAD: &str = "fadiff_grad";
+/// The batched discrete-strategy evaluation artifact.
 pub const ART_EVAL: &str = "fadiff_eval";
+/// The detailed single-strategy breakdown artifact.
 pub const ART_DETAIL: &str = "fadiff_detail";
 
 /// A compiled artifact plus its interface description.
 pub struct Compiled {
+    /// The manifest interface this executable was compiled against.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -32,6 +37,7 @@ pub struct Compiled {
 /// lock).
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The parsed artifact manifest (padded sizes + interfaces).
     pub manifest: Manifest,
     root: PathBuf,
     compiled: Mutex<HashMap<String, std::sync::Arc<Compiled>>>,

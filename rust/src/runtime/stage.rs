@@ -14,14 +14,17 @@ use crate::workload::{Workload, NDIMS};
 /// A flat f32 host tensor (shape supplied by the artifact manifest).
 #[derive(Clone, Debug)]
 pub struct HostTensor {
+    /// Flat row-major element storage.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// Wrap a flat buffer.
     pub fn new(data: Vec<f32>) -> HostTensor {
         HostTensor { data }
     }
 
+    /// A single-element (scalar) tensor.
     pub fn scalar(x: f32) -> HostTensor {
         HostTensor { data: vec![x] }
     }
@@ -41,15 +44,24 @@ impl HostTensor {
 /// Precomputed, padded artifact inputs for one (workload, hw) pair.
 #[derive(Clone, Debug)]
 pub struct WorkloadStage {
+    /// Padded layer count (the artifact's static L).
     pub l_max: usize,
+    /// Padded divisor-candidate count (the artifact's static K).
     pub k_max: usize,
+    /// Real (unpadded) layer count of the staged workload.
     pub real_layers: usize,
-    pub dims: HostTensor,       // [L,7]
-    pub div: HostTensor,        // [L,7,K]
-    pub div_mask: HostTensor,   // [L,7,K]
-    pub layer_mask: HostTensor, // [L]
-    pub edge_mask: HostTensor,  // [L]
-    pub hw: HostTensor,         // [NHW]
+    /// Problem sizes, `[L, 7]`.
+    pub dims: HostTensor,
+    /// Divisor candidates, `[L, 7, K]`.
+    pub div: HostTensor,
+    /// Valid-candidate mask, `[L, 7, K]`.
+    pub div_mask: HostTensor,
+    /// Real-layer mask, `[L]`.
+    pub layer_mask: HostTensor,
+    /// Fusible-edge mask, `[L]`.
+    pub edge_mask: HostTensor,
+    /// Packed hardware vector, `[NHW]`.
+    pub hw: HostTensor,
 }
 
 impl WorkloadStage {

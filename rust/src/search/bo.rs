@@ -27,10 +27,15 @@ use super::{Budget, EvalCtx, Incumbent, SearchResult};
 /// BO hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct BoConfig {
+    /// Random observations before the first GP fit.
     pub init_samples: usize,
+    /// Acquisition pool size per iteration.
     pub candidates_per_iter: usize,
+    /// RBF kernel lengthscale (unit-cube space).
     pub lengthscale: f64,
+    /// Observation noise added to the kernel diagonal.
     pub noise: f64,
+    /// PRNG seed.
     pub seed: u64,
     /// Cap on GP observations (keeps the O(N^3) refit bounded; oldest
     /// low-quality points are dropped beyond this).

@@ -72,9 +72,13 @@ pub const DEFAULT_CACHE_CAPACITY: usize = 8_192;
 /// [`super::Incumbent::offer_eval`] does exactly that).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Eval {
+    /// Total energy, pJ.
     pub energy: f64,
+    /// Total latency, cycles.
     pub latency: f64,
+    /// `energy * latency`.
     pub edp: f64,
+    /// Whether the candidate satisfies every hard constraint.
     pub feasible: bool,
 }
 
@@ -163,6 +167,7 @@ impl EvalCache {
         self.map.lock().unwrap().len()
     }
 
+    /// Whether nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -268,14 +273,17 @@ impl<'a> EvalEngine<'a> {
         &self.tables
     }
 
+    /// The workload this engine scores against.
     pub fn workload(&self) -> &'a Workload {
         self.w
     }
 
+    /// The hardware configuration this engine scores against.
     pub fn hw(&self) -> &'a HwConfig {
         self.hw
     }
 
+    /// Worker count used for batch scoring (scoped-thread path).
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -26,13 +26,19 @@ use super::{Budget, EvalCtx, Incumbent, SearchResult};
 /// GA hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct GaConfig {
+    /// Individuals per generation.
     pub population: usize,
+    /// Tournament size for parent selection.
     pub tournament: usize,
+    /// Probability a child is produced by crossover.
     pub crossover_rate: f64,
+    /// Per-gene mutation probability.
     pub mutation_rate: f64,
     /// Std-dev of the Gaussian gene perturbation (unit-cube space).
     pub mutation_sigma: f64,
+    /// Top individuals copied unchanged into the next generation.
     pub elitism: usize,
+    /// PRNG seed.
     pub seed: u64,
 }
 

@@ -16,7 +16,7 @@
 //!   allocation per step. Selected whenever no runtime is passed.
 //!   Restarts run as **parallel chains**: `C` independent Adam chains
 //!   (one per restart, or [`GradientConfig::chains`]) live in a single
-//!   SoA [`ChainBatch`] and step concurrently across the worker
+//!   SoA `ChainBatch` and step concurrently across the worker
 //!   threads — each chain gets the *full* iteration schedule instead
 //!   of `budget / restarts`, with deterministic per-chain RNG streams
 //!   (`seed ^ splitmix(chain)`), so results are bit-identical for any
@@ -70,22 +70,32 @@ const RESPAWN_JITTER: f64 = 0.3;
 /// Hyper-parameters of the gradient search.
 #[derive(Clone, Debug)]
 pub struct GradientConfig {
+    /// Adam learning rate for theta (log2 tiling factors).
     pub lr: f64,
+    /// Adam learning rate for the fusion logits.
     pub lr_sigma: f64,
+    /// Initial Gumbel-Softmax temperature.
     pub tau0: f64,
+    /// Temperature floor.
     pub tau_min: f64,
     /// Geometric tau decay per step.
     pub tau_decay: f64,
+    /// Proximity sharpness of the snap logits (Eq. 1).
     pub alpha: f64,
+    /// Penalty weight at ramp start.
     pub lambda0: f64,
+    /// Penalty weight at full ramp.
     pub lambda_max: f64,
     /// Steps between incumbent refresh (decode + native eval).
     pub decode_every: usize,
+    /// PRNG seed (chain 0 uses it verbatim; chain c derives its own
+    /// stream — see `chain_seed`).
     pub seed: u64,
     /// false => DOSA mode (no fusion, layer-wise objective).
     pub fuse_enabled: bool,
-    /// Adam moments.
+    /// Adam first-moment decay.
     pub beta1: f64,
+    /// Adam second-moment decay.
     pub beta2: f64,
     /// Restart count. The native backend runs one *parallel chain* per
     /// restart, each with the full iteration schedule (which is why the

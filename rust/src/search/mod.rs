@@ -54,8 +54,11 @@ pub use eval::{Eval, EvalCache, EvalEngine};
 /// behavior exactly (private cache, scoped threads, no cancel).
 #[derive(Clone, Default)]
 pub struct EvalCtx {
+    /// Shared memoization cache for the job's `(workload, hw)` pair.
     pub cache: Option<Arc<EvalCache>>,
+    /// Persistent worker pool for batch scoring.
     pub pool: Option<Arc<ThreadPool>>,
+    /// Cooperative cancellation flag, polled between batches.
     pub cancel: Option<Arc<AtomicBool>>,
 }
 
@@ -85,15 +88,20 @@ impl EvalCtx {
 /// `gradient::ramp_progress` for the full contract.
 #[derive(Clone, Copy, Debug)]
 pub struct Budget {
+    /// Wall-clock bound, seconds (may be infinite).
     pub seconds: f64,
+    /// Iteration bound (may be `usize::MAX`).
     pub max_iters: usize,
 }
 
 impl Budget {
+    /// A pure wall-clock budget (unbounded iterations).
     pub fn seconds(seconds: f64) -> Budget {
         Budget { seconds, max_iters: usize::MAX }
     }
 
+    /// A pure iteration budget (no time limit) — the deterministic
+    /// form: identical requests produce bit-identical results.
     pub fn iters(max_iters: usize) -> Budget {
         Budget { seconds: f64::INFINITY, max_iters }
     }
@@ -102,8 +110,11 @@ impl Budget {
 /// One point of the optimization trace (Fig 4: EDP vs time).
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {
+    /// Seconds since the search started.
     pub seconds: f64,
+    /// Best feasible EDP at that moment.
     pub best_edp: f64,
+    /// Iteration counter at that moment.
     pub iter: usize,
 }
 
@@ -111,12 +122,20 @@ pub struct TracePoint {
 /// the convergence trace.
 #[derive(Clone, Debug)]
 pub struct SearchResult {
+    /// The best feasible strategy found.
     pub best: Strategy,
+    /// Its EDP (pJ * cycles, per replica).
     pub edp: f64,
+    /// Its energy, pJ.
     pub energy: f64,
+    /// Its latency, cycles.
     pub latency: f64,
+    /// Incumbent-improvement trace (Fig 4).
     pub trace: Vec<TracePoint>,
+    /// Iterations executed (gradient methods: inner steps, summed
+    /// across parallel chains).
     pub iters: usize,
+    /// Candidates offered to the incumbent (cache hits included).
     pub evals: usize,
 }
 
@@ -132,15 +151,20 @@ impl SearchResult {
 /// so offers are memoized and callers can batch-score populations via
 /// `inc.engine`.
 pub struct Incumbent<'a> {
+    /// The search's evaluation engine (batch scoring + memoization).
     pub engine: EvalEngine<'a>,
     start: Instant,
     cancel: Option<Arc<AtomicBool>>,
+    /// Best feasible `(strategy, edp, energy, latency)` so far.
     pub best: Option<(Strategy, f64, f64, f64)>,
+    /// Improvement trace (one point per new best).
     pub trace: Vec<TracePoint>,
+    /// Candidates offered so far.
     pub evals: usize,
 }
 
 impl<'a> Incumbent<'a> {
+    /// Incumbent with a default-configured engine.
     pub fn new(w: &'a Workload, hw: &'a HwConfig) -> Incumbent<'a> {
         Incumbent::with_engine(EvalEngine::new(w, hw))
     }
@@ -160,6 +184,7 @@ impl<'a> Incumbent<'a> {
         inc
     }
 
+    /// Seconds since the search started.
     pub fn elapsed(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }

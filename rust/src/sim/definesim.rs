@@ -25,17 +25,24 @@ use crate::workload::{Layer, DIM_C, DIM_K, DIM_N, DIM_P, DIM_Q, DIM_R,
 /// layer in the stack, in (p, q) spatial extents.
 #[derive(Clone, Copy, Debug)]
 pub struct DfTile {
+    /// Output-tile height (P extent).
     pub tp: usize,
+    /// Output-tile width (Q extent).
     pub tq: usize,
 }
 
 /// Cost of one fused stack under a depth-first schedule.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DfCost {
+    /// DRAM traffic, elements.
     pub dram_elems: f64,
+    /// On-chip traffic, elements.
     pub onchip_elems: f64,
+    /// Total MACs.
     pub macs: f64,
+    /// Cycles (max of compute and DRAM stream per tile).
     pub latency: f64,
+    /// pJ.
     pub energy: f64,
     /// Peak on-chip footprint (bytes) of the depth-first working set.
     pub peak_bytes: f64,

@@ -38,34 +38,51 @@ pub const LOOP_ORDER: [usize; NDIMS] = [
 /// Per-layer simulated traffic (element counts).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimTraffic {
+    /// Input elements filled into L2.
     pub fill2_i: f64,
+    /// Weight elements filled into L2.
     pub fill2_w: f64,
+    /// Weight elements filled into the register file.
     pub fill0_w: f64,
+    /// Input elements streamed through the PE array.
     pub read_pe_i: f64,
+    /// Output accumulate/write-back traffic at L1.
     pub accwb_o: f64,
+    /// Output elements drained from L1.
     pub wb_o: f64,
+    /// Total MACs.
     pub ops: f64,
-    /// Footprints (elements) for capacity accounting.
+    /// Input-tile L2 footprint, elements (capacity accounting).
     pub s_i2: f64,
+    /// Weight-tile L2 footprint, elements.
     pub s_w2: f64,
+    /// Output-tile L1 footprint, elements.
     pub s_o1: f64,
 }
 
 /// Simulated per-layer cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimLayer {
+    /// Simulated traffic counts.
     pub traffic: SimTraffic,
+    /// Element accesses at [L0, L1, L2, L3].
     pub access: [f64; 4],
+    /// Cycles (roofline).
     pub latency: f64,
+    /// pJ.
     pub energy: f64,
 }
 
 /// Whole-strategy simulation result.
 #[derive(Clone, Debug)]
 pub struct SimReport {
+    /// Total energy, pJ.
     pub energy: f64,
+    /// Total latency, cycles.
     pub latency: f64,
+    /// `energy * latency`.
     pub edp: f64,
+    /// Per-layer breakdown.
     pub per_layer: Vec<SimLayer>,
 }
 

@@ -10,8 +10,11 @@ use anyhow::{bail, Result};
 /// Parsed arguments: flags with values, boolean switches, positionals.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// `--flag value` / `--flag=value` pairs.
     pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` names (declared via `known_switches`).
     pub switches: Vec<String>,
+    /// Positional (non-flag) arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -42,14 +45,17 @@ impl Args {
         Ok(a)
     }
 
+    /// Raw value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key` or a default.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as f64, or a default when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             Some(v) => Ok(v.parse()?),
@@ -57,6 +63,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as usize, or a default when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             Some(v) => Ok(v.parse()?),
@@ -64,6 +71,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as u64, or a default when absent.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             Some(v) => Ok(v.parse()?),
@@ -71,6 +79,7 @@ impl Args {
         }
     }
 
+    /// Whether the boolean `--switch` was given.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }

@@ -13,11 +13,17 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -39,6 +45,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The value as a number, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -46,10 +53,12 @@ impl Json {
         }
     }
 
+    /// The value as a usize (truncating cast from the f64 storage).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The value as a string slice, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -57,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, or an error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -64,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map, or an error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -196,19 +207,22 @@ impl Json {
     }
 }
 
-/// Builder helpers for report generation.
+/// Builder helper: an object from `(key, value)` pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Builder helper: an array.
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }
 
+/// Builder helper: a number.
 pub fn num(x: f64) -> Json {
     Json::Num(x)
 }
 
+/// Builder helper: a string.
 pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }

@@ -260,6 +260,8 @@ pub fn oneshot<T>() -> (OneShotSender<T>, OneShot<T>) {
 }
 
 impl<T> OneShotSender<T> {
+    /// Deliver the value (consumes the sender; a dropped receiver is
+    /// silently tolerated).
     pub fn send(self, v: T) {
         let _ = self.tx.send(v);
     }

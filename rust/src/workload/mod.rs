@@ -1,17 +1,34 @@
 //! DNN workload representation: the DAG of the problem formulation
 //! (paper Sec 2.3) in the unified 7-dim problem space of Sec 3.1.1.
+//!
+//! Workloads come from two interchangeable sources: the built-in
+//! builder functions of [`zoo`] and the JSON workload-spec files /
+//! inline documents parsed by [`spec`] — both produce the same
+//! [`Workload`] value (the spec re-expressions of the zoo models are
+//! asserted bit-identical in `rust/tests/workload_spec.rs`).
 
+pub mod spec;
 pub mod zoo;
 
-/// Problem-dimension indices (mirror `python/compile/constants.py`).
+// Problem-dimension indices (mirror `python/compile/constants.py`).
+
+/// Batch dimension index.
 pub const DIM_N: usize = 0;
+/// Output-channel (K) dimension index.
 pub const DIM_K: usize = 1;
+/// Input-channel / reduction (C) dimension index.
 pub const DIM_C: usize = 2;
+/// Output-height (P) dimension index (GEMM rows M).
 pub const DIM_P: usize = 3;
+/// Output-width (Q) dimension index.
 pub const DIM_Q: usize = 4;
+/// Kernel-height (R) dimension index.
 pub const DIM_R: usize = 5;
+/// Kernel-width (S) dimension index.
 pub const DIM_S: usize = 6;
+/// Number of problem dimensions in the unified space.
 pub const NDIMS: usize = 7;
+/// Canonical dimension names, indexed by `DIM_*`.
 pub const DIM_NAMES: [&str; 7] = ["N", "K", "C", "P", "Q", "R", "S"];
 
 /// Operator class of a layer (affects the validation operator mix and
@@ -30,16 +47,44 @@ pub enum LayerKind {
     Fc,
 }
 
+impl LayerKind {
+    /// Canonical lower-case name (the workload-spec `kind` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Depthwise => "depthwise",
+            LayerKind::Pointwise => "pointwise",
+            LayerKind::Gemm => "gemm",
+            LayerKind::Fc => "fc",
+        }
+    }
+
+    /// Parse a canonical kind name (case-insensitive).
+    pub fn parse(s: &str) -> Option<LayerKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "conv" => LayerKind::Conv,
+            "depthwise" | "dw" => LayerKind::Depthwise,
+            "pointwise" | "pw" => LayerKind::Pointwise,
+            "gemm" => LayerKind::Gemm,
+            "fc" => LayerKind::Fc,
+            _ => return None,
+        })
+    }
+}
+
 /// One computational layer (a DAG vertex).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Layer {
+    /// Human-readable layer name (unique within a workload).
     pub name: String,
+    /// Operator class.
     pub kind: LayerKind,
     /// Sizes in the unified space [N, K, C, P, Q, R, S].
     pub dims: [usize; NDIMS],
 }
 
 impl Layer {
+    /// Build a layer (dims must all be >= 1).
     pub fn new(name: &str, kind: LayerKind, dims: [usize; NDIMS]) -> Layer {
         debug_assert!(dims.iter().all(|&d| d >= 1));
         Layer { name: name.to_string(), kind, dims }
@@ -55,9 +100,11 @@ impl Layer {
 /// fusion-legality on each consecutive edge. Multi-input joins (residual
 /// adds, attention score inputs) are expressed by marking the edge
 /// non-fusible (paper Sec 2.2's producer-consumer requirement).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Workload {
+    /// Workload name (CLI / protocol identifier).
     pub name: String,
+    /// Topologically-ordered layer chain.
     pub layers: Vec<Layer>,
     /// `fusible[i]` — may edge layers[i] -> layers[i+1] be fused?
     pub fusible: Vec<bool>,
@@ -67,29 +114,41 @@ pub struct Workload {
     pub replicas: f64,
 }
 
+/// The producer-consumer shape requirement for fusing edge `a -> b`
+/// (paper Sec 2.2): the producer's output channels feed the consumer's
+/// reduction (`K_a == C_b`; depthwise consumers match on `K` since
+/// their `C` is folded to 1), with equal batch. Multi-producer joins
+/// (residual adds, attention score/context inputs) do not satisfy a
+/// producer-consumer relation at all and must be *blocked* explicitly
+/// — shape compatibility is necessary, not sufficient.
+pub fn edge_shape_compatible(a: &Layer, b: &Layer) -> bool {
+    (a.dims[DIM_K] == b.dims[DIM_C]
+        || b.kind == LayerKind::Depthwise
+            && a.dims[DIM_K] == b.dims[DIM_K])
+        && a.dims[DIM_N] == b.dims[DIM_N]
+}
+
 impl Workload {
     /// Build a chain, deriving edge fusibility from producer-consumer
-    /// shape compatibility (K_i == C_{i+1}, matching N) minus the
+    /// shape compatibility ([`edge_shape_compatible`]) minus the
     /// explicitly blocked edges (joins).
     pub fn chain(name: &str, layers: Vec<Layer>, blocked: &[usize],
                  replicas: f64) -> Workload {
         let mut fusible = Vec::new();
         for i in 0..layers.len().saturating_sub(1) {
-            let a = &layers[i];
-            let b = &layers[i + 1];
-            let shape_ok = (a.dims[DIM_K] == b.dims[DIM_C]
-                            || b.kind == LayerKind::Depthwise
-                               && a.dims[DIM_K] == b.dims[DIM_K])
-                && a.dims[DIM_N] == b.dims[DIM_N];
+            let shape_ok =
+                edge_shape_compatible(&layers[i], &layers[i + 1]);
             fusible.push(shape_ok && !blocked.contains(&i));
         }
         Workload { name: name.to_string(), layers, fusible, replicas }
     }
 
+    /// Layer count.
     pub fn len(&self) -> usize {
         self.layers.len()
     }
 
+    /// Whether the workload has no layers.
     pub fn is_empty(&self) -> bool {
         self.layers.is_empty()
     }

@@ -1,0 +1,559 @@
+//! The workload-spec DSL: workloads as *data* instead of code.
+//!
+//! A spec is a JSON document describing a [`Workload`] — layers with
+//! their 7-dim shapes and operator kinds, plus explicit fusion-edge
+//! information — so new deployment scenarios reach the optimizer
+//! without a rebuild. Specs arrive three ways, all through one
+//! validating parser ([`from_json`]):
+//!
+//! * **Checked-in files** under `data/workloads/*.json` — the five
+//!   built-in zoo models are re-expressed there (asserted bit-identical
+//!   to their [`super::zoo`] builders) alongside new scenario classes
+//!   (LLaMA-7B decode/prefill, BERT-base encoder block, ResNet-50
+//!   bottleneck stage). [`load_named`] resolves them by file stem, and
+//!   the coordinator falls back to it for any workload name the zoo
+//!   does not know.
+//! * **CLI files** — `fadiff optimize --workload-file my_model.json`
+//!   ([`load_file`]).
+//! * **Inline wire documents** — the protocol's `workload_spec`
+//!   parameter on `optimize` / `submit` / `sweep`, size-capped and
+//!   validated at parse time exactly like `chains`
+//!   (see `docs/protocol.md`).
+//!
+//! # Document shape
+//!
+//! ```json
+//! {
+//!   "name": "my-model",
+//!   "replicas": 1,
+//!   "layers": [
+//!     {"name": "conv1", "kind": "conv",
+//!      "dims": [1, 64, 3, 224, 224, 3, 3]},
+//!     {"name": "conv2", "kind": "conv",
+//!      "dims": [1, 64, 64, 224, 224, 3, 3]}
+//!   ],
+//!   "blocked": []
+//! }
+//! ```
+//!
+//! `dims` is always `[N, K, C, P, Q, R, S]` (see
+//! [`crate::workload::DIM_NAMES`]); `kind` is one of `conv` /
+//! `depthwise` / `pointwise` / `gemm` / `fc`. Edge fusibility is
+//! expressed one of two mutually-exclusive ways:
+//!
+//! * `"blocked": [i, ...]` — edge indices whose fusion is forbidden
+//!   (multi-producer joins); the remaining edges derive fusibility from
+//!   producer-consumer shape compatibility, exactly like
+//!   [`Workload::chain`]. This is the form the checked-in specs use.
+//! * `"fusible": [bool, ...]` — one explicit flag per consecutive
+//!   edge. A `true` flag on a shape-incompatible edge is rejected: the
+//!   paper's producer-consumer requirement (Sec 2.2) is necessary for
+//!   fusion, and multi-producer joins must be expressed as `false`.
+//!
+//! Validation is total: dimension bounds ([`MAX_DIM_SIZE`]), layer
+//! count ([`MAX_SPEC_LAYERS`]), duplicate layer names, out-of-range or
+//! duplicate blocked-edge indices, unknown keys/kinds, and
+//! arity mismatches all fail with a one-line error instead of
+//! constructing a malformed workload.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{num, obj, s, Json};
+use crate::workload::{edge_shape_compatible, Layer, LayerKind, Workload,
+                      NDIMS};
+
+/// Maximum layer count accepted from a spec. Generous against the zoo
+/// (largest model: 28 layers) while bounding the state any one request
+/// can make the optimizer allocate (theta alone is `L * 7 * 4 * chains`
+/// doubles).
+pub const MAX_SPEC_LAYERS: usize = 64;
+
+/// Maximum problem-dimension size. Large enough for any realistic
+/// layer (GPT-3's FFN hidden is 16384; sequence dims reach a few
+/// thousand) while keeping the divisor/prime precomputation
+/// (`O(sqrt(n))` per distinct size) trivially cheap for hostile
+/// inputs.
+pub const MAX_DIM_SIZE: usize = 1 << 24;
+
+/// Maximum serialized spec size (bytes) accepted from files and the
+/// wire — a parse-time cap like the protocol's `MAX_CHAINS`, far under
+/// the server's 1 MiB line cap so an inline spec can never dominate a
+/// request.
+pub const MAX_SPEC_BYTES: usize = 256 * 1024;
+
+/// Maximum workload / layer name length.
+pub const MAX_NAME_LEN: usize = 100;
+
+fn field_usize(j: &Json, what: &str, max: usize) -> Result<usize> {
+    let x = j.as_f64()?;
+    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0) {
+        bail!("{what} must be a non-negative integer, got {x}");
+    }
+    if x > max as f64 {
+        bail!("{what} is {x}, above the cap of {max}");
+    }
+    Ok(x as usize)
+}
+
+fn checked_name(j: &Json, what: &str) -> Result<String> {
+    let name = j.as_str()?;
+    if name.is_empty() {
+        bail!("{what} must not be empty");
+    }
+    if name.len() > MAX_NAME_LEN {
+        bail!("{what} longer than {MAX_NAME_LEN} bytes");
+    }
+    Ok(name.to_string())
+}
+
+fn check_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    for key in j.as_obj()?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!("{what}: unknown key {key:?} (allowed: {allowed:?})");
+        }
+    }
+    Ok(())
+}
+
+fn parse_layer(j: &Json, index: usize) -> Result<Layer> {
+    let what = format!("layers[{index}]");
+    check_keys(j, &what, &["name", "kind", "dims"])?;
+    let name = checked_name(j.get("name")?, &format!("{what}.name"))?;
+    let kind_s = j.get("kind")?.as_str()?;
+    let kind = LayerKind::parse(kind_s)
+        .ok_or_else(|| anyhow!(
+            "{what}.kind: unknown kind {kind_s:?} (expected conv / \
+             depthwise / pointwise / gemm / fc)"))?;
+    let dims_j = j.get("dims")?.as_arr()?;
+    if dims_j.len() != NDIMS {
+        bail!("{what}.dims must have exactly {NDIMS} entries \
+               [N, K, C, P, Q, R, S], got {}", dims_j.len());
+    }
+    let mut dims = [1usize; NDIMS];
+    for (d, v) in dims_j.iter().enumerate() {
+        let size = field_usize(v, &format!("{what}.dims[{d}]"),
+                               MAX_DIM_SIZE)?;
+        if size == 0 {
+            bail!("{what}.dims[{d}] must be >= 1");
+        }
+        dims[d] = size;
+    }
+    Ok(Layer { name, kind, dims })
+}
+
+/// Parse and validate a workload-spec document (see module docs).
+pub fn from_json(j: &Json) -> Result<Workload> {
+    check_keys(j, "workload spec",
+               &["name", "replicas", "layers", "blocked", "fusible"])?;
+    let name = checked_name(j.get("name")?, "name")?;
+    let replicas = match j.as_obj()?.get("replicas") {
+        None => 1.0,
+        Some(r) => {
+            let x = r.as_f64()?;
+            if !(x.is_finite() && x >= 1.0) {
+                bail!("replicas must be a finite number >= 1, got {x}");
+            }
+            x
+        }
+    };
+    let layers_j = j.get("layers")?.as_arr()?;
+    if layers_j.is_empty() {
+        bail!("layers must not be empty");
+    }
+    if layers_j.len() > MAX_SPEC_LAYERS {
+        bail!("{} layers exceed the cap of {MAX_SPEC_LAYERS}",
+              layers_j.len());
+    }
+    let layers: Vec<Layer> = layers_j
+        .iter()
+        .enumerate()
+        .map(|(i, lj)| parse_layer(lj, i))
+        .collect::<Result<_>>()?;
+    for (i, a) in layers.iter().enumerate() {
+        if layers[..i].iter().any(|b| b.name == a.name) {
+            bail!("duplicate layer name {:?}", a.name);
+        }
+    }
+    let edges = layers.len() - 1;
+    let map = j.as_obj()?;
+    if map.contains_key("blocked") && map.contains_key("fusible") {
+        bail!("give either \"blocked\" or \"fusible\", not both");
+    }
+    if let Some(fus_j) = map.get("fusible") {
+        let flags = fus_j.as_arr()?;
+        if flags.len() != edges {
+            bail!("fusible must have one entry per consecutive edge \
+                   ({edges}), got {}", flags.len());
+        }
+        let mut fusible = Vec::with_capacity(edges);
+        for (i, f) in flags.iter().enumerate() {
+            let on = match f {
+                Json::Bool(b) => *b,
+                _ => bail!("fusible[{i}] must be a boolean"),
+            };
+            let pair_ok =
+                edge_shape_compatible(&layers[i], &layers[i + 1]);
+            if on && !pair_ok {
+                bail!(
+                    "fusible[{i}] marks edge {:?} -> {:?} fusible, but \
+                     the shapes are not producer-consumer compatible \
+                     (K/C mismatch or batch mismatch); multi-producer \
+                     joins must be marked false",
+                    layers[i].name, layers[i + 1].name
+                );
+            }
+            fusible.push(on);
+        }
+        return Ok(Workload { name, layers, fusible, replicas });
+    }
+    let mut blocked = Vec::new();
+    if let Some(b_j) = map.get("blocked") {
+        for (i, v) in b_j.as_arr()?.iter().enumerate() {
+            let e = field_usize(v, &format!("blocked[{i}]"),
+                                usize::MAX)?;
+            if e >= edges.max(1) || edges == 0 {
+                bail!("blocked[{i}] = {e} out of range (the workload \
+                       has {edges} consecutive edges)");
+            }
+            if blocked.contains(&e) {
+                bail!("blocked edge {e} listed twice");
+            }
+            blocked.push(e);
+        }
+    }
+    Ok(Workload::chain(&name, layers, &blocked, replicas))
+}
+
+/// Parse a spec from JSON text, enforcing the [`MAX_SPEC_BYTES`] size
+/// cap before touching the parser.
+pub fn from_str(text: &str) -> Result<Workload> {
+    if text.len() > MAX_SPEC_BYTES {
+        bail!("workload spec of {} bytes exceeds the cap of \
+               {MAX_SPEC_BYTES}", text.len());
+    }
+    from_json(&Json::parse(text)?)
+}
+
+/// Parse an already-parsed inline `workload_spec` value (the protocol
+/// parameter): size cap first, then full validation, with errors
+/// prefixed `workload_spec:` for the wire. The single entry point the
+/// server uses for both job requests and the `workloads` verb's
+/// validate-describe form.
+pub fn parse_inline(spec_j: &Json) -> Result<Workload> {
+    let text = spec_j.compact();
+    if text.len() > MAX_SPEC_BYTES {
+        bail!("workload_spec of {} bytes exceeds the cap of \
+               {MAX_SPEC_BYTES}", text.len());
+    }
+    from_json(spec_j).map_err(|e| anyhow!("workload_spec: {e}"))
+}
+
+/// Load and validate a spec file.
+pub fn load_file(path: &Path) -> Result<Workload> {
+    let meta = std::fs::metadata(path)
+        .map_err(|e| anyhow!("workload spec {path:?}: {e}"))?;
+    if meta.len() > MAX_SPEC_BYTES as u64 {
+        bail!("workload spec {path:?} ({} bytes) exceeds the cap of \
+               {MAX_SPEC_BYTES}", meta.len());
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("workload spec {path:?}: {e}"))?;
+    from_str(&text)
+        .map_err(|e| anyhow!("workload spec {path:?}: {e}"))
+}
+
+/// The checked-in spec directory (`<repo>/data/workloads`).
+pub fn spec_dir(repo_root: &Path) -> PathBuf {
+    repo_root.join("data/workloads")
+}
+
+/// Load `data/workloads/<name>.json` if it exists. Returns `None` for
+/// names with no spec file (including names that could escape the spec
+/// directory — only `[A-Za-z0-9._-]` names are looked up, and `..` is
+/// rejected outright).
+pub fn load_named(repo_root: &Path, name: &str) -> Option<Result<Workload>> {
+    load_named_from(&spec_dir(repo_root), name)
+}
+
+/// [`load_named`] against an explicit spec directory. The file's
+/// declared `name` must equal the file stem — the stem is the lookup
+/// key everywhere (resolution, listings, protocol), so a mismatched
+/// file would be advertised under a name that then fails to resolve.
+pub fn load_named_from(dir: &Path, name: &str)
+                       -> Option<Result<Workload>> {
+    let safe = !name.is_empty()
+        && name.len() <= MAX_NAME_LEN
+        && !name.contains("..")
+        && name.chars().all(|c| {
+            c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')
+        });
+    if !safe {
+        return None;
+    }
+    let path = dir.join(format!("{name}.json"));
+    if !path.is_file() {
+        return None;
+    }
+    Some(load_file(&path).and_then(|w| {
+        if w.name == name {
+            Ok(w)
+        } else {
+            Err(anyhow!(
+                "spec file {path:?} declares name {:?}, which must \
+                 match the file stem {name:?} (the stem is the \
+                 lookup key)",
+                w.name
+            ))
+        }
+    }))
+}
+
+/// Names (file stems, sorted) of every checked-in spec.
+pub fn list_spec_names(repo_root: &Path) -> Vec<String> {
+    let mut names = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(spec_dir(repo_root)) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("json")
+            {
+                if let Some(stem) =
+                    path.file_stem().and_then(|s| s.to_str())
+                {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+/// Canonical JSON form of a workload: layers with explicit `fusible`
+/// flags (no derivation on re-parse), deterministic field order. The
+/// exact inverse of [`from_json`] for any workload whose fusible edges
+/// satisfy [`edge_shape_compatible`] — which every constructor-built
+/// workload does.
+pub fn to_json(w: &Workload) -> Json {
+    let layers = w
+        .layers
+        .iter()
+        .map(|l| {
+            obj(vec![
+                ("name", s(&l.name)),
+                ("kind", s(l.kind.name())),
+                ("dims",
+                 Json::Arr(l.dims
+                     .iter()
+                     .map(|&d| num(d as f64))
+                     .collect())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("name", s(&w.name)),
+        ("replicas", num(w.replicas)),
+        ("layers", Json::Arr(layers)),
+        ("fusible",
+         Json::Arr(w.fusible.iter().map(|&f| Json::Bool(f)).collect())),
+    ])
+}
+
+/// Deterministic 64-bit content fingerprint (FNV-1a over the canonical
+/// compact serialization of [`to_json`]), rendered as 16 hex chars.
+/// Two workloads fingerprint equal iff their canonical specs are
+/// byte-identical — the coordinator keys inline-spec evaluation caches
+/// on `spec:<fingerprint>` so distinct user specs never share a cache
+/// while resubmissions of the same spec do.
+pub fn fingerprint(w: &Workload) -> String {
+    let text = to_json(w).compact();
+    let mut hash: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in text.as_bytes() {
+        hash ^= *b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{hash:016x}")
+}
+
+/// Wire description of a workload (the `workloads` verb's `describe`
+/// payload): the canonical spec plus derived summary fields.
+pub fn describe_json(w: &Workload) -> Json {
+    let mut j = to_json(w);
+    if let Json::Obj(map) = &mut j {
+        map.insert("layer_count".into(), num(w.len() as f64));
+        map.insert("fusible_edges".into(),
+                   num(w.fusible.iter().filter(|&&f| f).count() as f64));
+        map.insert("total_macs".into(), num(w.total_ops()));
+        map.insert("fingerprint".into(), s(&fingerprint(w)));
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    const MINIMAL: &str = r#"{
+        "name": "tiny",
+        "layers": [
+            {"name": "a", "kind": "conv", "dims": [1, 8, 3, 16, 16, 3, 3]},
+            {"name": "b", "kind": "conv", "dims": [1, 8, 8, 16, 16, 3, 3]}
+        ]
+    }"#;
+
+    #[test]
+    fn minimal_spec_parses_and_derives_fusibility() {
+        let w = from_str(MINIMAL).unwrap();
+        assert_eq!(w.name, "tiny");
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.replicas, 1.0);
+        // K_a = 8 == C_b = 8, same batch -> fusible
+        assert_eq!(w.fusible, vec![true]);
+    }
+
+    #[test]
+    fn blocked_edges_are_respected() {
+        let j = Json::parse(MINIMAL).unwrap();
+        let mut m = j.as_obj().unwrap().clone();
+        m.insert("blocked".into(), Json::Arr(vec![num(0.0)]));
+        let w = from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(w.fusible, vec![false]);
+    }
+
+    #[test]
+    fn explicit_fusible_roundtrip_matches_builders() {
+        for w in zoo::table1_suite() {
+            let j = to_json(&w);
+            let back = from_json(&j).unwrap();
+            assert_eq!(back, w, "{} round-trip", w.name);
+            // and through text serialization too
+            let back2 = from_str(&j.compact()).unwrap();
+            assert_eq!(back2, w, "{} compact round-trip", w.name);
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_content() {
+        let a = from_str(MINIMAL).unwrap();
+        let b = zoo::vgg16();
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&from_str(MINIMAL)
+            .unwrap()));
+        // any content change moves the fingerprint
+        let mut c = a.clone();
+        c.layers[0].dims[1] = 16;
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+    }
+
+    fn expect_err(body: &str, needle: &str) {
+        let err = from_str(body).unwrap_err().to_string();
+        assert!(err.contains(needle), "{body}\n-> {err}");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        expect_err(r#"{"layers": []}"#, "name");
+        expect_err(r#"{"name": "x", "layers": []}"#, "empty");
+        expect_err(
+            r#"{"name": "x", "layers": [
+                {"name": "a", "kind": "conv", "dims": [1, 2, 3]}]}"#,
+            "exactly 7");
+        expect_err(
+            r#"{"name": "x", "layers": [
+                {"name": "a", "kind": "warp",
+                 "dims": [1, 1, 1, 1, 1, 1, 1]}]}"#,
+            "unknown kind");
+        expect_err(
+            r#"{"name": "x", "layers": [
+                {"name": "a", "kind": "fc",
+                 "dims": [1, 0, 1, 1, 1, 1, 1]}]}"#,
+            ">= 1");
+        expect_err(
+            r#"{"name": "x", "layers": [
+                {"name": "a", "kind": "fc",
+                 "dims": [1, 1.5, 1, 1, 1, 1, 1]}]}"#,
+            "integer");
+        expect_err(
+            r#"{"name": "x", "layers": [
+                {"name": "a", "kind": "fc",
+                 "dims": [1, 99999999999, 1, 1, 1, 1, 1]}]}"#,
+            "cap");
+        expect_err(
+            r#"{"name": "x", "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,1,1,1,1,1,1]},
+                {"name": "a", "kind": "fc", "dims": [1,1,1,1,1,1,1]}]}"#,
+            "duplicate layer name");
+        expect_err(
+            r#"{"name": "x", "typo_key": 1, "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,1,1,1,1,1,1]}]}"#,
+            "unknown key");
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        expect_err(
+            r#"{"name": "x", "blocked": [5], "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,8,8,1,1,1,1]},
+                {"name": "b", "kind": "fc", "dims": [1,8,8,1,1,1,1]}]}"#,
+            "out of range");
+        expect_err(
+            r#"{"name": "x", "blocked": [0, 0], "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,8,8,1,1,1,1]},
+                {"name": "b", "kind": "fc", "dims": [1,8,8,1,1,1,1]}]}"#,
+            "twice");
+        expect_err(
+            r#"{"name": "x", "blocked": [0], "fusible": [true],
+                "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,8,8,1,1,1,1]},
+                {"name": "b", "kind": "fc", "dims": [1,8,8,1,1,1,1]}]}"#,
+            "not both");
+        expect_err(
+            r#"{"name": "x", "fusible": [true, false], "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,8,8,1,1,1,1]},
+                {"name": "b", "kind": "fc", "dims": [1,8,8,1,1,1,1]}]}"#,
+            "one entry per consecutive edge");
+        // the multi-producer blocking rule: an explicit fusible=true on
+        // a shape-incompatible edge is an authoring error
+        expect_err(
+            r#"{"name": "x", "fusible": [true], "layers": [
+                {"name": "a", "kind": "fc", "dims": [1,8,8,1,1,1,1]},
+                {"name": "b", "kind": "fc", "dims": [1,8,4,1,1,1,1]}]}"#,
+            "producer-consumer");
+    }
+
+    #[test]
+    fn rejects_oversized_specs() {
+        // layer-count cap
+        let mut layers = Vec::new();
+        for i in 0..MAX_SPEC_LAYERS + 1 {
+            layers.push(format!(
+                r#"{{"name": "l{i}", "kind": "fc",
+                     "dims": [1,8,8,1,1,1,1]}}"#
+            ));
+        }
+        let body = format!(r#"{{"name": "big", "layers": [{}]}}"#,
+                           layers.join(","));
+        expect_err(&body, "cap");
+        // byte cap before the parser even runs
+        let huge = format!(r#"{{"name": "{}"}}"#,
+                           "x".repeat(MAX_SPEC_BYTES));
+        expect_err(&huge, "cap");
+    }
+
+    #[test]
+    fn named_lookup_sanitizes_and_lists() {
+        let repo = crate::config::repo_root();
+        assert!(load_named(&repo, "../hw_configs").is_none());
+        assert!(load_named(&repo, "no/such/name").is_none());
+        assert!(load_named(&repo, "definitely-absent").is_none());
+        let names = list_spec_names(&repo);
+        for name in &names {
+            let w = load_named(&repo, name)
+                .expect("listed spec resolves")
+                .expect("listed spec parses");
+            assert!(!w.is_empty());
+        }
+    }
+}

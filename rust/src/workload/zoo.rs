@@ -181,6 +181,13 @@ pub fn table1_suite() -> Vec<Workload> {
     vec![gpt3_6_7b(), vgg19(), vgg16(), mobilenet_v1(), resnet18()]
 }
 
+/// Canonical names of the built-in zoo models (each resolvable via
+/// [`by_name`]; the serving layer's `workloads` verb lists these
+/// alongside the checked-in spec files).
+pub fn names() -> [&'static str; 5] {
+    ["gpt3-6.7b", "vgg19", "vgg16", "mobilenet-v1", "resnet18"]
+}
+
 /// Look a workload up by CLI name.
 pub fn by_name(name: &str) -> Option<Workload> {
     match name {
@@ -273,6 +280,11 @@ mod tests {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("alexnet").is_none());
+        // every canonical name resolves to a workload of that name
+        for n in names() {
+            let w = by_name(n).expect(n);
+            assert_eq!(w.name, n);
+        }
     }
 
     #[test]

@@ -142,6 +142,7 @@ fn coordinator_serves_repeat_jobs_from_cache() {
         max_iters: 48,
         seed: 9,
         chains: 0,
+        spec: None,
     };
     let r1 = coord.run(req.clone()).unwrap();
     let hits1 = coord.registry().hits();
@@ -186,6 +187,7 @@ fn pooled_coordinator_results_match_standalone_search() {
         max_iters: 4,
         seed: 21,
         chains: 0,
+        spec: None,
     };
     let served = coord.run(req).unwrap();
 

@@ -24,6 +24,7 @@ fn small_job(workload: &str, method: Method) -> JobRequest {
         max_iters: 200,
         seed: 5,
         chains: 0,
+        spec: None,
     }
 }
 
@@ -229,7 +230,8 @@ fn cancel_stops_a_running_job_early() {
         max_iters: usize::MAX,
         seed: 3,
         chains: 0,
-    });
+        spec: None,
+    }).unwrap();
     // wait until it is actually running
     let t0 = Instant::now();
     loop {
@@ -381,6 +383,180 @@ fn tcp_submit_status_cancel_roundtrip() {
                 "cancel never landed");
         std::thread::sleep(Duration::from_millis(20));
     }
+
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    t.join().unwrap().unwrap();
+}
+
+/// A custom workload no zoo builder knows: tiny enough that every
+/// search method finishes in milliseconds at a small iteration cap.
+const INLINE_SPEC: &str = r#"{
+    "name": "wire-custom",
+    "layers": [
+        {"name": "c1", "kind": "conv",
+         "dims": [1, 16, 3, 32, 32, 3, 3]},
+        {"name": "c2", "kind": "conv",
+         "dims": [1, 16, 16, 32, 32, 3, 3]},
+        {"name": "head", "kind": "fc",
+         "dims": [1, 10, 16, 1, 1, 1, 1]}
+    ],
+    "blocked": [1]
+}"#;
+
+#[test]
+fn tcp_inline_workload_spec_runs_every_method() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 2).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // the inline spec round-trips through every search method
+    for method in ["fadiff", "dosa", "ga", "bo", "random"] {
+        let body = format!(
+            r#"{{"verb": "optimize", "method": "{method}",
+                 "seconds": 3600, "max_iters": 12, "seed": 4,
+                 "workload_spec": {INLINE_SPEC}}}"#
+        );
+        let j = Json::parse(&send(addr, &body.replace('\n', " ")))
+            .unwrap();
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true),
+                   "{method}: {j:?}");
+        assert_eq!(j.get("workload").unwrap().as_str().unwrap(),
+                   "wire-custom", "{method}");
+        assert!(j.get_f64("edp").unwrap() > 0.0, "{method}");
+        assert!(j.get_f64("edp").unwrap().is_finite(), "{method}");
+    }
+
+    // a bad inline spec is a one-line error, never a queued job
+    let bad = Json::parse(&send(
+        addr,
+        r#"{"verb": "optimize", "workload_spec": {"name": "x", "layers": []}}"#,
+    ))
+    .unwrap();
+    assert_eq!(bad.get("ok").unwrap(), &Json::Bool(false));
+    assert!(bad.get("error").unwrap().as_str().unwrap()
+        .contains("workload_spec"));
+
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    t.join().unwrap().unwrap();
+}
+
+#[test]
+fn inline_specs_get_their_own_cache_pair() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    let inline = fadiff::workload::spec::from_str(INLINE_SPEC).unwrap();
+    let req = JobRequest {
+        workload: inline.name.clone(),
+        method: Method::Random,
+        seconds: 3600.0,
+        max_iters: 24,
+        seed: 11,
+        spec: Some(std::sync::Arc::new(inline)),
+        ..Default::default()
+    };
+    let r1 = coord.run(req.clone()).unwrap();
+    assert_eq!(coord.registry().len(), 1);
+    let misses1 = coord.registry().misses();
+    assert!(misses1 > 0);
+
+    // the identical inline spec re-serves from the shared cache...
+    let r2 = coord.run(req.clone()).unwrap();
+    assert_eq!(r1.edp, r2.edp);
+    assert_eq!(coord.registry().len(), 1,
+               "identical specs must share one cache pair");
+    assert_eq!(coord.registry().misses(), misses1,
+               "repeat inline-spec job recomputed");
+
+    // ...while a spec that merely SHARES THE NAME gets its own pair
+    // (content fingerprint keying, not display-name keying)
+    let mut other = fadiff::workload::spec::from_str(INLINE_SPEC)
+        .unwrap();
+    other.layers[0].dims[1] = 32;
+    let req3 = JobRequest {
+        spec: Some(std::sync::Arc::new(other)),
+        ..req.clone()
+    };
+    let _ = coord.run(req3).unwrap();
+    assert_eq!(coord.registry().len(), 2,
+               "different content behind one name must not share");
+
+    // and a zoo job keys by name, separate from both
+    let _ = coord.run(small_job("mobilenet", Method::Random)).unwrap();
+    assert_eq!(coord.registry().len(), 3);
+}
+
+#[test]
+fn spec_file_workloads_serve_by_name() {
+    // data/workloads/*.json stems are servable with no code changes —
+    // the zoo-expansion contract
+    let coord = Coordinator::new(None, 1).unwrap();
+    let r = coord
+        .run(small_job("llama7b-decode", Method::Random))
+        .unwrap();
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert_eq!(r.request.workload, "llama7b-decode");
+}
+
+#[test]
+fn tcp_workloads_verb_lists_and_describes() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // list: zoo + spec files, with summary fields
+    let j = Json::parse(&send(addr, r#"{"verb": "workloads"}"#)).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+    let rows = j.get("workloads").unwrap().as_arr().unwrap();
+    assert!(j.get_f64("count").unwrap() >= 9.0, "{j:?}");
+    let find = |name: &str| {
+        rows.iter().find(|r| {
+            r.get("name").map(|n| n.as_str().unwrap() == name)
+                .unwrap_or(false)
+        })
+    };
+    let vgg = find("vgg16").expect("vgg16 listed");
+    assert_eq!(vgg.get("source").unwrap().as_str().unwrap(), "zoo");
+    assert_eq!(vgg.get_f64("layers").unwrap(), 16.0);
+    let llama = find("llama7b-decode").expect("llama listed");
+    assert_eq!(llama.get("source").unwrap().as_str().unwrap(), "spec");
+    assert_eq!(llama.get_f64("layers").unwrap(), 9.0);
+
+    // describe: the canonical spec plus derived fields
+    let d = Json::parse(&send(
+        addr,
+        r#"{"verb": "workloads", "describe": "bert-base-block"}"#,
+    ))
+    .unwrap();
+    assert_eq!(d.get("ok").unwrap(), &Json::Bool(true));
+    let w = d.get("workload").unwrap();
+    assert_eq!(w.get_f64("layer_count").unwrap(), 8.0);
+    assert_eq!(w.get_f64("replicas").unwrap(), 12.0);
+    assert!(w.get_f64("total_macs").unwrap() > 0.0);
+    assert_eq!(w.get("layers").unwrap().as_arr().unwrap().len(), 8);
+    assert_eq!(w.get("fingerprint").unwrap().as_str().unwrap().len(),
+               16);
+
+    // describe with an inline spec validates without running anything
+    let v = Json::parse(&send(
+        addr,
+        &format!(r#"{{"verb": "workloads", "workload_spec": {}}}"#,
+                 INLINE_SPEC.replace('\n', " ")),
+    ))
+    .unwrap();
+    assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(v.get("workload").unwrap().get_f64("layer_count")
+        .unwrap(), 3.0);
+
+    // unknown names error cleanly
+    let e = Json::parse(&send(
+        addr,
+        r#"{"verb": "workloads", "describe": "alexnet"}"#,
+    ))
+    .unwrap();
+    assert_eq!(e.get("ok").unwrap(), &Json::Bool(false));
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
     assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));

@@ -71,9 +71,43 @@ fn malformed_requests_get_one_line_errors() {
         "{\"verb\": \"cancel\", \"job_id\": 424242}",
         "{\"verb\": \"sweep\", \"workloads\": []}",
         "{\"verb\": \"sweep\", \"methods\": [\"ga\", \"quantum\"]}",
+        "{\"verb\": \"optimize\", \"workload_spec\": 42}",
+        "{\"verb\": \"optimize\", \"workload_spec\": {\"name\": \"x\", \
+         \"layers\": [{\"name\": \"a\", \"kind\": \"conv\", \
+         \"dims\": [1, 2, 3]}]}}",
+        "{\"verb\": \"workloads\", \"describe\": \"not-a-net\"}",
+        "{\"verb\": \"workloads\", \"describe\": 42}",
     ] {
         assert_err_response(&send_once(addr, bad.as_bytes()));
     }
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn oversized_inline_specs_are_rejected_at_parse() {
+    // a spec over the layer cap must be a one-line error before any
+    // job is queued — parse-time validation, like the chains cap
+    let (addr, t) = start_server();
+    let layers: Vec<String> = (0..65)
+        .map(|i| {
+            format!(
+                "{{\"name\": \"l{i}\", \"kind\": \"fc\", \
+                 \"dims\": [1, 8, 8, 1, 1, 1, 1]}}"
+            )
+        })
+        .collect();
+    let body = format!(
+        "{{\"verb\": \"optimize\", \"method\": \"random\", \
+         \"workload_spec\": {{\"name\": \"huge\", \
+         \"layers\": [{}]}}}}",
+        layers.join(",")
+    );
+    let resp = send_once(addr, body.as_bytes());
+    assert_err_response(&resp);
+    assert!(resp.contains("cap"), "{resp}");
+    // the connection and the server survive; normal service resumes
+    let pong = send_once(addr, b"{\"verb\": \"ping\"}");
+    assert!(pong.contains("pong"), "{pong}");
     shutdown_server(addr, t);
 }
 

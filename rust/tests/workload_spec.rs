@@ -1,0 +1,237 @@
+//! The workload-spec subsystem end-to-end: the checked-in
+//! `data/workloads/*.json` files are the source of truth for the model
+//! zoo expansion, so (1) the five zoo re-expressions must be
+//! *bit-identical* to their builder functions, (2) every new spec must
+//! parse, validate, and be searchable, and (3) the builder -> spec ->
+//! parse round trip must be lossless.
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::coordinator::resolve_workload;
+use fadiff::costmodel;
+use fadiff::mapping::Strategy;
+use fadiff::search::{random, Budget, EvalCtx};
+use fadiff::workload::{spec, zoo, Workload};
+
+/// The five zoo models and their spec-file stems.
+fn zoo_pairs() -> Vec<(&'static str, Workload)> {
+    vec![
+        ("gpt3-6.7b", zoo::gpt3_6_7b()),
+        ("vgg19", zoo::vgg19()),
+        ("vgg16", zoo::vgg16()),
+        ("mobilenet-v1", zoo::mobilenet_v1()),
+        ("resnet18", zoo::resnet18()),
+    ]
+}
+
+/// The new scenario classes this zoo expansion adds as data.
+const NEW_SPECS: [&str; 4] = [
+    "llama7b-decode",
+    "llama7b-prefill",
+    "bert-base-block",
+    "resnet50-bottleneck",
+];
+
+#[test]
+fn checked_in_zoo_specs_are_bit_identical_to_builders() {
+    let repo = repo_root();
+    for (stem, built) in zoo_pairs() {
+        let loaded = spec::load_named(&repo, stem)
+            .unwrap_or_else(|| panic!("data/workloads/{stem}.json missing"))
+            .unwrap_or_else(|e| panic!("{stem}: {e}"));
+        assert_eq!(loaded, built,
+                   "{stem}: spec file diverged from the zoo builder");
+    }
+}
+
+#[test]
+fn builder_to_spec_json_round_trip_is_lossless() {
+    for (_, w) in zoo_pairs() {
+        let text = spec::to_json(&w).compact();
+        let back = spec::from_str(&text).unwrap();
+        assert_eq!(back, w, "{} round trip", w.name);
+        assert_eq!(spec::fingerprint(&back), spec::fingerprint(&w));
+    }
+}
+
+#[test]
+fn new_specs_parse_and_are_schedulable() {
+    let repo = repo_root();
+    let hw = load_config(&repo, "large").unwrap();
+    for stem in NEW_SPECS {
+        let w = spec::load_named(&repo, stem)
+            .unwrap_or_else(|| panic!("data/workloads/{stem}.json missing"))
+            .unwrap_or_else(|e| panic!("{stem}: {e}"));
+        assert_eq!(w.name, stem, "file stem must match the spec name");
+        assert!(!w.is_empty());
+        assert_eq!(w.fusible.len(), w.len() - 1);
+        // the trivial strategy must be feasible on the paper hardware
+        costmodel::feasible(&Strategy::trivial(&w), &w, &hw)
+            .unwrap_or_else(|e| panic!("{stem}: {e}"));
+        // and a short real search must produce a finite schedule
+        let r = random::optimize_ctx(&w, &hw, 3, Budget::iters(8),
+                                     &EvalCtx::default())
+            .unwrap();
+        assert!(r.edp.is_finite() && r.edp > 0.0, "{stem}");
+        costmodel::feasible(&r.best, &w, &hw).unwrap();
+    }
+}
+
+#[test]
+fn new_specs_cover_the_advertised_scenario_classes() {
+    let repo = repo_root();
+    let load = |stem: &str| {
+        spec::load_named(&repo, stem).unwrap().unwrap()
+    };
+
+    // LLaMA decode: single-token (seq = 1) autoregressive GEMMs
+    // against a long KV cache, full-model replication.
+    let decode = load("llama7b-decode");
+    assert_eq!(decode.len(), 9, "q/k/v + attn x2 + out + SwiGLU x3");
+    assert_eq!(decode.replicas, 32.0);
+    use fadiff::workload::{DIM_C, DIM_K, DIM_P};
+    for l in &decode.layers {
+        assert!(l.dims[DIM_P] == 1,
+                "{}: decode GEMMs have one output row", l.name);
+    }
+    // only the scores -> context edge is fusible (everything else is a
+    // parallel projection, residual join, or two-producer edge)
+    let fusible: Vec<usize> = (0..decode.fusible.len())
+        .filter(|&i| decode.fusible[i])
+        .collect();
+    assert_eq!(fusible, vec![3], "decode fusibility: {fusible:?}");
+
+    // prefill shares the structure at seq = 2048
+    let prefill = load("llama7b-prefill");
+    assert_eq!(prefill.len(), decode.len());
+    assert_eq!(prefill.layers[0].dims[DIM_P], 2048);
+    assert!(prefill.total_ops() > 1000.0 * decode.total_ops(),
+            "prefill must be orders of magnitude more work");
+
+    // BERT-base block: 12 heads, d_model 768, same edge topology as
+    // the GPT-3 block (scores->context and the FFN chain fuse)
+    let bert = load("bert-base-block");
+    assert_eq!(bert.len(), 8);
+    assert_eq!(bert.replicas, 12.0);
+    assert_eq!(bert.layers[6].dims[DIM_K], 3072, "FFN hidden");
+    assert!(bert.fusible[3] && bert.fusible[5] && bert.fusible[6]);
+    assert!(!bert.fusible[0] && !bert.fusible[4]);
+
+    // ResNet-50 bottleneck stage: 1x1 -> 3x3 -> 1x1 chains fusible
+    // inside each block, blocked across the residual joins
+    let rn = load("resnet50-bottleneck");
+    assert_eq!(rn.len(), 10);
+    assert!(rn.fusible[0] && rn.fusible[1],
+            "reduce -> conv3 -> expand must fuse");
+    assert!(!rn.fusible[2] && !rn.fusible[3] && !rn.fusible[6],
+            "projection / residual joins must not fuse");
+    assert_eq!(rn.layers[0].dims[DIM_C], 64);
+    assert_eq!(rn.layers[4].dims[DIM_C], 256,
+               "block 2 consumes the expanded width");
+}
+
+#[test]
+fn resolve_workload_reaches_zoo_and_spec_files() {
+    // zoo names resolve to builders
+    let w = resolve_workload("vgg16").unwrap();
+    assert_eq!(w, zoo::vgg16());
+    // spec-only names resolve through data/workloads/
+    let w = resolve_workload("llama7b-decode").unwrap();
+    assert_eq!(w.name, "llama7b-decode");
+    // everything else is a one-line error naming both sources
+    let err = resolve_workload("alexnet").unwrap_err().to_string();
+    assert!(err.contains("alexnet") && err.contains("data/workloads"),
+            "{err}");
+}
+
+#[test]
+fn listed_specs_include_mirrors_and_new_classes() {
+    let names = spec::list_spec_names(&repo_root());
+    for (stem, _) in zoo_pairs() {
+        assert!(names.iter().any(|n| n == stem), "{stem} not listed");
+    }
+    for stem in NEW_SPECS {
+        assert!(names.iter().any(|n| n == stem), "{stem} not listed");
+    }
+    assert!(names.len() >= 9);
+}
+
+#[test]
+fn fingerprints_are_distinct_across_the_whole_zoo() {
+    let repo = repo_root();
+    let mut seen = std::collections::HashMap::new();
+    for name in spec::list_spec_names(&repo) {
+        let w = spec::load_named(&repo, &name).unwrap().unwrap();
+        let fp = spec::fingerprint(&w);
+        assert_eq!(fp.len(), 16);
+        if let Some(prev) = seen.insert(fp.clone(), name.clone()) {
+            panic!("{name} and {prev} share fingerprint {fp}");
+        }
+    }
+}
+
+#[test]
+fn cache_keys_track_content_for_mutable_sources() {
+    use fadiff::coordinator::JobRequest;
+    // zoo names key by name: builders are immutable in-process
+    let zoo_req = JobRequest {
+        workload: "vgg16".into(),
+        ..Default::default()
+    };
+    assert_eq!(zoo_req.cache_key(&zoo::vgg16()), "vgg16");
+
+    // spec-FILE workloads key by content fingerprint — editing the
+    // file under a running server must invalidate its cache pair
+    // instead of serving stale evaluations under the same name
+    let loaded = resolve_workload("llama7b-decode").unwrap();
+    let file_req = JobRequest {
+        workload: "llama7b-decode".into(),
+        ..Default::default()
+    };
+    let key = file_req.cache_key(&loaded);
+    assert!(key.starts_with("spec:"), "{key}");
+    let mut edited = loaded.clone();
+    edited.layers[0].dims[1] *= 2;
+    assert_ne!(file_req.cache_key(&edited), key,
+               "changed file content must change the cache key");
+
+    // inline specs likewise, even when named like a zoo model
+    let masquerade = JobRequest {
+        workload: "vgg16".into(),
+        spec: Some(std::sync::Arc::new(edited.clone())),
+        ..Default::default()
+    };
+    assert!(masquerade.cache_key(&edited).starts_with("spec:"));
+}
+
+#[test]
+fn spec_file_name_must_match_stem() {
+    let dir = std::env::temp_dir().join("fadiff_spec_stem_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let body = spec::to_json(&zoo::vgg16()).pretty();
+    // stem "other" but declared name "vgg16": must be rejected, not
+    // advertised under a name that then fails to resolve
+    std::fs::write(dir.join("other.json"), &body).unwrap();
+    let err = spec::load_named_from(&dir, "other")
+        .expect("file exists")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("stem"), "{err}");
+    // matching stem loads fine
+    std::fs::write(dir.join("vgg16.json"), &body).unwrap();
+    let w = spec::load_named_from(&dir, "vgg16")
+        .expect("file exists")
+        .expect("stem matches");
+    assert_eq!(w, zoo::vgg16());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn oversized_spec_files_are_rejected() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("fadiff_oversized_spec_test.json");
+    let filler = "x".repeat(spec::MAX_SPEC_BYTES);
+    std::fs::write(&path, format!("{{\"name\": \"{filler}\"}}")).unwrap();
+    let err = spec::load_file(&path).unwrap_err().to_string();
+    assert!(err.contains("cap"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
