@@ -22,7 +22,11 @@ Two kinds of checks:
   chain's — >= 3x on a true 4+-physical-core runner (8+ hardware
   threads), >= 2x on 4-7 hardware threads (SMT "4-core" runners
   expose two physical cores). Below 4 threads the chains timeshare
-  one or two cores and both checks are advisory.
+  one or two cores and both checks are advisory. Additionally the
+  fleet-serving lane: N concurrent jobs through the coordinator
+  (cross-job batch merging) must sustain at least
+  ``FLEET_FLOOR`` x the serial one-job-at-a-time throughput of the
+  same machine — concurrency plus merging must never cost throughput.
 """
 
 import json
@@ -42,6 +46,14 @@ MAX_REGRESSION = 0.25
 # the f64-bound gradient kernel cannot reach the full 3x, so the 3x
 # floor applies from 8 hardware threads and a 2x floor from 4.
 SPEEDUP_FLOORS = [(8, 3.0), (4, 2.0)]
+
+# Minimum merged-vs-serial evals/sec ratio for the fleet-serving lane
+# (same-machine comparison, so no bootstrap caveat): concurrent jobs
+# with cross-job batch merging must at least match running the jobs
+# one at a time. On 4+ threads the merged path should win outright;
+# the 0.9 floor absorbs scheduling jitter without letting a real
+# serialization bug (ratio well under 1) pass.
+FLEET_FLOOR = 0.9
 
 
 def main(argv):
@@ -119,6 +131,24 @@ def main(argv):
             failures.append(
                 f"C=8 grad-steps/sec speedup {speedup:.2f}x is below "
                 f"the {floor}x floor for a {cores:.0f}-thread runner"
+            )
+
+    fleet = cur.get("fleet_merged_vs_serial_speedup")
+    if fleet is None:
+        failures.append(
+            "current run is missing fleet_merged_vs_serial_speedup"
+        )
+    else:
+        print(f"fleet merged-vs-serial throughput {fleet:.2f}x on "
+              f"{cores:.0f} hardware threads")
+        if cores < 4:
+            print("  (fewer than 4 threads: fleet floor is advisory)")
+        elif fleet < FLEET_FLOOR:
+            failures.append(
+                f"fleet serving throughput {fleet:.2f}x serial is "
+                f"below the {FLEET_FLOOR}x floor: concurrent jobs "
+                "with batch merging must not be slower than running "
+                "them one at a time"
             )
 
     if failures:

@@ -20,6 +20,9 @@
 //!     (best-loss + aggregate grad-steps/sec — the CI-gated lanes)
 //!   * batched decode offers: per-chain serial decode+eval vs one
 //!     `eval_population` pass over all banked snapshots
+//!   * fleet serving: N concurrent small jobs on one coordinator
+//!     (cross-job batch merging in the fleet scheduler) vs the same
+//!     jobs run serially — the merged path must not be slower
 //!   * PJRT gradient step + batched artifact eval (skipped unless real
 //!     artifacts + a PJRT-backed xla crate are present)
 //!
@@ -364,6 +367,58 @@ fn main() {
                     16.0 / od_bat / 1e3, od_ser / od_bat));
     println!();
 
+    // --- cross-job fleet serving: N concurrent jobs vs serial -----------
+    // the serving claim CI gates: N concurrent small jobs through one
+    // coordinator (whose fleet scheduler merges their evaluation
+    // batches into shared pool passes) must sustain at least the
+    // serial one-job-at-a-time throughput on the same machine
+    let fleet_jobs = 6usize;
+    let fleet_req = |seed: u64| fadiff::coordinator::JobRequest {
+        workload: "resnet18".into(),
+        config: "large".into(),
+        method: fadiff::coordinator::Method::Random,
+        seconds: 3600.0, // iteration-capped
+        max_iters: 40,
+        seed,
+        chains: 0,
+        spec: None,
+    };
+    let t0 = std::time::Instant::now();
+    let mut fleet_evals = 0usize;
+    for i in 0..fleet_jobs {
+        let r = fadiff::coordinator::execute_job(
+            None, &fleet_req(100 + i as u64))
+            .expect("serial fleet job");
+        fleet_evals += r.evals;
+    }
+    let fleet_serial_wall = t0.elapsed().as_secs_f64();
+    let coord =
+        fadiff::coordinator::Coordinator::new(None, fleet_jobs)
+            .expect("coordinator");
+    let t0 = std::time::Instant::now();
+    let fleet_handles: Vec<_> = (0..fleet_jobs)
+        .map(|i| coord.submit(fleet_req(100 + i as u64)))
+        .collect();
+    for h in fleet_handles {
+        h.wait().expect("worker alive").expect("merged fleet job");
+    }
+    let fleet_merged_wall = t0.elapsed().as_secs_f64();
+    let fleet_merged_passes = coord
+        .scheduler()
+        .stats()
+        .merged_passes
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let fleet_serial_eps = fleet_evals as f64 / fleet_serial_wall;
+    let fleet_merged_eps = fleet_evals as f64 / fleet_merged_wall;
+    println!(
+        "fleet serving ({fleet_jobs} random jobs, resnet18): serial \
+         {fleet_serial_wall:.2}s = {:.0}k evals/s | concurrent+merged \
+         {fleet_merged_wall:.2}s = {:.0}k evals/s ({:.2}x, {} merged \
+         passes)\n",
+        fleet_serial_eps / 1e3, fleet_merged_eps / 1e3,
+        fleet_merged_eps / fleet_serial_eps, fleet_merged_passes
+    );
+
     if json_mode {
         let j = obj(vec![
             ("pop", num(POP as f64)),
@@ -395,6 +450,12 @@ fn main() {
             ("decode_offer_serial_per_sec", num(16.0 / od_ser)),
             ("decode_offer_batched_per_sec", num(16.0 / od_bat)),
             ("batched_decode_offer_speedup", num(od_ser / od_bat)),
+            ("fleet_jobs", num(fleet_jobs as f64)),
+            ("fleet_serial_evals_per_sec", num(fleet_serial_eps)),
+            ("fleet_merged_evals_per_sec", num(fleet_merged_eps)),
+            ("fleet_merged_vs_serial_speedup",
+             num(fleet_merged_eps / fleet_serial_eps)),
+            ("fleet_merged_passes", num(fleet_merged_passes as f64)),
         ]);
         // cargo runs benches with CWD = the package root (rust/);
         // anchor at the repo root so CI finds the file

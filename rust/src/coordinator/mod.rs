@@ -41,22 +41,24 @@
 
 pub mod metrics;
 pub mod registry;
+pub mod scheduler;
 pub mod server;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{load_config, repo_root};
+use crate::config::{load_config, repo_root, HwConfig};
 use crate::costmodel;
 use crate::runtime::Runtime;
-use crate::search::{bo, ga, gradient, random, Budget, EvalCtx,
-                    SearchResult};
+use crate::search::{bo, ga, gradient, random, Budget, EvalBackend,
+                    EvalCtx, FleetHandle, ProgressSnapshot,
+                    SearchProgress, SearchResult};
 use crate::util::json::Json;
 use crate::util::threadpool::{oneshot, OneShot, OneShotSender,
                               ThreadPool};
@@ -64,6 +66,13 @@ use crate::workload::{spec, zoo, Workload};
 
 pub use metrics::Metrics;
 pub use registry::CacheRegistry;
+pub use scheduler::FleetScheduler;
+
+/// Default bound on queued-but-not-started jobs. The server answers
+/// `queue_full` (with a `retry_after_ms` hint) instead of queueing
+/// past it — bounded-latency backpressure instead of unbounded memory
+/// growth on a flooded service.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 512;
 
 /// Optimization method selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -232,6 +241,7 @@ impl JobStatus {
 struct TrackedJob {
     status: JobStatus,
     cancel: Arc<AtomicBool>,
+    progress: Arc<SearchProgress>,
     result: Option<Result<JobResult, String>>,
 }
 
@@ -250,7 +260,8 @@ struct JobTable {
 impl JobTable {
     /// Register a new queued job; `None` when the table is saturated
     /// with live jobs (the caller should reject the submission).
-    fn insert(&self, cancel: Arc<AtomicBool>) -> Option<u64> {
+    fn insert(&self, cancel: Arc<AtomicBool>,
+              progress: Arc<SearchProgress>) -> Option<u64> {
         let mut jobs = self.jobs.lock().unwrap();
         if jobs.len() >= MAX_TRACKED_JOBS {
             let mut terminal: Vec<u64> = jobs
@@ -269,7 +280,7 @@ impl JobTable {
         }
         let id = self.next.fetch_add(1, Ordering::SeqCst) + 1;
         jobs.insert(id, TrackedJob { status: JobStatus::Queued, cancel,
-                                     result: None });
+                                     progress, result: None });
         Some(id)
     }
 
@@ -313,6 +324,14 @@ impl JobTable {
             .get(&id)
             .map(|j| Arc::clone(&j.cancel))
     }
+
+    fn progress(&self, id: u64) -> Option<Arc<SearchProgress>> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|j| Arc::clone(&j.progress))
+    }
 }
 
 struct Envelope {
@@ -320,9 +339,11 @@ struct Envelope {
     reply: Option<OneShotSender<Result<JobResult, String>>>,
     job_id: Option<u64>,
     cancel: Arc<AtomicBool>,
+    progress: Arc<SearchProgress>,
 }
 
-/// The coordinator: queue + worker pool + shared caches + metrics.
+/// The coordinator: queue + worker pool + shared caches + the fleet
+/// scheduler + metrics.
 pub struct Coordinator {
     tx: Option<Sender<Envelope>>,
     workers: Vec<JoinHandle<()>>,
@@ -330,7 +351,10 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     registry: Arc<CacheRegistry>,
     eval_pool: Arc<ThreadPool>,
+    scheduler: Arc<FleetScheduler>,
     jobs: Arc<JobTable>,
+    queue_depth: Arc<AtomicUsize>,
+    queue_capacity: AtomicUsize,
     started: std::time::Instant,
 }
 
@@ -369,6 +393,12 @@ impl Coordinator {
             .unwrap_or(4)
             .min(16);
         let eval_pool = Arc::new(ThreadPool::new(eval_threads));
+        // the cross-job fleet scheduler: every job's engine sends its
+        // cache-miss batches here, where same-(workload, config) items
+        // from concurrent jobs coalesce into shared kernel passes
+        let scheduler =
+            Arc::new(FleetScheduler::new(Arc::clone(&eval_pool)));
+        let queue_depth = Arc::new(AtomicUsize::new(0));
         let workers = (0..n_workers.max(1))
             .map(|i| {
                 let rx = Arc::clone(&rx);
@@ -376,29 +406,43 @@ impl Coordinator {
                 let metrics = Arc::clone(&metrics);
                 let registry = Arc::clone(&registry);
                 let eval_pool = Arc::clone(&eval_pool);
+                let scheduler = Arc::clone(&scheduler);
                 let jobs = Arc::clone(&jobs);
+                let queue_depth = Arc::clone(&queue_depth);
                 std::thread::Builder::new()
                     .name(format!("fadiff-coord-{i}"))
                     .spawn(move || {
                         worker_loop(&dir, &rx, &metrics, &registry,
-                                    &eval_pool, &jobs)
+                                    &eval_pool, &scheduler, &jobs,
+                                    &queue_depth)
                     })
                     .expect("spawn coordinator worker")
             })
             .collect();
-        Ok(Coordinator { tx: Some(tx), workers, metrics, registry,
-                         eval_pool, jobs,
-                         started: std::time::Instant::now() })
+        Ok(Coordinator {
+            tx: Some(tx),
+            workers,
+            metrics,
+            registry,
+            eval_pool,
+            scheduler,
+            jobs,
+            queue_depth,
+            queue_capacity: AtomicUsize::new(DEFAULT_QUEUE_CAPACITY),
+            started: std::time::Instant::now(),
+        })
     }
 
     fn enqueue(&self, req: JobRequest,
                reply: Option<OneShotSender<Result<JobResult, String>>>,
-               job_id: Option<u64>, cancel: Arc<AtomicBool>) {
+               job_id: Option<u64>, cancel: Arc<AtomicBool>,
+               progress: Arc<SearchProgress>) {
         self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
         self.tx
             .as_ref()
             .expect("coordinator shut down")
-            .send(Envelope { req, reply, job_id, cancel })
+            .send(Envelope { req, reply, job_id, cancel, progress })
             .expect("workers alive");
     }
 
@@ -407,7 +451,8 @@ impl Coordinator {
                   -> OneShot<Result<JobResult, String>> {
         let (tx, rx) = oneshot();
         self.enqueue(req, Some(tx), None,
-                     Arc::new(AtomicBool::new(false)));
+                     Arc::new(AtomicBool::new(false)),
+                     Arc::new(SearchProgress::new()));
         rx
     }
 
@@ -417,13 +462,17 @@ impl Coordinator {
     /// job table is saturated with live jobs (cancel or drain first).
     pub fn submit_tracked(&self, req: JobRequest) -> Result<u64> {
         let cancel = Arc::new(AtomicBool::new(false));
-        let id = self.jobs.insert(Arc::clone(&cancel)).ok_or_else(|| {
-            anyhow!(
-                "job table full ({MAX_TRACKED_JOBS} live jobs); \
-                 cancel or await existing jobs first"
-            )
-        })?;
-        self.enqueue(req, None, Some(id), cancel);
+        let progress = Arc::new(SearchProgress::new());
+        let id = self
+            .jobs
+            .insert(Arc::clone(&cancel), Arc::clone(&progress))
+            .ok_or_else(|| {
+                anyhow!(
+                    "job table full ({MAX_TRACKED_JOBS} live jobs); \
+                     cancel or await existing jobs first"
+                )
+            })?;
+        self.enqueue(req, None, Some(id), cancel, progress);
         Ok(id)
     }
 
@@ -485,6 +534,35 @@ impl Coordinator {
         &self.eval_pool
     }
 
+    /// The cross-job fleet scheduler (merge counters, test hooks).
+    pub fn scheduler(&self) -> &Arc<FleetScheduler> {
+        &self.scheduler
+    }
+
+    /// Jobs queued but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::SeqCst)
+    }
+
+    /// The bound the server enforces before enqueueing
+    /// (`queue_full` past it).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity.load(Ordering::SeqCst)
+    }
+
+    /// Override the queue bound (min 1; tests shrink it to force
+    /// `queue_full` deterministically).
+    pub fn set_queue_capacity(&self, capacity: usize) {
+        self.queue_capacity
+            .store(capacity.max(1), Ordering::SeqCst);
+    }
+
+    /// Live progress of a tracked job (the `watch` stream's source).
+    /// `None` for ids never issued or pruned.
+    pub fn job_progress(&self, id: u64) -> Option<ProgressSnapshot> {
+        self.jobs.progress(id).map(|p| p.snapshot())
+    }
+
     /// Seconds since this coordinator started serving.
     pub fn uptime_seconds(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
@@ -497,6 +575,15 @@ impl Coordinator {
         let mut j = self.metrics.to_json();
         if let Json::Obj(map) = &mut j {
             map.insert("cache".into(), self.registry.stats_json());
+            map.insert("scheduler".into(),
+                       self.scheduler.stats_json());
+            map.insert(
+                "queue".into(),
+                obj(vec![
+                    ("depth", num(self.queue_depth() as f64)),
+                    ("capacity", num(self.queue_capacity() as f64)),
+                ]),
+            );
             map.insert(
                 "eval_pool_threads".into(),
                 Json::Num(self.eval_pool.size() as f64),
@@ -533,10 +620,13 @@ impl Drop for Coordinator {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(dir: &std::path::Path,
                rx: &Arc<Mutex<Receiver<Envelope>>>,
                metrics: &Arc<Metrics>, registry: &Arc<CacheRegistry>,
-               eval_pool: &Arc<ThreadPool>, jobs: &Arc<JobTable>) {
+               eval_pool: &Arc<ThreadPool>,
+               scheduler: &Arc<FleetScheduler>, jobs: &Arc<JobTable>,
+               queue_depth: &Arc<AtomicUsize>) {
     // One PJRT runtime per worker; artifacts compile lazily on the
     // first gradient job so native-only service pays no startup
     // compiles (the accurate degraded-mode warning is emitted once by
@@ -549,10 +639,12 @@ fn worker_loop(dir: &std::path::Path,
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let Envelope { req, reply, job_id, cancel } = match job {
-            Ok(j) => j,
-            Err(_) => break,
-        };
+        let Envelope { req, reply, job_id, cancel, progress } =
+            match job {
+                Ok(j) => j,
+                Err(_) => break,
+            };
+        queue_depth.fetch_sub(1, Ordering::SeqCst);
         // cancelled while queued: never start it
         if cancel.load(Ordering::SeqCst) {
             let transitioned = job_id.map_or(true, |id| {
@@ -575,6 +667,8 @@ fn worker_loop(dir: &std::path::Path,
             registry: Some(registry.as_ref()),
             pool: Some(Arc::clone(eval_pool)),
             cancel: Some(Arc::clone(&cancel)),
+            fleet: Some(Arc::clone(scheduler)),
+            progress: Some(progress),
         };
         let out = execute_job_ctx(rt.as_ref(), &req, &ctx)
             .map_err(|e| e.to_string());
@@ -619,8 +713,9 @@ fn worker_loop(dir: &std::path::Path,
 
 /// Serving context for one job execution: where to find the shared
 /// per-`(workload, config)` caches, the persistent evaluation pool,
-/// and the cooperative cancel flag. `JobCtx::default()` (what the CLI
-/// uses) reproduces standalone behavior exactly.
+/// the cooperative cancel flag, the cross-job fleet scheduler, and the
+/// live progress sink. `JobCtx::default()` (what the CLI uses)
+/// reproduces standalone behavior exactly.
 #[derive(Default)]
 pub struct JobCtx<'c> {
     /// Cross-job cache registry (shared per-pair evaluation caches).
@@ -629,16 +724,33 @@ pub struct JobCtx<'c> {
     pub pool: Option<Arc<ThreadPool>>,
     /// Cooperative cancellation flag.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Cross-job fleet scheduler: when set, the job's engines send
+    /// their cache-miss batches through it so concurrent jobs on the
+    /// same `(workload, config)` pair share kernel passes.
+    pub fleet: Option<Arc<FleetScheduler>>,
+    /// Live progress sink for `status {"watch": true}` streams.
+    pub progress: Option<Arc<SearchProgress>>,
 }
 
 impl JobCtx<'_> {
-    fn eval_ctx(&self, req: &JobRequest, resolved: &Workload) -> EvalCtx {
+    fn eval_ctx(&self, req: &JobRequest, resolved: &Arc<Workload>,
+                hw: &Arc<HwConfig>) -> EvalCtx {
+        let cache_key = req.cache_key(resolved);
         EvalCtx {
-            cache: self.registry.map(|r| {
-                r.cache_for(&req.cache_key(resolved), &req.config)
-            }),
+            cache: self
+                .registry
+                .map(|r| r.cache_for(&cache_key, &req.config)),
             pool: self.pool.clone(),
             cancel: self.cancel.clone(),
+            fleet: self.fleet.as_ref().map(|s| FleetHandle {
+                backend: Arc::clone(s) as Arc<dyn EvalBackend>,
+                w: Arc::clone(resolved),
+                hw: Arc::clone(hw),
+                // the same identity the cache registry keys on: merge
+                // exactly when an eval cache could be shared
+                key: format!("{cache_key}\u{0}{}", req.config),
+            }),
+            progress: self.progress.clone(),
         }
     }
 }
@@ -703,17 +815,15 @@ pub fn execute_job(rt: Option<&Runtime>, req: &JobRequest)
 /// persistent pool, and poll the cancel flag between batches.
 pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
                        ctx: &JobCtx) -> Result<JobResult> {
-    let resolved;
-    let w: &Workload = match &req.spec {
-        Some(inline) => inline.as_ref(),
-        None => {
-            resolved = resolve_workload(&req.workload)?;
-            &resolved
-        }
+    let w_arc: Arc<Workload> = match &req.spec {
+        Some(inline) => Arc::clone(inline),
+        None => Arc::new(resolve_workload(&req.workload)?),
     };
-    let hw = load_config(&repo_root(), &req.config)?;
+    let w: &Workload = &w_arc;
+    let hw_arc = Arc::new(load_config(&repo_root(), &req.config)?);
+    let hw: &HwConfig = &hw_arc;
     let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
-    let ectx = ctx.eval_ctx(req, w);
+    let ectx = ctx.eval_ctx(req, &w_arc, &hw_arc);
     let t0 = std::time::Instant::now();
     let r: SearchResult = match req.method {
         Method::FADiff => gradient::optimize_ctx(

@@ -1,0 +1,408 @@
+//! The cross-job fleet scheduler: merges evaluation batches from
+//! concurrent jobs into shared kernel passes on the persistent pool.
+//!
+//! Why: the ROADMAP's serving goal is N concurrent small jobs costing
+//! ~1 big job. Every search method already routes scoring through
+//! [`crate::search::EvalEngine`], and the engine already folds
+//! duplicates and cache hits — but each job still ran its *own* pool
+//! pass per batch, so N concurrent jobs paid N pass set-ups and fought
+//! each other for workers in small, fragmented batches. The scheduler
+//! gives the coordinator one merge point instead: engines built with a
+//! [`FleetHandle`] enqueue `(candidates, reply)` work items here, a
+//! single scheduler thread drains whatever is pending, coalesces items
+//! with the same `(workload, config)` key into one
+//! [`crate::costmodel::batch`] pass over the shared
+//! [`crate::util::threadpool::ThreadPool`], and routes each job back
+//! exactly its slice of the results.
+//!
+//! Bit-identity: merging changes *where* candidates are computed, never
+//! what is computed. Every candidate runs
+//! [`crate::search::eval::compute_eval`] — the same function the
+//! engine's local path runs — each candidate independently, with
+//! per-thread scratch, and replies preserve submission order. So a
+//! merged pass is bit-for-bit identical to per-job serial evaluation at
+//! any pool size and any interleaving (pinned by
+//! `rust/tests/scheduler.rs`).
+//!
+//! Observability: the `metrics` verb surfaces [`FleetScheduler::
+//! stats_json`] — passes, items, merged passes, the largest merge —
+//! so cross-job coalescing is visible from the wire.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::search::eval::{compute_eval, Eval, EvalBackend, FleetHandle};
+use crate::mapping::Strategy;
+use crate::util::json::{num, obj, Json};
+use crate::util::threadpool::{oneshot, OneShotSender, ThreadPool};
+
+/// One job's pending evaluation batch: the coalescing key, the
+/// candidates, and where to send their scores. The workload/hardware
+/// ride along as `Arc`s inside the handle snapshot so the scheduler
+/// thread can compute after the submitting engine's borrows are gone.
+struct WorkItem {
+    key: String,
+    handle: FleetHandle,
+    strategies: Vec<Strategy>,
+    reply: OneShotSender<Vec<Eval>>,
+}
+
+/// Lock-free merge counters (surfaced under `"scheduler"` in the
+/// `metrics` verb).
+#[derive(Default)]
+pub struct SchedStats {
+    /// Kernel passes executed.
+    pub passes: AtomicU64,
+    /// Passes that merged work items from >= 2 submissions.
+    pub merged_passes: AtomicU64,
+    /// Work items accepted — counted at enqueue, so a held scheduler
+    /// (see [`FleetScheduler::hold`]) still reports arrivals and a
+    /// test can wait for N items before releasing.
+    pub items: AtomicU64,
+    /// Work items that shared their pass with at least one other item.
+    pub merged_items: AtomicU64,
+    /// Candidates scored.
+    pub candidates: AtomicU64,
+    /// Largest number of items ever coalesced into one pass.
+    pub max_items_per_pass: AtomicU64,
+}
+
+impl SchedStats {
+    fn max_update(slot: &AtomicU64, v: u64) {
+        slot.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// The `scheduler` block of the `metrics` verb.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("passes",
+             num(self.passes.load(Ordering::Relaxed) as f64)),
+            ("merged_passes",
+             num(self.merged_passes.load(Ordering::Relaxed) as f64)),
+            ("items", num(self.items.load(Ordering::Relaxed) as f64)),
+            ("merged_items",
+             num(self.merged_items.load(Ordering::Relaxed) as f64)),
+            ("candidates",
+             num(self.candidates.load(Ordering::Relaxed) as f64)),
+            ("max_items_per_pass",
+             num(self.max_items_per_pass.load(Ordering::Relaxed)
+                 as f64)),
+        ])
+    }
+}
+
+/// The coordinator-owned scheduler: one thread draining work items,
+/// coalescing same-key items into shared pool passes.
+pub struct FleetScheduler {
+    tx: Mutex<Option<Sender<WorkItem>>>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+    stats: Arc<SchedStats>,
+    hold: Arc<AtomicBool>,
+}
+
+impl FleetScheduler {
+    /// Spawn the scheduler thread; passes run on `pool` (the
+    /// coordinator's persistent evaluation pool — the scheduler thread
+    /// itself is *not* a pool worker, so scoped submission into the
+    /// pool cannot deadlock on its own slot).
+    pub fn new(pool: Arc<ThreadPool>) -> FleetScheduler {
+        let (tx, rx) = channel::<WorkItem>();
+        let stats = Arc::new(SchedStats::default());
+        let hold = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stats = Arc::clone(&stats);
+            let hold = Arc::clone(&hold);
+            std::thread::Builder::new()
+                .name("fadiff-fleet-sched".into())
+                .spawn(move || scheduler_loop(&rx, &pool, &stats, &hold))
+                .expect("spawn fleet scheduler")
+        };
+        FleetScheduler {
+            tx: Mutex::new(Some(tx)),
+            thread: Mutex::new(Some(thread)),
+            stats,
+            hold,
+        }
+    }
+
+    /// Merge counters.
+    pub fn stats(&self) -> &SchedStats {
+        &self.stats
+    }
+
+    /// The `scheduler` block of the `metrics` verb.
+    pub fn stats_json(&self) -> Json {
+        self.stats.to_json()
+    }
+
+    /// Test/bench hook: park the scheduler *after* draining — items
+    /// keep accumulating but no pass runs until [`FleetScheduler::
+    /// release`]. Lets a test submit N concurrent jobs and force their
+    /// first batches into one deterministic merged pass.
+    pub fn hold(&self) {
+        self.hold.store(true, Ordering::SeqCst);
+    }
+
+    /// Resume coalesced processing after [`FleetScheduler::hold`].
+    pub fn release(&self) {
+        self.hold.store(false, Ordering::SeqCst);
+    }
+}
+
+impl EvalBackend for FleetScheduler {
+    /// Enqueue one batch and block for its scores. Returns an empty
+    /// vector when the scheduler is shutting down — the engine then
+    /// computes locally (same numbers, no merging).
+    fn eval_candidates(&self, handle: &FleetHandle,
+                       strategies: Vec<Strategy>) -> Vec<Eval> {
+        if strategies.is_empty() {
+            return Vec::new();
+        }
+        let (reply, rx) = oneshot();
+        let item = WorkItem {
+            key: handle.key.clone(),
+            handle: handle.clone(),
+            strategies,
+            reply,
+        };
+        let sent = match &*self.tx.lock().unwrap() {
+            Some(tx) => tx.send(item).is_ok(),
+            None => false,
+        };
+        if !sent {
+            return Vec::new();
+        }
+        self.stats.items.fetch_add(1, Ordering::Relaxed);
+        rx.wait().unwrap_or_default()
+    }
+}
+
+impl Drop for FleetScheduler {
+    fn drop(&mut self) {
+        self.hold.store(false, Ordering::SeqCst);
+        drop(self.tx.lock().unwrap().take());
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn scheduler_loop(rx: &Receiver<WorkItem>, pool: &Arc<ThreadPool>,
+                  stats: &SchedStats, hold: &AtomicBool) {
+    loop {
+        // block for the first pending item...
+        let first = match rx.recv() {
+            Ok(i) => i,
+            Err(_) => break, // coordinator dropped — drain done
+        };
+        let mut batch = vec![first];
+        // ...then opportunistically drain everything else already
+        // queued: this is the merge window. Items submitted while a
+        // previous pass was running coalesce here.
+        while let Ok(item) = rx.try_recv() {
+            batch.push(item);
+        }
+        // test hook: keep absorbing items without processing
+        while hold.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            while let Ok(item) = rx.try_recv() {
+                batch.push(item);
+            }
+        }
+        run_passes(batch, pool, stats);
+    }
+}
+
+/// Group the drained items by key (same `(workload, config)` pair) and
+/// run one shared pool pass per group, then split each pass's results
+/// back into per-item slices in submission order.
+fn run_passes(batch: Vec<WorkItem>, pool: &Arc<ThreadPool>,
+              stats: &SchedStats) {
+    // stable grouping: first-arrival order of keys, and items keep
+    // their submission order within a group
+    let mut order: Vec<String> = Vec::new();
+    let mut groups: HashMap<String, Vec<WorkItem>> = HashMap::new();
+    for item in batch {
+        if !groups.contains_key(&item.key) {
+            order.push(item.key.clone());
+        }
+        groups.entry(item.key.clone()).or_default().push(item);
+    }
+    for key in order {
+        let group = groups.remove(&key).expect("grouped");
+        run_one_pass(group, pool, stats);
+    }
+}
+
+fn run_one_pass(group: Vec<WorkItem>, pool: &Arc<ThreadPool>,
+                stats: &SchedStats) {
+    let n_items = group.len() as u64;
+    stats.passes.fetch_add(1, Ordering::Relaxed);
+    if n_items >= 2 {
+        stats.merged_passes.fetch_add(1, Ordering::Relaxed);
+        stats.merged_items.fetch_add(n_items, Ordering::Relaxed);
+    }
+    SchedStats::max_update(&stats.max_items_per_pass, n_items);
+    // flatten to (item, candidate) tasks — one shared kernel pass over
+    // the whole merged population
+    let mut tasks: Vec<(usize, usize)> = Vec::new();
+    for (i, item) in group.iter().enumerate() {
+        for c in 0..item.strategies.len() {
+            tasks.push((i, c));
+        }
+    }
+    stats.candidates.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+    // scoped_map preserves task order, and compute_eval is exactly the
+    // engine's local computation — per-candidate independence is what
+    // makes the merged pass bit-identical to per-job evaluation
+    let evals: Vec<Eval> = pool.scoped_map(tasks, |(i, c)| {
+        let item = &group[i];
+        compute_eval(&item.strategies[c], &item.handle.w,
+                     &item.handle.hw)
+    });
+    // split back per item (tasks are grouped by item, in order)
+    let mut cursor = 0usize;
+    for item in group {
+        let n = item.strategies.len();
+        let slice = evals[cursor..cursor + n].to_vec();
+        cursor += n;
+        item.reply.send(slice);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::search::EvalEngine;
+    use crate::util::rng::Rng;
+    use crate::mapping::decode::{decode, Relaxed};
+    use crate::workload::zoo;
+
+    fn random_pop(w: &crate::workload::Workload,
+                  hw: &crate::config::HwConfig, n: usize, seed: u64)
+                  -> Vec<Strategy> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut r = Relaxed::neutral(w);
+                for l in 0..w.len() {
+                    for d in 0..7 {
+                        for s in 0..4 {
+                            r.theta[l][d][s] = rng.range(0.0, 7.0);
+                        }
+                    }
+                }
+                for i in 0..r.sigma.len() {
+                    r.sigma[i] = rng.f64();
+                }
+                decode(&r, w, hw)
+            })
+            .collect()
+    }
+
+    fn handle_for(sched: &Arc<FleetScheduler>,
+                  w: &crate::workload::Workload,
+                  hw: &crate::config::HwConfig, key: &str)
+                  -> FleetHandle {
+        FleetHandle {
+            backend: Arc::clone(sched) as Arc<dyn EvalBackend>,
+            w: Arc::new(w.clone()),
+            hw: Arc::new(hw.clone()),
+            key: key.to_string(),
+        }
+    }
+
+    #[test]
+    fn single_item_matches_local_engine() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 16, 5);
+        let expect = EvalEngine::new(&w, &hw).eval_batch(&pop);
+        let pool = Arc::new(ThreadPool::new(4));
+        let sched = Arc::new(FleetScheduler::new(pool));
+        let h = handle_for(&sched, &w, &hw, "mobilenet\0large");
+        let got = sched.eval_candidates(&h, pop.clone());
+        assert_eq!(got, expect);
+        assert_eq!(sched.stats().passes.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.stats().merged_passes.load(Ordering::Relaxed),
+                   0);
+    }
+
+    #[test]
+    fn held_items_merge_into_one_pass_bit_identically() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop_a = random_pop(&w, &hw, 9, 41);
+        let pop_b = random_pop(&w, &hw, 13, 42);
+        let exp_a = EvalEngine::new(&w, &hw).eval_batch(&pop_a);
+        let exp_b = EvalEngine::new(&w, &hw).eval_batch(&pop_b);
+        let pool = Arc::new(ThreadPool::new(4));
+        let sched = Arc::new(FleetScheduler::new(pool));
+        sched.hold();
+        let ha = handle_for(&sched, &w, &hw, "k\0large");
+        let hb = handle_for(&sched, &w, &hw, "k\0large");
+        let sa = Arc::clone(&sched);
+        let sb = Arc::clone(&sched);
+        let pa = pop_a.clone();
+        let pb = pop_b.clone();
+        let ta = std::thread::spawn(move || sa.eval_candidates(&ha, pa));
+        let tb = std::thread::spawn(move || sb.eval_candidates(&hb, pb));
+        // let both items reach the parked scheduler, then release
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        sched.release();
+        assert_eq!(ta.join().unwrap(), exp_a);
+        assert_eq!(tb.join().unwrap(), exp_b);
+        let st = sched.stats();
+        assert_eq!(st.merged_passes.load(Ordering::Relaxed), 1,
+                   "both items must share one pass");
+        assert_eq!(st.merged_items.load(Ordering::Relaxed), 2);
+        assert_eq!(st.max_items_per_pass.load(Ordering::Relaxed), 2);
+        assert_eq!(st.candidates.load(Ordering::Relaxed),
+                   (pop_a.len() + pop_b.len()) as u64);
+    }
+
+    #[test]
+    fn different_keys_never_share_a_pass() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let wa = zoo::mobilenet_v1();
+        let wb = zoo::resnet18();
+        let pop_a = random_pop(&wa, &hw, 4, 7);
+        let pop_b = random_pop(&wb, &hw, 4, 8);
+        let exp_a = EvalEngine::new(&wa, &hw).eval_batch(&pop_a);
+        let exp_b = EvalEngine::new(&wb, &hw).eval_batch(&pop_b);
+        let pool = Arc::new(ThreadPool::new(2));
+        let sched = Arc::new(FleetScheduler::new(pool));
+        sched.hold();
+        let ha = handle_for(&sched, &wa, &hw, "a\0large");
+        let hb = handle_for(&sched, &wb, &hw, "b\0large");
+        let sa = Arc::clone(&sched);
+        let sb = Arc::clone(&sched);
+        let pa = pop_a.clone();
+        let pb = pop_b.clone();
+        let ta = std::thread::spawn(move || sa.eval_candidates(&ha, pa));
+        let tb = std::thread::spawn(move || sb.eval_candidates(&hb, pb));
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        sched.release();
+        assert_eq!(ta.join().unwrap(), exp_a);
+        assert_eq!(tb.join().unwrap(), exp_b);
+        let st = sched.stats();
+        assert_eq!(st.passes.load(Ordering::Relaxed), 2);
+        assert_eq!(st.merged_passes.load(Ordering::Relaxed), 0,
+                   "distinct pairs must not merge");
+    }
+
+    #[test]
+    fn empty_submission_answers_immediately() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let sched = Arc::new(FleetScheduler::new(pool));
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let h = handle_for(&sched, &w, &hw, "e\0large");
+        assert!(sched.eval_candidates(&h, Vec::new()).is_empty());
+        assert_eq!(sched.stats().passes.load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,8 +1,9 @@
-//! TCP front-end for the coordinator: a line-delimited JSON protocol.
+//! TCP front-end for the coordinator: a line-delimited JSON protocol
+//! (protocol version 1) served by a single-threaded event loop.
 //!
-//! The complete wire reference (every verb, parameter, limit and error
-//! shape, with example request/response lines) lives in
-//! `docs/protocol.md`; the short form:
+//! The complete wire reference (every verb, parameter, limit, error
+//! code and the streaming `watch` mode, with example request/response
+//! lines) lives in `docs/protocol.md`; the short form:
 //!
 //!   {"verb": "optimize", "workload": "resnet18", "config": "large",
 //!    "method": "fadiff", "seconds": 5, "seed": 1, "chains": 8}
@@ -11,6 +12,7 @@
 //!   {"verb": "submit", "workload": "gpt3", "method": "ga",
 //!    "seconds": 120}
 //!   {"verb": "status", "job_id": 7}
+//!   {"verb": "status", "job_id": 7, "watch": true}   (event stream)
 //!   {"verb": "cancel", "job_id": 7}
 //!   {"verb": "workloads"}                       (list the zoo + specs)
 //!   {"verb": "workloads", "describe": "vgg16"}  (full description)
@@ -18,49 +20,64 @@
 //!   {"verb": "ping"}
 //!   {"verb": "shutdown"}
 //!
-//! `chains` (optional, default 0 = method default) sets the parallel
-//! chain count of the gradient methods' native backend; it applies to
-//! `optimize`/`submit` and to every cell of a `sweep`. GA / BO /
-//! random ignore it.
+//! # Response envelope (v1)
 //!
-//! `workload` accepts zoo names and `data/workloads/*.json` spec
-//! stems; alternatively `workload_spec` carries a full inline workload
-//! document (the JSON DSL of [`crate::workload::spec`]), validated and
-//! size-capped at parse time, on `optimize` / `submit` / `sweep`
-//! (where it applies to every cell and excludes a `workloads` list).
+//! Every response is exactly one of two shapes, serialized with
+//! [`Json::compact`] so payload content can never break the framing:
 //!
-//! Response (one line): {"ok":true,...} or {"ok":false,"error":"..."},
-//! serialized with [`Json::compact`] so payload content can never break
-//! the framing. Each connection may send any number of requests; the
-//! server handles connections on acceptor-spawned threads and forwards
-//! jobs to the coordinator queue.
+//!   {"protocol": 1, "ok": { ...verb payload... }}
+//!   {"protocol": 1, "error": {"code": "<stable_code>",
+//!                             "message": "human text", ...context}}
 //!
-//! `optimize` blocks the requesting connection until its job finishes;
+//! `code` is a stable snake_case identifier (see [`ErrorCode`]) meant
+//! for programmatic dispatch; `message` is human-prose and may change
+//! between releases. Requests may pin the protocol with `"v": 1`; a
+//! version this server does not speak answers `unsupported_version`.
+//!
+//! # Event loop
+//!
+//! The server runs one nonblocking accept/read/poll loop instead of a
+//! thread per connection: reads and writes never block, long verbs
+//! (`optimize`, `sweep`, `status` watch streams) park their connection
+//! in a pending state that is polled cooperatively each tick, and the
+//! coordinator's workers do the actual optimization. A bounded job
+//! queue backpressures floods: past [`super::Coordinator::queue_capacity`]
+//! queued jobs, job-submitting verbs answer `queue_full` with a
+//! `retry_after_ms` hint instead of queueing unboundedly.
+//!
+//! `optimize` holds the requesting connection until its job finishes;
 //! `submit` returns a job id immediately for long jobs (poll with
-//! `status`, stop with `cancel`). `sweep` fans a method x workload x
-//! seed grid through the queue and aggregates every outcome in one
-//! response. All jobs share the coordinator's cross-job evaluation
-//! caches and persistent pool, so repeated work is served warm.
+//! `status`, stream with `status {"watch": true}`, stop with
+//! `cancel`). `sweep` fans a method x workload x seed grid through the
+//! queue and aggregates every outcome in one response. All jobs share
+//! the coordinator's cross-job evaluation caches, persistent pool and
+//! fleet scheduler, so repeated and concurrent work is served warm.
 //!
 //! Robustness: requests are size-capped (oversized lines are answered
-//! with an error and drained), depth-capped (see
-//! [`crate::util::json::MAX_PARSE_DEPTH`]), tolerated when malformed or
-//! truncated (one-line error, connection stays usable), and reads poll
-//! the shutdown flag so `serve_on` can always join every connection.
+//! with a `too_large` error and drained), depth-capped (see
+//! [`crate::util::json::MAX_PARSE_DEPTH`]), tolerated when malformed
+//! or truncated (one-line `bad_request`, connection stays usable), and
+//! the loop polls the shutdown flag so `serve_on` always terminates.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::util::json::{arr, num, obj, s as js, Json};
+use crate::util::threadpool::{OneShot, Poll};
 use crate::workload::spec;
 
-use super::{resolve_workload, workload_catalog, Coordinator,
-            JobRequest, JobResult, Method, ShutdownFlag};
+use super::{resolve_workload, workload_catalog, Coordinator, JobRequest,
+            JobResult, JobStatus, Method, ShutdownFlag};
+
+/// The wire-protocol version this server speaks; every response
+/// carries it as `"protocol"`, and requests may pin it with `"v"`.
+pub const PROTOCOL_VERSION: u64 = 1;
 
 /// Requests larger than this (one line, bytes) are rejected without
 /// buffering the excess.
@@ -74,42 +91,211 @@ pub const MAX_SWEEP_JOBS: usize = 256;
 /// unclamped value would let one request OOM the server.
 pub const MAX_CHAINS: usize = 256;
 
-/// How often blocked reads wake to poll the shutdown flag.
-const READ_POLL: Duration = Duration::from_millis(150);
+/// Upper bound on concurrently served connections; accepts past it
+/// are answered with one `queue_full` line and closed.
+const MAX_CONNS: usize = 1024;
+
+/// Event-loop sleep when a full tick found no work.
+const IDLE_SLEEP: Duration = Duration::from_millis(2);
+
+/// Minimum spacing of `progress` events on one watch stream (status
+/// changes and the terminal event are never rate-limited).
+const WATCH_PROGRESS_EVERY: Duration = Duration::from_millis(25);
+
+/// Every verb this server answers, sorted (the `unknown_verb` error
+/// lists these so clients can discover the surface).
+pub const SUPPORTED_VERBS: [&str; 9] = [
+    "cancel", "metrics", "optimize", "ping", "shutdown", "status",
+    "submit", "sweep", "workloads",
+];
+
+// ---------------------------------------------------------------------
+// error codes + the single response constructor
+// ---------------------------------------------------------------------
+
+/// Stable machine-readable error identifiers (the `code` field of
+/// every error envelope). Strings are part of the wire contract:
+/// never renumber or rename, only append.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed JSON, wrong field types, unknown methods, bad ids.
+    BadRequest,
+    /// The `verb` is not one of [`SUPPORTED_VERBS`].
+    UnknownVerb,
+    /// `workload` names neither a zoo model nor a spec file.
+    UnknownWorkload,
+    /// An inline `workload_spec` failed validation.
+    SpecInvalid,
+    /// A size cap was exceeded (request line, spec bytes, sweep grid,
+    /// chains).
+    TooLarge,
+    /// The bounded job queue is full; retry after `retry_after_ms`.
+    QueueFull,
+    /// `job_id` was never issued or has been pruned.
+    JobNotFound,
+    /// The server is draining after a `shutdown` verb.
+    ShuttingDown,
+    /// The request pinned a protocol version this server lacks.
+    UnsupportedVersion,
+    /// The job was cancelled (via the `cancel` verb).
+    Cancelled,
+    /// The job or server failed internally; `message` has the cause.
+    Internal,
+}
+
+impl ErrorCode {
+    /// The stable snake_case wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownVerb => "unknown_verb",
+            ErrorCode::UnknownWorkload => "unknown_workload",
+            ErrorCode::SpecInvalid => "spec_invalid",
+            ErrorCode::TooLarge => "too_large",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::JobNotFound => "job_not_found",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A protocol-level error: stable code + human message + optional
+/// extra context fields that land next to them in the envelope.
+#[derive(Debug)]
+pub struct WireError {
+    /// Machine-readable identifier.
+    pub code: ErrorCode,
+    /// Human-readable cause (free to change between releases).
+    pub message: String,
+    /// Extra context fields (e.g. `retry_after_ms`, `supported`).
+    pub extra: Vec<(&'static str, Json)>,
+}
+
+impl WireError {
+    /// A bare code + message error.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError { code, message: message.into(), extra: Vec::new() }
+    }
+
+    /// Attach one extra context field.
+    pub fn with(mut self, key: &'static str, value: Json) -> WireError {
+        self.extra.push((key, value));
+        self
+    }
+
+    fn bad(message: impl Into<String>) -> WireError {
+        WireError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+/// The single constructor of every wire response: both envelope shapes
+/// come from here, so no verb can drift off-protocol.
+pub struct Response;
+
+impl Response {
+    /// `{"protocol": 1, "ok": <payload>}`
+    pub fn ok(payload: Json) -> Json {
+        obj(vec![
+            ("protocol", num(PROTOCOL_VERSION as f64)),
+            ("ok", payload),
+        ])
+    }
+
+    /// `{"protocol": 1, "error": {"code": ..., "message": ..., ...}}`
+    pub fn err(e: &WireError) -> Json {
+        let mut fields = vec![
+            ("code", js(e.code.as_str())),
+            ("message", js(&e.message)),
+        ];
+        for (k, v) in &e.extra {
+            fields.push((k, v.clone()));
+        }
+        obj(vec![
+            ("protocol", num(PROTOCOL_VERSION as f64)),
+            ("error", obj(fields)),
+        ])
+    }
+}
+
+type WireResult<T> = std::result::Result<T, WireError>;
+
+fn field<T>(r: Result<T>) -> WireResult<T> {
+    r.map_err(|e| WireError::bad(e.to_string()))
+}
+
+/// Classify an inline-spec failure: size caps are `too_large`,
+/// everything else is `spec_invalid`.
+fn spec_error(e: anyhow::Error) -> WireError {
+    let msg = e.to_string();
+    let code = if msg.contains("exceeds the cap") {
+        ErrorCode::TooLarge
+    } else {
+        ErrorCode::SpecInvalid
+    };
+    WireError::new(code, msg)
+}
+
+/// Classify a job-outcome error string for `optimize` replies.
+fn job_error(msg: &str) -> WireError {
+    let code = if msg.contains("job cancelled") {
+        ErrorCode::Cancelled
+    } else if msg.starts_with("unknown workload") {
+        ErrorCode::UnknownWorkload
+    } else {
+        ErrorCode::Internal
+    };
+    WireError::new(code, msg)
+}
+
+// ---------------------------------------------------------------------
+// request parsing
+// ---------------------------------------------------------------------
 
 /// Parse one request line into a JobRequest (for the `optimize` /
 /// `submit` verbs; also supplies the per-job defaults of `sweep`).
-pub fn parse_request(j: &Json) -> Result<JobRequest> {
+pub fn parse_request(j: &Json) -> WireResult<JobRequest> {
     let mut req = JobRequest::default();
     if let Ok(w) = j.get("workload") {
-        req.workload = w.as_str()?.to_string();
+        req.workload = field(w.as_str())?.to_string();
     }
     if let Ok(c) = j.get("config") {
-        req.config = c.as_str()?.to_string();
+        req.config = field(c.as_str())?.to_string();
     }
     if let Ok(m) = j.get("method") {
-        req.method = Method::parse(m.as_str()?)?;
+        req.method = field(Method::parse(field(m.as_str())?))?;
     }
     if let Ok(t) = j.get("seconds") {
-        req.seconds = t.as_f64()?;
+        req.seconds = field(t.as_f64())?;
     }
     if let Ok(i) = j.get("max_iters") {
-        req.max_iters = i.as_usize()?;
+        req.max_iters = field(i.as_usize())?;
     }
     if let Ok(sd) = j.get("seed") {
-        req.seed = sd.as_f64()? as u64;
+        req.seed = field(sd.as_f64())? as u64;
     }
     if let Ok(c) = j.get("chains") {
-        req.chains = c.as_usize()?;
+        req.chains = field(c.as_usize())?;
         if req.chains > MAX_CHAINS {
-            bail!("chains {} exceeds the cap of {MAX_CHAINS}",
-                  req.chains);
+            return Err(WireError::new(
+                ErrorCode::TooLarge,
+                format!("chains {} exceeds the cap of {MAX_CHAINS}",
+                        req.chains),
+            ));
         }
     }
     if let Ok(spec_j) = j.get("workload_spec") {
         // size-capped and fully validated at parse time, like `chains`:
         // a bad spec is a one-line error before any job is queued
-        let w = spec::parse_inline(spec_j)?;
+        let w = spec::parse_inline(spec_j).map_err(spec_error)?;
         req.workload = w.name.clone();
         req.spec = Some(Arc::new(w));
     }
@@ -117,54 +303,56 @@ pub fn parse_request(j: &Json) -> Result<JobRequest> {
 }
 
 fn parse_str_list(j: &Json, key: &str, default: &str)
-                  -> Result<Vec<String>> {
+                  -> WireResult<Vec<String>> {
     match j.get(key) {
         Err(_) => Ok(vec![default.to_string()]),
-        Ok(v) => {
-            let items = v.as_arr()?;
-            items
-                .iter()
-                .map(|x| Ok(x.as_str()?.to_string()))
-                .collect()
-        }
+        Ok(v) => field(v.as_arr())?
+            .iter()
+            .map(|x| Ok(field(x.as_str())?.to_string()))
+            .collect(),
     }
 }
 
 /// Expand a `sweep` request into its method x workload x seed grid.
 /// Scalar fields (`config`, `seconds`, `max_iters`, and the singular
 /// `workload`/`method`/`seed`) provide the shared defaults.
-pub fn parse_sweep(j: &Json) -> Result<Vec<JobRequest>> {
+pub fn parse_sweep(j: &Json) -> WireResult<Vec<JobRequest>> {
     let base = parse_request(j)?;
     if base.spec.is_some() && j.get("workloads").is_ok() {
-        bail!("a sweep takes either an inline workload_spec (applied \
-               to every cell) or a workloads list, not both");
+        return Err(WireError::bad(
+            "a sweep takes either an inline workload_spec (applied \
+             to every cell) or a workloads list, not both",
+        ));
     }
     let workloads = parse_str_list(j, "workloads", &base.workload)?;
     let methods: Vec<Method> = match j.get("methods") {
         Err(_) => vec![base.method],
-        Ok(v) => v
-            .as_arr()?
+        Ok(v) => field(v.as_arr())?
             .iter()
-            .map(|x| Method::parse(x.as_str()?))
-            .collect::<Result<_>>()?,
+            .map(|x| field(Method::parse(field(x.as_str())?)))
+            .collect::<WireResult<_>>()?,
     };
     let seeds: Vec<u64> = match j.get("seeds") {
         Err(_) => vec![base.seed],
-        Ok(v) => v
-            .as_arr()?
+        Ok(v) => field(v.as_arr())?
             .iter()
-            .map(|x| Ok(x.as_f64()? as u64))
-            .collect::<Result<_>>()?,
+            .map(|x| Ok(field(x.as_f64())? as u64))
+            .collect::<WireResult<_>>()?,
     };
     let grid = (workloads.len() as u128)
         .saturating_mul(methods.len() as u128)
         .saturating_mul(seeds.len() as u128);
     if grid == 0 {
-        bail!("empty sweep grid (workloads/methods/seeds)");
+        return Err(WireError::bad(
+            "empty sweep grid (workloads/methods/seeds)",
+        ));
     }
     if grid > MAX_SWEEP_JOBS as u128 {
-        bail!("sweep grid of {grid} jobs exceeds the cap of \
-               {MAX_SWEEP_JOBS}");
+        return Err(WireError::new(
+            ErrorCode::TooLarge,
+            format!("sweep grid of {grid} jobs exceeds the cap of \
+                     {MAX_SWEEP_JOBS}"),
+        ));
     }
     let mut reqs = Vec::with_capacity(grid as usize);
     for w in &workloads {
@@ -186,10 +374,70 @@ pub fn parse_sweep(j: &Json) -> Result<Vec<JobRequest>> {
     Ok(reqs)
 }
 
-/// The result payload minus the envelope's `ok` flag (shared by
-/// `optimize` responses, `status` results, and `sweep` entries).
-fn result_fields(r: &JobResult) -> Vec<(&'static str, Json)> {
-    vec![
+fn get_job_id(j: &Json) -> WireResult<u64> {
+    let x = field(j.get("job_id").and_then(|v| v.as_f64()))?;
+    // 2^53: past here f64 can't represent every integer, so the id
+    // could not have come from a response we handed out
+    if !(x.is_finite()
+        && x >= 0.0
+        && x.fract() == 0.0
+        && x <= 9_007_199_254_740_992.0)
+    {
+        return Err(WireError::bad(
+            "job_id must be a non-negative integer",
+        ));
+    }
+    Ok(x as u64)
+}
+
+/// Resolve every distinct named workload of a request batch up front,
+/// so `unknown_workload` is a pre-queue error instead of a burned job.
+fn validate_workloads(reqs: &[JobRequest]) -> WireResult<()> {
+    let mut seen: Vec<&str> = Vec::new();
+    for r in reqs {
+        if r.spec.is_some() || seen.contains(&r.workload.as_str()) {
+            continue;
+        }
+        seen.push(&r.workload);
+        resolve_workload(&r.workload).map_err(|e| {
+            WireError::new(ErrorCode::UnknownWorkload, e.to_string())
+                .with("workload", js(&r.workload))
+        })?;
+    }
+    Ok(())
+}
+
+/// Enforce the bounded job queue before enqueueing `incoming` jobs:
+/// past capacity the verb answers `queue_full` with a retry hint
+/// scaled to the backlog per worker.
+fn check_capacity(coord: &Coordinator, incoming: usize)
+                  -> WireResult<()> {
+    let depth = coord.queue_depth();
+    let capacity = coord.queue_capacity();
+    if depth + incoming <= capacity {
+        return Ok(());
+    }
+    let per_worker = depth / coord.n_workers().max(1);
+    let retry_ms = ((per_worker as u64) * 250).clamp(100, 10_000);
+    Err(WireError::new(
+        ErrorCode::QueueFull,
+        format!("job queue is full ({depth} queued, capacity \
+                 {capacity}); retry later"),
+    )
+    .with("retry_after_ms", num(retry_ms as f64))
+    .with("queue_depth", num(depth as f64))
+    .with("queue_capacity", num(capacity as f64)))
+}
+
+// ---------------------------------------------------------------------
+// verb payloads
+// ---------------------------------------------------------------------
+
+/// Serialize a JobResult as a wire payload (the `ok` body of
+/// `optimize` responses; also nested in `status` results, watch `done`
+/// events, and `sweep` cells).
+pub fn result_to_json(r: &JobResult) -> Json {
+    obj(vec![
         ("workload", js(&r.request.workload)),
         ("config", js(&r.request.config)),
         ("method", js(r.request.method.name())),
@@ -207,26 +455,7 @@ fn result_fields(r: &JobResult) -> Vec<(&'static str, Json)> {
         ("iters", num(r.iters as f64)),
         ("evals", num(r.evals as f64)),
         ("wall_seconds", num(r.wall_seconds)),
-    ]
-}
-
-/// Serialize a JobResult for the wire.
-pub fn result_to_json(r: &JobResult) -> Json {
-    let mut fields = vec![("ok", Json::Bool(true))];
-    fields.extend(result_fields(r));
-    obj(fields)
-}
-
-fn error_json(msg: &str) -> Json {
-    obj(vec![("ok", Json::Bool(false)), ("error", js(msg))])
-}
-
-fn get_job_id(j: &Json) -> Result<u64> {
-    let x = j.get("job_id")?.as_f64()?;
-    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0) {
-        bail!("job_id must be a non-negative integer");
-    }
-    Ok(x as u64)
+    ])
 }
 
 /// The `workloads` verb: list every servable workload (zoo builders +
@@ -238,24 +467,30 @@ fn run_workloads(j: &Json) -> Json {
     if let Ok(spec_j) = j.get("workload_spec") {
         // describe-an-inline-spec doubles as a validation endpoint
         return match spec::parse_inline(spec_j) {
-            Err(e) => error_json(&e.to_string()),
-            Ok(w) => obj(vec![
-                ("ok", Json::Bool(true)),
+            Err(e) => Response::err(&spec_error(e)),
+            Ok(w) => Response::ok(obj(vec![
                 ("workload", spec::describe_json(&w)),
-            ]),
+            ])),
         };
     }
     if let Ok(name_j) = j.get("describe") {
         let name = match name_j.as_str() {
-            Err(_) => return error_json("describe must be a string"),
+            Err(_) => {
+                return Response::err(&WireError::bad(
+                    "describe must be a string",
+                ))
+            }
             Ok(n) => n,
         };
         return match resolve_workload(name) {
-            Err(e) => error_json(&e.to_string()),
-            Ok(w) => obj(vec![
-                ("ok", Json::Bool(true)),
+            Err(e) => Response::err(
+                &WireError::new(ErrorCode::UnknownWorkload,
+                                e.to_string())
+                    .with("workload", js(name)),
+            ),
+            Ok(w) => Response::ok(obj(vec![
                 ("workload", spec::describe_json(&w)),
-            ]),
+            ])),
         };
     }
     let rows = workload_catalog()
@@ -276,157 +511,273 @@ fn run_workloads(j: &Json) -> Json {
             ]),
         })
         .collect::<Vec<_>>();
-    obj(vec![
-        ("ok", Json::Bool(true)),
+    Response::ok(obj(vec![
         ("count", num(rows.len() as f64)),
         ("workloads", arr(rows)),
-    ])
+    ]))
 }
 
-fn run_sweep(j: &Json, coord: &Coordinator) -> Json {
-    let reqs = match parse_sweep(j) {
-        Err(e) => return error_json(&e.to_string()),
-        Ok(r) => r,
-    };
-    let jobs = reqs.len();
-    // fan the whole grid into the queue first, then collect: the grid
-    // runs at full worker parallelism, and same-(workload, config)
-    // cells share one evaluation cache
-    let handles: Vec<_> = reqs
-        .into_iter()
-        .map(|req| (req.clone(), coord.submit(req)))
-        .collect();
-    let mut results = Vec::with_capacity(jobs);
-    let mut completed = 0usize;
-    let mut failed = 0usize;
-    for (req, h) in handles {
-        let entry = match h.wait() {
-            Some(Ok(r)) => {
-                completed += 1;
-                result_to_json(&r)
-            }
-            outcome => {
-                failed += 1;
-                let msg = match outcome {
-                    Some(Err(e)) => e,
-                    _ => "worker dropped the job".to_string(),
-                };
-                obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("workload", js(&req.workload)),
-                    ("config", js(&req.config)),
-                    ("method", js(req.method.name())),
-                    ("seed", num(req.seed as f64)),
-                    ("error", js(&msg)),
-                ])
-            }
-        };
-        results.push(entry);
-    }
-    obj(vec![
-        ("ok", Json::Bool(true)),
-        ("jobs", num(jobs as f64)),
-        ("completed", num(completed as f64)),
-        ("failed", num(failed as f64)),
-        ("results", arr(results)),
-    ])
+// ---------------------------------------------------------------------
+// pending (multi-tick) connection work
+// ---------------------------------------------------------------------
+
+/// A parked `optimize`: its job is in the queue / on a worker; the
+/// connection polls the handle each tick.
+struct JobWait {
+    rx: OneShot<std::result::Result<JobResult, String>>,
 }
 
-/// Compute the one-line response for one request line. Total: every
-/// input — malformed, unknown, oversized grids, failing jobs — maps to
-/// a JSON answer, never a dropped connection or a panic.
-fn respond(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
-           -> Json {
+/// A parked `sweep`: every cell is queued; completed handles drain
+/// front-to-back so `results` keeps grid order.
+struct SweepWait {
+    #[allow(clippy::type_complexity)]
+    pending: VecDeque<(JobRequest,
+                       OneShot<std::result::Result<JobResult,
+                                                   String>>)>,
+    results: Vec<Json>,
+    jobs: usize,
+    completed: usize,
+    failed: usize,
+}
+
+/// A live `status {"watch": true}` stream.
+struct WatchWait {
+    job_id: u64,
+    last_seq: u64,
+    last_status: Option<JobStatus>,
+    last_progress: Option<Instant>,
+}
+
+/// What a connection is doing between ticks.
+enum Mode {
+    /// Waiting for (or mid-way through reading) the next request line.
+    Idle,
+    /// Blocked on one `optimize` job.
+    Job(JobWait),
+    /// Blocked on a `sweep` grid.
+    Sweep(SweepWait),
+    /// Streaming watch events for a tracked job.
+    Watch(WatchWait),
+}
+
+/// One dispatched request: either an immediate reply line or a parked
+/// mode the event loop keeps polling.
+enum Step {
+    Reply(Json),
+    Enter(Mode),
+}
+
+fn reply_err(e: WireError) -> Step {
+    Step::Reply(Response::err(&e))
+}
+
+// ---------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------
+
+/// Turn one request line into a [`Step`]. Total: every input —
+/// malformed, unknown, oversized grids, floods — maps to a JSON answer
+/// or a parked mode, never a dropped connection or a panic.
+fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
+            -> Step {
     let j = match Json::parse(line) {
-        Err(e) => return error_json(&format!("bad json: {e}")),
+        Err(e) => {
+            return reply_err(WireError::bad(format!("bad json: {e}")))
+        }
         Ok(j) => j,
     };
     if j.as_obj().is_err() {
-        return error_json("request must be a JSON object");
+        return reply_err(WireError::bad(
+            "request must be a JSON object",
+        ));
+    }
+    if shutdown.0.load(Ordering::SeqCst) {
+        return reply_err(WireError::new(
+            ErrorCode::ShuttingDown,
+            "server is shutting down",
+        ));
+    }
+    // a request may pin the protocol version it expects
+    if let Ok(v) = j.get("v") {
+        match v.as_f64() {
+            Err(_) => {
+                return reply_err(WireError::bad("v must be a number"))
+            }
+            Ok(x) if x == PROTOCOL_VERSION as f64 => {}
+            Ok(x) => {
+                return reply_err(
+                    WireError::new(
+                        ErrorCode::UnsupportedVersion,
+                        format!("this server speaks protocol \
+                                 {PROTOCOL_VERSION}, not {x}"),
+                    )
+                    .with("protocol",
+                          num(PROTOCOL_VERSION as f64)),
+                );
+            }
+        }
     }
     let verb = match j.get("verb") {
         Err(_) => "optimize".to_string(),
         Ok(v) => match v.as_str() {
             Ok(s) => s.to_string(),
-            Err(_) => return error_json("verb must be a string"),
+            Err(_) => {
+                return reply_err(WireError::bad(
+                    "verb must be a string",
+                ))
+            }
         },
     };
     match verb.as_str() {
-        "ping" => obj(vec![("ok", Json::Bool(true)),
-                           ("pong", Json::Bool(true))]),
-        "metrics" => {
-            let mut m = coord.metrics_json();
-            if let Json::Obj(map) = &mut m {
-                map.insert("ok".into(), Json::Bool(true));
-            }
-            m
-        }
+        "ping" => Step::Reply(Response::ok(obj(vec![
+            ("pong", Json::Bool(true)),
+            ("protocol", num(PROTOCOL_VERSION as f64)),
+            ("uptime_seconds", num(coord.uptime_seconds())),
+        ]))),
+        "metrics" => Step::Reply(Response::ok(coord.metrics_json())),
         "shutdown" => {
             shutdown.0.store(true, Ordering::SeqCst);
-            obj(vec![("ok", Json::Bool(true)),
-                     ("shutting_down", Json::Bool(true))])
+            log_line("shutdown requested");
+            Step::Reply(Response::ok(obj(vec![
+                ("shutting_down", Json::Bool(true)),
+            ])))
         }
-        "optimize" => match parse_request(&j) {
-            Err(e) => error_json(&e.to_string()),
-            Ok(req) => match coord.run(req) {
-                Ok(r) => result_to_json(&r),
-                Err(e) => error_json(&e.to_string()),
-            },
-        },
-        "submit" => match parse_request(&j)
-            .and_then(|req| coord.submit_tracked(req))
-        {
-            Err(e) => error_json(&e.to_string()),
-            Ok(id) => obj(vec![
-                ("ok", Json::Bool(true)),
-                ("job_id", num(id as f64)),
-                ("status", js("queued")),
-            ]),
-        },
-        "status" => match get_job_id(&j) {
-            Err(e) => error_json(&e.to_string()),
-            Ok(id) => match coord.job_status(id) {
-                None => error_json(&format!("unknown job id {id}")),
-                Some((status, result)) => {
-                    let mut fields = vec![
-                        ("ok", Json::Bool(true)),
-                        ("job_id", num(id as f64)),
-                        ("status", js(status.name())),
-                    ];
-                    match result {
-                        Some(Ok(r)) => fields
-                            .push(("result", obj(result_fields(&r)))),
-                        Some(Err(e)) => fields.push(("error", js(&e))),
-                        None => {}
-                    }
-                    obj(fields)
+        "optimize" => {
+            let req = match parse_request(&j)
+                .and_then(|req| validate_workloads(
+                    std::slice::from_ref(&req)).map(|()| req))
+                .and_then(|req| check_capacity(coord, 1).map(|()| req))
+            {
+                Err(e) => return reply_err(e),
+                Ok(req) => req,
+            };
+            Step::Enter(Mode::Job(JobWait { rx: coord.submit(req) }))
+        }
+        "submit" => {
+            let req = match parse_request(&j)
+                .and_then(|req| validate_workloads(
+                    std::slice::from_ref(&req)).map(|()| req))
+                .and_then(|req| check_capacity(coord, 1).map(|()| req))
+            {
+                Err(e) => return reply_err(e),
+                Ok(req) => req,
+            };
+            match coord.submit_tracked(req) {
+                // a saturated job table is backpressure, like the queue
+                Err(e) => reply_err(WireError::new(
+                    ErrorCode::QueueFull,
+                    e.to_string(),
+                )
+                .with("retry_after_ms", num(1000.0))),
+                Ok(id) => Step::Reply(Response::ok(obj(vec![
+                    ("job_id", num(id as f64)),
+                    ("status", js("queued")),
+                ]))),
+            }
+        }
+        "status" => {
+            let id = match get_job_id(&j) {
+                Err(e) => return reply_err(e),
+                Ok(id) => id,
+            };
+            let watch = match j.get("watch") {
+                Err(_) => false,
+                Ok(Json::Bool(b)) => *b,
+                Ok(_) => {
+                    return reply_err(WireError::bad(
+                        "watch must be a boolean",
+                    ))
                 }
-            },
-        },
-        "cancel" => match get_job_id(&j) {
-            Err(e) => error_json(&e.to_string()),
-            Ok(id) => match coord.cancel(id) {
-                None => error_json(&format!("unknown job id {id}")),
-                Some(status) => obj(vec![
-                    ("ok", Json::Bool(true)),
+            };
+            if coord.job_status(id).is_none() {
+                return reply_err(
+                    WireError::new(ErrorCode::JobNotFound,
+                                   format!("unknown job id {id}"))
+                        .with("job_id", num(id as f64)),
+                );
+            }
+            if watch {
+                return Step::Enter(Mode::Watch(WatchWait {
+                    job_id: id,
+                    last_seq: 0,
+                    last_status: None,
+                    last_progress: None,
+                }));
+            }
+            let (status, result) = coord.job_status(id).unwrap();
+            let mut fields = vec![
+                ("job_id", num(id as f64)),
+                ("status", js(status.name())),
+            ];
+            match result {
+                Some(Ok(r)) => {
+                    fields.push(("result", result_to_json(&r)))
+                }
+                Some(Err(e)) => fields.push(("error", js(&e))),
+                None => {}
+            }
+            Step::Reply(Response::ok(obj(fields)))
+        }
+        "cancel" => {
+            let id = match get_job_id(&j) {
+                Err(e) => return reply_err(e),
+                Ok(id) => id,
+            };
+            match coord.cancel(id) {
+                None => reply_err(
+                    WireError::new(ErrorCode::JobNotFound,
+                                   format!("unknown job id {id}"))
+                        .with("job_id", num(id as f64)),
+                ),
+                Some(status) => Step::Reply(Response::ok(obj(vec![
                     ("job_id", num(id as f64)),
                     ("status", js(status.name())),
-                ]),
-            },
-        },
-        "sweep" => run_sweep(&j, coord),
-        "workloads" => run_workloads(&j),
-        other => error_json(&format!("unknown verb {other:?}")),
+                ]))),
+            }
+        }
+        // a sweep aggregates per-cell outcomes instead of pre-resolving
+        // workload names: one broken cell reports inside the grid
+        // response and never sinks its siblings
+        "sweep" => {
+            let reqs = match parse_sweep(&j).and_then(|r| {
+                check_capacity(coord, r.len()).map(|()| r)
+            }) {
+                Err(e) => return reply_err(e),
+                Ok(r) => r,
+            };
+            let jobs = reqs.len();
+            // fan the whole grid into the queue first, then collect:
+            // the grid runs at full worker parallelism, and
+            // same-(workload, config) cells share one evaluation cache
+            // and merge in the fleet scheduler
+            let pending = reqs
+                .into_iter()
+                .map(|req| (req.clone(), coord.submit(req)))
+                .collect();
+            Step::Enter(Mode::Sweep(SweepWait {
+                pending,
+                results: Vec::with_capacity(jobs),
+                jobs,
+                completed: 0,
+                failed: 0,
+            }))
+        }
+        "workloads" => Step::Reply(run_workloads(&j)),
+        other => reply_err(
+            WireError::new(ErrorCode::UnknownVerb,
+                           format!("unknown verb {other:?}"))
+                .with("supported",
+                      arr(SUPPORTED_VERBS
+                          .iter()
+                          .map(|v| js(v))
+                          .collect())),
+        ),
     }
 }
 
-fn write_response(stream: &mut TcpStream, j: &Json) -> Result<()> {
-    let mut text = j.compact();
-    text.push('\n');
-    stream.write_all(text.as_bytes())?;
-    stream.flush()?;
-    Ok(())
-}
+// ---------------------------------------------------------------------
+// the event loop
+// ---------------------------------------------------------------------
 
 fn is_retry(kind: std::io::ErrorKind) -> bool {
     matches!(
@@ -444,8 +795,8 @@ fn is_retry(kind: std::io::ErrorKind) -> bool {
 /// newline discovered in the dropped region is still appended, so
 /// callers always see oversized lines terminate. Mirrors `read_until`'s
 /// contract otherwise: `Ok(0)` = EOF with nothing consumed, trailing
-/// bytes without `\n` = EOF mid-line, `Err(WouldBlock/TimedOut)` = no
-/// data before the read timeout (bytes read so far remain in `buf`).
+/// bytes without `\n` = EOF mid-line, `Err(WouldBlock)` = no data right
+/// now on the nonblocking stream (bytes read so far remain in `buf`).
 fn read_line_capped<R: BufRead>(reader: &mut R, buf: &mut Vec<u8>)
                                 -> std::io::Result<usize> {
     let mut total = 0usize;
@@ -474,140 +825,436 @@ fn read_line_capped<R: BufRead>(reader: &mut R, buf: &mut Vec<u8>)
     }
 }
 
-/// Handle one client connection.
-fn handle(stream: TcpStream, coord: &Coordinator, shutdown: &ShutdownFlag)
-          -> Result<()> {
-    let peer = stream.peer_addr()?;
-    // short read timeout: blocked reads wake to poll the shutdown flag,
-    // so serve_on can join this thread even under idle clients
-    stream.set_read_timeout(Some(READ_POLL))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    // raw bytes, not String: invalid UTF-8 must degrade to a JSON error
-    // (via lossy decode), never desynchronize or kill the connection
-    let mut buf: Vec<u8> = Vec::new();
-    // true while draining the tail of an already-answered oversized line
-    let mut discarding = false;
-    loop {
-        if shutdown.0.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        match read_line_capped(&mut reader, &mut buf) {
-            Err(e) if is_retry(e.kind()) => {
-                // partial line so far; bound the buffer while waiting
-                if !discarding && buf.len() > MAX_REQUEST_BYTES {
-                    write_response(
-                        &mut stream,
-                        &error_json(&format!(
-                            "request line exceeds {MAX_REQUEST_BYTES} \
-                             bytes"
-                        )),
-                    )?;
-                    discarding = true;
+/// One client connection in the event loop.
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Partial request line accumulated across ticks.
+    buf: Vec<u8>,
+    /// Pending outbound bytes ([`Conn::sent`] already written).
+    out: Vec<u8>,
+    sent: usize,
+    /// True while draining the tail of an answered oversized line.
+    discarding: bool,
+    /// The client half-closed (EOF mid-line): answer, flush, close.
+    half_closed: bool,
+    /// Close once `out` drains.
+    close_after_flush: bool,
+    closed: bool,
+    mode: Mode,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn {
+            stream,
+            reader,
+            buf: Vec::new(),
+            out: Vec::new(),
+            sent: 0,
+            discarding: false,
+            half_closed: false,
+            close_after_flush: false,
+            closed: false,
+            mode: Mode::Idle,
+        })
+    }
+
+    fn push_line(&mut self, j: &Json) {
+        let mut text = j.compact();
+        text.push('\n');
+        self.out.extend_from_slice(text.as_bytes());
+    }
+
+    /// Write as much pending output as the socket accepts.
+    fn flush(&mut self) -> bool {
+        let mut wrote = false;
+        while self.sent < self.out.len() {
+            match self.stream.write(&self.out[self.sent..]) {
+                Ok(0) => {
+                    self.closed = true;
+                    return wrote;
                 }
-                if discarding {
-                    buf.clear();
+                Ok(n) => {
+                    self.sent += n;
+                    wrote = true;
                 }
-                continue;
-            }
-            Err(e) => return Err(e.into()),
-            // EOF: done, unless a stalled partial line is still pending
-            // — that truncated tail deserves its one-line answer below
-            Ok(0) if buf.is_empty() || discarding => return Ok(()),
-            Ok(_) => {}
-        }
-        let complete = buf.last() == Some(&b'\n');
-        if discarding {
-            if complete {
-                // oversized line finally ended; resume normal service
-                discarding = false;
-                buf.clear();
-                continue;
-            }
-            // EOF while draining
-            return Ok(());
-        }
-        if !complete && buf.is_empty() {
-            return Ok(());
-        }
-        let response = if buf.len() > MAX_REQUEST_BYTES {
-            error_json(&format!(
-                "request line exceeds {MAX_REQUEST_BYTES} bytes"
-            ))
-        } else {
-            let line = String::from_utf8_lossy(&buf);
-            let trimmed = line.trim().to_string();
-            if trimmed.is_empty() {
-                buf.clear();
-                if complete {
-                    continue;
+                Err(e) if e.kind()
+                    == std::io::ErrorKind::Interrupted => {}
+                Err(e) if is_retry(e.kind()) => return wrote,
+                Err(_) => {
+                    self.closed = true;
+                    return wrote;
                 }
-                return Ok(());
             }
-            respond(&trimmed, coord, shutdown)
-        };
-        buf.clear();
-        write_response(&mut stream, &response)?;
-        if !complete {
-            // half-closed client: the truncated tail was answered
-            return Ok(());
         }
-        if shutdown.0.load(Ordering::SeqCst) {
-            log_line(&format!("shutdown requested by {peer}"));
-            return Ok(());
+        if self.sent == self.out.len() && self.sent > 0 {
+            self.out.clear();
+            self.sent = 0;
+        }
+        wrote
+    }
+
+    /// A request/answer cycle finished with the connection idle again:
+    /// close when the client half-closed or the server is draining.
+    fn finish_cycle(&mut self, shutdown: &ShutdownFlag) {
+        if self.half_closed || shutdown.0.load(Ordering::SeqCst) {
+            self.close_after_flush = true;
         }
     }
+
+    /// One event-loop visit. Returns true when any progress was made
+    /// (so the loop only sleeps on fully idle ticks).
+    fn tick(&mut self, coord: &Coordinator, shutdown: &ShutdownFlag)
+            -> bool {
+        if self.closed {
+            return false;
+        }
+        let mut activity = self.flush();
+        if self.closed || !self.out.is_empty() {
+            // backpressured (or dead) writer: try again next tick
+            return activity;
+        }
+        if self.close_after_flush {
+            self.closed = true;
+            return true;
+        }
+        match self.mode {
+            Mode::Idle => {
+                if shutdown.0.load(Ordering::SeqCst) {
+                    // draining: no new requests on idle connections
+                    self.closed = true;
+                    return true;
+                }
+                activity |= self.read_step(coord, shutdown);
+            }
+            _ => activity |= self.poll_step(coord, shutdown),
+        }
+        activity
+    }
+
+    /// Try to complete one request line and dispatch it.
+    fn read_step(&mut self, coord: &Coordinator,
+                 shutdown: &ShutdownFlag) -> bool {
+        match read_line_capped(&mut self.reader, &mut self.buf) {
+            Err(e) if is_retry(e.kind()) => {
+                // partial line so far; bound the buffer while waiting
+                if !self.discarding
+                    && self.buf.len() > MAX_REQUEST_BYTES
+                {
+                    self.push_line(&Response::err(&too_large_line()));
+                    self.discarding = true;
+                    self.buf.clear();
+                    return true;
+                }
+                if self.discarding {
+                    self.buf.clear();
+                }
+                return false;
+            }
+            Err(_) => {
+                self.closed = true;
+                return true;
+            }
+            // EOF: done, unless a stalled partial line is pending —
+            // that truncated tail deserves its one-line answer below
+            Ok(0) if self.buf.is_empty() || self.discarding => {
+                self.closed = true;
+                return true;
+            }
+            Ok(_) => {}
+        }
+        let complete = self.buf.last() == Some(&b'\n');
+        if self.discarding {
+            if complete {
+                // oversized line finally ended; resume normal service
+                self.discarding = false;
+                self.buf.clear();
+                return true;
+            }
+            // EOF while draining
+            self.closed = true;
+            return true;
+        }
+        if !complete {
+            if self.buf.is_empty() {
+                self.closed = true;
+                return true;
+            }
+            self.half_closed = true; // EOF mid-line: answer then close
+        }
+        if self.buf.len() > MAX_REQUEST_BYTES {
+            self.push_line(&Response::err(&too_large_line()));
+            self.buf.clear();
+            self.finish_cycle(shutdown);
+            return true;
+        }
+        // raw bytes, not String: invalid UTF-8 must degrade to a JSON
+        // error (via lossy decode), never desynchronize the connection
+        let line =
+            String::from_utf8_lossy(&self.buf).trim().to_string();
+        self.buf.clear();
+        if line.is_empty() {
+            if self.half_closed {
+                self.closed = true;
+            }
+            return true;
+        }
+        match dispatch(&line, coord, shutdown) {
+            Step::Reply(json) => {
+                self.push_line(&json);
+                self.finish_cycle(shutdown);
+            }
+            Step::Enter(mode) => self.mode = mode,
+        }
+        true
+    }
+
+    /// Advance a parked mode (job / sweep / watch).
+    fn poll_step(&mut self, coord: &Coordinator,
+                 shutdown: &ShutdownFlag) -> bool {
+        let mode = std::mem::replace(&mut self.mode, Mode::Idle);
+        let (next, wrote) = match mode {
+            Mode::Idle => (Mode::Idle, false),
+            Mode::Job(wait) => self.poll_job(wait),
+            Mode::Sweep(wait) => self.poll_sweep(wait),
+            Mode::Watch(wait) => self.poll_watch(coord, wait),
+        };
+        let finished = matches!(next, Mode::Idle);
+        self.mode = next;
+        if finished {
+            self.finish_cycle(shutdown);
+        }
+        wrote
+    }
+
+    fn poll_job(&mut self, wait: JobWait) -> (Mode, bool) {
+        match wait.rx.try_poll() {
+            Poll::Empty => (Mode::Job(wait), false),
+            Poll::Ready(Ok(r)) => {
+                self.push_line(&Response::ok(result_to_json(&r)));
+                (Mode::Idle, true)
+            }
+            Poll::Ready(Err(msg)) => {
+                self.push_line(&Response::err(&job_error(&msg)));
+                (Mode::Idle, true)
+            }
+            Poll::Dead => {
+                self.push_line(&Response::err(&WireError::new(
+                    ErrorCode::Internal,
+                    "worker dropped the job",
+                )));
+                (Mode::Idle, true)
+            }
+        }
+    }
+
+    fn poll_sweep(&mut self, mut wait: SweepWait) -> (Mode, bool) {
+        // drain front-to-back so the results array keeps grid order
+        while let Some((_, rx)) = wait.pending.front() {
+            let entry = match rx.try_poll() {
+                Poll::Empty => break,
+                Poll::Ready(Ok(r)) => {
+                    wait.completed += 1;
+                    obj(vec![("ok", result_to_json(&r))])
+                }
+                outcome => {
+                    wait.failed += 1;
+                    let msg = match outcome {
+                        Poll::Ready(Err(e)) => e,
+                        _ => "worker dropped the job".to_string(),
+                    };
+                    let (req, _) = wait.pending.front().unwrap();
+                    let e = job_error(&msg)
+                        .with("workload", js(&req.workload))
+                        .with("config", js(&req.config))
+                        .with("method", js(req.method.name()))
+                        .with("seed", num(req.seed as f64));
+                    let mut fields = vec![
+                        ("code", js(e.code.as_str())),
+                        ("message", js(&e.message)),
+                    ];
+                    for (k, v) in &e.extra {
+                        fields.push((k, v.clone()));
+                    }
+                    obj(vec![("error", obj(fields))])
+                }
+            };
+            wait.results.push(entry);
+            wait.pending.pop_front();
+        }
+        if !wait.pending.is_empty() {
+            return (Mode::Sweep(wait), false);
+        }
+        self.push_line(&Response::ok(obj(vec![
+            ("jobs", num(wait.jobs as f64)),
+            ("completed", num(wait.completed as f64)),
+            ("failed", num(wait.failed as f64)),
+            ("results", arr(wait.results)),
+        ])));
+        (Mode::Idle, true)
+    }
+
+    /// Emit watch-stream events: a `status` event per state change,
+    /// rate-limited `progress` events as the incumbent improves, and
+    /// exactly one terminal `done` event carrying the outcome.
+    fn poll_watch(&mut self, coord: &Coordinator, mut wait: WatchWait)
+                  -> (Mode, bool) {
+        let Some((status, result)) = coord.job_status(wait.job_id)
+        else {
+            // pruned mid-watch (table pressure): terminal error event
+            self.push_line(&Response::err(
+                &WireError::new(
+                    ErrorCode::JobNotFound,
+                    format!("job {} pruned mid-watch", wait.job_id),
+                )
+                .with("job_id", num(wait.job_id as f64)),
+            ));
+            return (Mode::Idle, true);
+        };
+        let mut wrote = false;
+        if status.is_terminal() {
+            let mut fields = vec![
+                ("event", js("done")),
+                ("job_id", num(wait.job_id as f64)),
+                ("status", js(status.name())),
+            ];
+            match result {
+                Some(Ok(r)) => {
+                    fields.push(("result", result_to_json(&r)))
+                }
+                Some(Err(e)) => fields.push(("error", js(&e))),
+                None => {}
+            }
+            self.push_line(&Response::ok(obj(fields)));
+            return (Mode::Idle, true);
+        }
+        if wait.last_status != Some(status) {
+            wait.last_status = Some(status);
+            self.push_line(&Response::ok(obj(vec![
+                ("event", js("status")),
+                ("job_id", num(wait.job_id as f64)),
+                ("status", js(status.name())),
+            ])));
+            wrote = true;
+        }
+        if let Some(snap) = coord.job_progress(wait.job_id) {
+            let due = wait
+                .last_progress
+                .map_or(true,
+                        |t| t.elapsed() >= WATCH_PROGRESS_EVERY);
+            if snap.seq != wait.last_seq && due {
+                wait.last_seq = snap.seq;
+                wait.last_progress = Some(Instant::now());
+                let mut fields = vec![
+                    ("event", js("progress")),
+                    ("job_id", num(wait.job_id as f64)),
+                    ("seq", num(snap.seq as f64)),
+                    ("evals", num(snap.evals as f64)),
+                    ("iters", num(snap.iters as f64)),
+                ];
+                if let Some(edp) = snap.best_edp {
+                    fields.push(("best_edp", num(edp)));
+                }
+                self.push_line(&Response::ok(obj(fields)));
+                wrote = true;
+            }
+        }
+        (Mode::Watch(wait), wrote)
+    }
+}
+
+fn too_large_line() -> WireError {
+    WireError::new(
+        ErrorCode::TooLarge,
+        format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
+    )
 }
 
 fn log_line(msg: &str) {
     eprintln!("[fadiff-serve] {msg}");
 }
 
-/// Run the server until a `shutdown` verb arrives. Returns the bound
-/// address (useful with port 0 in tests via `bind_and_serve`).
+/// Run the server until a `shutdown` verb arrives.
 pub fn serve(addr: &str, coord: Coordinator) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     serve_on(listener, coord)
 }
 
-/// Serve on an already-bound listener (lets tests pick port 0).
-pub fn serve_on(listener: TcpListener, coord: Coordinator) -> Result<()> {
+/// Serve on an already-bound listener (lets tests pick port 0): one
+/// nonblocking event loop owns every connection; no thread per client.
+/// In-flight jobs (and the queued backlog) complete before shutdown
+/// finishes — their connections stay polled until terminal.
+pub fn serve_on(listener: TcpListener, coord: Coordinator)
+                -> Result<()> {
     let local = listener.local_addr()?;
     log_line(&format!("listening on {local} with {} workers",
                       coord.n_workers()));
-    let coord = Arc::new(coord);
     let shutdown = ShutdownFlag::default();
     listener.set_nonblocking(true)?;
-    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut conns: Vec<Conn> = Vec::new();
     loop {
-        if shutdown.0.load(Ordering::SeqCst) {
+        let shutting = shutdown.0.load(Ordering::SeqCst);
+        let mut activity = false;
+        if !shutting {
+            // accept in bounded bursts so a connect flood cannot
+            // starve the established connections
+            for _ in 0..64 {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        activity = true;
+                        if conns.len() >= MAX_CONNS {
+                            reject_conn(stream, peer);
+                            continue;
+                        }
+                        match Conn::new(stream) {
+                            Ok(c) => conns.push(c),
+                            Err(e) => log_line(&format!(
+                                "accept setup failed: {e}"
+                            )),
+                        }
+                    }
+                    Err(ref e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        for conn in &mut conns {
+            activity |= conn.tick(&coord, &shutdown);
+        }
+        conns.retain(|c| !c.closed);
+        if shutting && conns.is_empty() {
             break;
         }
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false)?;
-                let coord = Arc::clone(&coord);
-                let flag = ShutdownFlag(Arc::clone(&shutdown.0));
-                conns.push(std::thread::spawn(move || {
-                    if let Err(e) = handle(stream, &coord, &flag) {
-                        log_line(&format!("connection error: {e}"));
-                    }
-                }));
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(20));
-            }
-            Err(e) => return Err(e.into()),
+        if !activity {
+            std::thread::sleep(IDLE_SLEEP);
         }
-        conns.retain(|c| !c.is_finished());
     }
-    // every handler polls the shutdown flag at its read timeout, so
-    // these joins complete even when clients hold connections open
-    for c in conns {
-        let _ = c.join();
-    }
+    // dropping the coordinator joins the workers after the queued
+    // backlog drains
+    drop(coord);
     log_line("server stopped");
     Ok(())
+}
+
+/// Best-effort one-line rejection of a connection over [`MAX_CONNS`].
+fn reject_conn(mut stream: TcpStream, peer: SocketAddr) {
+    log_line(&format!("rejecting {peer}: connection limit"));
+    let e = WireError::new(
+        ErrorCode::QueueFull,
+        format!("connection limit of {MAX_CONNS} reached"),
+    )
+    .with("retry_after_ms", num(1000.0));
+    let mut text = Response::err(&e).compact();
+    text.push('\n');
+    let _ = stream.write_all(text.as_bytes());
 }
 
 #[cfg(test)]
@@ -631,13 +1278,15 @@ mod tests {
     }
 
     #[test]
-    fn parse_request_caps_chains() {
+    fn parse_request_caps_chains_with_too_large() {
         // an absurd chain count is a one-line error, not a giant
         // ChainBatch allocation (remote-OOM guard)
         for body in [r#"{"chains": 257}"#, r#"{"chains": 1e18}"#] {
             let j = Json::parse(body).unwrap();
-            let err = parse_request(&j).unwrap_err().to_string();
-            assert!(err.contains("cap"), "{body}: {err}");
+            let err = parse_request(&j).unwrap_err();
+            assert_eq!(err.code, ErrorCode::TooLarge, "{body}");
+            assert!(err.message.contains("cap"),
+                    "{body}: {}", err.message);
         }
         let j = Json::parse(r#"{"chains": 256}"#).unwrap();
         assert_eq!(parse_request(&j).unwrap().chains, 256);
@@ -646,7 +1295,8 @@ mod tests {
     #[test]
     fn parse_request_rejects_bad_method() {
         let j = Json::parse(r#"{"method": "quantum"}"#).unwrap();
-        assert!(parse_request(&j).is_err());
+        assert_eq!(parse_request(&j).unwrap_err().code,
+                   ErrorCode::BadRequest);
     }
 
     #[test]
@@ -658,7 +1308,8 @@ mod tests {
             r#"{"method": [1]}"#,
         ] {
             let j = Json::parse(body).unwrap();
-            assert!(parse_request(&j).is_err(), "{body}");
+            let err = parse_request(&j).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{body}");
         }
     }
 
@@ -696,7 +1347,7 @@ mod tests {
     }
 
     #[test]
-    fn parse_sweep_caps_grid_size() {
+    fn parse_sweep_caps_grid_size_with_too_large() {
         let seeds: Vec<String> =
             (0..300).map(|i| i.to_string()).collect();
         let j = Json::parse(&format!(
@@ -704,8 +1355,9 @@ mod tests {
             seeds.join(",")
         ))
         .unwrap();
-        let err = parse_sweep(&j).unwrap_err().to_string();
-        assert!(err.contains("cap"), "{err}");
+        let err = parse_sweep(&j).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+        assert!(err.message.contains("cap"), "{}", err.message);
     }
 
     const SPEC_BODY: &str = r#"{"name": "custom-mlp",
@@ -732,7 +1384,7 @@ mod tests {
     }
 
     #[test]
-    fn parse_request_rejects_bad_inline_specs() {
+    fn parse_request_rejects_bad_inline_specs_as_spec_invalid() {
         for body in [
             r#"{"workload_spec": {"name": "x", "layers": []}}"#,
             r#"{"workload_spec": {"layers": [1]}}"#,
@@ -742,7 +1394,8 @@ mod tests {
                  "dims": [1, 8, 8, 1, 1, 1, 1, 1]}]}}"#,
         ] {
             let j = Json::parse(body).unwrap();
-            assert!(parse_request(&j).is_err(), "{body}");
+            let err = parse_request(&j).unwrap_err();
+            assert_eq!(err.code, ErrorCode::SpecInvalid, "{body}");
         }
     }
 
@@ -765,8 +1418,9 @@ mod tests {
                  "workload_spec": {SPEC_BODY}}}"#
         ))
         .unwrap();
-        let err = parse_sweep(&j).unwrap_err().to_string();
-        assert!(err.contains("not both"), "{err}");
+        let err = parse_sweep(&j).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("not both"), "{}", err.message);
     }
 
     #[test]
@@ -781,5 +1435,71 @@ mod tests {
         let wrong_type = Json::parse(
             r#"{"verb": "sweep", "workloads": "resnet18"}"#).unwrap();
         assert!(parse_sweep(&wrong_type).is_err());
+    }
+
+    #[test]
+    fn envelope_shapes_are_versioned_and_exclusive() {
+        let ok = Response::ok(obj(vec![("x", num(1.0))]));
+        assert_eq!(ok.get("protocol").unwrap().as_f64().unwrap(), 1.0);
+        assert!(ok.get("ok").is_ok());
+        assert!(ok.get("error").is_err());
+        let err = Response::err(
+            &WireError::new(ErrorCode::QueueFull, "full")
+                .with("retry_after_ms", num(250.0)),
+        );
+        assert_eq!(err.get("protocol").unwrap().as_f64().unwrap(),
+                   1.0);
+        assert!(err.get("ok").is_err());
+        let body = err.get("error").unwrap();
+        assert_eq!(body.get("code").unwrap().as_str().unwrap(),
+                   "queue_full");
+        assert_eq!(body.get("message").unwrap().as_str().unwrap(),
+                   "full");
+        assert_eq!(
+            body.get("retry_after_ms").unwrap().as_f64().unwrap(),
+            250.0
+        );
+    }
+
+    #[test]
+    fn error_codes_are_stable_snake_case() {
+        for (code, name) in [
+            (ErrorCode::BadRequest, "bad_request"),
+            (ErrorCode::UnknownVerb, "unknown_verb"),
+            (ErrorCode::UnknownWorkload, "unknown_workload"),
+            (ErrorCode::SpecInvalid, "spec_invalid"),
+            (ErrorCode::TooLarge, "too_large"),
+            (ErrorCode::QueueFull, "queue_full"),
+            (ErrorCode::JobNotFound, "job_not_found"),
+            (ErrorCode::ShuttingDown, "shutting_down"),
+            (ErrorCode::UnsupportedVersion, "unsupported_version"),
+            (ErrorCode::Cancelled, "cancelled"),
+            (ErrorCode::Internal, "internal"),
+        ] {
+            assert_eq!(code.as_str(), name);
+        }
+    }
+
+    #[test]
+    fn job_errors_classify_by_cause() {
+        assert_eq!(job_error("job cancelled").code,
+                   ErrorCode::Cancelled);
+        assert_eq!(job_error("unknown workload \"zzz\"").code,
+                   ErrorCode::UnknownWorkload);
+        assert_eq!(job_error("disk on fire").code,
+                   ErrorCode::Internal);
+    }
+
+    #[test]
+    fn validate_workloads_flags_unknown_names() {
+        let bad = JobRequest {
+            workload: "no-such-model".into(),
+            ..Default::default()
+        };
+        let err =
+            validate_workloads(std::slice::from_ref(&bad)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownWorkload);
+        let good = JobRequest::default(); // resnet18
+        assert!(validate_workloads(std::slice::from_ref(&good)).is_ok());
     }
 }

@@ -42,7 +42,7 @@ USAGE: fadiff <subcommand> [flags]
   validate  --samples 60 --seed 11               (paper Sec 4.2)
   selftest                                       (compile artifacts)
   serve     --addr 127.0.0.1:7341 --workers 2    (TCP coordinator)
-            line-delimited JSON protocol — see docs/protocol.md
+            line-delimited JSON, v1 envelope — see docs/protocol.md
 ";
 
 fn main() {

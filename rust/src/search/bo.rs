@@ -162,6 +162,7 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
         let s = express_with(&next_x, w, hw, &tables);
         let e = inc.engine.eval(&s);
         let edp = inc.offer_eval(&s, e, iter);
+        inc.note_iters(iter);
         xs.push(next_x);
         ys.push(log_y(edp));
     }

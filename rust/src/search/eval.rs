@@ -60,6 +60,78 @@ thread_local! {
         RefCell::new(batch::SoaScratch::new());
 }
 
+/// The raw per-candidate computation behind every scoring path: the
+/// single-pass batch kernel (feasibility + closed-form evaluation over
+/// a per-thread reusable scratch — zero allocation per candidate).
+/// Capacity-infeasible strategies still get real energy/latency numbers
+/// (fig3 relies on that); strategies with the wrong arity cannot be
+/// indexed by the cost model at all and come back as plain infeasible
+/// instead of panicking.
+///
+/// Public so the coordinator's fleet scheduler
+/// ([`crate::coordinator::scheduler`]) runs *exactly* this function per
+/// merged candidate — cross-job merging changes where candidates are
+/// computed, never what is computed, which is what makes merged batches
+/// bit-identical to per-job serial evaluation.
+pub fn compute_eval(s: &Strategy, w: &Workload, hw: &HwConfig) -> Eval {
+    if s.mappings.len() != w.len()
+        || s.fuse.len() != w.len().saturating_sub(1)
+    {
+        return Eval {
+            energy: f64::INFINITY,
+            latency: f64::INFINITY,
+            edp: f64::INFINITY,
+            feasible: false,
+        };
+    }
+    EVAL_SCRATCH.with(|sc| {
+        let sm = batch::eval_into(s, w, hw, &mut sc.borrow_mut());
+        Eval {
+            energy: sm.energy,
+            latency: sm.latency,
+            edp: sm.edp,
+            feasible: sm.feasible,
+        }
+    })
+}
+
+/// Where an engine sends cache-miss candidates when it is part of a
+/// fleet: the coordinator's cross-job scheduler implements this by
+/// coalescing batches from concurrent jobs into shared kernel passes.
+///
+/// Contract: the returned vector has exactly one [`Eval`] per submitted
+/// strategy, in submission order, each computed by [`compute_eval`] for
+/// the handle's `(workload, hardware)` pair. An implementation that is
+/// shutting down may return a short (or empty) vector — the engine then
+/// falls back to computing locally.
+pub trait EvalBackend: Send + Sync {
+    /// Score `strategies` for the pair identified by `handle`.
+    fn eval_candidates(&self, handle: &FleetHandle,
+                       strategies: Vec<Strategy>) -> Vec<Eval>;
+}
+
+/// One job's ticket into a shared [`EvalBackend`]: the backend plus the
+/// owned `(workload, hardware)` pair it scores against and the
+/// coalescing key (the coordinator uses `cache_key + config`, so two
+/// jobs merge exactly when they could share an eval cache).
+///
+/// The handle's `w`/`hw` must describe the same pair as the engine it
+/// is installed on ([`EvalEngine::with_fleet`]) — the coordinator
+/// builds both from one resolution, enforcing this by construction.
+#[derive(Clone)]
+pub struct FleetHandle {
+    /// The shared scheduler (or any other batch-merging backend).
+    pub backend: Arc<dyn EvalBackend>,
+    /// Owned workload — the backend computes on worker threads that
+    /// outlive the engine's borrows.
+    pub w: Arc<Workload>,
+    /// Owned hardware config, same reasoning.
+    pub hw: Arc<HwConfig>,
+    /// Coalescing key: work items with equal keys may merge into one
+    /// kernel pass.
+    pub key: String,
+}
+
 /// Default bound on cached entries; the cache is cleared wholesale when
 /// it fills (simple, predictable memory ceiling). Keys are exact
 /// (layers x 7 x 4 factors, a few KB each), so 8192 entries is roughly
@@ -206,6 +278,7 @@ pub struct EvalEngine<'a> {
     threads: usize,
     cache: Arc<EvalCache>,
     pool: Option<Arc<ThreadPool>>,
+    fleet: Option<FleetHandle>,
     tables: Arc<WorkloadTables>,
 }
 
@@ -230,6 +303,7 @@ impl<'a> EvalEngine<'a> {
             threads: threads.max(1),
             cache: Arc::new(EvalCache::default()),
             pool: None,
+            fleet: None,
             tables: Arc::new(WorkloadTables::new(w)),
         }
     }
@@ -257,6 +331,18 @@ impl<'a> EvalEngine<'a> {
     /// identical; only spawn/join overhead disappears.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> EvalEngine<'a> {
         self.pool = Some(pool);
+        self
+    }
+
+    /// Route cache-miss computation through a fleet backend instead of
+    /// this engine's own threads: the coordinator installs its
+    /// cross-job scheduler here so concurrent jobs on the same
+    /// `(workload, config)` pair share kernel passes. The handle must
+    /// describe this engine's exact pair. Decoding
+    /// ([`EvalEngine::eval_population`]'s closure) and memoization stay
+    /// local; only the miss-set scoring is delegated.
+    pub fn with_fleet(mut self, fleet: FleetHandle) -> EvalEngine<'a> {
+        self.fleet = Some(fleet);
         self
     }
 
@@ -309,34 +395,28 @@ impl<'a> EvalEngine<'a> {
         self.cache.clear();
     }
 
-    /// The raw per-candidate computation: the single-pass batch kernel
-    /// (feasibility + closed-form evaluation over a per-thread reusable
-    /// scratch — zero allocation per candidate). Capacity-infeasible
-    /// strategies still get real energy/latency numbers (fig3 relies on
-    /// that); strategies with the wrong arity cannot be indexed by the
-    /// cost model at all and come back as plain infeasible instead of
-    /// panicking.
+    /// Per-candidate computation: [`compute_eval`] on this engine's
+    /// pair.
     fn compute(&self, s: &Strategy) -> Eval {
-        if s.mappings.len() != self.w.len()
-            || s.fuse.len() != self.w.len().saturating_sub(1)
-        {
-            return Eval {
-                energy: f64::INFINITY,
-                latency: f64::INFINITY,
-                edp: f64::INFINITY,
-                feasible: false,
-            };
-        }
-        EVAL_SCRATCH.with(|sc| {
-            let sm = batch::eval_into(s, self.w, self.hw,
-                                      &mut sc.borrow_mut());
-            Eval {
-                energy: sm.energy,
-                latency: sm.latency,
-                edp: sm.edp,
-                feasible: sm.feasible,
+        compute_eval(s, self.w, self.hw)
+    }
+
+    /// Compute the given cache-miss strategies (indices into `pop`,
+    /// keyed off `todo`): through the fleet backend when installed, on
+    /// this engine's own threads otherwise. A backend answering with
+    /// the wrong arity (it is shutting down) falls back to local
+    /// computation — the job still completes with identical numbers.
+    fn compute_misses(&self, pop: &[Strategy], todo: &[usize])
+                      -> Vec<Eval> {
+        if let Some(fleet) = &self.fleet {
+            let batch: Vec<Strategy> =
+                todo.iter().map(|&i| pop[i].clone()).collect();
+            let evals = fleet.backend.eval_candidates(fleet, batch);
+            if evals.len() == todo.len() {
+                return evals;
             }
-        })
+        }
+        self.run_indexed(todo.to_vec(), |i| self.compute(&pop[i]))
     }
 
     /// Run the heavy per-index closure over `n` indices: persistent
@@ -360,7 +440,16 @@ impl<'a> EvalEngine<'a> {
             return *e;
         }
         self.cache.misses.fetch_add(1, Ordering::Relaxed);
-        let e = self.compute(s);
+        let e = match &self.fleet {
+            Some(fleet) => {
+                let evals = fleet
+                    .backend
+                    .eval_candidates(fleet, vec![s.clone()]);
+                evals.first().copied()
+                    .unwrap_or_else(|| self.compute(s))
+            }
+            None => self.compute(s),
+        };
         let mut map = self.cache.map.lock().unwrap();
         self.cache.insert_bounded(&mut map, key, e);
         e
@@ -399,8 +488,7 @@ impl<'a> EvalEngine<'a> {
         self.cache
             .misses
             .fetch_add(todo.len() as u64, Ordering::Relaxed);
-        let computed: Vec<Eval> =
-            self.run_indexed(todo.clone(), |i| self.compute(&pop[i]));
+        let computed: Vec<Eval> = self.compute_misses(pop, &todo);
         {
             let mut map = self.cache.map.lock().unwrap();
             for (pos, &i) in todo.iter().enumerate() {
@@ -561,6 +649,79 @@ mod tests {
             crate::util::threadpool::ThreadPool::new(4));
         let pooled = EvalEngine::new(&w, &hw).with_pool(pool);
         assert_eq!(scoped.eval_batch(&pop), pooled.eval_batch(&pop));
+    }
+
+    #[test]
+    fn fleet_backend_receives_misses_and_matches_local() {
+        struct Recorder {
+            batches: Mutex<Vec<usize>>,
+        }
+        impl EvalBackend for Recorder {
+            fn eval_candidates(&self, h: &FleetHandle,
+                               strategies: Vec<Strategy>)
+                               -> Vec<Eval> {
+                self.batches.lock().unwrap().push(strategies.len());
+                strategies
+                    .iter()
+                    .map(|s| compute_eval(s, &h.w, &h.hw))
+                    .collect()
+            }
+        }
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 12, 77);
+        let plain = EvalEngine::new(&w, &hw);
+        let expect = plain.eval_batch(&pop);
+        let backend = Arc::new(Recorder { batches: Mutex::new(vec![]) });
+        let handle = FleetHandle {
+            backend: backend.clone(),
+            w: Arc::new(w.clone()),
+            hw: Arc::new(hw.clone()),
+            key: "test".into(),
+        };
+        let fleet = EvalEngine::new(&w, &hw).with_fleet(handle);
+        assert_eq!(fleet.eval_batch(&pop), expect,
+                   "fleet routing must be bit-identical");
+        let sizes = backend.batches.lock().unwrap().clone();
+        assert_eq!(sizes.iter().sum::<usize>(), pop.len(),
+                   "every miss went through the backend");
+        // second pass is all cache hits: the backend sees nothing
+        let before = sizes.len();
+        assert_eq!(fleet.eval_batch(&pop), expect);
+        assert_eq!(backend.batches.lock().unwrap().len(), before);
+        // single-candidate path routes too (fresh engine, cold cache)
+        let handle2 = FleetHandle {
+            backend: backend.clone(),
+            w: Arc::new(w.clone()),
+            hw: Arc::new(hw.clone()),
+            key: "test".into(),
+        };
+        let single = EvalEngine::new(&w, &hw).with_fleet(handle2);
+        assert_eq!(single.eval(&pop[0]), expect[0]);
+    }
+
+    #[test]
+    fn fleet_backend_short_answer_falls_back_locally() {
+        struct Dud;
+        impl EvalBackend for Dud {
+            fn eval_candidates(&self, _h: &FleetHandle,
+                               _s: Vec<Strategy>) -> Vec<Eval> {
+                Vec::new() // a shutting-down scheduler
+            }
+        }
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 6, 13);
+        let expect = EvalEngine::new(&w, &hw).eval_batch(&pop);
+        let handle = FleetHandle {
+            backend: Arc::new(Dud),
+            w: Arc::new(w.clone()),
+            hw: Arc::new(hw.clone()),
+            key: "dud".into(),
+        };
+        let engine = EvalEngine::new(&w, &hw).with_fleet(handle);
+        assert_eq!(engine.eval_batch(&pop), expect,
+                   "short backend answer must fall back, not corrupt");
     }
 
     #[test]

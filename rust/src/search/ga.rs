@@ -91,6 +91,7 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
         for (i, (s, e)) in scored.iter().enumerate() {
             fitness[i] = inc.offer_eval(s, *e, gen);
         }
+        inc.note_iters(gen);
         if inc.stopped(&budget) {
             break;
         }

@@ -631,6 +631,7 @@ fn optimize_native(w: &Workload, hw: &HwConfig, cfg: &GradientConfig,
         it += todo;
         offer_chain_decodes(&batch, w, hw, cfg, &mut inc, total_iters,
                             &tables);
+        inc.note_iters(total_iters);
         blocks_done += 1;
         if it < per_chain_iters
             && !inc.stopped(&budget)
@@ -751,6 +752,7 @@ fn optimize_pjrt(rt: &Runtime, w: &Workload, hw: &HwConfig,
             if it % cfg.decode_every == 0 || it + 1 == per_restart_iters {
                 offer_decodes(&theta, &sigma, w, hw, cfg, &mut inc,
                               total_iters);
+                inc.note_iters(total_iters);
             }
         }
         // final decode of this restart

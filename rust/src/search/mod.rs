@@ -34,7 +34,7 @@ pub mod gp;
 pub mod gradient;
 pub mod random;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -43,15 +43,91 @@ use crate::mapping::Strategy;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
 
-pub use eval::{Eval, EvalCache, EvalEngine};
+pub use eval::{compute_eval, Eval, EvalBackend, EvalCache, EvalEngine,
+               FleetHandle};
+
+/// Live, lock-free progress of one running search, shared between the
+/// search loop (writer) and the serving layer (reader — the `status`
+/// verb's `watch` stream polls this). All fields are monotone per run;
+/// `seq` bumps whenever something watch-worthy changed (a new best
+/// incumbent or an iteration-count update), so a poller can cheaply
+/// detect "anything new since last look".
+#[derive(Default)]
+pub struct SearchProgress {
+    seq: AtomicU64,
+    // f64::INFINITY.to_bits() until the first feasible incumbent
+    best_edp_bits: AtomicU64,
+    evals: AtomicU64,
+    iters: AtomicU64,
+}
+
+/// One consistent-enough read of a [`SearchProgress`] (fields are read
+/// individually; they are each monotone, which is all watchers need).
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressSnapshot {
+    /// Change counter at read time.
+    pub seq: u64,
+    /// Best feasible EDP so far, if any incumbent exists yet.
+    pub best_edp: Option<f64>,
+    /// Candidates offered so far.
+    pub evals: u64,
+    /// Iterations executed so far.
+    pub iters: u64,
+}
+
+impl SearchProgress {
+    /// Fresh progress: no incumbent, zero counters.
+    pub fn new() -> SearchProgress {
+        SearchProgress {
+            seq: AtomicU64::new(0),
+            best_edp_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            evals: AtomicU64::new(0),
+            iters: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish a new best feasible EDP (bumps `seq`).
+    pub fn record_best(&self, edp: f64) {
+        self.best_edp_bits.store(edp.to_bits(), Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+    }
+
+    /// Publish the offered-candidate count (no `seq` bump — evals move
+    /// too fast to be individually watch-worthy).
+    pub fn record_evals(&self, evals: u64) {
+        self.evals.store(evals, Ordering::Relaxed);
+    }
+
+    /// Publish the iteration count (bumps `seq` — one event per
+    /// generation/block is the natural streaming granularity).
+    pub fn record_iters(&self, iters: u64) {
+        self.iters.store(iters, Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+    }
+
+    /// Read the current state.
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        let bits = self.best_edp_bits.load(Ordering::Relaxed);
+        let edp = f64::from_bits(bits);
+        ProgressSnapshot {
+            seq: self.seq.load(Ordering::Acquire),
+            best_edp: if edp.is_finite() { Some(edp) } else { None },
+            evals: self.evals.load(Ordering::Relaxed),
+            iters: self.iters.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// Cross-job evaluation context handed to the `optimize_ctx` entry
 /// points by a serving layer: an optional shared memoization cache
 /// (must match the job's `(workload, hardware)` pair — see
 /// [`EvalCache`]), an optional persistent worker pool for batch
-/// scoring, and an optional cooperative cancellation flag polled by the
-/// search loops. `EvalCtx::default()` reproduces the standalone
-/// behavior exactly (private cache, scoped threads, no cancel).
+/// scoring, an optional cooperative cancellation flag polled by the
+/// search loops, an optional fleet backend (the coordinator's
+/// cross-job batch scheduler) and an optional live progress sink (the
+/// `watch` stream). `EvalCtx::default()` reproduces the standalone
+/// behavior exactly (private cache, scoped threads, no cancel, no
+/// fleet, no progress).
 #[derive(Clone, Default)]
 pub struct EvalCtx {
     /// Shared memoization cache for the job's `(workload, hw)` pair.
@@ -60,6 +136,11 @@ pub struct EvalCtx {
     pub pool: Option<Arc<ThreadPool>>,
     /// Cooperative cancellation flag, polled between batches.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Fleet ticket: engines built from this context send cache-miss
+    /// batches through the shared cross-job scheduler.
+    pub fleet: Option<FleetHandle>,
+    /// Live progress sink read by `status {"watch": true}` streams.
+    pub progress: Option<Arc<SearchProgress>>,
 }
 
 impl EvalCtx {
@@ -72,6 +153,9 @@ impl EvalCtx {
         }
         if let Some(pool) = &self.pool {
             engine = engine.with_pool(Arc::clone(pool));
+        }
+        if let Some(fleet) = &self.fleet {
+            engine = engine.with_fleet(fleet.clone());
         }
         engine
     }
@@ -155,6 +239,7 @@ pub struct Incumbent<'a> {
     pub engine: EvalEngine<'a>,
     start: Instant,
     cancel: Option<Arc<AtomicBool>>,
+    progress: Option<Arc<SearchProgress>>,
     /// Best feasible `(strategy, edp, energy, latency)` so far.
     pub best: Option<(Strategy, f64, f64, f64)>,
     /// Improvement trace (one point per new best).
@@ -172,16 +257,28 @@ impl<'a> Incumbent<'a> {
     /// Wrap an explicitly-configured engine (thread count, cache size).
     pub fn with_engine(engine: EvalEngine<'a>) -> Incumbent<'a> {
         Incumbent { engine, start: Instant::now(), cancel: None,
-                    best: None, trace: Vec::new(), evals: 0 }
+                    progress: None, best: None, trace: Vec::new(),
+                    evals: 0 }
     }
 
     /// Incumbent + engine as prescribed by a serving-layer [`EvalCtx`]
-    /// (shared cache, persistent pool, cancellation flag).
+    /// (shared cache, persistent pool, cancellation flag, fleet
+    /// backend, progress sink).
     pub fn with_ctx(w: &'a Workload, hw: &'a HwConfig, ctx: &EvalCtx)
                     -> Incumbent<'a> {
         let mut inc = Incumbent::with_engine(ctx.engine(w, hw));
         inc.cancel = ctx.cancel.clone();
+        inc.progress = ctx.progress.clone();
         inc
+    }
+
+    /// Publish the current iteration count to any live `watch` stream.
+    /// Searches call this once per generation / decode block — cheap
+    /// (two atomic stores), a no-op standalone.
+    pub fn note_iters(&self, iters: usize) {
+        if let Some(p) = &self.progress {
+            p.record_iters(iters as u64);
+        }
     }
 
     /// Seconds since the search started.
@@ -215,6 +312,9 @@ impl<'a> Incumbent<'a> {
     pub fn offer_eval(&mut self, s: &Strategy, e: Eval, iter: usize)
                       -> f64 {
         self.evals += 1;
+        if let Some(p) = &self.progress {
+            p.record_evals(self.evals as u64);
+        }
         if !e.feasible {
             return f64::INFINITY;
         }
@@ -229,6 +329,9 @@ impl<'a> Incumbent<'a> {
                 best_edp: e.edp,
                 iter,
             });
+            if let Some(p) = &self.progress {
+                p.record_best(e.edp);
+            }
         }
         e.edp
     }
@@ -282,6 +385,34 @@ mod tests {
         assert!(inc.offer(&s, 0).is_infinite());
         let r = inc.finish(1); // falls back to trivial
         assert!(r.edp.is_finite());
+    }
+
+    #[test]
+    fn progress_publishes_incumbent_and_counts() {
+        let w = zoo::vgg16();
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let progress = Arc::new(SearchProgress::new());
+        let ctx = EvalCtx { progress: Some(Arc::clone(&progress)),
+                            ..Default::default() };
+        let mut inc = Incumbent::with_ctx(&w, &hw, &ctx);
+        let snap0 = progress.snapshot();
+        assert!(snap0.best_edp.is_none());
+        assert_eq!(snap0.evals, 0);
+        let s = Strategy::trivial(&w);
+        let edp = inc.offer(&s, 0);
+        inc.note_iters(1);
+        let snap1 = progress.snapshot();
+        assert_eq!(snap1.best_edp, Some(edp));
+        assert_eq!(snap1.evals, 1);
+        assert_eq!(snap1.iters, 1);
+        assert!(snap1.seq > snap0.seq, "watch-worthy changes bump seq");
+        // an infeasible offer moves evals but not the incumbent
+        let mut bad = s.clone();
+        bad.mappings[0].factors[1][3] = 64;
+        inc.offer(&bad, 1);
+        let snap2 = progress.snapshot();
+        assert_eq!(snap2.best_edp, Some(edp));
+        assert_eq!(snap2.evals, 2);
     }
 
     #[test]

@@ -66,6 +66,7 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, seed: u64,
             iter += 1;
             inc.offer_eval(s, *e, iter);
         }
+        inc.note_iters(iter);
     }
     Ok(inc.finish(iter))
 }

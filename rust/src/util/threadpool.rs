@@ -24,7 +24,7 @@
 //! batch drains — the pool itself never loses threads.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -267,6 +267,17 @@ impl<T> OneShotSender<T> {
     }
 }
 
+/// Outcome of a non-blocking [`OneShot::try_poll`].
+pub enum Poll<T> {
+    /// The value arrived.
+    Ready(T),
+    /// Not delivered yet; the sender is still alive.
+    Empty,
+    /// The sender was dropped without delivering — the value will
+    /// never arrive.
+    Dead,
+}
+
 impl<T> OneShot<T> {
     /// Block until the value arrives (None if the sender was dropped).
     pub fn wait(self) -> Option<T> {
@@ -276,6 +287,17 @@ impl<T> OneShot<T> {
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<T> {
         self.rx.try_recv().ok()
+    }
+
+    /// Non-blocking poll that distinguishes "not yet" from "never":
+    /// the event-loop server needs to tell a still-running job apart
+    /// from one whose worker dropped the reply channel.
+    pub fn try_poll(&self) -> Poll<T> {
+        match self.rx.try_recv() {
+            Ok(v) => Poll::Ready(v),
+            Err(TryRecvError::Empty) => Poll::Empty,
+            Err(TryRecvError::Disconnected) => Poll::Dead,
+        }
     }
 }
 
@@ -414,6 +436,22 @@ mod tests {
         }
         drop(pool);
         assert_eq!(c.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn try_poll_distinguishes_empty_from_dead() {
+        let (tx, rx) = oneshot::<u32>();
+        assert!(matches!(rx.try_poll(), Poll::Empty));
+        tx.send(7);
+        match rx.try_poll() {
+            Poll::Ready(v) => assert_eq!(v, 7),
+            _ => panic!("expected Ready"),
+        }
+        // after the one-shot value is consumed the sender is gone
+        assert!(matches!(rx.try_poll(), Poll::Dead));
+        let (tx2, rx2) = oneshot::<u32>();
+        drop(tx2);
+        assert!(matches!(rx2.try_poll(), Poll::Dead));
     }
 
     #[test]

@@ -121,6 +121,29 @@ fn send(addr: std::net::SocketAddr, body: &str) -> String {
     line.trim().to_string()
 }
 
+/// Unwrap the v1 success envelope `{"protocol": 1, "ok": {...}}`,
+/// returning the payload.
+fn ok_payload(j: &Json) -> &Json {
+    assert_eq!(j.get("protocol").unwrap().as_f64().unwrap(), 1.0,
+               "{j:?}");
+    assert!(j.get("error").is_err(),
+            "expected success envelope, got {j:?}");
+    j.get("ok").unwrap()
+}
+
+/// Unwrap the v1 error envelope, asserting the stable error code.
+fn err_body<'j>(j: &'j Json, code: &str) -> &'j Json {
+    assert_eq!(j.get("protocol").unwrap().as_f64().unwrap(), 1.0,
+               "{j:?}");
+    assert!(j.get("ok").is_err(),
+            "expected error envelope, got {j:?}");
+    let e = j.get("error").unwrap();
+    assert_eq!(e.get("code").unwrap().as_str().unwrap(), code,
+               "{j:?}");
+    assert!(!e.get("message").unwrap().as_str().unwrap().is_empty());
+    e
+}
+
 #[test]
 fn tcp_server_full_protocol() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -128,9 +151,21 @@ fn tcp_server_full_protocol() {
     let coord = Coordinator::new(None, 1).unwrap();
     let t = std::thread::spawn(move || server::serve_on(listener, coord));
 
-    // ping
+    // ping carries the protocol version and server uptime
     let pong = Json::parse(&send(addr, r#"{"verb": "ping"}"#)).unwrap();
-    assert_eq!(pong.get("pong").unwrap(), &Json::Bool(true));
+    let p = ok_payload(&pong);
+    assert_eq!(p.get("pong").unwrap(), &Json::Bool(true));
+    assert_eq!(p.get_f64("protocol").unwrap(), 1.0);
+    assert!(p.get_f64("uptime_seconds").unwrap() >= 0.0);
+
+    // requests may pin the protocol version they expect
+    let pinned =
+        Json::parse(&send(addr, r#"{"verb": "ping", "v": 1}"#)).unwrap();
+    assert_eq!(ok_payload(&pinned).get("pong").unwrap(),
+               &Json::Bool(true));
+    let wrong =
+        Json::parse(&send(addr, r#"{"verb": "ping", "v": 2}"#)).unwrap();
+    err_body(&wrong, "unsupported_version");
 
     // optimize
     let resp = send(
@@ -138,24 +173,36 @@ fn tcp_server_full_protocol() {
         r#"{"verb": "optimize", "workload": "mobilenet", "method": "random", "seconds": 1.0, "max_iters": 50, "seed": 2}"#,
     );
     let j = Json::parse(&resp).unwrap();
-    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{resp}");
-    assert!(j.get_f64("edp").unwrap() > 0.0);
+    let r = ok_payload(&j);
+    assert!(r.get_f64("edp").unwrap() > 0.0);
 
-    // bad requests are answered, not dropped
+    // bad requests are answered with coded errors, not dropped
     let bad = Json::parse(
         &send(addr, r#"{"verb": "optimize", "method": "quantum"}"#))
         .unwrap();
-    assert_eq!(bad.get("ok").unwrap(), &Json::Bool(false));
+    err_body(&bad, "bad_request");
     let garbage = Json::parse(&send(addr, "not json at all")).unwrap();
-    assert_eq!(garbage.get("ok").unwrap(), &Json::Bool(false));
+    err_body(&garbage, "bad_request");
+    let missing = Json::parse(
+        &send(addr, r#"{"verb": "optimize", "workload": "alexnet"}"#))
+        .unwrap();
+    err_body(&missing, "unknown_workload");
+
+    // unknown verbs list the supported surface
+    let unknown =
+        Json::parse(&send(addr, r#"{"verb": "fry"}"#)).unwrap();
+    let e = err_body(&unknown, "unknown_verb");
+    let supported = e.get("supported").unwrap().as_arr().unwrap();
+    assert!(supported.iter().any(|v| v.as_str().unwrap() == "optimize"));
 
     // metrics reflect the one successful job
     let m = Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
-    assert_eq!(m.get_f64("completed").unwrap(), 1.0);
+    assert_eq!(ok_payload(&m).get_f64("completed").unwrap(), 1.0);
 
     // graceful shutdown
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(ok_payload(&s).get("shutting_down").unwrap(),
+               &Json::Bool(true));
     t.join().unwrap().unwrap();
 }
 
@@ -266,15 +313,15 @@ fn tcp_sweep_verb_serves_a_grid() {
         addr,
         r#"{"verb": "sweep", "workloads": ["mobilenet", "resnet18"], "methods": ["random"], "seeds": [1, 2], "seconds": 3600, "max_iters": 24}"#,
     );
-    let j = Json::parse(&resp).unwrap();
-    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+    let env = Json::parse(&resp).unwrap();
+    let j = ok_payload(&env);
     assert_eq!(j.get_f64("jobs").unwrap(), 4.0);
     assert_eq!(j.get_f64("completed").unwrap(), 4.0);
     assert_eq!(j.get_f64("failed").unwrap(), 0.0);
     let results = j.get("results").unwrap().as_arr().unwrap();
     assert_eq!(results.len(), 4);
-    for r in results {
-        assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
+    for cell in results {
+        let r = cell.get("ok").unwrap();
         assert!(r.get_f64("edp").unwrap() > 0.0);
         assert!(r.get("workload").unwrap().as_str().is_ok());
         assert!(r.get_f64("seed").unwrap() >= 1.0);
@@ -283,13 +330,14 @@ fn tcp_sweep_verb_serves_a_grid() {
     // two seeds per (workload, config) pair: the second shares the
     // pair's cache, so the metrics verb must show cross-job hits
     let m = Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
+    let m = ok_payload(&m);
     assert_eq!(m.get_f64("completed").unwrap(), 4.0);
     let cache = m.get("cache").unwrap();
     assert!(cache.get_f64("hits").unwrap() > 0.0, "{m:?}");
     assert_eq!(cache.get_f64("pairs").unwrap(), 2.0);
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
     t.join().unwrap().unwrap();
 }
 
@@ -310,25 +358,27 @@ fn tcp_sweep_fadiff_chains_deterministic_with_grad_step_metrics() {
         let body = format!(
             r#"{{"verb": "sweep", "workload": "mobilenet", "methods": ["fadiff"], "seeds": [9, 9], "seconds": 3600, "max_iters": 40, "chains": {chains}}}"#
         );
-        let j = Json::parse(&send(addr, &body)).unwrap();
-        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{j:?}");
+        let env = Json::parse(&send(addr, &body)).unwrap();
+        let j = ok_payload(&env);
         assert_eq!(j.get_f64("completed").unwrap(), 2.0);
         let results = j.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 2);
-        let edp0 = results[0].get_f64("edp").unwrap();
-        let edp1 = results[1].get_f64("edp").unwrap();
+        let edp0 = results[0].get("ok").unwrap().get_f64("edp").unwrap();
+        let edp1 = results[1].get("ok").unwrap().get_f64("edp").unwrap();
         assert!(edp0 > 0.0 && edp0.is_finite());
         assert_eq!(edp0, edp1,
                    "identical-seed cells diverged at chains={chains}");
-        for r in results {
-            assert_eq!(r.get_f64("chains").unwrap(), chains as f64);
+        for cell in results {
+            assert_eq!(cell.get("ok").unwrap().get_f64("chains")
+                           .unwrap(),
+                       chains as f64);
         }
 
         // every chain runs the full 40-step schedule in both cells,
         // and the metrics verb's grad-step counter is monotone exact
         let m =
             Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
-        let tp = m.get("throughput").unwrap();
+        let tp = ok_payload(&m).get("throughput").unwrap();
         let steps = tp.get_f64("grad_steps_total").unwrap();
         expected_steps += 2.0 * chains as f64 * 40.0;
         assert_eq!(steps, expected_steps,
@@ -337,7 +387,7 @@ fn tcp_sweep_fadiff_chains_deterministic_with_grad_step_metrics() {
     }
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
     t.join().unwrap().unwrap();
 }
 
@@ -353,25 +403,32 @@ fn tcp_submit_status_cancel_roundtrip() {
         r#"{"verb": "submit", "workload": "mobilenet", "method": "random", "seconds": 3600, "max_iters": 1000000000000}"#,
     ))
     .unwrap();
-    assert_eq!(sub.get("ok").unwrap(), &Json::Bool(true));
-    let id = sub.get_f64("job_id").unwrap() as u64;
+    let id = ok_payload(&sub).get_f64("job_id").unwrap() as u64;
 
     let cancel = Json::parse(&send(
         addr,
         &format!(r#"{{"verb": "cancel", "job_id": {id}}}"#),
     ))
     .unwrap();
-    assert_eq!(cancel.get("ok").unwrap(), &Json::Bool(true));
+    assert!(ok_payload(&cancel).get("status").is_ok());
+
+    // unknown ids answer job_not_found, not a generic error
+    let nf = Json::parse(&send(
+        addr,
+        r#"{"verb": "status", "job_id": 999999}"#,
+    ))
+    .unwrap();
+    err_body(&nf, "job_not_found");
 
     // poll until terminal; must be cancelled, fast
     let t0 = Instant::now();
     loop {
-        let st = Json::parse(&send(
+        let env = Json::parse(&send(
             addr,
             &format!(r#"{{"verb": "status", "job_id": {id}}}"#),
         ))
         .unwrap();
-        assert_eq!(st.get("ok").unwrap(), &Json::Bool(true));
+        let st = ok_payload(&env);
         let status = st.get("status").unwrap().as_str().unwrap()
             .to_string();
         if status == "cancelled" {
@@ -385,7 +442,7 @@ fn tcp_submit_status_cancel_roundtrip() {
     }
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
     t.join().unwrap().unwrap();
 }
 
@@ -418,28 +475,27 @@ fn tcp_inline_workload_spec_runs_every_method() {
                  "seconds": 3600, "max_iters": 12, "seed": 4,
                  "workload_spec": {INLINE_SPEC}}}"#
         );
-        let j = Json::parse(&send(addr, &body.replace('\n', " ")))
+        let env = Json::parse(&send(addr, &body.replace('\n', " ")))
             .unwrap();
-        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true),
-                   "{method}: {j:?}");
+        let j = ok_payload(&env);
         assert_eq!(j.get("workload").unwrap().as_str().unwrap(),
                    "wire-custom", "{method}");
         assert!(j.get_f64("edp").unwrap() > 0.0, "{method}");
         assert!(j.get_f64("edp").unwrap().is_finite(), "{method}");
     }
 
-    // a bad inline spec is a one-line error, never a queued job
+    // a bad inline spec is a one-line coded error, never a queued job
     let bad = Json::parse(&send(
         addr,
         r#"{"verb": "optimize", "workload_spec": {"name": "x", "layers": []}}"#,
     ))
     .unwrap();
-    assert_eq!(bad.get("ok").unwrap(), &Json::Bool(false));
-    assert!(bad.get("error").unwrap().as_str().unwrap()
+    let e = err_body(&bad, "spec_invalid");
+    assert!(e.get("message").unwrap().as_str().unwrap()
         .contains("workload_spec"));
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
     t.join().unwrap().unwrap();
 }
 
@@ -507,8 +563,9 @@ fn tcp_workloads_verb_lists_and_describes() {
     let t = std::thread::spawn(move || server::serve_on(listener, coord));
 
     // list: zoo + spec files, with summary fields
-    let j = Json::parse(&send(addr, r#"{"verb": "workloads"}"#)).unwrap();
-    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+    let env =
+        Json::parse(&send(addr, r#"{"verb": "workloads"}"#)).unwrap();
+    let j = ok_payload(&env);
     let rows = j.get("workloads").unwrap().as_arr().unwrap();
     assert!(j.get_f64("count").unwrap() >= 9.0, "{j:?}");
     let find = |name: &str| {
@@ -530,8 +587,7 @@ fn tcp_workloads_verb_lists_and_describes() {
         r#"{"verb": "workloads", "describe": "bert-base-block"}"#,
     ))
     .unwrap();
-    assert_eq!(d.get("ok").unwrap(), &Json::Bool(true));
-    let w = d.get("workload").unwrap();
+    let w = ok_payload(&d).get("workload").unwrap();
     assert_eq!(w.get_f64("layer_count").unwrap(), 8.0);
     assert_eq!(w.get_f64("replicas").unwrap(), 12.0);
     assert!(w.get_f64("total_macs").unwrap() > 0.0);
@@ -546,20 +602,19 @@ fn tcp_workloads_verb_lists_and_describes() {
                  INLINE_SPEC.replace('\n', " ")),
     ))
     .unwrap();
-    assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
-    assert_eq!(v.get("workload").unwrap().get_f64("layer_count")
-        .unwrap(), 3.0);
+    assert_eq!(ok_payload(&v).get("workload").unwrap()
+        .get_f64("layer_count").unwrap(), 3.0);
 
-    // unknown names error cleanly
+    // unknown names error cleanly with the stable code
     let e = Json::parse(&send(
         addr,
         r#"{"verb": "workloads", "describe": "alexnet"}"#,
     ))
     .unwrap();
-    assert_eq!(e.get("ok").unwrap(), &Json::Bool(false));
+    err_body(&e, "unknown_workload");
 
     let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
     t.join().unwrap().unwrap();
 }
 

@@ -1,0 +1,128 @@
+//! Integration pins for the cross-job fleet scheduler: concurrent
+//! jobs submitted through one [`Coordinator`] must produce results
+//! bit-for-bit identical to running each job serially with
+//! [`execute_job`] — merging evaluation batches across jobs changes
+//! *where* candidates are computed, never what — and the merge must
+//! actually happen (asserted through the `metrics` counters, with the
+//! scheduler's hold/release hook making the coalescing window
+//! deterministic).
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use fadiff::coordinator::{execute_job, Coordinator, JobRequest,
+                          JobResult, Method};
+
+fn req(method: Method, seed: u64) -> JobRequest {
+    JobRequest {
+        workload: "mobilenet".into(),
+        config: "large".into(),
+        method,
+        seconds: 3600.0, // iteration-capped: deterministic per seed
+        max_iters: 30,
+        seed,
+        chains: 0,
+        spec: None,
+    }
+}
+
+fn assert_bit_identical(serial: &JobResult, fleet: &JobResult) {
+    let label = format!("{}/{} seed {}", serial.request.workload,
+                        serial.request.method.name(),
+                        serial.request.seed);
+    assert_eq!(serial.edp.to_bits(), fleet.edp.to_bits(),
+               "edp diverged for {label}: {} vs {}",
+               serial.edp, fleet.edp);
+    assert_eq!(serial.full_model_edp.to_bits(),
+               fleet.full_model_edp.to_bits(), "{label}");
+    assert_eq!(serial.energy.to_bits(), fleet.energy.to_bits(),
+               "{label}");
+    assert_eq!(serial.latency.to_bits(), fleet.latency.to_bits(),
+               "{label}");
+    assert_eq!(serial.groups, fleet.groups, "{label}");
+    assert_eq!(serial.fused_names, fleet.fused_names, "{label}");
+    assert_eq!(serial.iters, fleet.iters, "{label}");
+    assert_eq!(serial.evals, fleet.evals, "{label}");
+}
+
+#[test]
+fn merged_cross_job_passes_are_bit_identical_to_serial() {
+    // three same-(workload, config) jobs — two methods, three seeds —
+    // so their evaluation batches coalesce under one scheduler key
+    let reqs = vec![
+        req(Method::Random, 11),
+        req(Method::Random, 22),
+        req(Method::Ga, 33),
+    ];
+
+    // ground truth: each job alone, no coordinator, no shared cache,
+    // no fleet — the plain CLI execution path
+    let serial: Vec<JobResult> = reqs
+        .iter()
+        .map(|r| execute_job(None, r).expect("serial job"))
+        .collect();
+
+    // fleet path: all three run concurrently on one coordinator; the
+    // held scheduler absorbs every job's first batch, so releasing it
+    // forces at least one genuinely merged cross-job pass
+    let coord = Coordinator::new(None, 3).unwrap();
+    coord.scheduler().hold();
+    let handles: Vec<_> =
+        reqs.iter().map(|r| coord.submit(r.clone())).collect();
+    let t0 = Instant::now();
+    while coord.scheduler().stats().items.load(Ordering::Relaxed)
+        < reqs.len() as u64
+    {
+        assert!(t0.elapsed() < Duration::from_secs(60),
+                "jobs never reached the scheduler");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    coord.scheduler().release();
+    let fleet: Vec<JobResult> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("worker alive").expect("fleet job"))
+        .collect();
+
+    for (s, f) in serial.iter().zip(&fleet) {
+        assert_bit_identical(s, f);
+    }
+
+    // the merge really happened, and the wire metrics can prove it
+    let m = coord.metrics_json();
+    let sched = m.get("scheduler").unwrap();
+    assert!(sched.get_f64("merged_passes").unwrap() >= 1.0,
+            "no cross-job pass merged: {sched:?}");
+    assert!(sched.get_f64("max_items_per_pass").unwrap()
+            >= reqs.len() as f64,
+            "held batches must coalesce into one pass: {sched:?}");
+    assert!(sched.get_f64("candidates").unwrap() > 0.0);
+    assert!(sched.get_f64("items").unwrap()
+            >= sched.get_f64("merged_items").unwrap());
+}
+
+#[test]
+fn repeated_merged_runs_are_reproducible() {
+    // same request twice through two fresh coordinators: the fleet
+    // path must be deterministic run to run, not just serial-matching
+    let r = req(Method::Random, 7);
+    let run = |r: &JobRequest| -> JobResult {
+        let coord = Coordinator::new(None, 2).unwrap();
+        coord.submit(r.clone()).wait().unwrap().unwrap()
+    };
+    assert_bit_identical(&run(&r), &run(&r));
+}
+
+#[test]
+fn metrics_expose_queue_depth_and_capacity() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    let m = coord.metrics_json();
+    let q = m.get("queue").unwrap();
+    assert_eq!(q.get_f64("depth").unwrap(), 0.0);
+    assert_eq!(q.get_f64("capacity").unwrap(),
+               fadiff::coordinator::DEFAULT_QUEUE_CAPACITY as f64);
+    // capacity is clamped to at least one queued job
+    coord.set_queue_capacity(0);
+    assert_eq!(coord.queue_capacity(), 1);
+    coord.set_queue_capacity(17);
+    assert_eq!(coord.queue_capacity(), 17);
+}

@@ -2,10 +2,11 @@
 //! firing mixed verbs at one warm server over persistent connections.
 //!
 //! Pins the sweep-serving guarantees: every response parses as one
-//! JSON line, cross-job cache hit counters are monotone (and actually
-//! nonzero when identical jobs repeat), all jobs are accounted for,
-//! and shutdown joins every connection — including idle ones that
-//! never send another byte.
+//! JSON line carrying the v1 envelope, cross-job cache hit counters
+//! are monotone (and actually nonzero when identical jobs repeat),
+//! all jobs are accounted for, and shutdown drains every connection —
+//! including idle ones that never send another byte. Also exercises
+//! the `status {"watch": true}` event stream end to end.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -30,6 +31,11 @@ impl Client {
         self.stream.write_all(body.as_bytes()).unwrap();
         self.stream.write_all(b"\n").unwrap();
         self.stream.flush().unwrap();
+        self.read_event()
+    }
+
+    /// Read one line (a watch event or a response) and parse it.
+    fn read_event(&mut self) -> Json {
         let mut line = String::new();
         self.reader.read_line(&mut line).unwrap();
         assert!(line.ends_with('\n'), "unterminated response: {line:?}");
@@ -37,6 +43,16 @@ impl Client {
             panic!("unparseable response {line:?}: {e}")
         })
     }
+}
+
+/// Unwrap a success envelope: `protocol` is 1, no `error`, return the
+/// `ok` payload.
+fn ok_payload(j: &Json) -> &Json {
+    assert_eq!(j.get("protocol").unwrap().as_f64().unwrap(), 1.0,
+               "{j:?}");
+    assert!(j.get("error").is_err(),
+            "expected success envelope, got {j:?}");
+    j.get("ok").unwrap()
 }
 
 fn cache_hits(metrics: &Json) -> f64 {
@@ -54,10 +70,11 @@ fn concurrent_clients_mixed_verbs() {
         std::thread::spawn(move || server::serve_on(listener, coord));
 
     // an idle connection held open across the whole test: shutdown must
-    // still join its handler thread
+    // still drain it from the event loop
     let mut idle = Client::connect(addr);
     let pong = idle.request(r#"{"verb": "ping"}"#);
-    assert_eq!(pong.get("pong").unwrap(), &Json::Bool(true));
+    assert_eq!(ok_payload(&pong).get("pong").unwrap(),
+               &Json::Bool(true));
 
     let workers: Vec<_> = (0..CLIENTS)
         .map(|c| {
@@ -66,12 +83,12 @@ fn concurrent_clients_mixed_verbs() {
 
                 // 1. ping
                 let r = cl.request(r#"{"verb": "ping"}"#);
-                assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
+                assert_eq!(ok_payload(&r).get("pong").unwrap(),
+                           &Json::Bool(true));
 
                 // 2. metrics (baseline for monotonicity)
                 let m0 = cl.request(r#"{"verb": "metrics"}"#);
-                assert_eq!(m0.get("ok").unwrap(), &Json::Bool(true));
-                let h0 = cache_hits(&m0);
+                let h0 = cache_hits(ok_payload(&m0));
 
                 // 3. optimize — identical across clients, so the shared
                 //    (workload, config) cache must produce cross-job hits
@@ -82,13 +99,18 @@ fn concurrent_clients_mixed_verbs() {
                         .replace('\n', " ")
                         .as_str(),
                 );
-                assert_eq!(o.get("ok").unwrap(), &Json::Bool(true),
-                           "client {c}: {o:?}");
-                assert!(o.get_f64("edp").unwrap() > 0.0);
+                let body = ok_payload(&o);
+                assert!(body.get_f64("edp").unwrap() > 0.0,
+                        "client {c}: {o:?}");
 
                 // 4. garbage interleaved — answered, not fatal
                 let g = cl.request("not json at all");
-                assert_eq!(g.get("ok").unwrap(), &Json::Bool(false));
+                assert_eq!(
+                    g.get("error").unwrap().get("code").unwrap()
+                        .as_str().unwrap(),
+                    "bad_request",
+                    "client {c}: {g:?}"
+                );
 
                 // 5. sweep: a 2-point grid through the same queue
                 let s = cl.request(
@@ -98,19 +120,26 @@ fn concurrent_clients_mixed_verbs() {
                         .replace('\n', " ")
                         .as_str(),
                 );
-                assert_eq!(s.get("ok").unwrap(), &Json::Bool(true),
+                let grid = ok_payload(&s);
+                assert_eq!(grid.get_f64("jobs").unwrap(), 2.0,
                            "client {c}: {s:?}");
-                assert_eq!(s.get_f64("jobs").unwrap(), 2.0);
-                assert_eq!(s.get_f64("completed").unwrap(), 2.0);
-                assert_eq!(
-                    s.get("results").unwrap().as_arr().unwrap().len(),
-                    2
-                );
+                assert_eq!(grid.get_f64("completed").unwrap(), 2.0);
+                let cells =
+                    grid.get("results").unwrap().as_arr().unwrap();
+                assert_eq!(cells.len(), 2);
+                for cell in cells {
+                    // every completed cell nests the success payload
+                    assert!(
+                        cell.get("ok").unwrap().get_f64("edp")
+                            .unwrap() > 0.0,
+                        "client {c}: {cell:?}"
+                    );
+                }
 
                 // 6. metrics again: hit counter is monotone from this
                 //    client's point of view
                 let m1 = cl.request(r#"{"verb": "metrics"}"#);
-                let h1 = cache_hits(&m1);
+                let h1 = cache_hits(ok_payload(&m1));
                 assert!(h1 >= h0,
                         "cache hits went backwards: {h1} < {h0}");
             })
@@ -123,17 +152,112 @@ fn concurrent_clients_mixed_verbs() {
     // every job accounted for: per client 1 optimize + 2 sweep cells
     let mut cl = Client::connect(addr);
     let m = cl.request(r#"{"verb": "metrics"}"#);
-    assert_eq!(m.get_f64("completed").unwrap(), (CLIENTS * 3) as f64);
-    assert_eq!(m.get_f64("failed").unwrap(), 0.0);
-    assert_eq!(m.get_f64("in_flight").unwrap(), 0.0);
+    let body = ok_payload(&m).clone();
+    assert_eq!(body.get_f64("completed").unwrap(),
+               (CLIENTS * 3) as f64);
+    assert_eq!(body.get_f64("failed").unwrap(), 0.0);
+    assert_eq!(body.get_f64("in_flight").unwrap(), 0.0);
     // identical jobs repeated across clients: the shared cache must
     // have produced real cross-job hits
-    assert!(cache_hits(&m) > 0.0, "no cross-job cache hits: {m:?}");
-    assert!(m.get("cache").unwrap().get_f64("pairs").unwrap() >= 1.0);
+    assert!(cache_hits(&body) > 0.0,
+            "no cross-job cache hits: {m:?}");
+    assert!(body.get("cache").unwrap().get_f64("pairs").unwrap()
+            >= 1.0);
+    // the fleet scheduler is live behind the server: its counters are
+    // part of the metrics payload even when no passes merged
+    let sched = body.get("scheduler").unwrap();
+    assert!(sched.get_f64("passes").is_ok(), "{m:?}");
 
     // shutdown must terminate the server thread even though `idle` (and
     // `cl`) still hold open connections
     let s = cl.request(r#"{"verb": "shutdown"}"#);
-    assert_eq!(s.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(ok_payload(&s).get("shutting_down").unwrap(),
+               &Json::Bool(true));
+    server_thread.join().unwrap().unwrap();
+}
+
+#[test]
+fn watch_streams_progress_to_a_terminal_event() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let server_thread =
+        std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // submit a job sized to run long enough for progress events, while
+    // a second connection watches it to completion
+    let mut ctl = Client::connect(addr);
+    let sub = ctl.request(
+        r#"{"verb": "submit", "workload": "mobilenet",
+            "method": "random", "seconds": 3600,
+            "max_iters": 4000, "seed": 7}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    let id = ok_payload(&sub).get_f64("job_id").unwrap() as u64;
+
+    let mut watcher = Client::connect(addr);
+    watcher
+        .stream
+        .write_all(
+            format!(
+                "{{\"verb\": \"status\", \"job_id\": {id}, \
+                 \"watch\": true}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+
+    let mut statuses: Vec<String> = Vec::new();
+    let mut last_seq = 0.0_f64;
+    let mut progress_events = 0usize;
+    let done = loop {
+        let ev = watcher.read_event();
+        let body = ok_payload(&ev).clone();
+        let kind = body.get("event").unwrap().as_str().unwrap()
+            .to_string();
+        assert_eq!(body.get_f64("job_id").unwrap(), id as f64);
+        match kind.as_str() {
+            "status" => {
+                let s = body.get("status").unwrap().as_str().unwrap();
+                // state transitions arrive in order, never repeated
+                assert_ne!(statuses.last().map(String::as_str),
+                           Some(s), "{ev:?}");
+                statuses.push(s.to_string());
+            }
+            "progress" => {
+                let seq = body.get_f64("seq").unwrap();
+                assert!(seq > last_seq,
+                        "progress seq not monotone: {ev:?}");
+                last_seq = seq;
+                progress_events += 1;
+            }
+            "done" => break body,
+            other => panic!("unexpected event kind {other}: {ev:?}"),
+        }
+        assert!(statuses.len() + progress_events < 100_000,
+                "watch stream never terminated");
+    };
+
+    // exactly one terminal event, carrying the full result payload
+    assert_eq!(done.get("status").unwrap().as_str().unwrap(),
+               "completed");
+    let result = done.get("result").unwrap();
+    assert!(result.get_f64("edp").unwrap() > 0.0);
+    assert_eq!(result.get("workload").unwrap().as_str().unwrap(),
+               "mobilenet");
+    // status events report only live states; terminal states arrive
+    // exclusively through the single `done` event
+    for s in &statuses {
+        assert!(s == "queued" || s == "running", "{statuses:?}");
+    }
+
+    // after `done` the stream returns to request/response mode
+    let pong = watcher.request(r#"{"verb": "ping"}"#);
+    assert_eq!(ok_payload(&pong).get("pong").unwrap(),
+               &Json::Bool(true));
+
+    let s = ctl.request(r#"{"verb": "shutdown"}"#);
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
     server_thread.join().unwrap().unwrap();
 }

@@ -1,7 +1,9 @@
-//! Robustness battery for `parse_request`/`handle`: hostile and broken
-//! inputs must always produce a one-line `{"ok":false,...}` answer and
-//! must never panic the server, kill the connection, or desynchronize
-//! the line protocol.
+//! Robustness battery for the wire protocol: hostile and broken
+//! inputs must always produce a one-line v1 error envelope
+//! (`{"protocol":1,"error":{"code":...,"message":...}}`) and must
+//! never panic the server, kill the connection, or desynchronize the
+//! line protocol. Also covers the bounded-queue backpressure path
+//! (`queue_full` + `retry_after_ms`).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -11,9 +13,18 @@ use fadiff::util::json::Json;
 
 fn start_server() -> (std::net::SocketAddr,
                       std::thread::JoinHandle<anyhow::Result<()>>) {
+    start_server_with(|_| {})
+}
+
+/// Start a server after applying `tune` to the coordinator (tests
+/// shrink the queue capacity to force backpressure deterministically).
+fn start_server_with(tune: impl FnOnce(&Coordinator))
+                     -> (std::net::SocketAddr,
+                         std::thread::JoinHandle<anyhow::Result<()>>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let coord = Coordinator::new(None, 1).unwrap();
+    tune(&coord);
     let t = std::thread::spawn(move || server::serve_on(listener, coord));
     (addr, t)
 }
@@ -38,48 +49,100 @@ fn send_once(addr: std::net::SocketAddr, body: &[u8]) -> String {
     line.trim().to_string()
 }
 
-fn assert_err_response(resp: &str) {
+/// Send one line on an existing connection, read one line back.
+fn ask(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>,
+       body: &str) -> String {
+    stream.write_all(body.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+/// Assert the v1 error envelope shape and return the error body.
+fn assert_err_response(resp: &str) -> Json {
     let j = Json::parse(resp)
         .unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"));
-    assert_eq!(j.get("ok").unwrap(), &Json::Bool(false), "{resp}");
-    assert!(j.get("error").unwrap().as_str().is_ok());
+    assert_eq!(j.get("protocol").unwrap().as_f64().unwrap(), 1.0,
+               "{resp}");
+    assert!(j.get("ok").is_err(),
+            "error envelopes must not carry ok: {resp}");
+    let e = j.get("error").unwrap();
+    let code = e.get("code").unwrap().as_str().unwrap();
+    assert!(!code.is_empty()
+            && code.chars()
+                   .all(|c| c.is_ascii_lowercase() || c == '_'),
+            "code must be stable snake_case: {resp}");
+    assert!(!e.get("message").unwrap().as_str().unwrap().is_empty(),
+            "{resp}");
+    e.clone()
+}
+
+fn assert_err_code(resp: &str, code: &str) {
+    let e = assert_err_response(resp);
+    assert_eq!(e.get("code").unwrap().as_str().unwrap(), code,
+               "{resp}");
+}
+
+fn assert_pong(resp: &str) {
+    let j = Json::parse(resp).unwrap();
+    assert_eq!(j.get("ok").unwrap().get("pong").unwrap(),
+               &Json::Bool(true), "{resp}");
 }
 
 #[test]
-fn malformed_requests_get_one_line_errors() {
+fn malformed_requests_get_one_line_coded_errors() {
     let (addr, t) = start_server();
-    for bad in [
-        "not json at all",
-        "{\"verb\":",
-        "{\"verb\": \"optimize\", \"method\": \"quantum\"}",
-        "{\"verb\": 42}",
-        "{\"verb\": \"frobnicate\"}",
-        "[]",
-        "[1, 2, 3]",
-        "null",
-        "123",
-        "\"just a string\"",
-        "{\"verb\": \"optimize\", \"workload\": \"not-a-net\"}",
-        "{\"verb\": \"optimize\", \"config\": \"not-a-config\", \
-         \"method\": \"random\", \"max_iters\": 1}",
-        "{\"verb\": \"optimize\", \"seconds\": \"fast\"}",
-        "{\"verb\": \"status\"}",
-        "{\"verb\": \"status\", \"job_id\": 99999}",
-        "{\"verb\": \"status\", \"job_id\": -3}",
-        "{\"verb\": \"status\", \"job_id\": 7.9}",
-        "{\"verb\": \"cancel\", \"job_id\": 1e300}",
-        "{\"verb\": \"cancel\", \"job_id\": 424242}",
-        "{\"verb\": \"sweep\", \"workloads\": []}",
-        "{\"verb\": \"sweep\", \"methods\": [\"ga\", \"quantum\"]}",
-        "{\"verb\": \"optimize\", \"workload_spec\": 42}",
-        "{\"verb\": \"optimize\", \"workload_spec\": {\"name\": \"x\", \
+    for (bad, code) in [
+        ("not json at all", "bad_request"),
+        ("{\"verb\":", "bad_request"),
+        ("{\"verb\": \"optimize\", \"method\": \"quantum\"}",
+         "bad_request"),
+        ("{\"verb\": 42}", "bad_request"),
+        ("{\"verb\": \"frobnicate\"}", "unknown_verb"),
+        ("[]", "bad_request"),
+        ("[1, 2, 3]", "bad_request"),
+        ("null", "bad_request"),
+        ("123", "bad_request"),
+        ("\"just a string\"", "bad_request"),
+        ("{\"verb\": \"optimize\", \"workload\": \"not-a-net\"}",
+         "unknown_workload"),
+        ("{\"verb\": \"optimize\", \"seconds\": \"fast\"}",
+         "bad_request"),
+        ("{\"verb\": \"status\"}", "bad_request"),
+        ("{\"verb\": \"status\", \"job_id\": 99999}", "job_not_found"),
+        ("{\"verb\": \"status\", \"job_id\": -3}", "bad_request"),
+        ("{\"verb\": \"status\", \"job_id\": 7.9}", "bad_request"),
+        ("{\"verb\": \"status\", \"job_id\": 1, \"watch\": \"yes\"}",
+         "bad_request"),
+        ("{\"verb\": \"cancel\", \"job_id\": 1e300}", "bad_request"),
+        ("{\"verb\": \"cancel\", \"job_id\": 424242}",
+         "job_not_found"),
+        ("{\"verb\": \"sweep\", \"workloads\": []}", "bad_request"),
+        ("{\"verb\": \"sweep\", \"methods\": [\"ga\", \"quantum\"]}",
+         "bad_request"),
+        ("{\"verb\": \"optimize\", \"workload_spec\": 42}",
+         "spec_invalid"),
+        ("{\"verb\": \"optimize\", \"workload_spec\": {\"name\": \"x\", \
          \"layers\": [{\"name\": \"a\", \"kind\": \"conv\", \
-         \"dims\": [1, 2, 3]}]}}",
-        "{\"verb\": \"workloads\", \"describe\": \"not-a-net\"}",
-        "{\"verb\": \"workloads\", \"describe\": 42}",
+         \"dims\": [1, 2, 3]}]}}", "spec_invalid"),
+        ("{\"verb\": \"workloads\", \"describe\": \"not-a-net\"}",
+         "unknown_workload"),
+        ("{\"verb\": \"workloads\", \"describe\": 42}", "bad_request"),
+        ("{\"verb\": \"ping\", \"v\": 0}", "unsupported_version"),
+        ("{\"verb\": \"ping\", \"v\": \"one\"}", "bad_request"),
     ] {
-        assert_err_response(&send_once(addr, bad.as_bytes()));
+        assert_err_code(&send_once(addr, bad.as_bytes()), code);
     }
+    // a config the job runner cannot load fails the job, not parsing
+    assert_err_code(
+        &send_once(
+            addr,
+            b"{\"verb\": \"optimize\", \"config\": \"not-a-config\", \
+               \"method\": \"random\", \"max_iters\": 1}",
+        ),
+        "internal",
+    );
     shutdown_server(addr, t);
 }
 
@@ -103,11 +166,10 @@ fn oversized_inline_specs_are_rejected_at_parse() {
         layers.join(",")
     );
     let resp = send_once(addr, body.as_bytes());
-    assert_err_response(&resp);
+    assert_err_code(&resp, "too_large");
     assert!(resp.contains("cap"), "{resp}");
     // the connection and the server survive; normal service resumes
-    let pong = send_once(addr, b"{\"verb\": \"ping\"}");
-    assert!(pong.contains("pong"), "{pong}");
+    assert_pong(&send_once(addr, b"{\"verb\": \"ping\"}"));
     shutdown_server(addr, t);
 }
 
@@ -116,22 +178,17 @@ fn connection_survives_a_barrage_of_garbage() {
     let (addr, t) = start_server();
     let mut stream = TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut ask = |body: &str| -> Json {
-        stream.write_all(body.as_bytes()).unwrap();
-        stream.write_all(b"\n").unwrap();
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        Json::parse(line.trim()).unwrap()
-    };
     for _ in 0..3 {
-        assert_eq!(ask("garbage").get("ok").unwrap(),
-                   &Json::Bool(false));
-        assert_eq!(ask("{\"verb\": \"nope\"}").get("ok").unwrap(),
-                   &Json::Bool(false));
+        assert_err_code(&ask(&mut stream, &mut reader, "garbage"),
+                        "bad_request");
+        assert_err_code(
+            &ask(&mut stream, &mut reader, "{\"verb\": \"nope\"}"),
+            "unknown_verb",
+        );
         // blank lines produce no response and do not desynchronize
         stream.write_all(b"\n   \n").unwrap();
-        let pong = ask("{\"verb\": \"ping\"}");
-        assert_eq!(pong.get("pong").unwrap(), &Json::Bool(true));
+        assert_pong(&ask(&mut stream, &mut reader,
+                         "{\"verb\": \"ping\"}"));
     }
     drop(stream);
     shutdown_server(addr, t);
@@ -142,16 +199,18 @@ fn deeply_nested_payloads_are_rejected_not_fatal() {
     let (addr, t) = start_server();
     let deep_arr = format!("{}1{}", "[".repeat(50_000),
                            "]".repeat(50_000));
-    assert_err_response(&send_once(addr, deep_arr.as_bytes()));
+    assert_err_code(&send_once(addr, deep_arr.as_bytes()),
+                    "bad_request");
     let deep_obj =
         "{\"a\":".repeat(50_000) + "1" + &"}".repeat(50_000);
-    assert_err_response(&send_once(addr, deep_obj.as_bytes()));
+    assert_err_code(&send_once(addr, deep_obj.as_bytes()),
+                    "bad_request");
     // a verb wrapped in legal-but-deep junk still answers
     let mixed = format!(
         "{{\"verb\": \"ping\", \"junk\": {}1{}}}",
         "[".repeat(200), "]".repeat(200)
     );
-    assert_err_response(&send_once(addr, mixed.as_bytes()));
+    assert_err_code(&send_once(addr, mixed.as_bytes()), "bad_request");
     shutdown_server(addr, t);
 }
 
@@ -167,14 +226,13 @@ fn oversized_lines_are_answered_and_drained() {
     stream.flush().unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
-    assert_err_response(line.trim());
+    assert_err_code(line.trim(), "too_large");
     assert!(line.contains("exceeds"), "{line}");
     // the same connection is immediately usable again
     stream.write_all(b"{\"verb\": \"ping\"}\n").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
-    let j = Json::parse(line.trim()).unwrap();
-    assert_eq!(j.get("pong").unwrap(), &Json::Bool(true));
+    assert_pong(line.trim());
     drop(stream);
     shutdown_server(addr, t);
 }
@@ -191,7 +249,7 @@ fn truncated_line_gets_an_answer_on_half_close() {
     let mut resp = String::new();
     BufReader::new(stream).read_to_string(&mut resp).unwrap();
     let first = resp.lines().next().unwrap_or("");
-    assert_err_response(first);
+    assert_err_code(first, "bad_request");
     shutdown_server(addr, t);
 }
 
@@ -203,13 +261,12 @@ fn invalid_utf8_degrades_to_json_error() {
     stream.write_all(b"\xff\xfe\xfd{\"verb\": \"ping\"}\n").unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
-    assert_err_response(line.trim());
+    assert_err_code(line.trim(), "bad_request");
     // connection still fine
     stream.write_all(b"{\"verb\": \"ping\"}\n").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
-    assert_eq!(Json::parse(line.trim()).unwrap().get("pong").unwrap(),
-               &Json::Bool(true));
+    assert_pong(line.trim());
     drop(stream);
     shutdown_server(addr, t);
 }
@@ -224,16 +281,92 @@ fn sweep_with_failing_cells_reports_per_job_errors() {
            \"methods\": [\"random\"], \"seeds\": [1], \
            \"seconds\": 3600, \"max_iters\": 8}",
     );
-    let j = Json::parse(&resp).unwrap();
-    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+    let env = Json::parse(&resp).unwrap();
+    let j = env.get("ok").unwrap();
     assert_eq!(j.get_f64("jobs").unwrap(), 2.0);
     assert_eq!(j.get_f64("completed").unwrap(), 1.0);
     assert_eq!(j.get_f64("failed").unwrap(), 1.0);
     let results = j.get("results").unwrap().as_arr().unwrap();
-    let oks: Vec<bool> = results
+    assert_eq!(results.len(), 2);
+    // cells reuse the envelope shape: exactly one of ok/error each
+    let ok_cell = results
         .iter()
-        .map(|r| r.get("ok").unwrap() == &Json::Bool(true))
-        .collect();
-    assert!(oks.contains(&true) && oks.contains(&false));
+        .find(|r| r.get("ok").is_ok())
+        .expect("one completed cell");
+    assert!(ok_cell.get("ok").unwrap().get_f64("edp").unwrap() > 0.0);
+    let err_cell = results
+        .iter()
+        .find(|r| r.get("error").is_ok())
+        .expect("one failed cell");
+    let e = err_cell.get("error").unwrap();
+    assert_eq!(e.get("code").unwrap().as_str().unwrap(),
+               "unknown_workload");
+    assert_eq!(e.get("workload").unwrap().as_str().unwrap(),
+               "not-a-net");
+    shutdown_server(addr, t);
+}
+
+#[test]
+fn flooded_queue_answers_queue_full_with_retry_hint() {
+    // capacity 1 on a 1-worker coordinator: one running + one queued
+    // is the most the server will hold
+    let (addr, t) = start_server_with(|c| c.set_queue_capacity(1));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let long_job = "{\"verb\": \"submit\", \"workload\": \"mobilenet\", \
+                    \"method\": \"random\", \"seconds\": 3600, \
+                    \"max_iters\": 1000000000000}";
+    // first job: picked up by the lone worker shortly after queueing
+    let a = Json::parse(&ask(&mut stream, &mut reader, long_job))
+        .unwrap();
+    let id_a = a.get("ok").unwrap().get_f64("job_id").unwrap() as u64;
+    // wait for the worker to take it so the queue is empty again
+    let t0 = std::time::Instant::now();
+    loop {
+        let st = Json::parse(&ask(
+            &mut stream, &mut reader,
+            &format!("{{\"verb\": \"status\", \"job_id\": {id_a}}}"),
+        ))
+        .unwrap();
+        let s = st.get("ok").unwrap().get("status").unwrap()
+            .as_str().unwrap().to_string();
+        if s == "running" {
+            break;
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_secs(30),
+                "job never started");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    // second job fills the queue's single slot...
+    let b = Json::parse(&ask(&mut stream, &mut reader, long_job))
+        .unwrap();
+    let id_b = b.get("ok").unwrap().get_f64("job_id").unwrap() as u64;
+    // ...so the third submission must backpressure, with a hint
+    let full = ask(&mut stream, &mut reader, long_job);
+    assert_err_code(&full, "queue_full");
+    let e = Json::parse(&full).unwrap().get("error").unwrap().clone();
+    let retry = e.get_f64("retry_after_ms").unwrap();
+    assert!((100.0..=10_000.0).contains(&retry), "{full}");
+    assert_eq!(e.get_f64("queue_capacity").unwrap(), 1.0);
+    // a sweep larger than the remaining room is rejected whole
+    assert_err_code(
+        &ask(&mut stream, &mut reader,
+             "{\"verb\": \"sweep\", \"workload\": \"mobilenet\", \
+              \"methods\": [\"random\"], \"seeds\": [1, 2, 3], \
+              \"seconds\": 3600, \"max_iters\": 4}"),
+        "queue_full",
+    );
+    // non-queueing verbs still serve under backpressure
+    assert_pong(&ask(&mut stream, &mut reader, "{\"verb\": \"ping\"}"));
+    // drain: cancel both jobs so shutdown is quick
+    for id in [id_b, id_a] {
+        let c = Json::parse(&ask(
+            &mut stream, &mut reader,
+            &format!("{{\"verb\": \"cancel\", \"job_id\": {id}}}"),
+        ))
+        .unwrap();
+        assert!(c.get("ok").is_ok(), "{c:?}");
+    }
+    drop(stream);
     shutdown_server(addr, t);
 }
