@@ -382,6 +382,7 @@ fn main() {
         seed,
         chains: 0,
         spec: None,
+        force: false,
     };
     let t0 = std::time::Instant::now();
     let mut fleet_evals = 0usize;

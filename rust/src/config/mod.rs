@@ -85,6 +85,28 @@ impl HwConfig {
         (self.pe_rows * self.pe_cols) as f64
     }
 
+    /// Content fingerprint (FNV-1a 64, 16 hex digits) over every
+    /// cost-model-relevant field — the exact bits of each float, in a
+    /// fixed order. The cosmetic `name` is excluded: two configs with
+    /// identical parameters are the same hardware, and a renamed (or
+    /// edited-under-the-same-name) config can never alias another's
+    /// persisted results in the result store.
+    pub fn fingerprint(&self) -> String {
+        let mut text = format!("{}|{}", self.pe_rows, self.pe_cols);
+        for x in [self.c1_bytes, self.c2_bytes, self.bw_dram,
+                  self.bw_l2, self.bw_l1, self.epa_dram, self.epa_l2,
+                  self.epa_l1, self.epa_reg, self.energy_per_mac,
+                  self.element_bytes, self.acc_bytes] {
+            text.push_str(&format!("|{:016x}", x.to_bits()));
+        }
+        let mut hash: u64 = 0xCBF2_9CE4_8422_2325;
+        for &b in text.as_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        format!("{hash:016x}")
+    }
+
     /// Pack into the `hw` input vector of the AOT artifacts.
     pub fn to_hw_vector(&self) -> Vec<f32> {
         let mut v = vec![0f32; hwvec::NHW];

@@ -43,6 +43,7 @@ pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
+pub mod store;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -67,6 +68,7 @@ use crate::workload::{spec, zoo, Workload};
 pub use metrics::Metrics;
 pub use registry::CacheRegistry;
 pub use scheduler::FleetScheduler;
+pub use store::ResultStore;
 
 /// Default bound on queued-but-not-started jobs. The server answers
 /// `queue_full` (with a `retry_after_ms` hint) instead of queueing
@@ -141,6 +143,12 @@ pub struct JobRequest {
     /// the `workload` name lookup entirely; evaluation caches key on
     /// the spec's content fingerprint (see [`JobRequest::cache_key`]).
     pub spec: Option<Arc<Workload>>,
+    /// Bypass the persistent result store's exact-key hit for this
+    /// job: search fresh even when a stored result exists (the fresh
+    /// result still records back on improvement). The protocol's
+    /// `force` parameter / the CLI's `--force` switch; meaningless
+    /// without a store.
+    pub force: bool,
 }
 
 impl Default for JobRequest {
@@ -154,6 +162,7 @@ impl Default for JobRequest {
             seed: 0xFAD1FF,
             chains: 0,
             spec: None,
+            force: false,
         }
     }
 }
@@ -202,6 +211,10 @@ pub struct JobResult {
     pub evals: usize,
     /// Wall-clock job duration.
     pub wall_seconds: f64,
+    /// Whether this result was served from the persistent result
+    /// store (re-verified against the live cost model, no search run);
+    /// `iters`/`evals` then report the original search's effort.
+    pub stored: bool,
 }
 
 /// Lifecycle of a tracked job (see [`Coordinator::submit_tracked`]).
@@ -332,6 +345,12 @@ impl JobTable {
             .get(&id)
             .map(|j| Arc::clone(&j.progress))
     }
+
+    /// Test hook: drop an entry outright, as pruning would.
+    #[cfg(test)]
+    fn remove(&self, id: u64) {
+        self.jobs.lock().unwrap().remove(&id);
+    }
 }
 
 struct Envelope {
@@ -352,6 +371,7 @@ pub struct Coordinator {
     registry: Arc<CacheRegistry>,
     eval_pool: Arc<ThreadPool>,
     scheduler: Arc<FleetScheduler>,
+    store: Option<Arc<ResultStore>>,
     jobs: Arc<JobTable>,
     queue_depth: Arc<AtomicUsize>,
     queue_capacity: AtomicUsize,
@@ -365,8 +385,23 @@ impl Coordinator {
     /// fall back to the native differentiable backend.
     pub fn new(artifacts_dir: Option<PathBuf>, n_workers: usize)
                -> Result<Coordinator> {
+        Coordinator::new_with_store(artifacts_dir, n_workers, None)
+    }
+
+    /// [`Coordinator::new`] with a persistent result store rooted at
+    /// `store_dir` (the CLI's `--store-dir`): results and eval-cache
+    /// segments persist there, so a restarted (or second) coordinator
+    /// on the same directory serves previously-solved requests warm.
+    pub fn new_with_store(artifacts_dir: Option<PathBuf>,
+                          n_workers: usize,
+                          store_dir: Option<PathBuf>)
+                          -> Result<Coordinator> {
         let dir = artifacts_dir
             .unwrap_or_else(|| repo_root().join("artifacts"));
+        let store = match store_dir {
+            Some(sd) => Some(Arc::new(ResultStore::open(&sd)?)),
+            None => None,
+        };
         // Same usability contract as tests/benches: artifacts must
         // exist AND compile (a stub xla crate fails here too). Under a
         // real backend this deliberately spends one grad-artifact
@@ -383,7 +418,10 @@ impl Coordinator {
         let (tx, rx) = channel::<Envelope>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
-        let registry = Arc::new(CacheRegistry::default());
+        let registry =
+            Arc::new(CacheRegistry::with_store(
+                registry::DEFAULT_REGISTRY_CAPACITY,
+                store.clone()));
         let jobs = Arc::new(JobTable::default());
         // one persistent evaluation pool shared by every worker's
         // engines: batches scoped-submit here instead of spawning
@@ -407,14 +445,15 @@ impl Coordinator {
                 let registry = Arc::clone(&registry);
                 let eval_pool = Arc::clone(&eval_pool);
                 let scheduler = Arc::clone(&scheduler);
+                let store = store.clone();
                 let jobs = Arc::clone(&jobs);
                 let queue_depth = Arc::clone(&queue_depth);
                 std::thread::Builder::new()
                     .name(format!("fadiff-coord-{i}"))
                     .spawn(move || {
                         worker_loop(&dir, &rx, &metrics, &registry,
-                                    &eval_pool, &scheduler, &jobs,
-                                    &queue_depth)
+                                    &eval_pool, &scheduler, &store,
+                                    &jobs, &queue_depth)
                     })
                     .expect("spawn coordinator worker")
             })
@@ -426,6 +465,7 @@ impl Coordinator {
             registry,
             eval_pool,
             scheduler,
+            store,
             jobs,
             queue_depth,
             queue_capacity: AtomicUsize::new(DEFAULT_QUEUE_CAPACITY),
@@ -539,6 +579,11 @@ impl Coordinator {
         &self.scheduler
     }
 
+    /// The persistent result store, when serving with `--store-dir`.
+    pub fn store(&self) -> Option<&Arc<ResultStore>> {
+        self.store.as_ref()
+    }
+
     /// Jobs queued but not yet picked up by a worker.
     pub fn queue_depth(&self) -> usize {
         self.queue_depth.load(Ordering::SeqCst)
@@ -561,6 +606,14 @@ impl Coordinator {
     /// `None` for ids never issued or pruned.
     pub fn job_progress(&self, id: u64) -> Option<ProgressSnapshot> {
         self.jobs.progress(id).map(|p| p.snapshot())
+    }
+
+    /// Test hook: make a tracked id unknown, as table pruning would
+    /// (races the server's `status` verb in the TOCTOU regression
+    /// test).
+    #[cfg(test)]
+    pub(crate) fn forget_job(&self, id: u64) {
+        self.jobs.remove(id);
     }
 
     /// Seconds since this coordinator started serving.
@@ -590,6 +643,15 @@ impl Coordinator {
             );
             map.insert("workers".into(),
                        Json::Num(self.n_workers() as f64));
+            map.insert(
+                "store".into(),
+                match &self.store {
+                    Some(st) => st.stats_json(),
+                    None => obj(vec![
+                        ("enabled", Json::Bool(false)),
+                    ]),
+                },
+            );
             let uptime = self.uptime_seconds();
             let evals = self.metrics.evals.load(Ordering::SeqCst);
             let gsteps =
@@ -617,6 +679,9 @@ impl Drop for Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // workers are quiesced: flush dirty eval-cache segments so the
+        // next process on this store dir starts warm
+        self.registry.flush_all();
     }
 }
 
@@ -625,7 +690,8 @@ fn worker_loop(dir: &std::path::Path,
                rx: &Arc<Mutex<Receiver<Envelope>>>,
                metrics: &Arc<Metrics>, registry: &Arc<CacheRegistry>,
                eval_pool: &Arc<ThreadPool>,
-               scheduler: &Arc<FleetScheduler>, jobs: &Arc<JobTable>,
+               scheduler: &Arc<FleetScheduler>,
+               store: &Option<Arc<ResultStore>>, jobs: &Arc<JobTable>,
                queue_depth: &Arc<AtomicUsize>) {
     // One PJRT runtime per worker; artifacts compile lazily on the
     // first gradient job so native-only service pays no startup
@@ -669,18 +735,26 @@ fn worker_loop(dir: &std::path::Path,
             cancel: Some(Arc::clone(&cancel)),
             fleet: Some(Arc::clone(scheduler)),
             progress: Some(progress),
+            store: store.clone(),
         };
         let out = execute_job_ctx(rt.as_ref(), &req, &ctx)
             .map_err(|e| e.to_string());
         if let Ok(r) = &out {
-            metrics.evals.fetch_add(r.evals as u64, Ordering::SeqCst);
-            // for the gradient methods `iters` counts inner gradient
-            // steps (summed across parallel chains)
-            if matches!(r.request.method, Method::FADiff | Method::Dosa)
-            {
+            // a stored result reports the *original* run's effort —
+            // nothing was evaluated now, so throughput counters skip it
+            if !r.stored {
                 metrics
-                    .grad_steps
-                    .fetch_add(r.iters as u64, Ordering::SeqCst);
+                    .evals
+                    .fetch_add(r.evals as u64, Ordering::SeqCst);
+                // for the gradient methods `iters` counts inner
+                // gradient steps (summed across parallel chains)
+                if matches!(r.request.method,
+                            Method::FADiff | Method::Dosa)
+                {
+                    metrics
+                        .grad_steps
+                        .fetch_add(r.iters as u64, Ordering::SeqCst);
+                }
             }
         }
         let was_cancelled = cancel.load(Ordering::SeqCst);
@@ -730,6 +804,10 @@ pub struct JobCtx<'c> {
     pub fleet: Option<Arc<FleetScheduler>>,
     /// Live progress sink for `status {"watch": true}` streams.
     pub progress: Option<Arc<SearchProgress>>,
+    /// Persistent result store: exact-key result hits are served from
+    /// it (re-verified), improvements record back, and the pair's eval
+    /// cache hydrates from its persisted segment.
+    pub store: Option<Arc<ResultStore>>,
 }
 
 impl JobCtx<'_> {
@@ -739,7 +817,8 @@ impl JobCtx<'_> {
         EvalCtx {
             cache: self
                 .registry
-                .map(|r| r.cache_for(&cache_key, &req.config)),
+                .map(|r| r.cache_for_job(&cache_key, &req.config,
+                                         resolved, hw)),
             pool: self.pool.clone(),
             cancel: self.cancel.clone(),
             fleet: self.fleet.as_ref().map(|s| FleetHandle {
@@ -810,11 +889,57 @@ pub fn execute_job(rt: Option<&Runtime>, req: &JobRequest)
     execute_job_ctx(rt, req, &JobCtx::default())
 }
 
+/// Reconstruct and re-verify a stored result against the live cost
+/// model: the strategy must decode, be feasible, and reproduce the
+/// stored energy/latency/EDP bit-for-bit. `None` means "do not trust
+/// it" — the caller drops the entry and searches cold.
+fn stored_job_result(sr: &store::StoredResult, req: &JobRequest,
+                     w: &Workload, hw: &HwConfig,
+                     t0: std::time::Instant) -> Option<JobResult> {
+    let strat = sr.strategy()?;
+    if strat.mappings.len() != w.len() {
+        return None;
+    }
+    let e = crate::search::eval::compute_eval(&strat, w, hw);
+    let same = e.feasible
+        && e.energy.to_bits() == sr.energy.to_bits()
+        && e.latency.to_bits() == sr.latency.to_bits()
+        && e.edp.to_bits() == sr.edp.to_bits();
+    if !same {
+        return None;
+    }
+    let groups = strat.groups();
+    let fused_names = groups
+        .iter()
+        .filter(|(a, b)| b > a)
+        .map(|&(a, b)| {
+            w.layers[a..=b].iter().map(|l| l.name.clone()).collect()
+        })
+        .collect();
+    Some(JobResult {
+        request: req.clone(),
+        edp: sr.edp,
+        full_model_edp: sr.edp * w.replicas * w.replicas,
+        energy: sr.energy,
+        latency: sr.latency,
+        groups,
+        fused_names,
+        iters: sr.iters,
+        evals: sr.evals,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        stored: true,
+    })
+}
+
 /// [`execute_job`] with a serving context: native methods pick up the
 /// shared cache for the job's `(workload, config)` pair, batch on the
-/// persistent pool, and poll the cancel flag between batches.
+/// persistent pool, and poll the cancel flag between batches. With a
+/// store in the context, an exact-key stored result short-circuits the
+/// search entirely (unless the request sets `force`), and a fresh
+/// result records back on improvement.
 pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
                        ctx: &JobCtx) -> Result<JobResult> {
+    let t0 = std::time::Instant::now();
     let w_arc: Arc<Workload> = match &req.spec {
         Some(inline) => Arc::clone(inline),
         None => Arc::new(resolve_workload(&req.workload)?),
@@ -822,9 +947,29 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     let w: &Workload = &w_arc;
     let hw_arc = Arc::new(load_config(&repo_root(), &req.config)?);
     let hw: &HwConfig = &hw_arc;
+    let store_key = ctx.store.as_ref().map(|_| {
+        ResultStore::result_key(&spec::fingerprint(w),
+                                &hw.fingerprint(), req)
+    });
+    if let (Some(st), Some(key), false) =
+        (&ctx.store, &store_key, req.force)
+    {
+        if let Some(sr) = st.load_result(key) {
+            match stored_job_result(&sr, req, w, hw, t0) {
+                Some(jr) => {
+                    st.stats()
+                        .result_hits
+                        .fetch_add(1, Ordering::SeqCst);
+                    return Ok(jr);
+                }
+                // digest-valid but unreproducible (e.g. a cost-model
+                // drift): drop it and fall through to a cold search
+                None => st.reject_result(key),
+            }
+        }
+    }
     let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
     let ectx = ctx.eval_ctx(req, &w_arc, &hw_arc);
-    let t0 = std::time::Instant::now();
     let r: SearchResult = match req.method {
         Method::FADiff => gradient::optimize_ctx(
             rt, w, &hw,
@@ -852,6 +997,18 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     // final safety: the result must be hardware-valid
     costmodel::feasible(&r.best, w, &hw)
         .map_err(|e| anyhow!("coordinator produced invalid strategy: {e}"))?;
+    if let (Some(st), Some(key)) = (&ctx.store, &store_key) {
+        // a cancelled job's partial best is served to its caller but
+        // never recorded: the stored incumbent for a key must always
+        // be a full run of that key's budget
+        let cancelled = ctx
+            .cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::SeqCst));
+        if !cancelled {
+            st.record_result(key, &store::StoredResult::of(&r));
+        }
+    }
     let groups = r.best.groups();
     let fused_names = groups
         .iter()
@@ -871,6 +1028,7 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         iters: r.iters,
         evals: r.evals,
         wall_seconds: t0.elapsed().as_secs_f64(),
+        stored: false,
     })
 }
 

@@ -19,8 +19,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::store::{self, ResultStore};
+use crate::config::HwConfig;
 use crate::search::EvalCache;
 use crate::util::json::{num, obj, Json};
+use crate::workload::{spec, Workload};
 
 /// Default bound on distinct `(workload, config)` caches. Each cache is
 /// itself bounded (see [`crate::search::eval::DEFAULT_CACHE_CAPACITY`]),
@@ -30,13 +33,25 @@ pub const DEFAULT_REGISTRY_CAPACITY: usize = 32;
 struct Entry {
     cache: Arc<EvalCache>,
     last_used: u64,
+    /// Persistent-segment key, once known (set by the job path, which
+    /// has the resolved workload/hardware to fingerprint).
+    seg_key: Option<String>,
+    /// `cache.misses()` at hydration / last flush: the cache is dirty
+    /// (worth flushing) exactly when misses have grown past this.
+    base_misses: u64,
 }
 
 /// Bounded LRU map of `(workload, config)` -> shared [`EvalCache`].
+///
+/// With a [`ResultStore`] attached, pairs hydrate from their persisted
+/// eval-cache segment on first use and flush dirty segments on LRU
+/// eviction and at coordinator shutdown ([`CacheRegistry::flush_all`])
+/// — a restarted process starts warm instead of cold.
 pub struct CacheRegistry {
     capacity: usize,
     entries: Mutex<HashMap<(String, String), Entry>>,
     clock: AtomicU64,
+    store: Option<Arc<ResultStore>>,
     // counters folded in from evicted pairs so totals stay monotone
     retired_hits: AtomicU64,
     retired_misses: AtomicU64,
@@ -45,12 +60,22 @@ pub struct CacheRegistry {
 }
 
 impl CacheRegistry {
-    /// Registry bounded at `capacity` distinct pairs (min 1).
+    /// Registry bounded at `capacity` distinct pairs (min 1), with no
+    /// persistence.
     pub fn new(capacity: usize) -> CacheRegistry {
+        CacheRegistry::with_store(capacity, None)
+    }
+
+    /// Registry bounded at `capacity` distinct pairs (min 1) that
+    /// hydrates from / flushes to `store` when one is given.
+    pub fn with_store(capacity: usize,
+                      store: Option<Arc<ResultStore>>)
+                      -> CacheRegistry {
         CacheRegistry {
             capacity: capacity.max(1),
             entries: Mutex::new(HashMap::new()),
             clock: AtomicU64::new(0),
+            store,
             retired_hits: AtomicU64::new(0),
             retired_misses: AtomicU64::new(0),
             retired_evictions: AtomicU64::new(0),
@@ -60,14 +85,45 @@ impl CacheRegistry {
 
     /// The shared cache for `(workload, config)`, created on first use.
     /// Marks the pair most-recently-used; may evict the LRU pair when
-    /// the registry is at capacity.
+    /// the registry is at capacity. Never hydrates (callers without
+    /// the resolved workload cannot verify a segment); the job path
+    /// uses [`CacheRegistry::cache_for_job`].
     pub fn cache_for(&self, workload: &str, config: &str)
                      -> Arc<EvalCache> {
+        self.cache_for_inner(workload, config, None)
+    }
+
+    /// [`CacheRegistry::cache_for`] for the job execution path: on
+    /// first use of a pair, its persisted eval-cache segment (keyed by
+    /// the *content* fingerprints of `w` and `hw`) is loaded,
+    /// sample-verified against the live cost model, and preloaded into
+    /// the fresh cache — a failed verification drops the segment and
+    /// starts cold instead of serving foreign or drifted evaluations.
+    pub fn cache_for_job(&self, workload: &str, config: &str,
+                         w: &Workload, hw: &HwConfig)
+                         -> Arc<EvalCache> {
+        let seg_key = self.store.as_ref().map(|_| {
+            ResultStore::segment_key(&spec::fingerprint(w),
+                                     &hw.fingerprint())
+        });
+        self.cache_for_inner(workload, config,
+                             seg_key.map(|k| (k, w, hw)))
+    }
+
+    fn cache_for_inner(&self, workload: &str, config: &str,
+                       hydrate: Option<(String, &Workload,
+                                        &HwConfig)>)
+                       -> Arc<EvalCache> {
         let stamp = self.clock.fetch_add(1, Ordering::SeqCst) + 1;
         let key = (workload.to_string(), config.to_string());
         let mut entries = self.entries.lock().unwrap();
         if let Some(e) = entries.get_mut(&key) {
             e.last_used = stamp;
+            if e.seg_key.is_none() {
+                // created via cache_for; adopt the segment key so the
+                // pair still flushes on eviction/shutdown
+                e.seg_key = hydrate.map(|(k, _, _)| k);
+            }
             return Arc::clone(&e.cache);
         }
         if entries.len() >= self.capacity {
@@ -76,7 +132,8 @@ impl CacheRegistry {
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             if let Some(k) = lru {
-                if let Some(e) = entries.remove(&k) {
+                if let Some(mut e) = entries.remove(&k) {
+                    self.flush_entry(&mut e);
                     self.retired_hits
                         .fetch_add(e.cache.hits(), Ordering::Relaxed);
                     self.retired_misses
@@ -89,9 +146,64 @@ impl CacheRegistry {
             }
         }
         let cache = Arc::new(EvalCache::default());
+        let mut seg_key = None;
+        if let (Some(store), Some((sk, w, hw))) =
+            (&self.store, hydrate)
+        {
+            if let Some(seg) = store.load_segment(&sk) {
+                if store::verify_segment_sample(&seg, w, hw) {
+                    cache.preload(seg);
+                    store
+                        .stats()
+                        .hydrations
+                        .fetch_add(1, Ordering::SeqCst);
+                } else {
+                    store.reject_segment(&sk);
+                }
+            }
+            seg_key = Some(sk);
+        }
         entries.insert(key, Entry { cache: Arc::clone(&cache),
-                                    last_used: stamp });
+                                    last_used: stamp,
+                                    seg_key,
+                                    base_misses: 0 });
         cache
+    }
+
+    /// Flush a pair's eval cache to its persistent segment if it is
+    /// dirty (has computed anything since hydration / its last flush).
+    fn flush_entry(&self, e: &mut Entry) {
+        let (Some(store), Some(seg_key)) = (&self.store, &e.seg_key)
+        else {
+            return;
+        };
+        let misses = e.cache.misses();
+        if misses <= e.base_misses {
+            return; // nothing new computed since the last flush
+        }
+        let exported = e.cache.export_entries();
+        if !exported.is_empty()
+            && store.save_segment(seg_key, &exported)
+        {
+            e.base_misses = misses;
+        }
+    }
+
+    /// Flush every dirty pair to the store (coordinator shutdown).
+    /// No-op without a store.
+    pub fn flush_all(&self) {
+        if self.store.is_none() {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        for e in entries.values_mut() {
+            self.flush_entry(e);
+        }
+    }
+
+    /// The attached persistent store, if any.
+    pub fn store(&self) -> Option<&Arc<ResultStore>> {
+        self.store.as_ref()
     }
 
     /// Distinct pairs currently registered.

@@ -75,6 +75,23 @@ impl SchedStats {
         slot.fetch_max(v, Ordering::Relaxed);
     }
 
+    /// Count one arrival, then run `send`. The increment happens
+    /// *before* the send: a successful send makes the item visible to
+    /// the scheduler thread immediately, so the [`SchedStats::items`]
+    /// contract ("counted at enqueue") requires the counter to already
+    /// include it — incrementing after the send (the old order) let a
+    /// test wait for N arrivals, release the scheduler, and still race
+    /// the count. A failed send undoes the increment, so shutdown
+    /// never inflates arrivals.
+    fn send_counted(&self, send: impl FnOnce() -> bool) -> bool {
+        self.items.fetch_add(1, Ordering::Relaxed);
+        let sent = send();
+        if !sent {
+            self.items.fetch_sub(1, Ordering::Relaxed);
+        }
+        sent
+    }
+
     /// The `scheduler` block of the `metrics` verb.
     pub fn to_json(&self) -> Json {
         obj(vec![
@@ -168,14 +185,15 @@ impl EvalBackend for FleetScheduler {
             strategies,
             reply,
         };
-        let sent = match &*self.tx.lock().unwrap() {
-            Some(tx) => tx.send(item).is_ok(),
-            None => false,
-        };
+        let sent = self.stats.send_counted(|| {
+            match &*self.tx.lock().unwrap() {
+                Some(tx) => tx.send(item).is_ok(),
+                None => false,
+            }
+        });
         if !sent {
             return Vec::new();
         }
-        self.stats.items.fetch_add(1, Ordering::Relaxed);
         rx.wait().unwrap_or_default()
     }
 }
@@ -393,6 +411,31 @@ mod tests {
         assert_eq!(st.passes.load(Ordering::Relaxed), 2);
         assert_eq!(st.merged_passes.load(Ordering::Relaxed), 0,
                    "distinct pairs must not merge");
+    }
+
+    #[test]
+    fn items_are_counted_at_enqueue_not_after() {
+        let stats = SchedStats::default();
+        let seen_during_send = std::cell::Cell::new(u64::MAX);
+        let sent = stats.send_counted(|| {
+            // the arrival must already be in the counter while the
+            // send runs (pre-fix, the increment came after the send
+            // and this observed 0)
+            seen_during_send.set(stats.items.load(Ordering::Relaxed));
+            true
+        });
+        assert!(sent);
+        assert_eq!(seen_during_send.get(), 1,
+                   "arrival must be counted at enqueue, not after");
+        assert_eq!(stats.items.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn failed_send_restores_the_item_count() {
+        let stats = SchedStats::default();
+        assert!(!stats.send_counted(|| false));
+        assert_eq!(stats.items.load(Ordering::Relaxed), 0,
+                   "a rejected item is not an arrival");
     }
 
     #[test]

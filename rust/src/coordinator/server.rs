@@ -104,9 +104,9 @@ const WATCH_PROGRESS_EVERY: Duration = Duration::from_millis(25);
 
 /// Every verb this server answers, sorted (the `unknown_verb` error
 /// lists these so clients can discover the surface).
-pub const SUPPORTED_VERBS: [&str; 9] = [
+pub const SUPPORTED_VERBS: [&str; 10] = [
     "cancel", "metrics", "optimize", "ping", "shutdown", "status",
-    "submit", "sweep", "workloads",
+    "store", "submit", "sweep", "workloads",
 ];
 
 // ---------------------------------------------------------------------
@@ -189,6 +189,21 @@ impl WireError {
     fn bad(message: impl Into<String>) -> WireError {
         WireError::new(ErrorCode::BadRequest, message)
     }
+
+    /// The `{"code": ..., "message": ..., ...extras}` body this error
+    /// serializes to — the one place that layout exists, shared by the
+    /// top-level error envelope ([`Response::err`]) and the per-cell
+    /// error entries of a `sweep` response.
+    pub fn body(&self) -> Json {
+        let mut fields = vec![
+            ("code", js(self.code.as_str())),
+            ("message", js(&self.message)),
+        ];
+        for (k, v) in &self.extra {
+            fields.push((k, v.clone()));
+        }
+        obj(fields)
+    }
 }
 
 impl std::fmt::Display for WireError {
@@ -212,16 +227,9 @@ impl Response {
 
     /// `{"protocol": 1, "error": {"code": ..., "message": ..., ...}}`
     pub fn err(e: &WireError) -> Json {
-        let mut fields = vec![
-            ("code", js(e.code.as_str())),
-            ("message", js(&e.message)),
-        ];
-        for (k, v) in &e.extra {
-            fields.push((k, v.clone()));
-        }
         obj(vec![
             ("protocol", num(PROTOCOL_VERSION as f64)),
-            ("error", obj(fields)),
+            ("error", e.body()),
         ])
     }
 }
@@ -234,9 +242,31 @@ fn field<T>(r: Result<T>) -> WireResult<T> {
 
 /// Classify an inline-spec failure: size caps are `too_large`,
 /// everything else is `spec_invalid`.
+///
+/// Both caps are matched on *sentinel-anchored* shapes — the byte cap
+/// by its fixed head, the layer cap by a digit head plus the exact cap
+/// tail — never by substring search over the whole message. Spec
+/// messages embed user-controlled text (layer names render `{:?}`-
+/// quoted, so a name can never terminate the message unquoted), and a
+/// crafted name containing "exceeds the cap" must stay `spec_invalid`.
 fn spec_error(e: anyhow::Error) -> WireError {
     let msg = e.to_string();
-    let code = if msg.contains("exceeds the cap") {
+    // the byte cap fires before spec parsing, so its head is fixed:
+    // "workload_spec of <n> bytes exceeds the cap of <cap>"
+    let byte_cap = msg.starts_with("workload_spec of ");
+    // the layer cap is wrapped by parse_inline:
+    // "workload_spec: <n> layers exceed the cap of <cap>"
+    let layer_cap = msg
+        .strip_prefix("workload_spec: ")
+        .is_some_and(|inner| {
+            inner.as_bytes().first().is_some_and(|b| {
+                b.is_ascii_digit()
+            }) && inner.ends_with(&format!(
+                "layers exceed the cap of {}",
+                spec::MAX_SPEC_LAYERS
+            ))
+        });
+    let code = if byte_cap || layer_cap {
         ErrorCode::TooLarge
     } else {
         ErrorCode::SpecInvalid
@@ -245,10 +275,17 @@ fn spec_error(e: anyhow::Error) -> WireError {
 }
 
 /// Classify a job-outcome error string for `optimize` replies.
+///
+/// Matches are anchored to the non-user-controlled head of each
+/// message: cancellation is the exact literal the job layer produces,
+/// and the unknown-workload head ends at the opening quote of the
+/// `{:?}`-rendered name — a workload *named* "job cancelled" reports
+/// `unknown_workload`, and a crafted message embedding either phrase
+/// deeper in user text stays `internal`.
 fn job_error(msg: &str) -> WireError {
-    let code = if msg.contains("job cancelled") {
+    let code = if msg == "job cancelled" {
         ErrorCode::Cancelled
-    } else if msg.starts_with("unknown workload") {
+    } else if msg.starts_with("unknown workload ") {
         ErrorCode::UnknownWorkload
     } else {
         ErrorCode::Internal
@@ -298,6 +335,14 @@ pub fn parse_request(j: &Json) -> WireResult<JobRequest> {
         let w = spec::parse_inline(spec_j).map_err(spec_error)?;
         req.workload = w.name.clone();
         req.spec = Some(Arc::new(w));
+    }
+    if let Ok(f) = j.get("force") {
+        match f {
+            Json::Bool(b) => req.force = *b,
+            _ => {
+                return Err(WireError::bad("force must be a boolean"))
+            }
+        }
     }
     Ok(req)
 }
@@ -367,6 +412,7 @@ pub fn parse_sweep(j: &Json) -> WireResult<Vec<JobRequest>> {
                     seed,
                     chains: base.chains,
                     spec: base.spec.clone(),
+                    force: base.force,
                 });
             }
         }
@@ -455,6 +501,7 @@ pub fn result_to_json(r: &JobResult) -> Json {
         ("iters", num(r.iters as f64)),
         ("evals", num(r.evals as f64)),
         ("wall_seconds", num(r.wall_seconds)),
+        ("stored", Json::Bool(r.stored)),
     ])
 }
 
@@ -689,13 +736,16 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
                     ))
                 }
             };
-            if coord.job_status(id).is_none() {
+            // single lookup: a second one after the existence check
+            // could race a job-table eviction and panic (the old
+            // check-then-unwrap pattern did exactly that)
+            let Some((status, result)) = coord.job_status(id) else {
                 return reply_err(
                     WireError::new(ErrorCode::JobNotFound,
                                    format!("unknown job id {id}"))
                         .with("job_id", num(id as f64)),
                 );
-            }
+            };
             if watch {
                 return Step::Enter(Mode::Watch(WatchWait {
                     job_id: id,
@@ -704,7 +754,6 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
                     last_progress: None,
                 }));
             }
-            let (status, result) = coord.job_status(id).unwrap();
             let mut fields = vec![
                 ("job_id", num(id as f64)),
                 ("status", js(status.name())),
@@ -761,6 +810,13 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
                 completed: 0,
                 failed: 0,
             }))
+        }
+        "store" => {
+            let payload = match coord.store() {
+                Some(st) => st.stats_json(),
+                None => obj(vec![("enabled", Json::Bool(false))]),
+            };
+            Step::Reply(Response::ok(obj(vec![("store", payload)])))
         }
         "workloads" => Step::Reply(run_workloads(&j)),
         other => reply_err(
@@ -1072,14 +1128,7 @@ impl Conn {
                         .with("config", js(&req.config))
                         .with("method", js(req.method.name()))
                         .with("seed", num(req.seed as f64));
-                    let mut fields = vec![
-                        ("code", js(e.code.as_str())),
-                        ("message", js(&e.message)),
-                    ];
-                    for (k, v) in &e.extra {
-                        fields.push((k, v.clone()));
-                    }
-                    obj(vec![("error", obj(fields))])
+                    obj(vec![("error", e.body())])
                 }
             };
             wait.results.push(entry);
@@ -1501,5 +1550,147 @@ mod tests {
         assert_eq!(err.code, ErrorCode::UnknownWorkload);
         let good = JobRequest::default(); // resnet18
         assert!(validate_workloads(std::slice::from_ref(&good)).is_ok());
+    }
+
+    #[test]
+    fn job_error_is_not_fooled_by_embedded_user_text() {
+        // a workload *named* "job cancelled": the {:?}-quoted name sits
+        // after the anchored head, so the class stays unknown_workload
+        let e = job_error(
+            "unknown workload \"job cancelled\" (not a zoo model or a \
+             data/workloads/*.json spec)");
+        assert_eq!(e.code, ErrorCode::UnknownWorkload);
+        // either phrase embedded deeper in a message is not a match
+        assert_eq!(
+            job_error("stage failed: job cancelled by peer").code,
+            ErrorCode::Internal);
+        assert_eq!(
+            job_error("io error in unknown workload scan").code,
+            ErrorCode::Internal);
+        // and the cancellation literal must match exactly, not by
+        // prefix
+        assert_eq!(job_error("job cancelled the lease").code,
+                   ErrorCode::Internal);
+    }
+
+    #[test]
+    fn spec_error_caps_match_on_shape_not_substring() {
+        use anyhow::anyhow;
+        let byte_cap = spec_error(anyhow!(
+            "workload_spec of 99999 bytes exceeds the cap of 65536"));
+        assert_eq!(byte_cap.code, ErrorCode::TooLarge);
+        let layer_cap = spec_error(anyhow!(
+            "workload_spec: {} layers exceed the cap of {}",
+            spec::MAX_SPEC_LAYERS + 1,
+            spec::MAX_SPEC_LAYERS));
+        assert_eq!(layer_cap.code, ErrorCode::TooLarge);
+        // a layer *named* like the cap message: the {:?}-quoted name
+        // breaks both the digit head and the unquoted tail, so the
+        // class stays spec_invalid instead of too_large
+        let forged = spec_error(anyhow!(
+            "workload_spec: duplicate layer name \"9 layers exceed \
+             the cap of {}\"",
+            spec::MAX_SPEC_LAYERS));
+        assert_eq!(forged.code, ErrorCode::SpecInvalid);
+        // plain validation failures stay spec_invalid too
+        let plain = spec_error(anyhow!(
+            "workload_spec: dims must have 7 entries"));
+        assert_eq!(plain.code, ErrorCode::SpecInvalid);
+    }
+
+    #[test]
+    fn parse_request_parses_force_flag() {
+        assert!(!parse_request(&Json::parse("{}").unwrap())
+            .unwrap()
+            .force);
+        let j = Json::parse(r#"{"force": true}"#).unwrap();
+        assert!(parse_request(&j).unwrap().force);
+        let j = Json::parse(r#"{"force": "yes"}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap_err().code,
+                   ErrorCode::BadRequest);
+        // sweeps inherit the flag into every cell
+        let j = Json::parse(
+            r#"{"verb": "sweep", "seeds": [1, 2], "force": true}"#)
+            .unwrap();
+        assert!(parse_sweep(&j).unwrap().iter().all(|r| r.force));
+    }
+
+    fn error_code_of(step: Step) -> String {
+        match step {
+            Step::Reply(j) => j
+                .get("error")
+                .and_then(|e| e.get("code"))
+                .and_then(|c| c.as_str())
+                .map(str::to_string)
+                .unwrap_or_default(),
+            Step::Enter(_) => "<parked>".to_string(),
+        }
+    }
+
+    #[test]
+    fn status_of_a_pruned_job_is_job_not_found_not_a_panic() {
+        let coord = Coordinator::new(None, 1).unwrap();
+        let shutdown = ShutdownFlag::default();
+        let id = coord
+            .submit_tracked(JobRequest {
+                method: Method::Random,
+                seconds: 0.0,
+                max_iters: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        let _ = coord.cancel(id);
+        coord.forget_job(id); // simulate table pruning after the check
+        let step = dispatch(
+            &format!(r#"{{"verb": "status", "job_id": {id}}}"#),
+            &coord,
+            &shutdown,
+        );
+        assert_eq!(error_code_of(step), "job_not_found");
+    }
+
+    #[test]
+    fn status_never_panics_while_jobs_are_pruned_concurrently() {
+        use std::sync::atomic::{AtomicBool, AtomicU64};
+        // pre-fix, `status` looked the job up twice (existence check,
+        // then unwrap); a prune landing between the two panicked the
+        // dispatcher. Hammer that window from a churn thread.
+        let coord = Arc::new(Coordinator::new(None, 1).unwrap());
+        let shutdown = ShutdownFlag::default();
+        let published = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let flipper = {
+            let coord = Arc::clone(&coord);
+            let published = Arc::clone(&published);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for _ in 0..1500 {
+                    let Ok(id) = coord.submit_tracked(JobRequest {
+                        method: Method::Random,
+                        seconds: 0.0,
+                        max_iters: 1,
+                        ..Default::default()
+                    }) else {
+                        continue;
+                    };
+                    let _ = coord.cancel(id);
+                    published.store(id, Ordering::SeqCst);
+                    coord.forget_job(id);
+                }
+                stop.store(true, Ordering::SeqCst);
+            })
+        };
+        while !stop.load(Ordering::SeqCst) {
+            let id = published.load(Ordering::SeqCst);
+            let step = dispatch(
+                &format!(r#"{{"verb": "status", "job_id": {id}}}"#),
+                &coord,
+                &shutdown,
+            );
+            // every outcome is a reply (found or job_not_found) —
+            // never a panic
+            assert!(matches!(step, Step::Reply(_)));
+        }
+        flipper.join().unwrap();
     }
 }

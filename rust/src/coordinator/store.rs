@@ -1,0 +1,993 @@
+//! Persistent content-addressed result store: warm service state that
+//! survives coordinator restarts.
+//!
+//! The FADiff value proposition is amortized search — a strategy is
+//! expensive to find once and cheap to reuse forever. This module makes
+//! "forever" outlive the process: best-found [`SearchResult`]s and
+//! eval-cache segments persist under a `--store-dir` root as
+//! digest-named blobs (`blobs/<fnv1a64-of-content>`) indexed by a small
+//! versioned JSON manifest (`manifest.json`), following the OCI
+//! manifest/digest layout idiom.
+//!
+//! On-disk layout:
+//!
+//! ```text
+//! <store-dir>/
+//!   manifest.json        versioned index: key -> digest + metadata
+//!   blobs/<16-hex>       content blobs, named by their own fnv1a64
+//! ```
+//!
+//! Durability and integrity rules:
+//!
+//! * Every write is atomic: content goes to a temp file in the same
+//!   directory and is `rename`d into place, so a crash mid-write can
+//!   never leave a half blob or half manifest under the final name.
+//! * Every blob read recomputes the digest and compares it to the file
+//!   name; a truncated, corrupted, or swapped blob degrades to a cold
+//!   miss (counted in [`StoreStats::corrupt_skips`]) — never a panic,
+//!   never a stale answer.
+//! * Keys embed *content fingerprints* ([`crate::workload::spec::
+//!   fingerprint`] for the workload, [`HwConfig::fingerprint`] for the
+//!   hardware), never display names, so editing a spec or a hardware
+//!   config can never serve a result computed for different content.
+//! * A manifest with an unknown `version` disables persistence for the
+//!   session instead of clobbering a future format; an unparseable
+//!   manifest starts empty (and writable — it was garbage, not future).
+//!
+//! Stored results are additionally *re-verified before being served*
+//! (see `coordinator::execute_job_ctx`): the strategy is re-scored
+//! through [`compute_eval`] and must reproduce the stored
+//! energy/latency/EDP bit-for-bit, so even a digest-valid blob from a
+//! drifted cost model is rejected rather than trusted.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::JobRequest;
+use crate::config::HwConfig;
+use crate::mapping::{LayerMapping, Strategy, NSLOTS};
+use crate::search::eval::{compute_eval, Eval};
+use crate::search::SearchResult;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::{Workload, NDIMS};
+
+/// Manifest format version this build reads and writes.
+pub const MANIFEST_VERSION: u64 = 1;
+
+const MANIFEST_FILE: &str = "manifest.json";
+const BLOBS_DIR: &str = "blobs";
+
+/// FNV-1a 64 over raw bytes, rendered as 16 lowercase hex digits —
+/// the digest that names every blob (same construction as
+/// [`crate::workload::spec::fingerprint`]).
+pub fn fnv1a64(bytes: &[u8]) -> String {
+    let mut hash: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{hash:016x}")
+}
+
+/// An `f64` as its exact bit pattern in 16 hex digits. Floats round-trip
+/// the store losslessly this way — the restart-warm property is
+/// bit-identical, not approximately-equal.
+pub fn bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn parse_bits(text: &str) -> Option<f64> {
+    if text.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(text, 16).ok().map(f64::from_bits)
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Store counters, surfaced by the `store` verb and under
+/// `metrics.store`.
+#[derive(Default)]
+pub struct StoreStats {
+    /// Stored results served after passing re-verification.
+    pub result_hits: AtomicU64,
+    /// Result lookups that found no manifest entry.
+    pub result_misses: AtomicU64,
+    /// Results written back (new keys + strict improvements).
+    pub results_written: AtomicU64,
+    /// Eval-cache segments hydrated into a registry pair.
+    pub hydrations: AtomicU64,
+    /// Dirty eval-cache segments flushed to disk.
+    pub flushes: AtomicU64,
+    /// Corrupt / unverifiable entries dropped (blob digest mismatch,
+    /// parse failure, or failed re-verification).
+    pub corrupt_skips: AtomicU64,
+}
+
+#[derive(Clone)]
+struct ResultMeta {
+    digest: String,
+    edp_bits: u64,
+    evals: u64,
+    created_at: u64,
+}
+
+#[derive(Clone)]
+struct SegmentMeta {
+    digest: String,
+    entries: u64,
+    created_at: u64,
+}
+
+#[derive(Default)]
+struct Manifest {
+    results: BTreeMap<String, ResultMeta>,
+    segments: BTreeMap<String, SegmentMeta>,
+}
+
+enum ManifestLoad {
+    Ready(Manifest),
+    Future,
+    Corrupt,
+}
+
+impl Manifest {
+    fn to_json(&self) -> Json {
+        let results: BTreeMap<String, Json> = self
+            .results
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(),
+                 obj(vec![
+                     ("digest", s(&v.digest)),
+                     ("edp", num(f64::from_bits(v.edp_bits))),
+                     ("edp_bits",
+                      s(&format!("{:016x}", v.edp_bits))),
+                     ("evals", num(v.evals as f64)),
+                     ("created_at", num(v.created_at as f64)),
+                 ]))
+            })
+            .collect();
+        let segments: BTreeMap<String, Json> = self
+            .segments
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(),
+                 obj(vec![
+                     ("digest", s(&v.digest)),
+                     ("entries", num(v.entries as f64)),
+                     ("created_at", num(v.created_at as f64)),
+                 ]))
+            })
+            .collect();
+        obj(vec![
+            ("version", num(MANIFEST_VERSION as f64)),
+            ("results", Json::Obj(results)),
+            ("segments", Json::Obj(segments)),
+        ])
+    }
+
+    fn parse(text: &str) -> ManifestLoad {
+        let Ok(j) = Json::parse(text) else {
+            return ManifestLoad::Corrupt;
+        };
+        let Ok(version) = j.get_f64("version") else {
+            return ManifestLoad::Corrupt;
+        };
+        if version != MANIFEST_VERSION as f64 {
+            return ManifestLoad::Future;
+        }
+        let mut m = Manifest::default();
+        let results = j.get("results").and_then(|r| r.as_obj());
+        let Ok(results) = results else {
+            return ManifestLoad::Corrupt;
+        };
+        for (key, v) in results {
+            let meta = (|| {
+                Some(ResultMeta {
+                    digest: v.get("digest").ok()?.as_str().ok()?
+                        .to_string(),
+                    edp_bits: u64::from_str_radix(
+                        v.get("edp_bits").ok()?.as_str().ok()?, 16)
+                        .ok()?,
+                    evals: v.get_f64("evals").ok()? as u64,
+                    created_at: v.get_f64("created_at").ok()? as u64,
+                })
+            })();
+            match meta {
+                Some(meta) => m.results.insert(key.clone(), meta),
+                None => return ManifestLoad::Corrupt,
+            };
+        }
+        let segments = j.get("segments").and_then(|r| r.as_obj());
+        let Ok(segments) = segments else {
+            return ManifestLoad::Corrupt;
+        };
+        for (key, v) in segments {
+            let meta = (|| {
+                Some(SegmentMeta {
+                    digest: v.get("digest").ok()?.as_str().ok()?
+                        .to_string(),
+                    entries: v.get_f64("entries").ok()? as u64,
+                    created_at: v.get_f64("created_at").ok()? as u64,
+                })
+            })();
+            match meta {
+                Some(meta) => m.segments.insert(key.clone(), meta),
+                None => return ManifestLoad::Corrupt,
+            };
+        }
+        ManifestLoad::Ready(m)
+    }
+}
+
+/// A persisted best-found search result: the exact strategy (flattened
+/// tiling factors + fusion bits) plus its bit-exact scores and the
+/// search effort that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredResult {
+    /// Tiling factors, flattened layer-major as
+    /// `mappings[l].factors[d][slot]` (the eval-cache key order).
+    pub factors: Vec<u64>,
+    /// Fusion bit per consecutive layer edge.
+    pub fuse: Vec<bool>,
+    /// Energy, pJ (per replica).
+    pub energy: f64,
+    /// Latency, cycles (per replica).
+    pub latency: f64,
+    /// `energy * latency` (per replica).
+    pub edp: f64,
+    /// Search iterations the original run executed.
+    pub iters: usize,
+    /// Candidate evaluations the original run spent.
+    pub evals: usize,
+}
+
+impl StoredResult {
+    /// Capture a finished [`SearchResult`] for persistence.
+    pub fn of(r: &SearchResult) -> StoredResult {
+        let n = r.best.mappings.len() * NDIMS * NSLOTS;
+        let mut factors = Vec::with_capacity(n);
+        for m in &r.best.mappings {
+            for d in 0..NDIMS {
+                for slot in 0..NSLOTS {
+                    factors.push(m.factors[d][slot]);
+                }
+            }
+        }
+        StoredResult {
+            factors,
+            fuse: r.best.fuse.clone(),
+            energy: r.energy,
+            latency: r.latency,
+            edp: r.edp,
+            iters: r.iters,
+            evals: r.evals,
+        }
+    }
+
+    /// Rebuild the strategy; `None` when the flattened shape is
+    /// inconsistent (a corrupt or foreign blob).
+    pub fn strategy(&self) -> Option<Strategy> {
+        strategy_from_parts(&self.factors, &self.fuse)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s("result")),
+            ("energy_bits", s(&bits_hex(self.energy))),
+            ("latency_bits", s(&bits_hex(self.latency))),
+            ("edp_bits", s(&bits_hex(self.edp))),
+            ("factors",
+             arr(self.factors.iter().map(|&f| num(f as f64))
+                 .collect())),
+            ("fuse",
+             arr(self.fuse.iter().map(|&b| Json::Bool(b)).collect())),
+            ("iters", num(self.iters as f64)),
+            ("evals", num(self.evals as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<StoredResult> {
+        if j.get("kind").ok()?.as_str().ok()? != "result" {
+            return None;
+        }
+        let factors = j
+            .get("factors")
+            .ok()?
+            .as_arr()
+            .ok()?
+            .iter()
+            .map(|v| v.as_f64().ok().map(|x| x as u64))
+            .collect::<Option<Vec<u64>>>()?;
+        let fuse = j
+            .get("fuse")
+            .ok()?
+            .as_arr()
+            .ok()?
+            .iter()
+            .map(|v| match v {
+                Json::Bool(b) => Some(*b),
+                _ => None,
+            })
+            .collect::<Option<Vec<bool>>>()?;
+        Some(StoredResult {
+            factors,
+            fuse,
+            energy: parse_bits(
+                j.get("energy_bits").ok()?.as_str().ok()?)?,
+            latency: parse_bits(
+                j.get("latency_bits").ok()?.as_str().ok()?)?,
+            edp: parse_bits(j.get("edp_bits").ok()?.as_str().ok()?)?,
+            iters: j.get_f64("iters").ok()? as usize,
+            evals: j.get_f64("evals").ok()? as usize,
+        })
+    }
+}
+
+/// One persisted eval-cache entry: flattened factors, fusion bits, and
+/// the memoized [`Eval`] (the cache's own key/value pair, exported).
+pub type SegmentEntry = (Vec<u64>, Vec<bool>, Eval);
+
+/// Rebuild a [`Strategy`] from the store's flattened form. `None` when
+/// the factor count is not a whole number of layers or disagrees with
+/// the fusion-edge count.
+pub fn strategy_from_parts(factors: &[u64], fuse: &[bool])
+                           -> Option<Strategy> {
+    let per_layer = NDIMS * NSLOTS;
+    if factors.is_empty() || factors.len() % per_layer != 0 {
+        return None;
+    }
+    let layers = factors.len() / per_layer;
+    if layers != fuse.len() + 1 {
+        return None;
+    }
+    let mut mappings = Vec::with_capacity(layers);
+    let mut it = factors.iter();
+    for _ in 0..layers {
+        let mut m = LayerMapping::trivial();
+        for d in 0..NDIMS {
+            for slot in 0..NSLOTS {
+                m.factors[d][slot] = *it.next()?;
+            }
+        }
+        mappings.push(m);
+    }
+    Some(Strategy { mappings, fuse: fuse.to_vec() })
+}
+
+/// Spot-check a hydration candidate against the live cost model: up to
+/// four spread-out entries are re-scored through [`compute_eval`] and
+/// must reproduce their stored [`Eval`] bit-for-bit. Catches blobs from
+/// a different `(workload, hardware)` content or a drifted cost model
+/// without paying a full re-evaluation of the segment.
+pub fn verify_segment_sample(entries: &[SegmentEntry], w: &Workload,
+                             hw: &HwConfig) -> bool {
+    if entries.is_empty() {
+        return false;
+    }
+    let n = entries.len();
+    let picks = [0, n / 3, (2 * n) / 3, n - 1];
+    let mut checked = [usize::MAX; 4];
+    for (i, &idx) in picks.iter().enumerate() {
+        if checked[..i].contains(&idx) {
+            continue;
+        }
+        checked[i] = idx;
+        let (factors, fuse, stored) = &entries[idx];
+        let Some(strat) = strategy_from_parts(factors, fuse) else {
+            return false;
+        };
+        if strat.mappings.len() != w.len() {
+            return false;
+        }
+        let got = compute_eval(&strat, w, hw);
+        let same = got.energy.to_bits() == stored.energy.to_bits()
+            && got.latency.to_bits() == stored.latency.to_bits()
+            && got.edp.to_bits() == stored.edp.to_bits()
+            && got.feasible == stored.feasible;
+        if !same {
+            return false;
+        }
+    }
+    true
+}
+
+fn segment_to_json(entries: &[&SegmentEntry]) -> Json {
+    let items = entries
+        .iter()
+        .map(|(factors, fuse, e)| {
+            obj(vec![
+                ("f",
+                 arr(factors.iter().map(|&x| num(x as f64))
+                     .collect())),
+                ("u",
+                 arr(fuse.iter().map(|&b| Json::Bool(b)).collect())),
+                ("e", s(&bits_hex(e.energy))),
+                ("l", s(&bits_hex(e.latency))),
+                ("d", s(&bits_hex(e.edp))),
+                ("x", Json::Bool(e.feasible)),
+            ])
+        })
+        .collect();
+    obj(vec![("kind", s("segment")), ("entries", arr(items))])
+}
+
+fn segment_from_json(j: &Json) -> Option<Vec<SegmentEntry>> {
+    if j.get("kind").ok()?.as_str().ok()? != "segment" {
+        return None;
+    }
+    j.get("entries")
+        .ok()?
+        .as_arr()
+        .ok()?
+        .iter()
+        .map(|item| {
+            let factors = item
+                .get("f")
+                .ok()?
+                .as_arr()
+                .ok()?
+                .iter()
+                .map(|v| v.as_f64().ok().map(|x| x as u64))
+                .collect::<Option<Vec<u64>>>()?;
+            let fuse = item
+                .get("u")
+                .ok()?
+                .as_arr()
+                .ok()?
+                .iter()
+                .map(|v| match v {
+                    Json::Bool(b) => Some(*b),
+                    _ => None,
+                })
+                .collect::<Option<Vec<bool>>>()?;
+            let e = Eval {
+                energy: parse_bits(
+                    item.get("e").ok()?.as_str().ok()?)?,
+                latency: parse_bits(
+                    item.get("l").ok()?.as_str().ok()?)?,
+                edp: parse_bits(item.get("d").ok()?.as_str().ok()?)?,
+                feasible: match item.get("x").ok()? {
+                    Json::Bool(b) => *b,
+                    _ => return None,
+                },
+            };
+            Some((factors, fuse, e))
+        })
+        .collect()
+}
+
+/// The content-addressed on-disk store (see the module docs for the
+/// layout and integrity rules). All methods are `&self` and internally
+/// locked; a store is shared across workers behind one `Arc`.
+pub struct ResultStore {
+    root: PathBuf,
+    manifest: Mutex<Manifest>,
+    writable: bool,
+    stats: StoreStats,
+    tmp_seq: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (or initialize) a store rooted at `dir`, creating the
+    /// directory tree as needed. A manifest written by a *newer* format
+    /// version loads empty and disables persistence — this build never
+    /// clobbers a future format; a garbage manifest loads empty and
+    /// stays writable (counted as one corrupt skip).
+    pub fn open(dir: &Path) -> Result<ResultStore> {
+        std::fs::create_dir_all(dir.join(BLOBS_DIR)).with_context(
+            || format!("creating result store under {dir:?}"))?;
+        let stats = StoreStats::default();
+        let mut writable = true;
+        let path = dir.join(MANIFEST_FILE);
+        let manifest = match std::fs::read_to_string(&path) {
+            Err(_) => Manifest::default(), // fresh (or unreadable) dir
+            Ok(text) => match Manifest::parse(&text) {
+                ManifestLoad::Ready(m) => m,
+                ManifestLoad::Future => {
+                    eprintln!(
+                        "[fadiff-store] {path:?} has an unknown \
+                         manifest version; serving cold with \
+                         persistence disabled"
+                    );
+                    writable = false;
+                    Manifest::default()
+                }
+                ManifestLoad::Corrupt => {
+                    eprintln!(
+                        "[fadiff-store] {path:?} is unparseable; \
+                         starting an empty manifest"
+                    );
+                    stats.corrupt_skips.fetch_add(1, Ordering::SeqCst);
+                    Manifest::default()
+                }
+            },
+        };
+        Ok(ResultStore {
+            root: dir.to_path_buf(),
+            manifest: Mutex::new(manifest),
+            writable,
+            stats,
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Whether this session persists writes (false when the on-disk
+    /// manifest belongs to a newer format version).
+    pub fn writable(&self) -> bool {
+        self.writable
+    }
+
+    /// Store counters.
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    /// The manifest key of a best-found result: content fingerprints
+    /// of the workload and hardware plus every result-relevant request
+    /// parameter (method, seed, chains, iteration cap, and the exact
+    /// bits of the time budget) — same key, same deterministic search,
+    /// same answer.
+    pub fn result_key(workload_fp: &str, config_fp: &str,
+                      req: &JobRequest) -> String {
+        format!(
+            "res:{workload_fp}:{config_fp}:{}:s{}:c{}:i{}:t{}",
+            req.method.name(), req.seed, req.chains, req.max_iters,
+            bits_hex(req.seconds)
+        )
+    }
+
+    /// The manifest key of a pair's eval-cache segment. Budget and
+    /// method independent: memoized cost-model scores are pure in
+    /// `(workload, hardware)` content.
+    pub fn segment_key(workload_fp: &str, config_fp: &str) -> String {
+        format!("seg:{workload_fp}:{config_fp}")
+    }
+
+    /// Look up a stored result. `None` (and a counted miss) when the
+    /// key is absent; a present-but-corrupt blob is dropped from the
+    /// manifest, counted as a corrupt skip, and reported as `None`.
+    /// Callers must re-verify the returned result against the live
+    /// cost model before serving it (see `execute_job_ctx`).
+    pub fn load_result(&self, key: &str) -> Option<StoredResult> {
+        let meta = {
+            let m = self.manifest.lock().unwrap();
+            match m.results.get(key) {
+                Some(meta) => meta.clone(),
+                None => {
+                    self.stats
+                        .result_misses
+                        .fetch_add(1, Ordering::SeqCst);
+                    return None;
+                }
+            }
+        };
+        let parsed = self
+            .read_blob(&meta.digest)
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| StoredResult::from_json(&j));
+        match parsed {
+            Some(sr) => Some(sr),
+            None => {
+                self.reject_result(key);
+                None
+            }
+        }
+    }
+
+    /// Drop a result entry that failed digest, parse, or
+    /// re-verification checks (counted as a corrupt skip). The next
+    /// request for the key recomputes cold and records fresh.
+    pub fn reject_result(&self, key: &str) {
+        self.stats.corrupt_skips.fetch_add(1, Ordering::SeqCst);
+        let mut m = self.manifest.lock().unwrap();
+        if let Some(old) = m.results.remove(key) {
+            self.persist_manifest(&m);
+            self.gc_blob(&m, &old.digest);
+        }
+    }
+
+    /// Record a best-found result under `key`. Improvement-gated:
+    /// an existing entry is only replaced by a strictly better EDP, so
+    /// a short rerun can never overwrite a long run's incumbent.
+    /// Returns whether anything was written.
+    pub fn record_result(&self, key: &str, sr: &StoredResult) -> bool {
+        if !self.writable {
+            return false;
+        }
+        let text = sr.to_json().compact();
+        let digest = fnv1a64(text.as_bytes());
+        let mut m = self.manifest.lock().unwrap();
+        if let Some(old) = m.results.get(key) {
+            if !(sr.edp < f64::from_bits(old.edp_bits)) {
+                return false;
+            }
+        }
+        if self.write_blob(&digest, &text).is_err() {
+            return false;
+        }
+        let old = m.results.insert(key.to_string(), ResultMeta {
+            digest,
+            edp_bits: sr.edp.to_bits(),
+            evals: sr.evals as u64,
+            created_at: unix_now(),
+        });
+        self.persist_manifest(&m);
+        if let Some(old) = old {
+            self.gc_blob(&m, &old.digest);
+        }
+        self.stats.results_written.fetch_add(1, Ordering::SeqCst);
+        true
+    }
+
+    /// Load a pair's persisted eval-cache segment. A corrupt blob is
+    /// dropped (counted) and reported as `None`. Callers must
+    /// [`verify_segment_sample`] before hydrating a cache from it.
+    pub fn load_segment(&self, key: &str) -> Option<Vec<SegmentEntry>> {
+        let meta = {
+            let m = self.manifest.lock().unwrap();
+            m.segments.get(key)?.clone()
+        };
+        let parsed = self
+            .read_blob(&meta.digest)
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| segment_from_json(&j));
+        match parsed {
+            Some(entries) => Some(entries),
+            None => {
+                self.reject_segment(key);
+                None
+            }
+        }
+    }
+
+    /// Drop a segment entry that failed digest, parse, or sample
+    /// verification (counted as a corrupt skip).
+    pub fn reject_segment(&self, key: &str) {
+        self.stats.corrupt_skips.fetch_add(1, Ordering::SeqCst);
+        let mut m = self.manifest.lock().unwrap();
+        if let Some(old) = m.segments.remove(key) {
+            self.persist_manifest(&m);
+            self.gc_blob(&m, &old.digest);
+        }
+    }
+
+    /// Persist a pair's eval-cache entries under `key` (one flush).
+    /// Entries are sorted before serialization so identical cache
+    /// contents always produce the identical blob; an unchanged digest
+    /// skips the write entirely. Returns whether anything was written.
+    pub fn save_segment(&self, key: &str, entries: &[SegmentEntry])
+                        -> bool {
+        if !self.writable || entries.is_empty() {
+            return false;
+        }
+        let mut sorted: Vec<&SegmentEntry> = entries.iter().collect();
+        sorted.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+        let text = segment_to_json(&sorted).compact();
+        let digest = fnv1a64(text.as_bytes());
+        let mut m = self.manifest.lock().unwrap();
+        if m.segments.get(key).map(|e| e.digest == digest)
+            == Some(true)
+        {
+            return false;
+        }
+        if self.write_blob(&digest, &text).is_err() {
+            return false;
+        }
+        let old = m.segments.insert(key.to_string(), SegmentMeta {
+            digest,
+            entries: sorted.len() as u64,
+            created_at: unix_now(),
+        });
+        self.persist_manifest(&m);
+        if let Some(old) = old {
+            self.gc_blob(&m, &old.digest);
+        }
+        self.stats.flushes.fetch_add(1, Ordering::SeqCst);
+        true
+    }
+
+    /// The `store` verb payload / the `metrics.store` block: manifest
+    /// entry counts, blob usage, and every [`StoreStats`] counter.
+    pub fn stats_json(&self) -> Json {
+        let (blob_count, blob_bytes) = self.blob_usage();
+        let (results, segments) = {
+            let m = self.manifest.lock().unwrap();
+            (m.results.len(), m.segments.len())
+        };
+        let c = |a: &AtomicU64| num(a.load(Ordering::SeqCst) as f64);
+        obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("dir", s(&self.root.display().to_string())),
+            ("writable", Json::Bool(self.writable)),
+            ("manifest_results", num(results as f64)),
+            ("manifest_segments", num(segments as f64)),
+            ("blob_count", num(blob_count as f64)),
+            ("blob_bytes", num(blob_bytes as f64)),
+            ("result_hits", c(&self.stats.result_hits)),
+            ("result_misses", c(&self.stats.result_misses)),
+            ("results_written", c(&self.stats.results_written)),
+            ("hydrations", c(&self.stats.hydrations)),
+            ("flushes", c(&self.stats.flushes)),
+            ("corrupt_skips", c(&self.stats.corrupt_skips)),
+        ])
+    }
+
+    fn blob_path(&self, digest: &str) -> PathBuf {
+        self.root.join(BLOBS_DIR).join(digest)
+    }
+
+    /// Read a blob and verify its content hashes to its name.
+    fn read_blob(&self, digest: &str) -> Option<String> {
+        let text =
+            std::fs::read_to_string(self.blob_path(digest)).ok()?;
+        (fnv1a64(text.as_bytes()) == digest).then_some(text)
+    }
+
+    /// Write a blob under its digest name (atomic; a blob that already
+    /// exists is content-identical by construction and left alone).
+    fn write_blob(&self, digest: &str, text: &str)
+                  -> std::io::Result<()> {
+        let path = self.blob_path(digest);
+        if path.exists() {
+            return Ok(());
+        }
+        self.write_atomic(&path, text)
+    }
+
+    /// Delete a blob no longer referenced by any manifest entry.
+    fn gc_blob(&self, m: &Manifest, digest: &str) {
+        let referenced = m
+            .results
+            .values()
+            .any(|e| e.digest == digest)
+            || m.segments.values().any(|e| e.digest == digest);
+        if !referenced {
+            let _ = std::fs::remove_file(self.blob_path(digest));
+        }
+    }
+
+    /// Serialize the manifest to disk (atomic). IO failure degrades to
+    /// an in-memory-only manifest for this write, with a warning — the
+    /// on-disk file keeps its previous consistent content.
+    fn persist_manifest(&self, m: &Manifest) {
+        if !self.writable {
+            return;
+        }
+        let text = m.to_json().pretty();
+        let path = self.root.join(MANIFEST_FILE);
+        if let Err(e) = self.write_atomic(&path, &text) {
+            eprintln!(
+                "[fadiff-store] failed to persist {path:?}: {e}"
+            );
+        }
+    }
+
+    /// Write-temp + rename: the final name only ever holds complete
+    /// content. The temp name embeds pid + a sequence number so
+    /// concurrent writers (threads or processes) never collide.
+    fn write_atomic(&self, path: &Path, content: &str)
+                    -> std::io::Result<()> {
+        let seq = self.tmp_seq.fetch_add(1, Ordering::SeqCst);
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".tmp.{}.{seq}", std::process::id()));
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, content)?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    fn blob_usage(&self) -> (u64, u64) {
+        let mut count = 0u64;
+        let mut bytes = 0u64;
+        if let Ok(rd) = std::fs::read_dir(self.root.join(BLOBS_DIR)) {
+            for entry in rd.flatten() {
+                if let Ok(md) = entry.metadata() {
+                    if md.is_file() {
+                        count += 1;
+                        bytes += md.len();
+                    }
+                }
+            }
+        }
+        (count, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    fn tmp_store_dir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let dir = std::env::temp_dir().join(format!(
+            "fadiff-store-unit-{tag}-{}-{nanos}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_result(edp: f64) -> StoredResult {
+        StoredResult {
+            factors: vec![1; NDIMS * NSLOTS * 2],
+            fuse: vec![true],
+            energy: edp / 2.0,
+            latency: 2.0,
+            edp,
+            iters: 7,
+            evals: 11,
+        }
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // same construction as spec::fingerprint; empty input yields
+        // the FNV-1a offset basis
+        assert_eq!(fnv1a64(b""), "cbf29ce484222325");
+        assert_eq!(fnv1a64(b"a"), "af63dc4c8601ec8c");
+    }
+
+    #[test]
+    fn bits_roundtrip_is_exact_for_odd_floats() {
+        for x in [0.0, -0.0, 1.5e301, f64::INFINITY, 3.1e-17] {
+            let back = parse_bits(&bits_hex(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits());
+        }
+        assert!(parse_bits("ff").is_none(), "length-checked");
+        assert!(parse_bits("zz0000000000000f").is_none());
+    }
+
+    #[test]
+    fn result_roundtrips_bit_exact_through_disk() {
+        let dir = tmp_store_dir("roundtrip");
+        let store = ResultStore::open(&dir).unwrap();
+        let sr = sample_result(3.25e9);
+        assert!(store.record_result("res:k", &sr));
+        drop(store);
+        let store = ResultStore::open(&dir).unwrap();
+        let back = store.load_result("res:k").unwrap();
+        assert_eq!(back, sr);
+        assert_eq!(back.edp.to_bits(), sr.edp.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn improvement_gate_keeps_the_better_incumbent() {
+        let dir = tmp_store_dir("gate");
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.record_result("k", &sample_result(10.0)));
+        // equal and worse EDPs are refused
+        assert!(!store.record_result("k", &sample_result(10.0)));
+        assert!(!store.record_result("k", &sample_result(11.0)));
+        assert!(store.record_result("k", &sample_result(9.0)));
+        let back = store.load_result("k").unwrap();
+        assert_eq!(back.edp, 9.0);
+        assert_eq!(
+            store.stats.results_written.load(Ordering::SeqCst), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_blob_degrades_to_counted_cold_miss() {
+        let dir = tmp_store_dir("corrupt");
+        let store = ResultStore::open(&dir).unwrap();
+        let sr = sample_result(5.0);
+        assert!(store.record_result("k", &sr));
+        let digest = {
+            let m = store.manifest.lock().unwrap();
+            m.results.get("k").unwrap().digest.clone()
+        };
+        std::fs::write(store.blob_path(&digest), "truncated garb")
+            .unwrap();
+        assert!(store.load_result("k").is_none());
+        assert_eq!(
+            store.stats.corrupt_skips.load(Ordering::SeqCst), 1);
+        // the entry was dropped: next lookup is a plain miss and a
+        // fresh record repopulates it
+        assert!(store.load_result("k").is_none());
+        assert_eq!(
+            store.stats.result_misses.load(Ordering::SeqCst), 1);
+        assert!(store.record_result("k", &sr));
+        assert_eq!(store.load_result("k").unwrap(), sr);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn future_manifest_version_disables_persistence_untouched() {
+        let dir = tmp_store_dir("future");
+        let future = "{\"version\": 2, \"from\": \"the future\"}";
+        std::fs::write(dir.join(MANIFEST_FILE), future).unwrap();
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(!store.writable());
+        assert!(!store.record_result("k", &sample_result(1.0)));
+        assert!(store.load_result("k").is_none());
+        drop(store);
+        let kept =
+            std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+        assert_eq!(kept, future, "future manifest must not be touched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_manifest_starts_empty_but_writable() {
+        let dir = tmp_store_dir("garbage");
+        std::fs::write(dir.join(MANIFEST_FILE), "not json {{{")
+            .unwrap();
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.writable());
+        assert_eq!(
+            store.stats.corrupt_skips.load(Ordering::SeqCst), 1);
+        assert!(store.record_result("k", &sample_result(1.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_roundtrip_is_order_independent_and_verifiable() {
+        let dir = tmp_store_dir("segment");
+        let store = ResultStore::open(&dir).unwrap();
+        let w = zoo::by_name("mobilenet").unwrap();
+        let hw = crate::config::load_config(
+            &crate::config::repo_root(), "large").unwrap();
+        let strat = Strategy::trivial(&w);
+        let e = compute_eval(&strat, &w, &hw);
+        let sr = StoredResult::of(&SearchResult {
+            best: strat, edp: e.edp, energy: e.energy,
+            latency: e.latency, trace: Vec::new(), iters: 0, evals: 1,
+        });
+        let entry: SegmentEntry =
+            (sr.factors.clone(), sr.fuse.clone(), e);
+        let key = ResultStore::segment_key("wfp", "cfp");
+        assert!(store.save_segment(&key, &[entry.clone()]));
+        // identical content, different call: digest-deduped, no flush
+        assert!(!store.save_segment(&key, &[entry]));
+        assert_eq!(store.stats.flushes.load(Ordering::SeqCst), 1);
+        let back = store.load_segment(&key).unwrap();
+        assert_eq!(back.len(), 1);
+        assert!(verify_segment_sample(&back, &w, &hw));
+        // a wrong-content segment fails sample verification
+        let mut wrong = back.clone();
+        wrong[0].2.energy += 1.0;
+        assert!(!verify_segment_sample(&wrong, &w, &hw));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn strategy_from_parts_rejects_inconsistent_shapes() {
+        let per = NDIMS * NSLOTS;
+        assert!(strategy_from_parts(&[], &[]).is_none());
+        assert!(strategy_from_parts(&vec![1; per - 1], &[]).is_none());
+        assert!(
+            strategy_from_parts(&vec![1; per], &[true]).is_none(),
+            "one layer cannot have a fusion edge"
+        );
+        let s =
+            strategy_from_parts(&vec![1; 2 * per], &[true]).unwrap();
+        assert_eq!(s.mappings.len(), 2);
+        assert_eq!(s.fuse, vec![true]);
+    }
+}

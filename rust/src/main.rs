@@ -35,6 +35,9 @@ USAGE: fadiff <subcommand> [flags]
             (every method runs without AOT artifacts; when present,
             PJRT accelerates the gradient methods; --chains sets the
             native gradient backend's parallel chain count, 0 = auto)
+            --store-dir DIR persists best results + eval caches: a
+            repeat invocation answers warm from disk (re-verified);
+            --force searches anyway and records improvements
   workloads [--describe name]   list servable workloads / show one
   table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
   fig3                                           (paper Figure 3)
@@ -42,6 +45,7 @@ USAGE: fadiff <subcommand> [flags]
   validate  --samples 60 --seed 11               (paper Sec 4.2)
   selftest                                       (compile artifacts)
   serve     --addr 127.0.0.1:7341 --workers 2    (TCP coordinator)
+            --store-dir DIR persists results/caches across restarts
             line-delimited JSON, v1 envelope — see docs/protocol.md
 ";
 
@@ -64,7 +68,7 @@ fn main() {
 }
 
 fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
-    let args = Args::parse(rest, &["verbose", "summary"])?;
+    let args = Args::parse(rest, &["verbose", "summary", "force"])?;
     match sub {
         "optimize" => cmd_optimize(&args),
         "workloads" => cmd_workloads(&args),
@@ -92,6 +96,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 1)?,
         chains: args.get_usize("chains", 0)?,
         spec: None,
+        force: args.has("force"),
     };
     if let Some(path) = args.get("workload-file") {
         let w = spec::load_file(std::path::Path::new(path))?;
@@ -106,7 +111,17 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         }
         _ => None,
     };
-    let r = coordinator::execute_job(rt.as_ref(), &req)?;
+    // with --store-dir, repeat invocations are warm: an exact-key hit
+    // is served from disk re-verified (unless --force re-searches)
+    // and a fresh best records back for the next run
+    let store = match args.get("store-dir") {
+        Some(dir) => Some(std::sync::Arc::new(
+            coordinator::ResultStore::open(
+                std::path::Path::new(dir))?)),
+        None => None,
+    };
+    let ctx = coordinator::JobCtx { store, ..Default::default() };
+    let r = coordinator::execute_job_ctx(rt.as_ref(), &req, &ctx)?;
     println!("workload        : {}", r.request.workload);
     println!("config          : {}", r.request.config);
     println!("method          : {}", r.request.method.name());
@@ -116,6 +131,9 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     println!("latency         : {:.4e} cycles", r.latency);
     println!("iters / evals   : {} / {}", r.iters, r.evals);
     println!("wall time       : {:.2}s", r.wall_seconds);
+    if r.stored {
+        println!("served from     : result store (re-verified)");
+    }
     if r.fused_names.is_empty() {
         println!("fusion groups   : none");
     } else {
@@ -201,7 +219,9 @@ fn cmd_selftest() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7341");
     let workers = args.get_usize("workers", 2)?;
-    let coord = Coordinator::new(None, workers)?;
+    let store_dir =
+        args.get("store-dir").map(std::path::PathBuf::from);
+    let coord = Coordinator::new_with_store(None, workers, store_dir)?;
     let metrics = std::sync::Arc::clone(&coord.metrics);
     let result = fadiff::coordinator::server::serve(&addr, coord);
     eprintln!("served {} jobs total",

@@ -263,6 +263,30 @@ impl EvalCache {
         }
         map.insert(key, e);
     }
+
+    /// Export every memoized entry as raw `(factors, fuse, eval)`
+    /// parts — the persistence format of the coordinator's result
+    /// store. Order is unspecified (callers sort before hashing).
+    pub fn export_entries(&self) -> Vec<(Vec<u64>, Vec<bool>, Eval)> {
+        self.map
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (k.factors.clone(), k.fuse.clone(), *e))
+            .collect()
+    }
+
+    /// Seed the cache from persisted `(factors, fuse, eval)` parts
+    /// (a store segment). Hydration is not a lookup: the hit/miss
+    /// counters are untouched, and the capacity bound still applies.
+    pub fn preload(&self,
+                   entries: Vec<(Vec<u64>, Vec<bool>, Eval)>) {
+        let mut map = self.map.lock().unwrap();
+        for (factors, fuse, e) in entries {
+            self.insert_bounded(&mut map,
+                                StrategyKey { factors, fuse }, e);
+        }
+    }
 }
 
 impl Default for EvalCache {

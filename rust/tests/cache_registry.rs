@@ -143,6 +143,7 @@ fn coordinator_serves_repeat_jobs_from_cache() {
         seed: 9,
         chains: 0,
         spec: None,
+        force: false,
     };
     let r1 = coord.run(req.clone()).unwrap();
     let hits1 = coord.registry().hits();
@@ -188,6 +189,7 @@ fn pooled_coordinator_results_match_standalone_search() {
         seed: 21,
         chains: 0,
         spec: None,
+        force: false,
     };
     let served = coord.run(req).unwrap();
 

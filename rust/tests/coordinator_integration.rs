@@ -25,6 +25,7 @@ fn small_job(workload: &str, method: Method) -> JobRequest {
         seed: 5,
         chains: 0,
         spec: None,
+        force: false,
     }
 }
 
@@ -278,6 +279,7 @@ fn cancel_stops_a_running_job_early() {
         seed: 3,
         chains: 0,
         spec: None,
+        force: false,
     }).unwrap();
     // wait until it is actually running
     let t0 = Instant::now();

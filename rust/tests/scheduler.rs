@@ -23,6 +23,7 @@ fn req(method: Method, seed: u64) -> JobRequest {
         seed,
         chains: 0,
         spec: None,
+        force: false,
     }
 }
 

@@ -1,0 +1,220 @@
+//! End-to-end tests of the persistent result store: a restarted
+//! coordinator serves previously-solved requests warm and bit-exact,
+//! corruption degrades to a counted cold recompute (never a stale or
+//! wrong answer), a future on-disk format is never clobbered, and
+//! concurrent jobs share one store safely.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use fadiff::coordinator::{Coordinator, JobRequest, Method};
+use fadiff::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!(
+        "fadiff_store_{tag}_{}_{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn job(seed: u64) -> JobRequest {
+    JobRequest {
+        workload: "mobilenet".into(),
+        config: "large".into(),
+        method: Method::Random,
+        seconds: 3600.0, // iteration-capped: deterministic per seed
+        max_iters: 40,
+        seed,
+        chains: 0,
+        spec: None,
+        force: false,
+    }
+}
+
+fn coord_on(dir: &PathBuf) -> Coordinator {
+    Coordinator::new_with_store(None, 1, Some(dir.clone())).unwrap()
+}
+
+#[test]
+fn restart_serves_bit_identical_results_without_searching() {
+    let dir = tmp_dir("warm");
+    let cold = {
+        let coord = coord_on(&dir);
+        let r = coord.run(job(7)).unwrap();
+        assert!(!r.stored, "first solve must be a real search");
+        r
+    }; // drop: shutdown flush persists the pair's eval segment too
+    let coord = coord_on(&dir);
+    let warm = coord.run(job(7)).unwrap();
+    assert!(warm.stored, "a restarted coordinator must serve warm");
+    assert_eq!(warm.edp.to_bits(), cold.edp.to_bits());
+    assert_eq!(warm.energy.to_bits(), cold.energy.to_bits());
+    assert_eq!(warm.latency.to_bits(), cold.latency.to_bits());
+    assert_eq!(warm.fused_names, cold.fused_names);
+    // effort reports the original run, not the (free) stored hit
+    assert_eq!(warm.iters, cold.iters);
+    assert_eq!(warm.evals, cold.evals);
+    let st = coord.store().expect("store attached");
+    assert_eq!(st.stats().result_hits.load(Ordering::SeqCst), 1);
+    // force bypasses the stored answer but reproduces it exactly
+    let forced =
+        coord.run(JobRequest { force: true, ..job(7) }).unwrap();
+    assert!(!forced.stored, "force must re-search");
+    assert_eq!(forced.edp.to_bits(), cold.edp.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_result_blob_degrades_to_counted_cold_recompute() {
+    let dir = tmp_dir("corrupt");
+    let cold = {
+        let coord = coord_on(&dir);
+        coord.run(job(11)).unwrap()
+    };
+    // clobber every result blob: its content no longer matches the
+    // digest it is named by
+    let manifest =
+        std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = Json::parse(&manifest).unwrap();
+    let results = j.get("results").unwrap().as_obj().unwrap();
+    assert!(!results.is_empty(), "the solve must have recorded");
+    for meta in results.values() {
+        let digest = meta.get("digest").unwrap().as_str().unwrap();
+        std::fs::write(dir.join("blobs").join(digest),
+                       "{\"kind\": \"garbage\"}")
+            .unwrap();
+    }
+    let coord = coord_on(&dir);
+    let again = coord.run(job(11)).unwrap();
+    assert!(!again.stored, "a corrupt blob must never serve");
+    assert_eq!(again.edp.to_bits(), cold.edp.to_bits(),
+               "the cold recompute is deterministic");
+    let st = coord.store().unwrap();
+    assert!(st.stats().corrupt_skips.load(Ordering::SeqCst) >= 1,
+            "the skip must be observable");
+    drop(coord);
+    // the recompute recorded fresh: a third process is warm again
+    let coord = coord_on(&dir);
+    let warm = coord.run(job(11)).unwrap();
+    assert!(warm.stored, "recovery must re-persist the result");
+    assert_eq!(warm.edp.to_bits(), cold.edp.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_manifest_starts_empty_and_recovers() {
+    let dir = tmp_dir("truncated");
+    {
+        let coord = coord_on(&dir);
+        let _ = coord.run(job(5)).unwrap();
+    }
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let coord = coord_on(&dir);
+    let st = Arc::clone(coord.store().unwrap());
+    assert!(st.writable(), "garbage manifest stays writable");
+    assert!(st.stats().corrupt_skips.load(Ordering::SeqCst) >= 1);
+    let r = coord.run(job(5)).unwrap();
+    assert!(!r.stored, "a lost manifest serves cold");
+    drop(coord);
+    // and the fresh result re-persisted under a valid manifest
+    let coord = coord_on(&dir);
+    assert!(coord.run(job(5)).unwrap().stored);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn future_manifest_version_serves_cold_and_is_never_clobbered() {
+    let dir = tmp_dir("future");
+    {
+        let coord = coord_on(&dir);
+        let _ = coord.run(job(3)).unwrap();
+    }
+    let path = dir.join("manifest.json");
+    let future = "{\"version\": 2, \"from_the_future\": true}";
+    std::fs::write(&path, future).unwrap();
+    let coord = coord_on(&dir);
+    assert!(!coord.store().unwrap().writable());
+    let r = coord.run(job(3)).unwrap();
+    assert!(!r.stored, "an unknown manifest version serves cold");
+    drop(coord); // the shutdown flush must not write either
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), future,
+               "a future-format manifest must stay byte-identical");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_jobs_share_one_store_and_flush_on_shutdown() {
+    let dir = tmp_dir("concurrent");
+    let coord = Coordinator::new_with_store(None, 4, Some(dir.clone()))
+        .unwrap();
+    let st = Arc::clone(coord.store().unwrap());
+    // two distinct keys, each solved twice concurrently
+    let rxs: Vec<_> = [21u64, 22, 21, 22]
+        .into_iter()
+        .map(|seed| (seed, coord.submit(job(seed))))
+        .collect();
+    let mut by_seed: Vec<(u64, f64)> = Vec::new();
+    for (seed, rx) in rxs {
+        let r = rx.wait().expect("worker alive").expect("job ok");
+        by_seed.push((seed, r.edp));
+    }
+    for seed in [21u64, 22] {
+        let edps: Vec<u64> = by_seed
+            .iter()
+            .filter(|(s, _)| *s == seed)
+            .map(|(_, e)| e.to_bits())
+            .collect();
+        assert_eq!(edps.len(), 2);
+        assert_eq!(edps[0], edps[1],
+                   "same key must resolve identically");
+    }
+    assert!(st.stats().results_written.load(Ordering::SeqCst) >= 2,
+            "both keys must persist");
+    drop(coord);
+    assert!(st.stats().flushes.load(Ordering::SeqCst) >= 1,
+            "shutdown must flush the dirty eval segment");
+    // a second coordinator is warm for both keys
+    let coord = coord_on(&dir);
+    assert!(coord.run(job(21)).unwrap().stored);
+    assert!(coord.run(job(22)).unwrap().stored);
+    let st2 = coord.store().unwrap();
+    assert_eq!(st2.stats().result_hits.load(Ordering::SeqCst), 2);
+    // a forced re-search builds real engines, so the pair's eval
+    // cache hydrates from the flushed segment — and reproduces the
+    // stored answer bit-for-bit
+    let forced =
+        coord.run(JobRequest { force: true, ..job(21) }).unwrap();
+    assert!(!forced.stored);
+    assert_eq!(forced.edp.to_bits(),
+               by_seed.iter().find(|(s, _)| *s == 21).unwrap().1
+                   .to_bits());
+    assert!(st2.stats().hydrations.load(Ordering::SeqCst) >= 1,
+            "the eval segment must hydrate on first engine use");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn store_metrics_report_manifest_and_blob_usage() {
+    let dir = tmp_dir("metrics");
+    let coord = coord_on(&dir);
+    let _ = coord.run(job(2)).unwrap();
+    let j = coord.store().unwrap().stats_json();
+    assert_eq!(j.get("enabled").unwrap(), &Json::Bool(true));
+    assert_eq!(j.get_f64("manifest_results").unwrap(), 1.0);
+    assert!(j.get_f64("blob_count").unwrap() >= 1.0);
+    assert!(j.get_f64("blob_bytes").unwrap() > 0.0);
+    assert_eq!(j.get_f64("results_written").unwrap(), 1.0);
+    // the metrics verb embeds the same block
+    let m = coord.metrics_json();
+    assert!(m.get("store").is_ok(), "metrics must carry the store");
+    std::fs::remove_dir_all(&dir).ok();
+}
