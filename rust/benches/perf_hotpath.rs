@@ -381,6 +381,7 @@ fn main() {
         max_iters: 40,
         seed,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     };

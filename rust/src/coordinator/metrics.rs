@@ -31,15 +31,42 @@ pub struct Metrics {
     /// `grad_steps_per_sec` in the `metrics` verb — the direct
     /// quality-per-second lever of the multi-chain optimizer.
     pub grad_steps: AtomicU64,
+    /// Jobs that ended because their cooperative `deadline_ms`
+    /// expired (a terminal outcome distinct from `completed` /
+    /// `failed` / `cancelled`; the job keeps its best-so-far).
+    pub deadline_exceeded: AtomicU64,
+    /// Job executions that panicked and were contained by the worker's
+    /// `catch_unwind` (the job answers `internal`, the worker keeps
+    /// serving). Surfaced as
+    /// `supervision.job_panics_contained`.
+    pub job_panics: AtomicU64,
+    /// Jobs the watchdog failed definitively after their evals made
+    /// no progress past the stall threshold. Surfaced as
+    /// `supervision.watchdog_kills`.
+    pub watchdog_kills: AtomicU64,
+    /// Oversized request lines the event loop answered `too_large`
+    /// and drained instead of queueing. Surfaced as
+    /// `faults.oversized_drains`.
+    pub oversized_drains: AtomicU64,
+    /// Requests rejected with `queue_full` (queue at capacity or the
+    /// connection table saturated). Surfaced as
+    /// `faults.queue_full_rejected`.
+    pub queue_full_rejected: AtomicU64,
+    /// Gauge: connections the event loop currently holds open
+    /// (refreshed once per loop sweep; watch streams included).
+    pub conns_open: AtomicU64,
 }
 
 impl Metrics {
-    /// Jobs accepted but not finished.
+    /// Jobs accepted but not finished (every terminal outcome —
+    /// completed, failed, cancelled, deadline-exceeded — leaves the
+    /// flight count).
     pub fn in_flight(&self) -> u64 {
         let s = self.submitted.load(Ordering::SeqCst);
         let c = self.completed.load(Ordering::SeqCst)
             + self.failed.load(Ordering::SeqCst)
-            + self.cancelled.load(Ordering::SeqCst);
+            + self.cancelled.load(Ordering::SeqCst)
+            + self.deadline_exceeded.load(Ordering::SeqCst);
         s.saturating_sub(c)
     }
 
@@ -70,6 +97,9 @@ impl Metrics {
             ("failed", num(self.failed.load(Ordering::SeqCst) as f64)),
             ("cancelled",
              num(self.cancelled.load(Ordering::SeqCst) as f64)),
+            ("deadline_exceeded",
+             num(self.deadline_exceeded.load(Ordering::SeqCst)
+                 as f64)),
             ("in_flight", num(self.in_flight() as f64)),
             ("evals", num(self.evals.load(Ordering::SeqCst) as f64)),
             ("grad_steps",
@@ -90,5 +120,15 @@ mod tests {
         m.failed.fetch_add(1, Ordering::SeqCst);
         assert_eq!(m.in_flight(), 1);
         assert!(m.summary().contains("in_flight=1"));
+    }
+
+    #[test]
+    fn deadline_exceeded_is_terminal_for_in_flight() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(2, Ordering::SeqCst);
+        m.completed.fetch_add(1, Ordering::SeqCst);
+        m.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
+        assert_eq!(m.in_flight(), 0,
+                   "a deadline-exceeded job left the flight count");
     }
 }

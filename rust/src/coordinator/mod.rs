@@ -57,9 +57,10 @@ use anyhow::{anyhow, Result};
 use crate::config::{load_config, repo_root, HwConfig};
 use crate::costmodel;
 use crate::runtime::Runtime;
-use crate::search::{bo, ga, gradient, random, Budget, EvalBackend,
-                    EvalCtx, FleetHandle, ProgressSnapshot,
-                    SearchProgress, SearchResult};
+use crate::search::{bo, ga, gradient, random, Budget, Deadline,
+                    EvalBackend, EvalCtx, FleetHandle,
+                    ProgressSnapshot, SearchProgress, SearchResult};
+use crate::util::fault;
 use crate::util::json::Json;
 use crate::util::threadpool::{oneshot, OneShot, OneShotSender,
                               ThreadPool};
@@ -138,6 +139,15 @@ pub struct JobRequest {
     /// (`0` = the method default — one chain per configured restart).
     /// Ignored by GA / BO / random.
     pub chains: usize,
+    /// Cooperative per-job deadline in milliseconds, measured from
+    /// the moment a worker starts executing the job (`0` = none).
+    /// Unlike `seconds` — which the search treats as its time budget
+    /// — an expired deadline ends the job with the distinct terminal
+    /// status `deadline_exceeded` (stable wire code of the same
+    /// name), keeping the best-so-far like a cancel does. Partial
+    /// (deadline-cut) results are never recorded to the persistent
+    /// store.
+    pub deadline_ms: u64,
     /// Inline custom workload (the protocol's `workload_spec`
     /// parameter / the CLI's `--workload-file`). When set it overrides
     /// the `workload` name lookup entirely; evaluation caches key on
@@ -161,6 +171,7 @@ impl Default for JobRequest {
             max_iters: usize::MAX,
             seed: 0xFAD1FF,
             chains: 0,
+            deadline_ms: 0,
             spec: None,
             force: false,
         }
@@ -215,6 +226,11 @@ pub struct JobResult {
     /// store (re-verified against the live cost model, no search run);
     /// `iters`/`evals` then report the original search's effort.
     pub stored: bool,
+    /// Whether the job's cooperative `deadline_ms` expired before the
+    /// search finished: the result is the best-so-far at the cut, the
+    /// job's terminal status is `deadline_exceeded`, and nothing was
+    /// recorded to the persistent store.
+    pub deadline_hit: bool,
 }
 
 /// Lifecycle of a tracked job (see [`Coordinator::submit_tracked`]).
@@ -230,6 +246,9 @@ pub enum JobStatus {
     Failed,
     /// Stopped by a cancel request (partial best kept when running).
     Cancelled,
+    /// Stopped by its own `deadline_ms` expiring (partial best kept,
+    /// like a cancel; never recorded to the persistent store).
+    DeadlineExceeded,
 }
 
 impl JobStatus {
@@ -241,13 +260,15 @@ impl JobStatus {
             JobStatus::Completed => "completed",
             JobStatus::Failed => "failed",
             JobStatus::Cancelled => "cancelled",
+            JobStatus::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
     /// Whether the job can still change state.
     pub fn is_terminal(&self) -> bool {
         matches!(self, JobStatus::Completed | JobStatus::Failed
-                       | JobStatus::Cancelled)
+                       | JobStatus::Cancelled
+                       | JobStatus::DeadlineExceeded)
     }
 }
 
@@ -361,6 +382,139 @@ struct Envelope {
     progress: Arc<SearchProgress>,
 }
 
+/// Default watchdog stall threshold, milliseconds: a *running* job
+/// whose search-progress counters stay frozen this long is failed
+/// definitively instead of wedging its queue slot forever.
+/// Deliberately conservative — a legitimate first batch on a starved
+/// machine takes seconds, not half a minute. Override per coordinator
+/// with [`Coordinator::set_stall_ms`] (`0` disables the watchdog).
+pub const DEFAULT_STALL_MS: u64 = 30_000;
+
+/// Best-effort human-readable panic payload, sanitized for the wire:
+/// control characters flattened to spaces, length capped.
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>)
+                            -> String {
+    let raw = if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    raw.chars()
+        .map(|c| if c.is_control() { ' ' } else { c })
+        .take(240)
+        .collect()
+}
+
+fn stall_message(threshold_ms: u64) -> String {
+    format!(
+        "eval stalled: no search progress for {threshold_ms} ms \
+         (failed by the watchdog)"
+    )
+}
+
+struct Supervised {
+    job_id: Option<u64>,
+    progress: Arc<SearchProgress>,
+    cancel: Arc<AtomicBool>,
+    stalled: Arc<AtomicBool>,
+    last_seq: u64,
+    last_evals: u64,
+    last_change: std::time::Instant,
+}
+
+/// The watchdog's view of every job currently executing on a worker:
+/// entries register at job start and deregister at job end; the
+/// `fadiff-watchdog` thread scans them and fails any job whose
+/// progress counters stay frozen past the stall threshold (setting
+/// its cooperative cancel flag so the search also stops at its next
+/// poll, once whatever wedged it lets go).
+struct Supervisor {
+    next: AtomicU64,
+    running: Mutex<HashMap<u64, Supervised>>,
+    stall_ms: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Supervisor {
+    fn new() -> Supervisor {
+        Supervisor {
+            next: AtomicU64::new(0),
+            running: Mutex::new(HashMap::new()),
+            stall_ms: AtomicU64::new(DEFAULT_STALL_MS),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Track one starting job; returns the deregistration token and
+    /// the per-job stall latch the worker checks after execution.
+    fn register(&self, job_id: Option<u64>,
+                progress: &Arc<SearchProgress>,
+                cancel: &Arc<AtomicBool>)
+                -> (u64, Arc<AtomicBool>) {
+        let token = self.next.fetch_add(1, Ordering::SeqCst);
+        let stalled = Arc::new(AtomicBool::new(false));
+        self.running.lock().unwrap().insert(token, Supervised {
+            job_id,
+            progress: Arc::clone(progress),
+            cancel: Arc::clone(cancel),
+            stalled: Arc::clone(&stalled),
+            last_seq: 0,
+            last_evals: 0,
+            last_change: std::time::Instant::now(),
+        });
+        (token, stalled)
+    }
+
+    fn deregister(&self, token: u64) {
+        self.running.lock().unwrap().remove(&token);
+    }
+
+    /// One watchdog sweep: refresh per-job progress marks, fail any
+    /// job frozen past the threshold. Failing is definitive for
+    /// tracked jobs — the job table transitions immediately, even if
+    /// the wedged worker thread only returns (or never does) later;
+    /// its own late finish is then a counted no-op.
+    fn scan(&self, jobs: &JobTable, metrics: &Metrics) {
+        let threshold = self.stall_ms.load(Ordering::SeqCst);
+        if threshold == 0 {
+            return; // watchdog disabled
+        }
+        let now = std::time::Instant::now();
+        let mut running = self.running.lock().unwrap();
+        for entry in running.values_mut() {
+            let snap = entry.progress.snapshot();
+            if snap.seq != entry.last_seq
+                || snap.evals != entry.last_evals
+            {
+                entry.last_seq = snap.seq;
+                entry.last_evals = snap.evals;
+                entry.last_change = now;
+                continue;
+            }
+            let frozen_ms = now
+                .saturating_duration_since(entry.last_change)
+                .as_millis() as u64;
+            if frozen_ms < threshold
+                || entry.stalled.load(Ordering::SeqCst)
+            {
+                continue;
+            }
+            entry.stalled.store(true, Ordering::SeqCst);
+            entry.cancel.store(true, Ordering::SeqCst);
+            metrics.watchdog_kills.fetch_add(1, Ordering::SeqCst);
+            if let Some(id) = entry.job_id {
+                if jobs.finish(id, JobStatus::Failed,
+                               Err(stall_message(threshold)))
+                {
+                    metrics.failed.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+}
+
 /// The coordinator: queue + worker pool + shared caches + the fleet
 /// scheduler + metrics.
 pub struct Coordinator {
@@ -375,6 +529,8 @@ pub struct Coordinator {
     jobs: Arc<JobTable>,
     queue_depth: Arc<AtomicUsize>,
     queue_capacity: AtomicUsize,
+    supervisor: Arc<Supervisor>,
+    watchdog: Option<JoinHandle<()>>,
     started: std::time::Instant,
 }
 
@@ -437,6 +593,7 @@ impl Coordinator {
         let scheduler =
             Arc::new(FleetScheduler::new(Arc::clone(&eval_pool)));
         let queue_depth = Arc::new(AtomicUsize::new(0));
+        let supervisor = Arc::new(Supervisor::new());
         let workers = (0..n_workers.max(1))
             .map(|i| {
                 let rx = Arc::clone(&rx);
@@ -448,16 +605,35 @@ impl Coordinator {
                 let store = store.clone();
                 let jobs = Arc::clone(&jobs);
                 let queue_depth = Arc::clone(&queue_depth);
+                let supervisor = Arc::clone(&supervisor);
                 std::thread::Builder::new()
                     .name(format!("fadiff-coord-{i}"))
                     .spawn(move || {
                         worker_loop(&dir, &rx, &metrics, &registry,
                                     &eval_pool, &scheduler, &store,
-                                    &jobs, &queue_depth)
+                                    &jobs, &queue_depth, &supervisor)
                     })
                     .expect("spawn coordinator worker")
             })
             .collect();
+        // the watchdog: scans running jobs' progress counters and
+        // fails any job frozen past the stall threshold
+        let watchdog = {
+            let supervisor = Arc::clone(&supervisor);
+            let jobs = Arc::clone(&jobs);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("fadiff-watchdog".into())
+                .spawn(move || {
+                    while !supervisor.stop.load(Ordering::SeqCst) {
+                        supervisor.scan(&jobs, &metrics);
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(25),
+                        );
+                    }
+                })
+                .expect("spawn watchdog")
+        };
         Ok(Coordinator {
             tx: Some(tx),
             workers,
@@ -469,6 +645,8 @@ impl Coordinator {
             jobs,
             queue_depth,
             queue_capacity: AtomicUsize::new(DEFAULT_QUEUE_CAPACITY),
+            supervisor,
+            watchdog: Some(watchdog),
             started: std::time::Instant::now(),
         })
     }
@@ -608,6 +786,25 @@ impl Coordinator {
         self.jobs.progress(id).map(|p| p.snapshot())
     }
 
+    /// The watchdog's stall threshold, milliseconds (`0` = disabled).
+    pub fn stall_ms(&self) -> u64 {
+        self.supervisor.stall_ms.load(Ordering::SeqCst)
+    }
+
+    /// Override the watchdog's stall threshold: a running job whose
+    /// search progress stays frozen `ms` milliseconds is failed
+    /// definitively (`0` disables the watchdog; tests shrink it to
+    /// trip on injected stalls deterministically).
+    pub fn set_stall_ms(&self, ms: u64) {
+        self.supervisor.stall_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// Service counters (shared with the serving front-end, which
+    /// bumps the connection-level fault counters directly).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
     /// Test hook: make a tracked id unknown, as table pruning would
     /// (races the server's `status` verb in the TOCTOU regression
     /// test).
@@ -652,6 +849,76 @@ impl Coordinator {
                     ]),
                 },
             );
+            map.insert(
+                "supervision".into(),
+                obj(vec![
+                    ("deadline_exceeded",
+                     num(self
+                         .metrics
+                         .deadline_exceeded
+                         .load(Ordering::SeqCst)
+                         as f64)),
+                    ("job_panics_contained",
+                     num(self.metrics.job_panics.load(Ordering::SeqCst)
+                         as f64)),
+                    ("watchdog_kills",
+                     num(self
+                         .metrics
+                         .watchdog_kills
+                         .load(Ordering::SeqCst)
+                         as f64)),
+                    ("scheduler_panics_contained",
+                     num(self.scheduler.panics_contained() as f64)),
+                    ("stall_ms", num(self.stall_ms() as f64)),
+                ]),
+            );
+            let injected = Json::Obj(
+                fault::snapshot()
+                    .into_iter()
+                    .map(|s| {
+                        (s.site.clone(), obj(vec![
+                            ("mode", Json::Str(s.mode)),
+                            ("calls", num(s.calls as f64)),
+                            ("fires", num(s.fires as f64)),
+                            ("delay_ms", num(s.delay_ms as f64)),
+                        ]))
+                    })
+                    .collect(),
+            );
+            let (io_retries, io_permanent) = match &self.store {
+                Some(st) => (
+                    st.stats().io_retries.load(Ordering::SeqCst),
+                    st.stats().io_permanent.load(Ordering::SeqCst),
+                ),
+                None => (0, 0),
+            };
+            map.insert(
+                "faults".into(),
+                obj(vec![
+                    ("injection_enabled",
+                     Json::Bool(fault::available())),
+                    ("oversized_drains",
+                     num(self
+                         .metrics
+                         .oversized_drains
+                         .load(Ordering::SeqCst)
+                         as f64)),
+                    ("queue_full_rejected",
+                     num(self
+                         .metrics
+                         .queue_full_rejected
+                         .load(Ordering::SeqCst)
+                         as f64)),
+                    ("store_io_retries", num(io_retries as f64)),
+                    ("store_io_permanent", num(io_permanent as f64)),
+                    ("injected", injected),
+                ]),
+            );
+            map.insert(
+                "conns_open".into(),
+                num(self.metrics.conns_open.load(Ordering::SeqCst)
+                    as f64),
+            );
             let uptime = self.uptime_seconds();
             let evals = self.metrics.evals.load(Ordering::SeqCst);
             let gsteps =
@@ -679,6 +946,10 @@ impl Drop for Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.supervisor.stop.store(true, Ordering::SeqCst);
+        if let Some(wd) = self.watchdog.take() {
+            let _ = wd.join();
+        }
         // workers are quiesced: flush dirty eval-cache segments so the
         // next process on this store dir starts warm
         self.registry.flush_all();
@@ -692,7 +963,8 @@ fn worker_loop(dir: &std::path::Path,
                eval_pool: &Arc<ThreadPool>,
                scheduler: &Arc<FleetScheduler>,
                store: &Option<Arc<ResultStore>>, jobs: &Arc<JobTable>,
-               queue_depth: &Arc<AtomicUsize>) {
+               queue_depth: &Arc<AtomicUsize>,
+               supervisor: &Arc<Supervisor>) {
     // One PJRT runtime per worker; artifacts compile lazily on the
     // first gradient job so native-only service pays no startup
     // compiles (the accurate degraded-mode warning is emitted once by
@@ -729,16 +1001,36 @@ fn worker_loop(dir: &std::path::Path,
         if let Some(id) = job_id {
             jobs.set_running(id);
         }
+        // the job's cooperative deadline starts when execution does
+        // (queue time does not count against it)
+        let deadline = (req.deadline_ms > 0)
+            .then(|| Deadline::in_ms(req.deadline_ms));
         let ctx = JobCtx {
             registry: Some(registry.as_ref()),
             pool: Some(Arc::clone(eval_pool)),
             cancel: Some(Arc::clone(&cancel)),
             fleet: Some(Arc::clone(scheduler)),
-            progress: Some(progress),
+            progress: Some(Arc::clone(&progress)),
             store: store.clone(),
+            deadline: deadline.clone(),
         };
-        let out = execute_job_ctx(rt.as_ref(), &req, &ctx)
-            .map_err(|e| e.to_string());
+        let (token, stall_latch) =
+            supervisor.register(job_id, &progress, &cancel);
+        // panic containment: a panicking job answers `internal` with
+        // its sanitized panic message; this worker thread survives
+        // and keeps draining the queue
+        let out = match std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                execute_job_ctx(rt.as_ref(), &req, &ctx)
+            }),
+        ) {
+            Ok(r) => r.map_err(|e| e.to_string()),
+            Err(p) => {
+                metrics.job_panics.fetch_add(1, Ordering::SeqCst);
+                Err(format!("job panicked: {}", panic_message(p)))
+            }
+        };
+        supervisor.deregister(token);
         if let Ok(r) = &out {
             // a stored result reports the *original* run's effort —
             // nothing was evaluated now, so throughput counters skip it
@@ -758,12 +1050,32 @@ fn worker_loop(dir: &std::path::Path,
             }
         }
         let was_cancelled = cancel.load(Ordering::SeqCst);
-        let status = if was_cancelled {
-            JobStatus::Cancelled
-        } else if out.is_ok() {
-            JobStatus::Completed
+        let stalled = stall_latch.load(Ordering::SeqCst);
+        // a watchdog-stalled job is failed even if the worker's call
+        // eventually returned Ok: the table may already hold the
+        // definitive failure, and a late success must not contradict
+        // what `status` callers were told
+        let out = if stalled {
+            out.and_then(|_| {
+                Err(stall_message(
+                    supervisor.stall_ms.load(Ordering::SeqCst),
+                ))
+            })
         } else {
+            out
+        };
+        let status = if stalled {
             JobStatus::Failed
+        } else if was_cancelled {
+            JobStatus::Cancelled
+        } else if out.is_err() {
+            JobStatus::Failed
+        } else if deadline.as_ref().is_some_and(|d| d.was_hit()) {
+            // the deadline cut the search short: terminal status says
+            // so, the payload still carries the best-so-far
+            JobStatus::DeadlineExceeded
+        } else {
+            JobStatus::Completed
         };
         let transitioned = job_id.map_or(true, |id| {
             jobs.finish(id, status, out.clone())
@@ -776,6 +1088,9 @@ fn worker_loop(dir: &std::path::Path,
                 JobStatus::Failed => {
                     metrics.failed.fetch_add(1, Ordering::SeqCst)
                 }
+                JobStatus::DeadlineExceeded => metrics
+                    .deadline_exceeded
+                    .fetch_add(1, Ordering::SeqCst),
                 _ => metrics.cancelled.fetch_add(1, Ordering::SeqCst),
             };
         }
@@ -808,6 +1123,12 @@ pub struct JobCtx<'c> {
     /// it (re-verified), improvements record back, and the pair's eval
     /// cache hydrates from its persisted segment.
     pub store: Option<Arc<ResultStore>>,
+    /// Cooperative per-job deadline: the search's stop seam polls it
+    /// alongside the cancel flag; when it expires the job ends
+    /// `deadline_exceeded` keeping its best-so-far. When `None` and
+    /// the request sets `deadline_ms`, [`execute_job_ctx`] derives one
+    /// at call time (the CLI path).
+    pub deadline: Option<Deadline>,
 }
 
 impl JobCtx<'_> {
@@ -830,6 +1151,7 @@ impl JobCtx<'_> {
                 key: format!("{cache_key}\u{0}{}", req.config),
             }),
             progress: self.progress.clone(),
+            deadline: self.deadline.clone(),
         }
     }
 }
@@ -928,6 +1250,7 @@ fn stored_job_result(sr: &store::StoredResult, req: &JobRequest,
         evals: sr.evals,
         wall_seconds: t0.elapsed().as_secs_f64(),
         stored: true,
+        deadline_hit: false,
     })
 }
 
@@ -939,6 +1262,9 @@ fn stored_job_result(sr: &store::StoredResult, req: &JobRequest,
 /// result records back on improvement.
 pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
                        ctx: &JobCtx) -> Result<JobResult> {
+    if fault::fire(fault::JOB_PANIC) {
+        panic!("injected: job panic");
+    }
     let t0 = std::time::Instant::now();
     let w_arc: Arc<Workload> = match &req.spec {
         Some(inline) => Arc::clone(inline),
@@ -969,7 +1295,13 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         }
     }
     let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
-    let ectx = ctx.eval_ctx(req, &w_arc, &hw_arc);
+    let mut ectx = ctx.eval_ctx(req, &w_arc, &hw_arc);
+    // the CLI path has no worker to start the clock, so the deadline
+    // begins here; server jobs carry one from their worker already
+    if ectx.deadline.is_none() && req.deadline_ms > 0 {
+        ectx.deadline = Some(Deadline::in_ms(req.deadline_ms));
+    }
+    let deadline = ectx.deadline.clone();
     let r: SearchResult = match req.method {
         Method::FADiff => gradient::optimize_ctx(
             rt, w, &hw,
@@ -998,14 +1330,15 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     costmodel::feasible(&r.best, w, &hw)
         .map_err(|e| anyhow!("coordinator produced invalid strategy: {e}"))?;
     if let (Some(st), Some(key)) = (&ctx.store, &store_key) {
-        // a cancelled job's partial best is served to its caller but
-        // never recorded: the stored incumbent for a key must always
-        // be a full run of that key's budget
+        // a cancelled or deadline-cut job's partial best is served to
+        // its caller but never recorded: the stored incumbent for a
+        // key must always be a full run of that key's budget
         let cancelled = ctx
             .cancel
             .as_ref()
             .is_some_and(|c| c.load(Ordering::SeqCst));
-        if !cancelled {
+        let cut = deadline.as_ref().is_some_and(|d| d.was_hit());
+        if !cancelled && !cut {
             st.record_result(key, &store::StoredResult::of(&r));
         }
     }
@@ -1029,6 +1362,9 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         evals: r.evals,
         wall_seconds: t0.elapsed().as_secs_f64(),
         stored: false,
+        deadline_hit: deadline
+            .as_ref()
+            .is_some_and(|d| d.was_hit()),
     })
 }
 

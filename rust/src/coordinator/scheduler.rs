@@ -68,6 +68,12 @@ pub struct SchedStats {
     pub candidates: AtomicU64,
     /// Largest number of items ever coalesced into one pass.
     pub max_items_per_pass: AtomicU64,
+    /// Passes that panicked and were contained: the group's reply
+    /// senders drop, every waiting engine receives an empty vector and
+    /// falls back to its bit-identical local path, and the scheduler
+    /// thread keeps draining. Surfaced here and as
+    /// `supervision.scheduler_panics_contained` in the `metrics` verb.
+    pub panics_contained: AtomicU64,
 }
 
 impl SchedStats {
@@ -106,6 +112,9 @@ impl SchedStats {
              num(self.candidates.load(Ordering::Relaxed) as f64)),
             ("max_items_per_pass",
              num(self.max_items_per_pass.load(Ordering::Relaxed)
+                 as f64)),
+            ("panics_contained",
+             num(self.panics_contained.load(Ordering::Relaxed)
                  as f64)),
         ])
     }
@@ -155,6 +164,12 @@ impl FleetScheduler {
         self.stats.to_json()
     }
 
+    /// Scheduler passes that panicked and were contained (see
+    /// [`SchedStats::panics_contained`]).
+    pub fn panics_contained(&self) -> u64 {
+        self.stats.panics_contained.load(Ordering::Relaxed)
+    }
+
     /// Test/bench hook: park the scheduler *after* draining — items
     /// keep accumulating but no pass runs until [`FleetScheduler::
     /// release`]. Lets a test submit N concurrent jobs and force their
@@ -176,6 +191,11 @@ impl EvalBackend for FleetScheduler {
     fn eval_candidates(&self, handle: &FleetHandle,
                        strategies: Vec<Strategy>) -> Vec<Eval> {
         if strategies.is_empty() {
+            return Vec::new();
+        }
+        // injected channel drop: behave exactly as a shutting-down
+        // scheduler — the engine computes the batch locally instead
+        if crate::util::fault::fire(crate::util::fault::SCHED_DROP) {
             return Vec::new();
         }
         let (reply, rx) = oneshot();
@@ -251,12 +271,31 @@ fn run_passes(batch: Vec<WorkItem>, pool: &Arc<ThreadPool>,
     }
     for key in order {
         let group = groups.remove(&key).expect("grouped");
-        run_one_pass(group, pool, stats);
+        // contain a panicking pass: dropping the group drops its reply
+        // senders, every waiting engine gets an empty vector and falls
+        // back to the bit-identical local path, and this thread lives
+        // on to serve the remaining groups
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                run_one_pass(group, pool, stats);
+            }),
+        );
+        if let Err(p) = caught {
+            stats.panics_contained.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "fleet scheduler: contained pass panic for key \
+                 {key:?}: {}",
+                crate::coordinator::panic_message(p)
+            );
+        }
     }
 }
 
 fn run_one_pass(group: Vec<WorkItem>, pool: &Arc<ThreadPool>,
                 stats: &SchedStats) {
+    if crate::util::fault::fire(crate::util::fault::SCHED_PANIC) {
+        panic!("injected: scheduler pass panic");
+    }
     let n_items = group.len() as u64;
     stats.passes.fetch_add(1, Ordering::Relaxed);
     if n_items >= 2 {

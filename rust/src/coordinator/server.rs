@@ -18,7 +18,15 @@
 //!   {"verb": "workloads", "describe": "vgg16"}  (full description)
 //!   {"verb": "metrics"}
 //!   {"verb": "ping"}
+//!   {"verb": "chaos", "action": "arm", "site": "eval.slow", ...}
 //!   {"verb": "shutdown"}
+//!
+//! Job-submitting verbs accept `deadline_ms`: a cooperative per-job
+//! execution deadline. An expired job ends with the stable
+//! `deadline_exceeded` code/status, keeping its best-so-far (like
+//! `cancel`). The `chaos` verb inspects and — in builds with the
+//! `fault-injection` feature — arms the deterministic fault-injection
+//! registry ([`crate::util::fault`]).
 //!
 //! # Response envelope (v1)
 //!
@@ -104,9 +112,9 @@ const WATCH_PROGRESS_EVERY: Duration = Duration::from_millis(25);
 
 /// Every verb this server answers, sorted (the `unknown_verb` error
 /// lists these so clients can discover the surface).
-pub const SUPPORTED_VERBS: [&str; 10] = [
-    "cancel", "metrics", "optimize", "ping", "shutdown", "status",
-    "store", "submit", "sweep", "workloads",
+pub const SUPPORTED_VERBS: [&str; 11] = [
+    "cancel", "chaos", "metrics", "optimize", "ping", "shutdown",
+    "status", "store", "submit", "sweep", "workloads",
 ];
 
 // ---------------------------------------------------------------------
@@ -141,6 +149,9 @@ pub enum ErrorCode {
     Cancelled,
     /// The job or server failed internally; `message` has the cause.
     Internal,
+    /// The job's cooperative `deadline_ms` expired; the error carries
+    /// the best-so-far under `result`.
+    DeadlineExceeded,
 }
 
 impl ErrorCode {
@@ -158,6 +169,7 @@ impl ErrorCode {
             ErrorCode::UnsupportedVersion => "unsupported_version",
             ErrorCode::Cancelled => "cancelled",
             ErrorCode::Internal => "internal",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
         }
     }
 }
@@ -329,6 +341,21 @@ pub fn parse_request(j: &Json) -> WireResult<JobRequest> {
             ));
         }
     }
+    if let Ok(d) = j.get("deadline_ms") {
+        let x = field(d.as_f64())?;
+        // same integer-representability bound as job ids: a deadline
+        // a client could not have meant exactly is a bad request
+        if !(x.is_finite()
+            && x >= 0.0
+            && x.fract() == 0.0
+            && x <= 9_007_199_254_740_992.0)
+        {
+            return Err(WireError::bad(
+                "deadline_ms must be a non-negative integer",
+            ));
+        }
+        req.deadline_ms = x as u64;
+    }
     if let Ok(spec_j) = j.get("workload_spec") {
         // size-capped and fully validated at parse time, like `chains`:
         // a bad spec is a one-line error before any job is queued
@@ -411,6 +438,7 @@ pub fn parse_sweep(j: &Json) -> WireResult<Vec<JobRequest>> {
                     max_iters: base.max_iters,
                     seed,
                     chains: base.chains,
+                    deadline_ms: base.deadline_ms,
                     spec: base.spec.clone(),
                     force: base.force,
                 });
@@ -463,6 +491,10 @@ fn check_capacity(coord: &Coordinator, incoming: usize)
     if depth + incoming <= capacity {
         return Ok(());
     }
+    coord
+        .metrics()
+        .queue_full_rejected
+        .fetch_add(1, Ordering::SeqCst);
     let per_worker = depth / coord.n_workers().max(1);
     let retry_ms = ((per_worker as u64) * 250).clamp(100, 10_000);
     Err(WireError::new(
@@ -483,7 +515,7 @@ fn check_capacity(coord: &Coordinator, incoming: usize)
 /// `optimize` responses; also nested in `status` results, watch `done`
 /// events, and `sweep` cells).
 pub fn result_to_json(r: &JobResult) -> Json {
-    obj(vec![
+    let mut rows = vec![
         ("workload", js(&r.request.workload)),
         ("config", js(&r.request.config)),
         ("method", js(r.request.method.name())),
@@ -502,7 +534,12 @@ pub fn result_to_json(r: &JobResult) -> Json {
         ("evals", num(r.evals as f64)),
         ("wall_seconds", num(r.wall_seconds)),
         ("stored", Json::Bool(r.stored)),
-    ])
+    ];
+    // only-when-true keeps every pre-deadline response byte-identical
+    if r.deadline_hit {
+        rows.push(("deadline_exceeded", Json::Bool(true)));
+    }
+    obj(rows)
 }
 
 /// The `workloads` verb: list every servable workload (zoo builders +
@@ -562,6 +599,115 @@ fn run_workloads(j: &Json) -> Json {
         ("count", num(rows.len() as f64)),
         ("workloads", arr(rows)),
     ]))
+}
+
+/// The registry view shared by every `chaos` action: whether the
+/// build can inject at all, the site names, and the armed sites with
+/// their live call/fire counters.
+fn chaos_status() -> Json {
+    use crate::util::fault;
+    let armed = fault::snapshot()
+        .into_iter()
+        .map(|s| {
+            obj(vec![
+                ("site", js(&s.site)),
+                ("mode", js(&s.mode)),
+                ("calls", num(s.calls as f64)),
+                ("fires", num(s.fires as f64)),
+                ("delay_ms", num(s.delay_ms as f64)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    obj(vec![
+        ("available", Json::Bool(fault::available())),
+        ("sites",
+         Json::Arr(fault::SITES.iter().map(|s| js(s)).collect())),
+        ("armed", arr(armed)),
+    ])
+}
+
+/// The `chaos` verb: inspect (`status`, the default), `arm` one
+/// injection site, or `reset` (disarm everything). Arming requires a
+/// build with the `fault-injection` cargo feature; status/reset work
+/// everywhere so probes can always ask what a server is capable of.
+fn run_chaos(j: &Json) -> Json {
+    use crate::util::fault;
+    let action = match j.get("action") {
+        Err(_) => "status",
+        Ok(a) => match a.as_str() {
+            Ok(s) => s,
+            Err(_) => {
+                return Response::err(&WireError::bad(
+                    "action must be a string",
+                ))
+            }
+        },
+    };
+    match action {
+        "status" => Response::ok(chaos_status()),
+        "reset" => {
+            fault::disarm_all();
+            Response::ok(chaos_status())
+        }
+        "arm" => {
+            if !fault::available() {
+                return Response::err(&WireError::bad(
+                    "fault injection is not compiled into this build \
+                     (enable the `fault-injection` cargo feature)",
+                ));
+            }
+            let site = match j.get("site").and_then(|s| s.as_str()) {
+                Err(_) => {
+                    return Response::err(&WireError::bad(
+                        "arm requires a site string",
+                    ))
+                }
+                Ok(s) => s.to_string(),
+            };
+            let mode = match j.get("mode") {
+                Err(_) => "oneshot".to_string(),
+                Ok(m) => match m.as_str() {
+                    Ok(s) => s.to_string(),
+                    Err(_) => {
+                        return Response::err(&WireError::bad(
+                            "mode must be a string",
+                        ))
+                    }
+                },
+            };
+            let p = j.get("p").and_then(|v| v.as_f64()).unwrap_or(1.0);
+            let seed = j
+                .get("seed")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64;
+            let delay_ms = j
+                .get("delay_ms")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64;
+            let trigger = match mode.as_str() {
+                "oneshot" => fault::Trigger::OneShot,
+                "always" => fault::Trigger::Always,
+                "prob" => fault::Trigger::Probability { p, seed },
+                other => {
+                    return Response::err(&WireError::bad(format!(
+                        "unknown chaos mode {other:?} (expected \
+                         oneshot, always, or prob)"
+                    )))
+                }
+            };
+            if let Err(e) = fault::arm(&site, trigger, delay_ms) {
+                return Response::err(&WireError::bad(e));
+            }
+            log_line(&format!(
+                "chaos: armed site {site:?} mode {mode}"
+            ));
+            Response::ok(chaos_status())
+        }
+        other => Response::err(&WireError::bad(format!(
+            "unknown chaos action {other:?} (expected status, arm, \
+             or reset)"
+        ))),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -711,11 +857,17 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
             };
             match coord.submit_tracked(req) {
                 // a saturated job table is backpressure, like the queue
-                Err(e) => reply_err(WireError::new(
-                    ErrorCode::QueueFull,
-                    e.to_string(),
-                )
-                .with("retry_after_ms", num(1000.0))),
+                Err(e) => {
+                    coord
+                        .metrics()
+                        .queue_full_rejected
+                        .fetch_add(1, Ordering::SeqCst);
+                    reply_err(WireError::new(
+                        ErrorCode::QueueFull,
+                        e.to_string(),
+                    )
+                    .with("retry_after_ms", num(1000.0)))
+                }
                 Ok(id) => Step::Reply(Response::ok(obj(vec![
                     ("job_id", num(id as f64)),
                     ("status", js("queued")),
@@ -819,6 +971,7 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
             Step::Reply(Response::ok(obj(vec![("store", payload)])))
         }
         "workloads" => Step::Reply(run_workloads(&j)),
+        "chaos" => Step::Reply(run_chaos(&j)),
         other => reply_err(
             WireError::new(ErrorCode::UnknownVerb,
                            format!("unknown verb {other:?}"))
@@ -1000,6 +1153,10 @@ impl Conn {
                 if !self.discarding
                     && self.buf.len() > MAX_REQUEST_BYTES
                 {
+                    coord
+                        .metrics()
+                        .oversized_drains
+                        .fetch_add(1, Ordering::SeqCst);
                     self.push_line(&Response::err(&too_large_line()));
                     self.discarding = true;
                     self.buf.clear();
@@ -1042,6 +1199,10 @@ impl Conn {
             self.half_closed = true; // EOF mid-line: answer then close
         }
         if self.buf.len() > MAX_REQUEST_BYTES {
+            coord
+                .metrics()
+                .oversized_drains
+                .fetch_add(1, Ordering::SeqCst);
             self.push_line(&Response::err(&too_large_line()));
             self.buf.clear();
             self.finish_cycle(shutdown);
@@ -1089,6 +1250,20 @@ impl Conn {
     fn poll_job(&mut self, wait: JobWait) -> (Mode, bool) {
         match wait.rx.try_poll() {
             Poll::Empty => (Mode::Job(wait), false),
+            // a deadline cut is an error envelope (stable code) that
+            // still carries the best-so-far under `result`
+            Poll::Ready(Ok(r)) if r.deadline_hit => {
+                self.push_line(&Response::err(
+                    &WireError::new(
+                        ErrorCode::DeadlineExceeded,
+                        format!("deadline_ms {} expired; returning \
+                                 best-so-far",
+                                r.request.deadline_ms),
+                    )
+                    .with("result", result_to_json(&r)),
+                ));
+                (Mode::Idle, true)
+            }
             Poll::Ready(Ok(r)) => {
                 self.push_line(&Response::ok(result_to_json(&r)));
                 (Mode::Idle, true)
@@ -1112,6 +1287,19 @@ impl Conn {
         while let Some((_, rx)) = wait.pending.front() {
             let entry = match rx.try_poll() {
                 Poll::Empty => break,
+                // a deadline-cut cell counts as failed but keeps its
+                // best-so-far inside the error body
+                Poll::Ready(Ok(r)) if r.deadline_hit => {
+                    wait.failed += 1;
+                    let e = WireError::new(
+                        ErrorCode::DeadlineExceeded,
+                        format!("deadline_ms {} expired; returning \
+                                 best-so-far",
+                                r.request.deadline_ms),
+                    )
+                    .with("result", result_to_json(&r));
+                    obj(vec![("error", e.body())])
+                }
                 Poll::Ready(Ok(r)) => {
                     wait.completed += 1;
                     obj(vec![("ok", result_to_json(&r))])
@@ -1226,6 +1414,37 @@ fn log_line(msg: &str) {
     eprintln!("[fadiff-serve] {msg}");
 }
 
+/// Latched by the SIGINT/SIGTERM handler; the event loop converts it
+/// into an orderly drain on its next iteration (the same path the
+/// `shutdown` verb takes, so the store flush and worker joins run).
+static SIGNAL_SHUTDOWN: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Async-signal-safe handler body: a single relaxed store.
+#[cfg(unix)]
+extern "C" fn on_termination_signal(_sig: i32) {
+    SIGNAL_SHUTDOWN.store(true, Ordering::Relaxed);
+}
+
+/// Install best-effort SIGINT/SIGTERM handlers that turn a kill into
+/// a graceful drain (jobs finish, the result store flushes) instead
+/// of an abrupt exit. No-op on non-unix platforms; only the `serve`
+/// binary path calls this — in-process test servers are unaffected.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_termination_signal as usize);
+            signal(SIGTERM, on_termination_signal as usize);
+        }
+    }
+}
+
 /// Run the server until a `shutdown` verb arrives.
 pub fn serve(addr: &str, coord: Coordinator) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
@@ -1245,6 +1464,11 @@ pub fn serve_on(listener: TcpListener, coord: Coordinator)
     listener.set_nonblocking(true)?;
     let mut conns: Vec<Conn> = Vec::new();
     loop {
+        if SIGNAL_SHUTDOWN.load(Ordering::Relaxed)
+            && !shutdown.0.swap(true, Ordering::SeqCst)
+        {
+            log_line("termination signal received; draining");
+        }
         let shutting = shutdown.0.load(Ordering::SeqCst);
         let mut activity = false;
         if !shutting {
@@ -1255,6 +1479,10 @@ pub fn serve_on(listener: TcpListener, coord: Coordinator)
                     Ok((stream, peer)) => {
                         activity = true;
                         if conns.len() >= MAX_CONNS {
+                            coord
+                                .metrics()
+                                .queue_full_rejected
+                                .fetch_add(1, Ordering::SeqCst);
                             reject_conn(stream, peer);
                             continue;
                         }
@@ -1279,6 +1507,10 @@ pub fn serve_on(listener: TcpListener, coord: Coordinator)
             activity |= conn.tick(&coord, &shutdown);
         }
         conns.retain(|c| !c.closed);
+        coord
+            .metrics()
+            .conns_open
+            .store(conns.len() as u64, Ordering::SeqCst);
         if shutting && conns.is_empty() {
             break;
         }
@@ -1524,9 +1756,137 @@ mod tests {
             (ErrorCode::UnsupportedVersion, "unsupported_version"),
             (ErrorCode::Cancelled, "cancelled"),
             (ErrorCode::Internal, "internal"),
+            (ErrorCode::DeadlineExceeded, "deadline_exceeded"),
         ] {
             assert_eq!(code.as_str(), name);
         }
+    }
+
+    #[test]
+    fn parse_request_validates_deadline_ms() {
+        let j = Json::parse(r#"{"deadline_ms": 1500}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().deadline_ms, 1500);
+        let j = Json::parse(r#"{"workload": "vgg16"}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().deadline_ms, 0,
+                   "absent deadline means none");
+        for body in [
+            r#"{"deadline_ms": -1}"#,
+            r#"{"deadline_ms": 1.5}"#,
+            r#"{"deadline_ms": 1e300}"#,
+            r#"{"deadline_ms": "soon"}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            let err = parse_request(&j).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{body}");
+        }
+    }
+
+    #[test]
+    fn sweep_cells_inherit_the_deadline() {
+        let j = Json::parse(
+            r#"{"verb": "sweep", "methods": ["random", "ga"],
+                "deadline_ms": 2000}"#)
+            .unwrap();
+        for r in parse_sweep(&j).unwrap() {
+            assert_eq!(r.deadline_ms, 2000);
+        }
+    }
+
+    #[test]
+    fn deadline_cut_results_flag_only_when_hit() {
+        let mut r = JobResult {
+            request: JobRequest::default(),
+            edp: 1.0,
+            full_model_edp: 1.0,
+            energy: 1.0,
+            latency: 1.0,
+            groups: Vec::new(),
+            fused_names: Vec::new(),
+            iters: 0,
+            evals: 0,
+            wall_seconds: 0.0,
+            stored: false,
+            deadline_hit: false,
+        };
+        let clean = result_to_json(&r);
+        assert!(clean.get("deadline_exceeded").is_err(),
+                "field must be absent (byte-identical) when unused");
+        r.deadline_hit = true;
+        let cut = result_to_json(&r);
+        assert_eq!(cut.get("deadline_exceeded").unwrap(),
+                   &Json::Bool(true));
+    }
+
+    #[test]
+    fn chaos_status_reports_availability_and_sites() {
+        let j = Json::parse(r#"{"verb": "chaos"}"#).unwrap();
+        let resp = run_chaos(&j);
+        let body = resp.get("ok").unwrap();
+        let avail = body.get("available").unwrap();
+        assert_eq!(avail,
+                   &Json::Bool(cfg!(feature = "fault-injection")));
+        let sites = match body.get("sites").unwrap() {
+            Json::Arr(v) => v.len(),
+            other => panic!("sites not an array: {other:?}"),
+        };
+        assert_eq!(sites, crate::util::fault::SITES.len());
+        // unknown actions are a bad_request, not a panic
+        let j = Json::parse(
+            r#"{"verb": "chaos", "action": "explode"}"#).unwrap();
+        let err = run_chaos(&j);
+        assert!(err.get("error").is_ok());
+    }
+
+    #[cfg(not(feature = "fault-injection"))]
+    #[test]
+    fn chaos_arm_requires_the_feature() {
+        let j = Json::parse(
+            r#"{"verb": "chaos", "action": "arm",
+                "site": "eval.slow"}"#)
+            .unwrap();
+        let resp = run_chaos(&j);
+        let body = resp.get("error").unwrap();
+        assert_eq!(body.get("code").unwrap().as_str().unwrap(),
+                   "bad_request");
+        assert!(body.get("message").unwrap().as_str().unwrap()
+            .contains("fault-injection"));
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn chaos_arm_and_reset_round_trip() {
+        use crate::util::fault;
+        // the registry is process-global and other lib tests share
+        // this process: serialize with every other arming test
+        let _g = fault::registry_lock();
+        fault::disarm_all();
+        let j = Json::parse(
+            r#"{"verb": "chaos", "action": "arm",
+                "site": "eval.slow", "mode": "prob",
+                "p": 0.5, "seed": 7}"#)
+            .unwrap();
+        let resp = run_chaos(&j);
+        let body = resp.get("ok").unwrap();
+        let armed = match body.get("armed").unwrap() {
+            Json::Arr(v) => v.clone(),
+            other => panic!("armed not an array: {other:?}"),
+        };
+        assert!(armed.iter().any(|row| {
+            row.get("site").unwrap().as_str().unwrap() == "eval.slow"
+        }));
+        let j = Json::parse(
+            r#"{"verb": "chaos", "action": "reset"}"#).unwrap();
+        let resp = run_chaos(&j);
+        let body = resp.get("ok").unwrap();
+        assert!(matches!(body.get("armed").unwrap(),
+                         Json::Arr(v) if v.is_empty()));
+        assert!(fault::snapshot().is_empty());
+        // arming an unknown site reports the known list
+        let j = Json::parse(
+            r#"{"verb": "chaos", "action": "arm",
+                "site": "no.such.site"}"#)
+            .unwrap();
+        assert!(run_chaos(&j).get("error").is_ok());
     }
 
     #[test]

@@ -94,6 +94,20 @@ fn unix_now() -> u64 {
         .unwrap_or(0)
 }
 
+/// Blob I/O attempts per operation (1 initial + bounded retries).
+const IO_ATTEMPTS: u32 = 3;
+
+/// Error kinds the OS reports for conditions that can clear on their
+/// own — worth a bounded retry. Everything else (missing file,
+/// permission denied, disk full, ...) is permanent for our purposes
+/// and degrades immediately.
+fn transient_io(kind: std::io::ErrorKind) -> bool {
+    matches!(kind,
+             std::io::ErrorKind::Interrupted
+             | std::io::ErrorKind::TimedOut
+             | std::io::ErrorKind::WouldBlock)
+}
+
 /// Store counters, surfaced by the `store` verb and under
 /// `metrics.store`.
 #[derive(Default)]
@@ -111,6 +125,15 @@ pub struct StoreStats {
     /// Corrupt / unverifiable entries dropped (blob digest mismatch,
     /// parse failure, or failed re-verification).
     pub corrupt_skips: AtomicU64,
+    /// Transient blob I/O failures that were retried (each backoff
+    /// sleep counts once). Surfaced as
+    /// `metrics.faults.store_io_retries`.
+    pub io_retries: AtomicU64,
+    /// Blob I/O operations that failed definitively — a non-transient
+    /// error, or retries exhausted. The operation degrades to the
+    /// counted cold-miss / skip paths, never a panic. Surfaced as
+    /// `metrics.faults.store_io_permanent`.
+    pub io_permanent: AtomicU64,
 }
 
 #[derive(Clone)]
@@ -476,6 +499,7 @@ pub struct ResultStore {
     writable: bool,
     stats: StoreStats,
     tmp_seq: AtomicU64,
+    retry_seq: AtomicU64,
 }
 
 impl ResultStore {
@@ -519,6 +543,7 @@ impl ResultStore {
             writable,
             stats,
             tmp_seq: AtomicU64::new(0),
+            retry_seq: AtomicU64::new(0),
         })
     }
 
@@ -725,6 +750,8 @@ impl ResultStore {
             ("hydrations", c(&self.stats.hydrations)),
             ("flushes", c(&self.stats.flushes)),
             ("corrupt_skips", c(&self.stats.corrupt_skips)),
+            ("io_retries", c(&self.stats.io_retries)),
+            ("io_permanent", c(&self.stats.io_permanent)),
         ])
     }
 
@@ -732,10 +759,78 @@ impl ResultStore {
         self.root.join(BLOBS_DIR).join(digest)
     }
 
+    /// Run a blob I/O operation with bounded retry on *transient*
+    /// failures (see [`transient_io`]): up to [`IO_ATTEMPTS`] tries
+    /// with exponential backoff plus a small deterministic jitter (a
+    /// hash of a process-local sequence number, so concurrent
+    /// retriers spread out without consulting a clock or an RNG).
+    /// Non-transient errors and exhausted retries count one
+    /// [`StoreStats::io_permanent`] and return the error — the caller
+    /// degrades to its existing counted miss / skip path.
+    fn with_io_retry<T>(&self,
+                        mut f: impl FnMut() -> std::io::Result<T>)
+                        -> std::io::Result<T> {
+        let mut attempt: u32 = 0;
+        loop {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) if transient_io(e.kind())
+                    && attempt + 1 < IO_ATTEMPTS =>
+                {
+                    self.stats
+                        .io_retries
+                        .fetch_add(1, Ordering::SeqCst);
+                    let base = 1u64 << attempt; // 1ms, 2ms, ...
+                    let seq = self
+                        .retry_seq
+                        .fetch_add(1, Ordering::SeqCst);
+                    let jitter = (seq
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        >> 32)
+                        % (base + 1);
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(
+                            base + jitter,
+                        ),
+                    );
+                    attempt += 1;
+                }
+                Err(e) => {
+                    self.stats
+                        .io_permanent
+                        .fetch_add(1, Ordering::SeqCst);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
     /// Read a blob and verify its content hashes to its name.
     fn read_blob(&self, digest: &str) -> Option<String> {
-        let text =
-            std::fs::read_to_string(self.blob_path(digest)).ok()?;
+        let path = self.blob_path(digest);
+        let text = self
+            .with_io_retry(|| {
+                if crate::util::fault::fire(
+                    crate::util::fault::STORE_READ_IO,
+                ) {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Interrupted,
+                        "injected: store read I/O error",
+                    ));
+                }
+                std::fs::read_to_string(&path)
+            })
+            .ok()?;
+        // injected corruption lands *after* the read so the digest
+        // check right below catches it — exercising the same counted
+        // cold-recompute degradation a real corrupt blob takes
+        let text = if crate::util::fault::fire(
+            crate::util::fault::STORE_CORRUPT,
+        ) {
+            format!("{text}<injected-corruption>")
+        } else {
+            text
+        };
         (fnv1a64(text.as_bytes()) == digest).then_some(text)
     }
 
@@ -781,20 +876,33 @@ impl ResultStore {
     /// Write-temp + rename: the final name only ever holds complete
     /// content. The temp name embeds pid + a sequence number so
     /// concurrent writers (threads or processes) never collide.
+    /// Transient failures retry with backoff (each attempt uses a
+    /// fresh temp name); definitive failure surfaces to the caller,
+    /// which keeps the previous consistent on-disk content.
     fn write_atomic(&self, path: &Path, content: &str)
                     -> std::io::Result<()> {
-        let seq = self.tmp_seq.fetch_add(1, Ordering::SeqCst);
-        let mut tmp = path.as_os_str().to_owned();
-        tmp.push(format!(".tmp.{}.{seq}", std::process::id()));
-        let tmp = PathBuf::from(tmp);
-        std::fs::write(&tmp, content)?;
-        match std::fs::rename(&tmp, path) {
-            Ok(()) => Ok(()),
-            Err(e) => {
-                let _ = std::fs::remove_file(&tmp);
-                Err(e)
+        self.with_io_retry(|| {
+            if crate::util::fault::fire(
+                crate::util::fault::STORE_WRITE_IO,
+            ) {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "injected: store write I/O error",
+                ));
             }
-        }
+            let seq = self.tmp_seq.fetch_add(1, Ordering::SeqCst);
+            let mut tmp = path.as_os_str().to_owned();
+            tmp.push(format!(".tmp.{}.{seq}", std::process::id()));
+            let tmp = PathBuf::from(tmp);
+            std::fs::write(&tmp, content)?;
+            match std::fs::rename(&tmp, path) {
+                Ok(()) => Ok(()),
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    Err(e)
+                }
+            }
+        })
     }
 
     fn blob_usage(&self) -> (u64, u64) {
@@ -973,6 +1081,64 @@ mod tests {
         let mut wrong = back.clone();
         wrong[0].2.energy += 1.0;
         assert!(!verify_segment_sample(&wrong, &w, &hw));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_io_recovers_within_the_retry_budget() {
+        let dir = tmp_store_dir("retry-ok");
+        let store = ResultStore::open(&dir).unwrap();
+        let mut failures_left = 2u32; // IO_ATTEMPTS - 1: recoverable
+        let got = store.with_io_retry(|| {
+            if failures_left > 0 {
+                failures_left -= 1;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "flaky",
+                ));
+            }
+            Ok(42)
+        });
+        assert_eq!(got.unwrap(), 42);
+        assert_eq!(store.stats.io_retries.load(Ordering::SeqCst), 2);
+        assert_eq!(store.stats.io_permanent.load(Ordering::SeqCst), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn permanent_io_fails_immediately_without_retries() {
+        let dir = tmp_store_dir("retry-perm");
+        let store = ResultStore::open(&dir).unwrap();
+        let got: std::io::Result<()> = store.with_io_retry(|| {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                "gone",
+            ))
+        });
+        assert!(got.is_err());
+        assert_eq!(store.stats.io_retries.load(Ordering::SeqCst), 0,
+                   "NotFound is not transient — no retry");
+        assert_eq!(store.stats.io_permanent.load(Ordering::SeqCst), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exhausted_retries_count_one_permanent_failure() {
+        let dir = tmp_store_dir("retry-exhaust");
+        let store = ResultStore::open(&dir).unwrap();
+        let mut calls = 0u32;
+        let got: std::io::Result<()> = store.with_io_retry(|| {
+            calls += 1;
+            Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "still timing out",
+            ))
+        });
+        assert!(got.is_err());
+        assert_eq!(calls, IO_ATTEMPTS);
+        assert_eq!(store.stats.io_retries.load(Ordering::SeqCst),
+                   (IO_ATTEMPTS - 1) as u64);
+        assert_eq!(store.stats.io_permanent.load(Ordering::SeqCst), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -26,7 +26,7 @@ fadiff — fusion-aware differentiable DNN scheduling (paper reproduction)
 USAGE: fadiff <subcommand> [flags]
 
   optimize  --workload resnet18 --config large --method fadiff
-            --seconds 10 --seed 1 --chains 8
+            --seconds 10 --seed 1 --chains 8 --deadline-ms 0
             methods: fadiff | dosa | ga | bo | random
             workloads: zoo names (gpt3 vgg19 vgg16 mobilenet resnet18)
             or any data/workloads/*.json spec stem (llama7b-decode,
@@ -46,7 +46,11 @@ USAGE: fadiff <subcommand> [flags]
   selftest                                       (compile artifacts)
   serve     --addr 127.0.0.1:7341 --workers 2    (TCP coordinator)
             --store-dir DIR persists results/caches across restarts
+            --stall-ms 30000 watchdog threshold (0 disables); SIGINT/
+            SIGTERM drain gracefully (jobs finish, store flushes)
             line-delimited JSON, v1 envelope — see docs/protocol.md
+            (--deadline-ms on optimize bounds one job's wall clock;
+            expired jobs answer deadline_exceeded with best-so-far)
 ";
 
 fn main() {
@@ -95,6 +99,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         max_iters: args.get_usize("max-iters", usize::MAX)?,
         seed: args.get_u64("seed", 1)?,
         chains: args.get_usize("chains", 0)?,
+        deadline_ms: args.get_u64("deadline-ms", 0)?,
         spec: None,
         force: args.has("force"),
     };
@@ -222,6 +227,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let store_dir =
         args.get("store-dir").map(std::path::PathBuf::from);
     let coord = Coordinator::new_with_store(None, workers, store_dir)?;
+    let stall_ms = args.get_u64(
+        "stall-ms", fadiff::coordinator::DEFAULT_STALL_MS)?;
+    coord.set_stall_ms(stall_ms);
+    // a signal drains like the shutdown verb: jobs finish, the
+    // result store flushes, then the process exits cleanly
+    fadiff::coordinator::server::install_signal_handlers();
     let metrics = std::sync::Arc::clone(&coord.metrics);
     let result = fadiff::coordinator::server::serve(&addr, coord);
     eprintln!("served {} jobs total",

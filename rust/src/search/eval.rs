@@ -74,6 +74,10 @@ thread_local! {
 /// computed, never what is computed, which is what makes merged batches
 /// bit-identical to per-job serial evaluation.
 pub fn compute_eval(s: &Strategy, w: &Workload, hw: &HwConfig) -> Eval {
+    // chaos probe (`eval.slow` / `eval.stall`): an inline no-op
+    // unless the fault-injection feature is compiled in AND a site is
+    // armed — the hot path stays branch-free in production builds
+    crate::util::fault::maybe_stall();
     if s.mappings.len() != w.len()
         || s.fuse.len() != w.len().saturating_sub(1)
     {

@@ -55,7 +55,7 @@ use crate::util::rng::{GumbelPool, Rng};
 use crate::util::threadpool::par_map;
 use crate::workload::{Workload, NDIMS};
 
-use super::{Budget, EvalCtx, Incumbent, SearchResult};
+use super::{Budget, Deadline, EvalCtx, Incumbent, SearchResult};
 
 /// Lambda-ramp progress after which the chain cull/respawn schedule
 /// engages (the exploit phase of the native multi-chain optimizer).
@@ -279,12 +279,13 @@ fn chain_seed(seed: u64, chain: usize) -> u64 {
 }
 
 /// Shared stop/ramp context polled by the chain workers: wall-clock
-/// budget, cooperative cancellation (the serving layer's `EvalCtx`
-/// flag), and the lambda-ramp progress.
+/// budget, cooperative cancellation and deadline (the serving
+/// layer's `EvalCtx` seam), and the lambda-ramp progress.
 struct ChainStop {
     start: Instant,
     budget: Budget,
     cancel: Option<Arc<AtomicBool>>,
+    deadline: Option<Deadline>,
 }
 
 impl ChainStop {
@@ -293,6 +294,7 @@ impl ChainStop {
             start: Instant::now(),
             budget,
             cancel: ctx.cancel.clone(),
+            deadline: ctx.deadline.clone(),
         }
     }
 
@@ -304,6 +306,7 @@ impl ChainStop {
         self.cancel
             .as_ref()
             .is_some_and(|c| c.load(Ordering::SeqCst))
+            || self.deadline.as_ref().is_some_and(|d| d.expired())
             || self.elapsed() >= self.budget.seconds
     }
 

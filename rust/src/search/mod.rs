@@ -36,7 +36,7 @@ pub mod random;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::HwConfig;
 use crate::mapping::Strategy;
@@ -118,6 +118,51 @@ impl SearchProgress {
     }
 }
 
+/// A cooperative per-job deadline, enforced through the same polling
+/// seam as cancellation: every native search checks it between
+/// batches (via [`Incumbent::stopped`] and the gradient methods'
+/// per-step `ChainStop`) and finishes with its best-so-far once
+/// expired. The `hit` latch records that *some* poll observed expiry,
+/// so the serving layer can distinguish a deadline-terminated job
+/// (terminal status `deadline_exceeded`) from a normal completion —
+/// even when the final poll raced the finish line.
+#[derive(Clone)]
+pub struct Deadline {
+    /// Absolute instant past which the job must stop.
+    pub at: Instant,
+    /// Latched true by the first poll that observes expiry.
+    pub hit: Arc<AtomicBool>,
+}
+
+impl Deadline {
+    /// A deadline `ms` milliseconds from now.
+    pub fn in_ms(ms: u64) -> Deadline {
+        Deadline {
+            at: Instant::now() + Duration::from_millis(ms),
+            hit: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Whether the deadline has passed; latches `hit` on the first
+    /// `true` observation.
+    pub fn expired(&self) -> bool {
+        if self.hit.load(Ordering::SeqCst) {
+            return true;
+        }
+        if Instant::now() >= self.at {
+            self.hit.store(true, Ordering::SeqCst);
+            return true;
+        }
+        false
+    }
+
+    /// Whether any poll has observed expiry (no clock read; the
+    /// after-the-fact classification check).
+    pub fn was_hit(&self) -> bool {
+        self.hit.load(Ordering::SeqCst)
+    }
+}
+
 /// Cross-job evaluation context handed to the `optimize_ctx` entry
 /// points by a serving layer: an optional shared memoization cache
 /// (must match the job's `(workload, hardware)` pair — see
@@ -141,6 +186,10 @@ pub struct EvalCtx {
     pub fleet: Option<FleetHandle>,
     /// Live progress sink read by `status {"watch": true}` streams.
     pub progress: Option<Arc<SearchProgress>>,
+    /// Cooperative per-job deadline, polled at the same batch
+    /// boundaries as `cancel`. Expired jobs keep their best-so-far
+    /// and terminate with status `deadline_exceeded`.
+    pub deadline: Option<Deadline>,
 }
 
 impl EvalCtx {
@@ -239,6 +288,7 @@ pub struct Incumbent<'a> {
     pub engine: EvalEngine<'a>,
     start: Instant,
     cancel: Option<Arc<AtomicBool>>,
+    deadline: Option<Deadline>,
     progress: Option<Arc<SearchProgress>>,
     /// Best feasible `(strategy, edp, energy, latency)` so far.
     pub best: Option<(Strategy, f64, f64, f64)>,
@@ -257,8 +307,8 @@ impl<'a> Incumbent<'a> {
     /// Wrap an explicitly-configured engine (thread count, cache size).
     pub fn with_engine(engine: EvalEngine<'a>) -> Incumbent<'a> {
         Incumbent { engine, start: Instant::now(), cancel: None,
-                    progress: None, best: None, trace: Vec::new(),
-                    evals: 0 }
+                    deadline: None, progress: None, best: None,
+                    trace: Vec::new(), evals: 0 }
     }
 
     /// Incumbent + engine as prescribed by a serving-layer [`EvalCtx`]
@@ -268,6 +318,7 @@ impl<'a> Incumbent<'a> {
                     -> Incumbent<'a> {
         let mut inc = Incumbent::with_engine(ctx.engine(w, hw));
         inc.cancel = ctx.cancel.clone();
+        inc.deadline = ctx.deadline.clone();
         inc.progress = ctx.progress.clone();
         inc
     }
@@ -293,11 +344,18 @@ impl<'a> Incumbent<'a> {
             .is_some_and(|c| c.load(Ordering::SeqCst))
     }
 
+    /// Whether the job's cooperative deadline (if any) has passed.
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.as_ref().is_some_and(|d| d.expired())
+    }
+
     /// The loop condition every native search polls between batches:
-    /// budget exhausted or cancellation requested. On `true` the search
-    /// finishes immediately with its best-so-far.
+    /// budget exhausted, deadline expired, or cancellation requested.
+    /// On `true` the search finishes immediately with its
+    /// best-so-far.
     pub fn stopped(&self, budget: &Budget) -> bool {
-        self.cancelled() || self.elapsed() >= budget.seconds
+        self.cancelled() || self.deadline_expired()
+            || self.elapsed() >= budget.seconds
     }
 
     /// Evaluate through the engine; record if feasible and better.
@@ -413,6 +471,25 @@ mod tests {
         let snap2 = progress.snapshot();
         assert_eq!(snap2.best_edp, Some(edp));
         assert_eq!(snap2.evals, 2);
+    }
+
+    #[test]
+    fn deadline_stops_the_loop_and_latches_hit() {
+        let w = zoo::vgg16();
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let ctx = EvalCtx { deadline: Some(Deadline::in_ms(1)),
+                            ..Default::default() };
+        let inc = Incumbent::with_ctx(&w, &hw, &ctx);
+        let budget = Budget::seconds(1e9);
+        assert!(!ctx.deadline.as_ref().unwrap().was_hit());
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(inc.stopped(&budget),
+                "expired deadline stops the search loop");
+        assert!(ctx.deadline.as_ref().unwrap().was_hit(),
+                "the poll latched the hit flag for the supervisor");
+        // without a deadline the same budget keeps running
+        let free = Incumbent::new(&w, &hw);
+        assert!(!free.stopped(&budget));
     }
 
     #[test]

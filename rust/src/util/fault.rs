@@ -1,0 +1,409 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A registry of *named injection sites* compiled into the hot paths
+//! only under the `fault-injection` cargo feature. Without the feature
+//! every probe ([`fire`], [`maybe_stall`]) is an `#[inline(always)]`
+//! `false`/no-op the optimizer folds away — zero cost, bit-identical
+//! behavior. With the feature the sites stay dormant until *armed*
+//! (by tests via [`arm`], or over the wire via the server's `chaos`
+//! verb) with a seeded probabilistic, one-shot, or always trigger —
+//! so a chaos run is reproducible: same arming, same request stream,
+//! same fault sequence.
+//!
+//! Site map (where each probe lives and what firing does):
+//!
+//! * [`STORE_READ_IO`] / [`STORE_WRITE_IO`] — blob I/O inside
+//!   `coordinator::store` fails with a transient error (exercises the
+//!   bounded retry-with-backoff and, past it, the counted
+//!   cold-recompute degradation).
+//! * [`STORE_CORRUPT`] — a blob read returns corrupted bytes
+//!   (exercises digest verification + `corrupt_skips`).
+//! * [`EVAL_SLOW`] / [`EVAL_STALL`] — `compute_eval` sleeps the armed
+//!   `delay_ms` (slow batch; a stall long enough trips the
+//!   coordinator watchdog).
+//! * [`POOL_PANIC`] — a thread-pool worker panics inside a task.
+//! * [`JOB_PANIC`] — job execution panics inside a coordinator
+//!   worker (contained; the job answers `internal`).
+//! * [`SCHED_DROP`] — the fleet scheduler "drops" a submitted batch
+//!   (the engine falls back to local evaluation).
+//! * [`SCHED_PANIC`] — a fleet-scheduler merge pass panics mid-drain
+//!   (contained; waiters fall back locally).
+
+/// Blob reads inside the result store fail with a transient I/O
+/// error (exercises retry-with-backoff, then cold recompute).
+pub const STORE_READ_IO: &str = "store.read_io";
+/// Blob writes inside the result store fail with a transient I/O
+/// error (exercises retry-with-backoff; persistence is best-effort).
+pub const STORE_WRITE_IO: &str = "store.write_io";
+/// Blob reads return corrupted bytes (exercises digest verification
+/// and the counted cold-recompute path).
+pub const STORE_CORRUPT: &str = "store.corrupt";
+/// Candidate evaluation sleeps the armed `delay_ms` (slow eval).
+pub const EVAL_SLOW: &str = "eval.slow";
+/// Candidate evaluation sleeps the armed `delay_ms`; arm with a delay
+/// above the watchdog's stall threshold to simulate a stuck batch.
+pub const EVAL_STALL: &str = "eval.stall";
+/// A thread-pool worker panics inside a submitted task.
+pub const POOL_PANIC: &str = "pool.panic";
+/// Job execution panics inside the coordinator worker.
+pub const JOB_PANIC: &str = "job.panic";
+/// The fleet scheduler drops a submitted batch as a failed channel
+/// send would (the engine falls back to local evaluation).
+pub const SCHED_DROP: &str = "sched.drop";
+/// A fleet-scheduler merge pass panics mid-drain.
+pub const SCHED_PANIC: &str = "sched.panic";
+
+/// Every known injection site (the `chaos` verb and [`arm`] validate
+/// against this list).
+pub const SITES: [&str; 9] = [
+    STORE_READ_IO,
+    STORE_WRITE_IO,
+    STORE_CORRUPT,
+    EVAL_SLOW,
+    EVAL_STALL,
+    POOL_PANIC,
+    JOB_PANIC,
+    SCHED_DROP,
+    SCHED_PANIC,
+];
+
+/// How an armed site decides to fire.
+#[derive(Clone, Copy, Debug)]
+pub enum Trigger {
+    /// Fire each probe independently with probability `p`, driven by
+    /// a deterministic hash of `(seed, site, probe index)` — the same
+    /// arming replays the same fault sequence.
+    Probability {
+        /// Per-probe fire probability in `[0, 1]`.
+        p: f64,
+        /// Hash seed.
+        seed: u64,
+    },
+    /// Fire exactly once, on the next probe.
+    OneShot,
+    /// Fire on every probe.
+    Always,
+}
+
+/// One site's observable state (the `chaos` verb's status payload and
+/// the `metrics.faults.injected` block).
+#[derive(Clone, Debug)]
+pub struct SiteSnapshot {
+    /// Site name (one of [`SITES`]).
+    pub site: String,
+    /// Human-readable trigger description.
+    pub mode: String,
+    /// Probes evaluated since the site was armed.
+    pub calls: u64,
+    /// Times the site fired.
+    pub fires: u64,
+    /// Sleep used by the delay sites (`eval.slow` / `eval.stall`).
+    pub delay_ms: u64,
+}
+
+#[cfg(feature = "fault-injection")]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, OnceLock};
+
+    use super::{SiteSnapshot, Trigger, SITES};
+
+    struct Site {
+        trigger: Trigger,
+        delay_ms: u64,
+        calls: u64,
+        fires: u64,
+        spent: bool,
+    }
+
+    // fast-path gate: probes skip the registry lock entirely while
+    // nothing is armed, so a feature-on build with injection idle
+    // stays cheap on the eval hot path
+    static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+    fn registry() -> &'static Mutex<HashMap<String, Site>> {
+        static R: OnceLock<Mutex<HashMap<String, Site>>> =
+            OnceLock::new();
+        R.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn splitmix64(x: u64) -> u64 {
+        let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn site_hash(site: &str) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in site.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+
+    /// Whether fault injection is compiled into this build.
+    pub fn available() -> bool {
+        true
+    }
+
+    /// Probe an injection site: `true` when the site is armed and its
+    /// trigger fires for this call. Unarmed (or unknown) sites never
+    /// fire.
+    pub fn fire(site: &str) -> bool {
+        if !ANY_ARMED.load(Ordering::Relaxed) {
+            return false;
+        }
+        let mut reg = registry().lock().unwrap();
+        let Some(s) = reg.get_mut(site) else {
+            return false;
+        };
+        let n = s.calls;
+        s.calls += 1;
+        let hit = match s.trigger {
+            Trigger::Probability { p, seed } => {
+                let h = splitmix64(
+                    seed ^ site_hash(site)
+                        ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                ((h >> 11) as f64 / (1u64 << 53) as f64) < p
+            }
+            Trigger::OneShot => !s.spent,
+            Trigger::Always => true,
+        };
+        if hit {
+            s.spent = true;
+            s.fires += 1;
+        }
+        hit
+    }
+
+    /// The armed sleep for a delay site (0 when unarmed).
+    pub fn delay_ms(site: &str) -> u64 {
+        registry()
+            .lock()
+            .unwrap()
+            .get(site)
+            .map_or(0, |s| s.delay_ms)
+    }
+
+    /// Arm (or re-arm, resetting counters) a site. Rejects unknown
+    /// site names and probabilities outside `[0, 1]`.
+    pub fn arm(site: &str, trigger: Trigger, delay_ms: u64)
+               -> Result<(), String> {
+        if !SITES.contains(&site) {
+            return Err(format!(
+                "unknown injection site {site:?} (known: {})",
+                SITES.join(", ")
+            ));
+        }
+        if let Trigger::Probability { p, .. } = trigger {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!(
+                    "probability {p} outside [0, 1]"
+                ));
+            }
+        }
+        registry().lock().unwrap().insert(
+            site.to_string(),
+            Site { trigger, delay_ms, calls: 0, fires: 0,
+                   spent: false },
+        );
+        ANY_ARMED.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Disarm every site and clear its counters.
+    pub fn disarm_all() {
+        registry().lock().unwrap().clear();
+        ANY_ARMED.store(false, Ordering::SeqCst);
+    }
+
+    /// Observable state of every armed site, sorted by site name.
+    pub fn snapshot() -> Vec<SiteSnapshot> {
+        let reg = registry().lock().unwrap();
+        let mut v: Vec<SiteSnapshot> = reg
+            .iter()
+            .map(|(k, s)| SiteSnapshot {
+                site: k.clone(),
+                mode: match s.trigger {
+                    Trigger::Probability { p, seed } => {
+                        format!("prob p={p} seed={seed}")
+                    }
+                    Trigger::OneShot => "oneshot".into(),
+                    Trigger::Always => "always".into(),
+                },
+                calls: s.calls,
+                fires: s.fires,
+                delay_ms: s.delay_ms,
+            })
+            .collect();
+        v.sort_by(|a, b| a.site.cmp(&b.site));
+        v
+    }
+
+    /// The eval hot path's single probe line: check the two delay
+    /// sites and sleep when one fires.
+    pub fn maybe_stall() {
+        if !ANY_ARMED.load(Ordering::Relaxed) {
+            return;
+        }
+        for site in [super::EVAL_SLOW, super::EVAL_STALL] {
+            if fire(site) {
+                let ms = delay_ms(site);
+                if ms > 0 {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(ms),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "fault-injection"))]
+mod imp {
+    use super::{SiteSnapshot, Trigger};
+
+    /// Whether fault injection is compiled into this build.
+    #[inline(always)]
+    pub fn available() -> bool {
+        false
+    }
+
+    /// Always `false` in this build: no site can be armed.
+    #[inline(always)]
+    pub fn fire(_site: &str) -> bool {
+        false
+    }
+
+    /// Always zero in this build.
+    #[inline(always)]
+    pub fn delay_ms(_site: &str) -> u64 {
+        0
+    }
+
+    /// Always rejected: the registry is compiled out. Build with
+    /// `--features fault-injection` to arm sites.
+    pub fn arm(_site: &str, _trigger: Trigger, _delay_ms: u64)
+               -> Result<(), String> {
+        Err("fault injection is not compiled into this build \
+             (enable the `fault-injection` cargo feature)"
+            .into())
+    }
+
+    /// No-op in this build.
+    #[inline(always)]
+    pub fn disarm_all() {}
+
+    /// Always empty in this build.
+    pub fn snapshot() -> Vec<SiteSnapshot> {
+        Vec::new()
+    }
+
+    /// No-op in this build.
+    #[inline(always)]
+    pub fn maybe_stall() {}
+}
+
+pub use imp::{arm, available, delay_ms, disarm_all, fire,
+              maybe_stall, snapshot};
+
+/// Process-global lock for tests that arm the registry: sites are
+/// shared across the whole process, so concurrent armers would clobber
+/// each other's triggers and counters. Take this guard (and disarm on
+/// drop) around any test that arms.
+#[cfg(feature = "fault-injection")]
+pub fn registry_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    // a panicking armed test must not poison every later chaos test
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// The unit tests only arm the *harmless* sites (the delay sites with
+// delay 0, and the scheduler drop whose effect is a local fallback):
+// the registry is process-global, and other lib tests run in the same
+// process concurrently under `--features fault-injection`.
+#[cfg(all(test, feature = "fault-injection"))]
+mod tests {
+    use super::*;
+
+    struct DisarmOnDrop;
+    impl Drop for DisarmOnDrop {
+        fn drop(&mut self) {
+            disarm_all();
+        }
+    }
+
+    #[test]
+    fn one_shot_fires_exactly_once() {
+        let _g = registry_lock();
+        let _d = DisarmOnDrop;
+        arm(EVAL_SLOW, Trigger::OneShot, 0).unwrap();
+        assert!(fire(EVAL_SLOW));
+        assert!(!fire(EVAL_SLOW));
+        assert!(!fire(EVAL_SLOW));
+        let snap = snapshot();
+        let s = snap.iter().find(|s| s.site == EVAL_SLOW).unwrap();
+        assert_eq!(s.fires, 1);
+        assert_eq!(s.calls, 3);
+    }
+
+    #[test]
+    fn probability_is_deterministic_per_seed() {
+        let _g = registry_lock();
+        let _d = DisarmOnDrop;
+        let run = |seed: u64| -> Vec<bool> {
+            arm(EVAL_SLOW,
+                Trigger::Probability { p: 0.5, seed }, 0)
+                .unwrap();
+            (0..64).map(|_| fire(EVAL_SLOW)).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed, same fault sequence");
+        assert_ne!(a, c, "different seeds diverge");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x),
+                "p=0.5 both fires and skips over 64 probes");
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let _g = registry_lock();
+        let _d = DisarmOnDrop;
+        arm(EVAL_STALL,
+            Trigger::Probability { p: 0.0, seed: 1 }, 0)
+            .unwrap();
+        assert!((0..64).all(|_| !fire(EVAL_STALL)));
+        arm(EVAL_STALL,
+            Trigger::Probability { p: 1.0, seed: 1 }, 0)
+            .unwrap();
+        assert!((0..64).all(|_| fire(EVAL_STALL)));
+    }
+
+    #[test]
+    fn unarmed_and_unknown_sites_never_fire() {
+        let _g = registry_lock();
+        let _d = DisarmOnDrop;
+        assert!(!fire(SCHED_DROP));
+        assert!(!fire("no.such.site"));
+        assert!(arm("no.such.site", Trigger::Always, 0).is_err());
+        assert!(arm(EVAL_SLOW,
+                    Trigger::Probability { p: 1.5, seed: 0 }, 0)
+            .is_err());
+    }
+
+    #[test]
+    fn disarm_all_clears_everything() {
+        let _g = registry_lock();
+        let _d = DisarmOnDrop;
+        arm(SCHED_DROP, Trigger::Always, 0).unwrap();
+        assert!(fire(SCHED_DROP));
+        disarm_all();
+        assert!(!fire(SCHED_DROP));
+        assert!(snapshot().is_empty());
+    }
+}

@@ -2,6 +2,7 @@
 //! PRNG, JSON, statistics, CLI parsing, thread pool, property testing.
 
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -141,7 +141,16 @@ impl ThreadPool {
                         break;
                     }
                     let ok = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| f(i)),
+                        std::panic::AssertUnwindSafe(|| {
+                            // injected task panic: exercises the same
+                            // containment a real poisoned task takes
+                            if crate::util::fault::fire(
+                                crate::util::fault::POOL_PANIC,
+                            ) {
+                                panic!("injected: pool task panic");
+                            }
+                            f(i)
+                        }),
                     )
                     .is_ok();
                     if !ok {

@@ -142,6 +142,7 @@ fn coordinator_serves_repeat_jobs_from_cache() {
         max_iters: 48,
         seed: 9,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     };
@@ -188,6 +189,7 @@ fn pooled_coordinator_results_match_standalone_search() {
         max_iters: 4,
         seed: 21,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     };

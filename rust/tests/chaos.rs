@@ -1,0 +1,389 @@
+//! Chaos battery: with deterministic fault injection armed across the
+//! store, scheduler, thread pool, and job execution, the serving stack
+//! must degrade exactly as designed — transient I/O retries, corrupt
+//! blobs recompute cold, panics are contained to one job, stalls are
+//! failed by the watchdog — and the coordinator/server must never
+//! panic, never hang, and land every job on exactly one terminal
+//! status, with every degradation counted in the metrics payload.
+//!
+//! Compiled only with `--features fault-injection`; the injection
+//! registry is process-global, so every test holds
+//! `fault::registry_lock()` for its full duration and disarms on drop.
+
+#![cfg(feature = "fault-injection")]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use fadiff::coordinator::{server, Coordinator, JobRequest, JobStatus,
+                          Method};
+use fadiff::util::fault::{self, Trigger};
+use fadiff::util::json::Json;
+
+struct DisarmOnDrop;
+impl Drop for DisarmOnDrop {
+    fn drop(&mut self) {
+        fault::disarm_all();
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!(
+        "fadiff_chaos_{tag}_{}_{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn job(seed: u64) -> JobRequest {
+    JobRequest {
+        workload: "mobilenet".into(),
+        config: "large".into(),
+        method: Method::Random,
+        seconds: 3600.0, // iteration-capped: deterministic per seed
+        max_iters: 40,
+        seed,
+        chains: 0,
+        deadline_ms: 0,
+        spec: None,
+        force: false,
+    }
+}
+
+fn wait_terminal(coord: &Coordinator, id: u64) -> JobStatus {
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = coord.job_status(id).expect("known job");
+        if status.is_terminal() {
+            return status;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60),
+                "job {id} stuck in {status:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn store_io_faults_retry_then_degrade_without_wrong_answers() {
+    let _g = fault::registry_lock();
+    let _d = DisarmOnDrop;
+    let dir = tmp_dir("io");
+    let cold = {
+        let coord = Coordinator::new_with_store(
+            None, 1, Some(dir.clone())).unwrap();
+        coord.run(job(7)).unwrap()
+    }; // drop flushes the store
+
+    // one transient read failure: the retry budget absorbs it and the
+    // warm answer is still served bit-exact
+    let coord = Coordinator::new_with_store(
+        None, 1, Some(dir.clone())).unwrap();
+    fault::arm(fault::STORE_READ_IO, Trigger::OneShot, 0).unwrap();
+    let warm = coord.run(job(7)).unwrap();
+    assert!(warm.stored, "retry must recover the stored answer");
+    assert_eq!(warm.edp.to_bits(), cold.edp.to_bits());
+    let st = coord.store().unwrap();
+    assert!(st.stats().io_retries.load(Ordering::SeqCst) >= 1,
+            "transient failure must be counted as a retry");
+    assert_eq!(st.stats().io_permanent.load(Ordering::SeqCst), 0);
+
+    // every blob read corrupted: digest verification rejects them
+    // all and the request degrades to a counted cold recompute —
+    // never a wrong answer
+    fault::disarm_all();
+    fault::arm(fault::STORE_CORRUPT, Trigger::Always, 0).unwrap();
+    let recomputed = coord.run(job(7)).unwrap();
+    assert!(!recomputed.stored,
+            "corruption must force a real recompute");
+    assert_eq!(recomputed.edp.to_bits(), cold.edp.to_bits(),
+               "recompute must reproduce the same numbers");
+    assert!(st.stats().corrupt_skips.load(Ordering::SeqCst) >= 1);
+
+    // persistent write failure: the job still completes (persistence
+    // is best-effort) and the exhausted budget counts one permanent
+    fault::disarm_all();
+    fault::arm(fault::STORE_WRITE_IO, Trigger::Always, 0).unwrap();
+    let unsaved = coord.run(job(8)).unwrap();
+    assert!(unsaved.edp.is_finite() && unsaved.edp > 0.0);
+    assert!(st.stats().io_permanent.load(Ordering::SeqCst) >= 1,
+            "exhausted retries must count a permanent failure");
+    drop(coord);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn panicking_job_is_contained_and_the_coordinator_keeps_serving() {
+    let _g = fault::registry_lock();
+    let _d = DisarmOnDrop;
+    let coord = Coordinator::new(None, 1).unwrap();
+    fault::arm(fault::JOB_PANIC, Trigger::OneShot, 0).unwrap();
+    let id = coord.submit_tracked(job(1)).unwrap();
+    assert_eq!(wait_terminal(&coord, id), JobStatus::Failed);
+    let (_, result) = coord.job_status(id).unwrap();
+    let msg = result.unwrap().unwrap_err();
+    assert!(msg.contains("panicked"), "{msg}");
+    assert_eq!(coord.metrics.job_panics.load(Ordering::SeqCst), 1);
+    // the worker survived: the very next job completes normally
+    let r = coord.run(job(2)).unwrap();
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert_eq!(coord.metrics.in_flight(), 0);
+}
+
+#[test]
+fn scheduler_pass_panics_fall_back_to_identical_local_results() {
+    let _g = fault::registry_lock();
+    let _d = DisarmOnDrop;
+    // baseline numbers from an unfaulted coordinator
+    let baseline = Coordinator::new(None, 2).unwrap()
+        .run(job(5)).unwrap();
+
+    // every merge pass panics: waiters get empty replies and fall
+    // back to local evaluation — same numbers, contained panics
+    let coord = Coordinator::new(None, 2).unwrap();
+    fault::arm(fault::SCHED_PANIC, Trigger::Always, 0).unwrap();
+    let r = coord.run(job(5)).unwrap();
+    assert_eq!(r.edp.to_bits(), baseline.edp.to_bits(),
+               "local fallback must be bit-identical");
+    let m = coord.metrics_json();
+    let contained = m.get("supervision").unwrap()
+        .get_f64("scheduler_panics_contained").unwrap();
+    assert!(contained >= 1.0,
+            "pass panics must be counted: {contained}");
+
+    // a dropped batch (failed channel send) degrades the same way
+    fault::disarm_all();
+    let coord = Coordinator::new(None, 2).unwrap();
+    fault::arm(fault::SCHED_DROP, Trigger::Always, 0).unwrap();
+    let r = coord.run(job(5)).unwrap();
+    assert_eq!(r.edp.to_bits(), baseline.edp.to_bits());
+}
+
+#[test]
+fn watchdog_fails_stalled_jobs_instead_of_wedging_the_queue() {
+    let _g = fault::registry_lock();
+    let _d = DisarmOnDrop;
+    let coord = Coordinator::new(None, 1).unwrap();
+    coord.set_stall_ms(200);
+    // every eval sleeps far past the stall threshold: no search
+    // progress ever lands, so the watchdog must fail the job
+    fault::arm(fault::EVAL_STALL, Trigger::Always, 1500).unwrap();
+    let id = coord.submit_tracked(job(1)).unwrap();
+    assert_eq!(wait_terminal(&coord, id), JobStatus::Failed);
+    let (_, result) = coord.job_status(id).unwrap();
+    let msg = result.unwrap().unwrap_err();
+    assert!(msg.contains("watchdog"), "{msg}");
+    assert!(coord.metrics.watchdog_kills.load(Ordering::SeqCst) >= 1);
+    // the queue is not wedged: with injection gone the next job runs
+    fault::disarm_all();
+    coord.set_stall_ms(30_000);
+    let r = coord.run(job(2)).unwrap();
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert_eq!(coord.metrics.in_flight(), 0);
+}
+
+// ---------------------------------------------------------------------
+// over-the-wire chaos
+// ---------------------------------------------------------------------
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn request(&mut self, body: &str) -> Json {
+        self.stream.write_all(body.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap_or_else(|e| {
+            panic!("unparseable response {line:?}: {e}")
+        })
+    }
+}
+
+fn ok_payload(j: &Json) -> &Json {
+    assert!(j.get("error").is_err(),
+            "expected success envelope, got {j:?}");
+    j.get("ok").unwrap()
+}
+
+fn start_server(workers: usize)
+                -> (std::net::SocketAddr,
+                    std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, workers).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+    (addr, t)
+}
+
+#[test]
+fn chaos_verb_arms_over_the_wire_and_metrics_count_fires() {
+    let _g = fault::registry_lock();
+    let _d = DisarmOnDrop;
+    let (addr, t) = start_server(1);
+    let mut cl = Client::connect(addr);
+
+    // arm a harmless delay site over the wire
+    let r = cl.request(
+        r#"{"verb": "chaos", "action": "arm", "site": "eval.slow",
+            "mode": "always", "delay_ms": 1}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    let body = ok_payload(&r);
+    assert_eq!(body.get("available").unwrap(), &Json::Bool(true));
+
+    // a short job probes the armed site on every eval
+    let o = cl.request(
+        r#"{"verb": "optimize", "workload": "mobilenet",
+            "method": "random", "seconds": 3600, "max_iters": 8,
+            "seed": 3}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    assert!(ok_payload(&o).get_f64("edp").unwrap() > 0.0);
+
+    // status and metrics agree that the site fired
+    let s = cl.request(r#"{"verb": "chaos", "action": "status"}"#);
+    let armed = ok_payload(&s).get("armed").unwrap()
+        .as_arr().unwrap().clone();
+    let row = armed.iter()
+        .find(|r| r.get("site").unwrap().as_str().unwrap()
+                  == "eval.slow")
+        .expect("armed site listed");
+    assert!(row.get_f64("fires").unwrap() >= 1.0, "{row:?}");
+    let m = cl.request(r#"{"verb": "metrics"}"#);
+    let faults = ok_payload(&m).get("faults").unwrap();
+    assert_eq!(faults.get("injection_enabled").unwrap(),
+               &Json::Bool(true));
+    let injected = faults.get("injected").unwrap();
+    assert!(injected.get("eval.slow").unwrap()
+        .get_f64("fires").unwrap() >= 1.0, "{m:?}");
+
+    // reset disarms everything
+    let r = cl.request(r#"{"verb": "chaos", "action": "reset"}"#);
+    assert!(ok_payload(&r).get("armed").unwrap()
+        .as_arr().unwrap().is_empty());
+    assert!(fault::snapshot().is_empty());
+
+    let s = cl.request(r#"{"verb": "shutdown"}"#);
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
+    t.join().unwrap().unwrap();
+}
+
+#[test]
+fn mixed_fault_battery_lands_every_job_on_one_terminal_status() {
+    let _g = fault::registry_lock();
+    let _d = DisarmOnDrop;
+    let (addr, t) = start_server(2);
+    let mut cl = Client::connect(addr);
+
+    // a seeded probabilistic mix across the serving stack: panics,
+    // dropped scheduler batches, slow evals — reproducible per seed
+    fault::arm(fault::JOB_PANIC,
+               Trigger::Probability { p: 0.25, seed: 42 }, 0)
+        .unwrap();
+    fault::arm(fault::SCHED_DROP,
+               Trigger::Probability { p: 0.3, seed: 42 }, 0)
+        .unwrap();
+    fault::arm(fault::EVAL_SLOW,
+               Trigger::Probability { p: 0.2, seed: 42 }, 2)
+        .unwrap();
+    fault::arm(fault::POOL_PANIC,
+               Trigger::Probability { p: 0.05, seed: 42 }, 0)
+        .unwrap();
+
+    const JOBS: usize = 12;
+    let mut ids = Vec::new();
+    for i in 0..JOBS {
+        let method = if i % 3 == 0 { "ga" } else { "random" };
+        // every third job also carries a tight deadline
+        let deadline = if i % 3 == 2 { 400 } else { 0 };
+        let body = format!(
+            "{{\"verb\": \"submit\", \"workload\": \"mobilenet\", \
+             \"method\": \"{method}\", \"seconds\": 3600, \
+             \"max_iters\": 300, \"seed\": {i}, \
+             \"deadline_ms\": {deadline}}}"
+        );
+        let r = cl.request(&body);
+        ids.push(ok_payload(&r).get_f64("job_id").unwrap() as u64);
+        // the server must answer control traffic throughout
+        let pong = cl.request(r#"{"verb": "ping"}"#);
+        assert_eq!(ok_payload(&pong).get("pong").unwrap(),
+                   &Json::Bool(true));
+    }
+    // cancel a few mid-flight
+    for id in [ids[1], ids[5]] {
+        let c = cl.request(
+            &format!("{{\"verb\": \"cancel\", \"job_id\": {id}}}"));
+        assert!(ok_payload(&c).get("status").is_ok());
+    }
+
+    // every job reaches exactly one terminal status, and that status
+    // is stable once reached
+    let t0 = Instant::now();
+    for &id in &ids {
+        let terminal = loop {
+            let st = cl.request(
+                &format!("{{\"verb\": \"status\", \
+                          \"job_id\": {id}}}"));
+            let status = ok_payload(&st).get("status").unwrap()
+                .as_str().unwrap().to_string();
+            match status.as_str() {
+                "completed" | "failed" | "cancelled"
+                | "deadline_exceeded" => break status,
+                "queued" | "running" => {}
+                other => panic!("job {id}: bad status {other}"),
+            }
+            assert!(t0.elapsed() < Duration::from_secs(120),
+                    "job {id} never reached a terminal status");
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        let again = cl.request(
+            &format!("{{\"verb\": \"status\", \"job_id\": {id}}}"));
+        assert_eq!(ok_payload(&again).get("status").unwrap()
+                       .as_str().unwrap(),
+                   terminal, "terminal status changed");
+    }
+
+    // the books balance: every submission is accounted for and
+    // nothing is left in flight
+    let m = cl.request(r#"{"verb": "metrics"}"#);
+    let body = ok_payload(&m);
+    let done = body.get_f64("completed").unwrap()
+        + body.get_f64("failed").unwrap()
+        + body.get_f64("cancelled").unwrap()
+        + body.get_f64("deadline_exceeded").unwrap();
+    assert_eq!(done, JOBS as f64, "{m:?}");
+    assert_eq!(body.get_f64("in_flight").unwrap(), 0.0, "{m:?}");
+
+    fault::disarm_all();
+    // with injection gone the server serves normally
+    let o = cl.request(
+        r#"{"verb": "optimize", "workload": "mobilenet",
+            "method": "random", "seconds": 3600, "max_iters": 8,
+            "seed": 99}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    assert!(ok_payload(&o).get_f64("edp").unwrap() > 0.0);
+    let s = cl.request(r#"{"verb": "shutdown"}"#);
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
+    t.join().unwrap().unwrap();
+}

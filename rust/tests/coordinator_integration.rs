@@ -24,6 +24,7 @@ fn small_job(workload: &str, method: Method) -> JobRequest {
         max_iters: 200,
         seed: 5,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     }
@@ -278,6 +279,7 @@ fn cancel_stops_a_running_job_early() {
         max_iters: usize::MAX,
         seed: 3,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     }).unwrap();
@@ -302,6 +304,76 @@ fn cancel_stops_a_running_job_early() {
     assert!(r.edp.is_finite() && r.edp > 0.0);
     assert_eq!(coord.metrics.cancelled.load(Ordering::SeqCst), 1);
     assert_eq!(coord.metrics.in_flight(), 0);
+}
+
+#[test]
+fn deadline_cuts_a_long_job_keeping_best_so_far() {
+    let coord = Coordinator::new(None, 1).unwrap();
+    // a job that would run for an hour, bounded to a fraction of a
+    // second: the deadline must cut it cooperatively
+    let t0 = Instant::now();
+    let id = coord.submit_tracked(JobRequest {
+        seconds: 3600.0,
+        max_iters: usize::MAX,
+        deadline_ms: 300,
+        ..small_job("mobilenet", Method::Random)
+    }).unwrap();
+    assert_eq!(wait_terminal(&coord, id), JobStatus::DeadlineExceeded);
+    assert!(t0.elapsed() < Duration::from_secs(30),
+            "deadline never fired");
+    // like cancel, the cut keeps the best-so-far as the result
+    let (_, result) = coord.job_status(id).unwrap();
+    let r = result.unwrap().expect("cut job keeps partial best");
+    assert!(r.edp.is_finite() && r.edp > 0.0);
+    assert!(r.deadline_hit);
+    assert_eq!(
+        coord.metrics.deadline_exceeded.load(Ordering::SeqCst), 1);
+    assert_eq!(coord.metrics.in_flight(), 0);
+    // a generous deadline does not perturb a short job
+    let ok = coord.run(JobRequest {
+        deadline_ms: 3_600_000,
+        ..small_job("mobilenet", Method::Random)
+    }).unwrap();
+    assert!(!ok.deadline_hit);
+    assert_eq!(coord.metrics.completed.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn tcp_deadline_answers_coded_error_with_result() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let t = std::thread::spawn(move || server::serve_on(listener, coord));
+
+    // a blocking optimize past its deadline answers the stable code,
+    // with the best-so-far attached inside the error body
+    let env = Json::parse(&send(
+        addr,
+        r#"{"verb": "optimize", "workload": "mobilenet", "method": "random", "seconds": 3600, "max_iters": 1000000000000, "deadline_ms": 300}"#,
+    ))
+    .unwrap();
+    let e = err_body(&env, "deadline_exceeded");
+    let r = e.get("result").unwrap();
+    assert!(r.get_f64("edp").unwrap() > 0.0);
+    assert_eq!(r.get("deadline_exceeded").unwrap(), &Json::Bool(true));
+
+    // bad deadline values are parse-time errors
+    let bad = Json::parse(&send(
+        addr,
+        r#"{"verb": "optimize", "deadline_ms": -5}"#,
+    ))
+    .unwrap();
+    err_body(&bad, "bad_request");
+
+    // metrics surface the cut in the supervision block
+    let m = Json::parse(&send(addr, r#"{"verb": "metrics"}"#)).unwrap();
+    let sup = ok_payload(&m).get("supervision").unwrap();
+    assert_eq!(sup.get_f64("deadline_exceeded").unwrap(), 1.0);
+    assert_eq!(ok_payload(&m).get_f64("in_flight").unwrap(), 0.0);
+
+    let s = Json::parse(&send(addr, r#"{"verb": "shutdown"}"#)).unwrap();
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
+    t.join().unwrap().unwrap();
 }
 
 #[test]

@@ -22,6 +22,7 @@ fn req(method: Method, seed: u64) -> JobRequest {
         max_iters: 30,
         seed,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     }

@@ -177,6 +177,64 @@ fn concurrent_clients_mixed_verbs() {
 }
 
 #[test]
+fn watch_disconnect_releases_the_connection_slot() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Coordinator::new(None, 1).unwrap();
+    let server_thread =
+        std::thread::spawn(move || server::serve_on(listener, coord));
+
+    let mut ctl = Client::connect(addr);
+    let sub = ctl.request(
+        r#"{"verb": "submit", "workload": "mobilenet",
+            "method": "random", "seconds": 3600,
+            "max_iters": 1000000000000, "seed": 3}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    let id = ok_payload(&sub).get_f64("job_id").unwrap() as u64;
+
+    // a watcher that reads one event and then vanishes mid-stream:
+    // the event loop must notice the dead socket and reap its slot
+    let mut watcher = Client::connect(addr);
+    watcher
+        .stream
+        .write_all(
+            format!(
+                "{{\"verb\": \"status\", \"job_id\": {id}, \
+                 \"watch\": true}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let first = watcher.read_event();
+    assert!(ok_payload(&first).get("event").is_ok(), "{first:?}");
+    drop(watcher);
+
+    // the running job keeps producing progress events, so the next
+    // write to the dead watcher fails and closes it; conns_open must
+    // fall back to just the control connection
+    let t0 = std::time::Instant::now();
+    loop {
+        let m = ctl.request(r#"{"verb": "metrics"}"#);
+        let open = ok_payload(&m).get_f64("conns_open").unwrap();
+        if open <= 1.0 {
+            break;
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_secs(30),
+                "dead watch connection never reaped: {open} open");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    let c = ctl.request(
+        &format!("{{\"verb\": \"cancel\", \"job_id\": {id}}}"));
+    assert!(ok_payload(&c).get("status").is_ok());
+    let s = ctl.request(r#"{"verb": "shutdown"}"#);
+    assert!(ok_payload(&s).get("shutting_down").is_ok());
+    server_thread.join().unwrap().unwrap();
+}
+
+#[test]
 fn watch_streams_progress_to_a_terminal_event() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();

@@ -233,6 +233,14 @@ fn oversized_lines_are_answered_and_drained() {
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert_pong(line.trim());
+    // the drain is counted (metrics.faults, not just the error line)
+    let m = Json::parse(&ask(&mut stream, &mut reader,
+                             "{\"verb\": \"metrics\"}"))
+        .unwrap();
+    let drains = m.get("ok").unwrap()
+        .get("faults").unwrap()
+        .get_f64("oversized_drains").unwrap();
+    assert!(drains >= 1.0, "oversized drain not counted: {drains}");
     drop(stream);
     shutdown_server(addr, t);
 }
@@ -358,6 +366,15 @@ fn flooded_queue_answers_queue_full_with_retry_hint() {
     );
     // non-queueing verbs still serve under backpressure
     assert_pong(&ask(&mut stream, &mut reader, "{\"verb\": \"ping\"}"));
+    // both rejections (the submit and the sweep) are counted
+    let m = Json::parse(&ask(&mut stream, &mut reader,
+                             "{\"verb\": \"metrics\"}"))
+        .unwrap();
+    let rejected = m.get("ok").unwrap()
+        .get("faults").unwrap()
+        .get_f64("queue_full_rejected").unwrap();
+    assert!(rejected >= 2.0,
+            "queue_full rejections not counted: {rejected}");
     // drain: cancel both jobs so shutdown is quick
     for id in [id_b, id_a] {
         let c = Json::parse(&ask(

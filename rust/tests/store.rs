@@ -33,6 +33,7 @@ fn job(seed: u64) -> JobRequest {
         max_iters: 40,
         seed,
         chains: 0,
+        deadline_ms: 0,
         spec: None,
         force: false,
     }
