@@ -27,6 +27,13 @@ Two kinds of checks:
   (cross-job batch merging) must sustain at least
   ``FLEET_FLOOR`` x the serial one-job-at-a-time throughput of the
   same machine — concurrency plus merging must never cost throughput.
+  The bound-and-prune lanes add one more hard invariant: pruned and
+  unpruned random search (same seed, same budget, same machine) must
+  report the *same* best EDP per workload — the screen is admissible
+  and may only skip work, never change the answer. The prune and
+  warm-start speedup floors are throughput claims on the same run, so
+  they are enforced on real baselines and advisory while the
+  ``bootstrap`` flag stands.
 """
 
 import json
@@ -46,6 +53,16 @@ MAX_REGRESSION = 0.25
 # the f64-bound gradient kernel cannot reach the full 3x, so the 3x
 # floor applies from 8 hardware threads and a 2x floor from 4.
 SPEEDUP_FLOORS = [(8, 3.0), (4, 2.0)]
+
+# Bound-and-prune screening must not cost throughput on the default-on
+# random path (it skips kernel work for pruned candidates and the
+# screen itself is cheap), and a warm-started repeat-shape search must
+# reach the cold run's final quality markedly faster (its library
+# seeds are offered before the first fresh sample). Both are same-run
+# speedups, but they lean on timing jitter at sub-second scales, so
+# they stay advisory while the baseline carries ``bootstrap``.
+PRUNE_SPEEDUP_FLOOR = 1.0
+WARM_SPEEDUP_FLOOR = 2.0
 
 # Minimum merged-vs-serial evals/sec ratio for the fleet-serving lane
 # (same-machine comparison, so no bootstrap caveat): concurrent jobs
@@ -150,6 +167,41 @@ def main(argv):
                 "with batch merging must not be slower than running "
                 "them one at a time"
             )
+
+    # bound-and-prune: the default-on screen may only skip work, never
+    # change the answer — pruned and unpruned search report the same
+    # best EDP. Same machine, same run: enforced even on bootstrap.
+    for wl in ("llama", "gpt3"):
+        p = cur.get(f"pruned_best_edp_{wl}")
+        u = cur.get(f"unpruned_best_edp_{wl}")
+        if p is None or u is None:
+            failures.append(
+                "current run is missing the pruned/unpruned best-EDP "
+                f"lanes for {wl}"
+            )
+        elif p != u:
+            failures.append(
+                f"bound-and-prune changed the {wl} answer: pruned "
+                f"best EDP {p!r} != unpruned {u!r}"
+            )
+        else:
+            print(f"pruned == unpruned best EDP on {wl}: {p:.6g}")
+
+    for lane, floor in (
+        ("prune_evals_speedup", PRUNE_SPEEDUP_FLOOR),
+        ("warm_start_speedup", WARM_SPEEDUP_FLOOR),
+    ):
+        v = cur.get(lane)
+        if v is None:
+            failures.append(f"current run is missing lane {lane!r}")
+            continue
+        print(f"{lane}: {v:.2f}x (floor {floor}x)")
+        if v < floor:
+            msg = f"{lane} {v:.2f}x is below the {floor}x floor"
+            if bootstrap:
+                print(f"advisory (bootstrap baseline): {msg}")
+            else:
+                failures.append(msg)
 
     if failures:
         print("\nFAIL:")

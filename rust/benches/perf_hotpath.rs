@@ -23,6 +23,11 @@
 //!   * fleet serving: N concurrent small jobs on one coordinator
 //!     (cross-job batch merging in the fleet scheduler) vs the same
 //!     jobs run serially — the merged path must not be slower
+//!   * bound-and-prune screening: pruned vs unpruned random search on
+//!     llama7b-decode + gpt3 (prune ratio, evals/sec; best EDP must
+//!     stay identical — the CI-gated invariant)
+//!   * warm-start time-to-quality: a library-seeded repeat-shape
+//!     search vs the cold run that populated the library
 //!   * PJRT gradient step + batched artifact eval (skipped unless real
 //!     artifacts + a PJRT-backed xla crate are present)
 //!
@@ -43,7 +48,8 @@ use fadiff::mapping::Strategy;
 use fadiff::runtime::stage::WorkloadStage;
 use fadiff::runtime::{HostTensor, Runtime, ART_EVAL, ART_GRAD};
 use fadiff::search::encoding::{dim, express_naive};
-use fadiff::search::{gradient, Budget, EvalEngine};
+use fadiff::search::{gradient, random, Budget, EvalCtx, EvalEngine,
+                     PruneMode, PruneStats};
 use fadiff::util::json::{num, obj};
 use fadiff::util::rng::Rng;
 use fadiff::util::threadpool::ThreadPool;
@@ -384,6 +390,8 @@ fn main() {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     };
     let t0 = std::time::Instant::now();
     let mut fleet_evals = 0usize;
@@ -420,6 +428,110 @@ fn main() {
         fleet_serial_eps / 1e3, fleet_merged_eps / 1e3,
         fleet_merged_eps / fleet_serial_eps, fleet_merged_passes
     );
+
+    // --- bound-and-prune: screened vs full-kernel random search ---------
+    // the tentpole lanes CI gates: the admissible screen must leave
+    // the default-on answer identical (hard, machine-relative:
+    // pruned_best_edp == unpruned_best_edp per workload) and should
+    // prune a visible candidate share (advisory floors while
+    // `bootstrap` stands)
+    let wl_llama =
+        fadiff::coordinator::resolve_workload("llama7b-decode")
+            .expect("llama7b-decode spec");
+    let prune_budget = Budget { seconds: 3600.0, max_iters: 600 };
+    let prune_lane = |wl: &fadiff::workload::Workload, name: &str| {
+        let off_ctx =
+            EvalCtx { prune: PruneMode::Off, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let off =
+            random::optimize_ctx(wl, &hw, 31, prune_budget, &off_ctx)
+                .expect("unpruned random");
+        let off_wall = t0.elapsed().as_secs_f64();
+        let stats = Arc::new(PruneStats::default());
+        let on_ctx = EvalCtx {
+            prune_stats: Some(Arc::clone(&stats)),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let on =
+            random::optimize_ctx(wl, &hw, 31, prune_budget, &on_ctx)
+                .expect("pruned random");
+        let on_wall = t0.elapsed().as_secs_f64();
+        assert_eq!(on.edp.to_bits(), off.edp.to_bits(),
+                   "default-on pruning must not change the answer");
+        let bounded =
+            stats.bounded.load(std::sync::atomic::Ordering::Relaxed);
+        let ratio = stats.pruned() as f64 / (bounded.max(1) as f64);
+        let off_eps = off.evals as f64 / off_wall;
+        let on_eps = on.evals as f64 / on_wall;
+        println!(
+            "bound-and-prune {name} (random, {} iters): unpruned \
+             {:.1}k evals/s | pruned {:.1}k evals/s ({:.2}x), {:.0}% \
+             pruned, best EDP identical",
+            prune_budget.max_iters, off_eps / 1e3, on_eps / 1e3,
+            on_eps / off_eps, ratio * 100.0
+        );
+        (off.edp, on.edp, off_eps, on_eps, ratio)
+    };
+    let (edp_off_llama, edp_on_llama, eps_off_llama, eps_on_llama,
+         pr_llama) = prune_lane(&wl_llama, "llama7b-decode");
+    let (edp_off_gpt, edp_on_gpt, eps_off_gpt, eps_on_gpt, pr_gpt) =
+        prune_lane(&wl_gpt, "gpt3");
+    let prune_speedup =
+        (eps_on_llama / eps_off_llama).min(eps_on_gpt / eps_off_gpt);
+    let prune_ratio = pr_llama.min(pr_gpt);
+    println!(
+        "  -> prune ratio {prune_ratio:.2} / evals-per-sec speedup \
+         {prune_speedup:.2}x (min over workloads)\n"
+    );
+
+    // --- warm-start: time-to-quality on repeat shapes -------------------
+    // the library claim: a search seeded from the mapping library's
+    // per-layer bests reaches the cold run's final quality almost
+    // instantly on repeat-shape jobs (the seeds are offered to the
+    // incumbent at iteration 0, before any fresh sampling)
+    let warm_budget = Budget { seconds: 3600.0, max_iters: 400 };
+    let warm_lane = |wl: &fadiff::workload::Workload, name: &str| {
+        let cold = random::optimize_ctx(wl, &hw, 41, warm_budget,
+                                        &EvalCtx::default())
+            .expect("cold random");
+        let cold_tt =
+            cold.trace.last().map(|p| p.seconds).expect("trace");
+        let lib = fadiff::coordinator::MappingLibrary::new();
+        let fp = hw.fingerprint();
+        assert!(lib.record(&fp, wl, &hw, &cold.best) > 0);
+        let wl_tables = WorkloadTables::new(wl);
+        let warm_ctx = EvalCtx {
+            seeds: lib.seeds_for(&fp, wl, &hw, &wl_tables),
+            warm_frac: 1.0,
+            ..Default::default()
+        };
+        let warm = random::optimize_ctx(wl, &hw, 42, warm_budget,
+                                        &warm_ctx)
+            .expect("warm random");
+        let warm_tt = warm
+            .trace
+            .iter()
+            .find(|p| p.best_edp <= cold.edp)
+            .map(|p| p.seconds)
+            .expect("a library seed must reach cold quality");
+        println!(
+            "warm-start {name} (random, repeat shapes): cold reached \
+             {:.3e} after {:.3}s | warm matched it in {:.4}s \
+             ({:.0}x), warm final {:.3e}",
+            cold.edp, cold_tt, warm_tt,
+            cold_tt / warm_tt.max(1e-6), warm.edp
+        );
+        (cold.edp, cold_tt, warm.edp, warm_tt)
+    };
+    let (cold_edp_llama, cold_tt_llama, warm_edp_llama,
+         warm_tt_llama) = warm_lane(&wl_llama, "llama7b-decode");
+    let (cold_edp_gpt, cold_tt_gpt, warm_edp_gpt, warm_tt_gpt) =
+        warm_lane(&wl_gpt, "gpt3");
+    let warm_speedup = (cold_tt_llama / warm_tt_llama.max(1e-6))
+        .min(cold_tt_gpt / warm_tt_gpt.max(1e-6));
+    println!("  -> warm-start time-to-quality speedup \
+              {warm_speedup:.0}x (min over workloads)\n");
 
     if json_mode {
         let j = obj(vec![
@@ -458,6 +570,27 @@ fn main() {
             ("fleet_merged_vs_serial_speedup",
              num(fleet_merged_eps / fleet_serial_eps)),
             ("fleet_merged_passes", num(fleet_merged_passes as f64)),
+            ("prune_ratio_llama", num(pr_llama)),
+            ("prune_ratio_gpt3", num(pr_gpt)),
+            ("prune_ratio", num(prune_ratio)),
+            ("unpruned_evals_per_sec_llama", num(eps_off_llama)),
+            ("pruned_evals_per_sec_llama", num(eps_on_llama)),
+            ("unpruned_evals_per_sec_gpt3", num(eps_off_gpt)),
+            ("pruned_evals_per_sec_gpt3", num(eps_on_gpt)),
+            ("prune_evals_speedup", num(prune_speedup)),
+            ("unpruned_best_edp_llama", num(edp_off_llama)),
+            ("pruned_best_edp_llama", num(edp_on_llama)),
+            ("unpruned_best_edp_gpt3", num(edp_off_gpt)),
+            ("pruned_best_edp_gpt3", num(edp_on_gpt)),
+            ("cold_best_edp_llama", num(cold_edp_llama)),
+            ("warm_best_edp_llama", num(warm_edp_llama)),
+            ("cold_best_edp_gpt3", num(cold_edp_gpt)),
+            ("warm_best_edp_gpt3", num(warm_edp_gpt)),
+            ("cold_time_to_quality_sec_llama", num(cold_tt_llama)),
+            ("warm_time_to_quality_sec_llama", num(warm_tt_llama)),
+            ("cold_time_to_quality_sec_gpt3", num(cold_tt_gpt)),
+            ("warm_time_to_quality_sec_gpt3", num(warm_tt_gpt)),
+            ("warm_start_speedup", num(warm_speedup)),
         ]);
         // cargo runs benches with CWD = the package root (rust/);
         // anchor at the repo root so CI finds the file

@@ -1,0 +1,574 @@
+//! Persistent warm-start mapping library (the DNNFuser-style transfer
+//! lever): best-known per-layer mappings + fusion decisions, keyed by
+//! [`crate::workload::Layer::shape_fingerprint`] under one shard per
+//! hardware-config fingerprint.
+//!
+//! Every completed feasible job *records* its winning strategy layer
+//! by layer (improvement-gated on the per-layer EDP contribution in
+//! its fusion context, so a worse rerun never clobbers a better
+//! incumbent). Jobs that opt in via `warm_frac > 0` get *seed*
+//! strategies assembled from the shard — an exact-shape composite plus
+//! a nearest-shape composite — which the search methods inject into
+//! their starting populations/chains in deterministic order. For a
+//! fixed library state seeding is a pure function of the request, so
+//! warm results stay reproducible.
+//!
+//! Seeding is OPT-IN per request (default `warm_frac = 0`) because the
+//! library is process-global mutable state: a default-on seed would
+//! make two identical requests answer differently depending on which
+//! unrelated jobs completed first, breaking the serving layer's
+//! same-key-same-answer determinism contract. Recording is always on —
+//! it never affects any in-flight result.
+//!
+//! Persistence rides the content-addressed [`super::store`]: one blob
+//! per hardware config under the manifest's optional `library`
+//! section, loaded lazily per config and flushed on the coordinator's
+//! graceful shutdown like eval-cache segments (the CLI, which has no
+//! long-lived process, flushes right after its single job).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::HwConfig;
+use crate::costmodel::tables::WorkloadTables;
+use crate::costmodel::{components, layer_cost};
+use crate::mapping::{LayerMapping, Strategy, NSLOTS, SLOT_S};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::{LayerKind, Workload, DIM_C, DIM_K, NDIMS};
+
+use super::store::{bits_hex, parse_bits, ResultStore};
+
+/// Library counters, surfaced as `metrics.library` and in the `store`
+/// verb payload.
+#[derive(Debug, Default)]
+pub struct LibraryStats {
+    /// Per-layer entries accepted past the improvement gate.
+    pub records: AtomicU64,
+    /// Seed strategies handed to searches.
+    pub seeds_served: AtomicU64,
+    /// Layers resolved from an exact shape-fingerprint match.
+    pub exact_hits: AtomicU64,
+    /// Layers resolved from a nearest-shape (same kind) match.
+    pub nearest_hits: AtomicU64,
+}
+
+/// Best-known mapping for one layer shape within one hw config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LibEntry {
+    /// Operator class (nearest-match never crosses kinds).
+    pub kind: LayerKind,
+    /// The shape the mapping was found for.
+    pub dims: [usize; NDIMS],
+    /// Tiling factors, `factors[dim][slot]`.
+    pub factors: [[u64; NSLOTS]; NDIMS],
+    /// Whether the layer's output edge was fused in the winning
+    /// strategy.
+    pub fuse_out: bool,
+    /// Per-layer EDP contribution (energy * latency of this layer in
+    /// its original fusion context) — the improvement-gate key.
+    pub score: f64,
+}
+
+impl LibEntry {
+    fn to_json(&self, fp: u64) -> Json {
+        let mut flat = Vec::with_capacity(NDIMS * NSLOTS);
+        for d in 0..NDIMS {
+            for slot in 0..NSLOTS {
+                flat.push(num(self.factors[d][slot] as f64));
+            }
+        }
+        obj(vec![
+            ("fp", s(&format!("{fp:016x}"))),
+            ("op", s(self.kind.name())),
+            ("dims",
+             arr(self.dims.iter().map(|&d| num(d as f64)).collect())),
+            ("factors", arr(flat)),
+            ("fuse_out", Json::Bool(self.fuse_out)),
+            ("score_bits", s(&bits_hex(self.score))),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<(u64, LibEntry)> {
+        let fp = u64::from_str_radix(
+            j.get("fp").ok()?.as_str().ok()?, 16).ok()?;
+        let kind = LayerKind::parse(j.get("op").ok()?.as_str().ok()?)?;
+        let dims_v = j.get("dims").ok()?.as_arr().ok()?;
+        if dims_v.len() != NDIMS {
+            return None;
+        }
+        let mut dims = [0usize; NDIMS];
+        for (d, v) in dims_v.iter().enumerate() {
+            dims[d] = v.as_f64().ok()? as usize;
+        }
+        let flat = j.get("factors").ok()?.as_arr().ok()?;
+        if flat.len() != NDIMS * NSLOTS {
+            return None;
+        }
+        let mut factors = [[1u64; NSLOTS]; NDIMS];
+        for d in 0..NDIMS {
+            for slot in 0..NSLOTS {
+                factors[d][slot] =
+                    flat[d * NSLOTS + slot].as_f64().ok()? as u64;
+            }
+        }
+        let fuse_out = match j.get("fuse_out").ok()? {
+            Json::Bool(b) => *b,
+            _ => return None,
+        };
+        let score =
+            parse_bits(j.get("score_bits").ok()?.as_str().ok()?)?;
+        Some((fp, LibEntry { kind, dims, factors, fuse_out, score }))
+    }
+}
+
+type Shard = BTreeMap<u64, LibEntry>;
+
+/// The process-global warm-start library: `config fingerprint ->
+/// shape fingerprint -> best entry`. All methods are `&self` and
+/// internally locked; the coordinator shares one behind an `Arc`.
+#[derive(Default)]
+pub struct MappingLibrary {
+    shards: Mutex<BTreeMap<String, Shard>>,
+    /// Config fps whose in-memory shard is ahead of disk.
+    dirty: Mutex<BTreeSet<String>>,
+    /// Config fps already merged from the store (lazy, once).
+    loaded: Mutex<BTreeSet<String>>,
+    stats: LibraryStats,
+}
+
+impl MappingLibrary {
+    /// An empty library.
+    pub fn new() -> MappingLibrary {
+        MappingLibrary::default()
+    }
+
+    /// Library counters.
+    pub fn stats(&self) -> &LibraryStats {
+        &self.stats
+    }
+
+    /// Total entries across all config shards.
+    pub fn entries(&self) -> usize {
+        self.shards.lock().unwrap().values().map(Shard::len).sum()
+    }
+
+    /// Merge a config's persisted shard into memory (once per config;
+    /// later calls are free). In-memory entries win score ties and
+    /// strict improvements — a memory entry beating disk re-marks the
+    /// shard dirty so the improvement flushes.
+    pub fn ensure_loaded(&self, config_fp: &str,
+                         store: Option<&ResultStore>) {
+        {
+            let mut loaded = self.loaded.lock().unwrap();
+            if !loaded.insert(config_fp.to_string()) {
+                return;
+            }
+        }
+        let Some(store) = store else { return };
+        let Some(j) =
+            store.load_library(&ResultStore::library_key(config_fp))
+        else {
+            return;
+        };
+        let Some(parsed) = parse_shard(&j) else {
+            store.reject_library(&ResultStore::library_key(config_fp));
+            return;
+        };
+        let mut shards = self.shards.lock().unwrap();
+        let shard = shards.entry(config_fp.to_string()).or_default();
+        // conservative: any pre-existing in-memory entry may beat or
+        // extend the disk shard, so the merge result must flush
+        let memory_ahead = !shard.is_empty();
+        for (fp, entry) in parsed {
+            match shard.get(&fp) {
+                Some(mine) if mine.score <= entry.score => {}
+                _ => {
+                    shard.insert(fp, entry);
+                }
+            }
+        }
+        drop(shards);
+        if memory_ahead {
+            self.dirty.lock().unwrap().insert(config_fp.to_string());
+        }
+    }
+
+    /// Record a completed strategy layer by layer. Improvement-gated
+    /// per shape on the layer's EDP contribution in its fusion
+    /// context. Returns how many entries improved.
+    pub fn record(&self, config_fp: &str, w: &Workload, hw: &HwConfig,
+                  strategy: &Strategy) -> usize {
+        let l = w.len();
+        if strategy.mappings.len() != l
+            || strategy.fuse.len() != l.saturating_sub(1)
+        {
+            return 0;
+        }
+        let mut improved = 0usize;
+        let mut shards = self.shards.lock().unwrap();
+        let shard = shards.entry(config_fp.to_string()).or_default();
+        for i in 0..l {
+            let m = &strategy.mappings[i];
+            let c = components(m, &w.layers[i].dims);
+            let sig_out = i < l - 1 && strategy.fuse[i];
+            let sig_in = i > 0 && strategy.fuse[i - 1];
+            let lc = layer_cost(&c, sig_out as u8 as f64,
+                                sig_in as u8 as f64, hw);
+            let score = lc.energy * lc.latency;
+            if !score.is_finite() {
+                continue;
+            }
+            let fp = w.layers[i].shape_fingerprint();
+            if shard.get(&fp).is_some_and(|old| old.score <= score) {
+                continue;
+            }
+            shard.insert(fp, LibEntry {
+                kind: w.layers[i].kind,
+                dims: w.layers[i].dims,
+                factors: m.factors,
+                fuse_out: sig_out,
+                score,
+            });
+            improved += 1;
+        }
+        drop(shards);
+        if improved > 0 {
+            self.stats
+                .records
+                .fetch_add(improved as u64, Ordering::SeqCst);
+            self.dirty.lock().unwrap().insert(config_fp.to_string());
+        }
+        improved
+    }
+
+    /// Assemble warm-start seeds for a workload: an exact-shape
+    /// composite (layers without a match stay trivial) and, when any
+    /// layer had to fall back, a nearest-shape composite whose foreign
+    /// factors snap to the target layer's divisors. Deterministic for
+    /// a fixed library state; empty when nothing matches.
+    pub fn seeds_for(&self, config_fp: &str, w: &Workload,
+                     hw: &HwConfig, tables: &WorkloadTables)
+                     -> Vec<Strategy> {
+        let shards = self.shards.lock().unwrap();
+        let Some(shard) = shards.get(config_fp) else {
+            return Vec::new();
+        };
+        if shard.is_empty() {
+            return Vec::new();
+        }
+        let l = w.len();
+        let exact: Vec<Option<&LibEntry>> = w
+            .layers
+            .iter()
+            .map(|layer| shard.get(&layer.shape_fingerprint()))
+            .collect();
+        let exact_hits =
+            exact.iter().filter(|e| e.is_some()).count();
+        let mut seeds = Vec::new();
+        if exact_hits > 0 {
+            seeds.push(compose(w, &exact, |_, e| {
+                LayerMapping { factors: e.factors }
+            }));
+            self.stats
+                .exact_hits
+                .fetch_add(exact_hits as u64, Ordering::SeqCst);
+        }
+        if exact_hits < l {
+            // nearest composite: exact where available, otherwise the
+            // closest same-kind shape (log-dim distance, fingerprint
+            // tie-break), snapped onto this layer's divisor tables
+            let mut resolved: Vec<Option<&LibEntry>> = exact.clone();
+            let mut nearest_hits = 0u64;
+            for (i, slot) in resolved.iter_mut().enumerate() {
+                if slot.is_some() {
+                    continue;
+                }
+                if let Some(e) = nearest(shard, &w.layers[i].kind,
+                                         &w.layers[i].dims) {
+                    *slot = Some(e);
+                    nearest_hits += 1;
+                }
+            }
+            if nearest_hits > 0 {
+                seeds.push(compose(w, &resolved, |i, e| {
+                    snap_mapping(e, i, w, hw, tables)
+                }));
+                self.stats
+                    .nearest_hits
+                    .fetch_add(nearest_hits, Ordering::SeqCst);
+            }
+        }
+        self.stats
+            .seeds_served
+            .fetch_add(seeds.len() as u64, Ordering::SeqCst);
+        seeds
+    }
+
+    /// Flush every dirty shard to the store. Returns shards written
+    /// (digest-unchanged shards count zero). Called from the
+    /// coordinator's graceful shutdown and by the CLI after its job.
+    pub fn flush(&self, store: &ResultStore) -> usize {
+        let dirty: Vec<String> = {
+            let mut d = self.dirty.lock().unwrap();
+            std::mem::take(&mut *d).into_iter().collect()
+        };
+        let mut written = 0usize;
+        for config_fp in dirty {
+            let (json, entries) = {
+                let shards = self.shards.lock().unwrap();
+                match shards.get(&config_fp) {
+                    Some(shard) if !shard.is_empty() => {
+                        (shard_to_json(shard), shard.len() as u64)
+                    }
+                    _ => continue,
+                }
+            };
+            if store.save_library(&ResultStore::library_key(&config_fp),
+                                  &json, entries) {
+                written += 1;
+            }
+        }
+        written
+    }
+
+    /// The `metrics.library` block.
+    pub fn stats_json(&self) -> Json {
+        let c = |a: &AtomicU64| num(a.load(Ordering::SeqCst) as f64);
+        obj(vec![
+            ("entries", num(self.entries() as f64)),
+            ("records", c(&self.stats.records)),
+            ("seeds_served", c(&self.stats.seeds_served)),
+            ("exact_hits", c(&self.stats.exact_hits)),
+            ("nearest_hits", c(&self.stats.nearest_hits)),
+        ])
+    }
+}
+
+/// Build a full strategy from per-layer entry picks: matched layers
+/// map through `mapping`, unmatched layers stay trivial; edge `i`
+/// fuses when the producer's library entry says so and the edge is
+/// fusible in this workload.
+fn compose(w: &Workload, picks: &[Option<&LibEntry>],
+           mapping: impl Fn(usize, &LibEntry) -> LayerMapping)
+           -> Strategy {
+    let mappings: Vec<LayerMapping> = picks
+        .iter()
+        .enumerate()
+        .map(|(i, pick)| match pick {
+            Some(e) => mapping(i, e),
+            None => LayerMapping::trivial(),
+        })
+        .collect();
+    let fuse: Vec<bool> = (0..w.fusible.len())
+        .map(|i| {
+            w.fusible[i]
+                && picks[i].map(|e| e.fuse_out).unwrap_or(false)
+        })
+        .collect();
+    Strategy { mappings, fuse }
+}
+
+/// Closest same-kind entry by symmetric log2 dim distance, shape
+/// fingerprint as the deterministic tie-break (BTreeMap iteration is
+/// already fingerprint-ordered).
+fn nearest<'a>(shard: &'a Shard, kind: &LayerKind,
+               dims: &[usize; NDIMS]) -> Option<&'a LibEntry> {
+    let mut best: Option<(f64, &LibEntry)> = None;
+    for e in shard.values() {
+        if e.kind != *kind {
+            continue;
+        }
+        let dist: f64 = (0..NDIMS)
+            .map(|d| {
+                let a = (dims[d] as f64).max(1.0).log2();
+                let b = (e.dims[d] as f64).max(1.0).log2();
+                (a - b).abs()
+            })
+            .sum();
+        if best.as_ref().map(|(b, _)| dist < *b).unwrap_or(true) {
+            best = Some((dist, e));
+        }
+    }
+    best.map(|(_, e)| e)
+}
+
+/// Transfer a foreign-shape entry onto layer `l`: every factor snaps
+/// to the nearest divisor of the target dim (spatial slots also clamp
+/// to the PE array), and any dim whose slot product fails to divide
+/// falls back to DRAM-only — the same naive legalization the GA
+/// expression uses, so transferred seeds are always hardware-valid.
+fn snap_mapping(e: &LibEntry, l: usize, w: &Workload, hw: &HwConfig,
+                tables: &WorkloadTables) -> LayerMapping {
+    let mut m = LayerMapping::trivial();
+    for d in 0..NDIMS {
+        let n = w.layers[l].dims[d] as u64;
+        let divs = &tables.dim(l, d).divisors;
+        for slot in 0..NSLOTS {
+            let target = e.factors[d][slot].max(1) as f64;
+            let limit = if slot == SLOT_S {
+                match d {
+                    DIM_K => hw.pe_cols as u64,
+                    DIM_C => hw.pe_rows as u64,
+                    _ => 1,
+                }
+            } else {
+                u64::MAX
+            };
+            m.factors[d][slot] = divs
+                .iter()
+                .copied()
+                .filter(|&f| f <= limit)
+                .min_by(|&a, &b| {
+                    let da = (a as f64 - target).abs();
+                    let db = (b as f64 - target).abs();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap_or(1);
+        }
+        if n % m.inner(d) != 0 || m.inner(d) > n {
+            let sp = m.factors[d][SLOT_S];
+            m.factors[d] = [1, 1, 1, if n % sp == 0 { sp } else { 1 }];
+        }
+    }
+    m
+}
+
+fn shard_to_json(shard: &Shard) -> Json {
+    let items = shard
+        .iter()
+        .map(|(&fp, e)| e.to_json(fp))
+        .collect();
+    obj(vec![("kind", s("library")), ("entries", arr(items))])
+}
+
+fn parse_shard(j: &Json) -> Option<Vec<(u64, LibEntry)>> {
+    if j.get("kind").ok()?.as_str().ok()? != "library" {
+        return None;
+    }
+    j.get("entries")
+        .ok()?
+        .as_arr()
+        .ok()?
+        .iter()
+        .map(LibEntry::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::costmodel;
+    use crate::workload::zoo;
+
+    fn hw() -> HwConfig {
+        load_config(&repo_root(), "large").unwrap()
+    }
+
+    #[test]
+    fn record_gates_on_per_layer_improvement() {
+        let lib = MappingLibrary::new();
+        let hw = hw();
+        let w = zoo::mobilenet_v1();
+        let s = Strategy::trivial(&w);
+        let first = lib.record("cfp", &w, &hw, &s);
+        assert!(first > 0);
+        // identical strategy: nothing improves
+        assert_eq!(lib.record("cfp", &w, &hw, &s), 0);
+        assert_eq!(lib.stats.records.load(Ordering::SeqCst),
+                   first as u64);
+        // shared shapes dedup: entries <= distinct fingerprints
+        let distinct: BTreeSet<u64> = w
+            .layers
+            .iter()
+            .map(|l| l.shape_fingerprint())
+            .collect();
+        assert_eq!(lib.entries(), distinct.len());
+    }
+
+    #[test]
+    fn exact_seed_reproduces_recorded_mappings() {
+        let lib = MappingLibrary::new();
+        let hw = hw();
+        let w = zoo::gpt3_6_7b();
+        // record a non-trivial strategy: trivial plus one real tile
+        let mut s = Strategy::trivial(&w);
+        s.mappings[0].factors[DIM_K][SLOT_S] = 2;
+        assert!(lib.record("cfp", &w, &hw, &s) > 0);
+        let tables = WorkloadTables::new(&w);
+        let seeds = lib.seeds_for("cfp", &w, &hw, &tables);
+        assert_eq!(seeds.len(), 1, "all layers exact -> one seed");
+        assert_eq!(seeds[0].mappings[0].factors[DIM_K][SLOT_S], 2);
+        assert_eq!(seeds[0].mappings.len(), w.len());
+        assert_eq!(seeds[0].fuse.len(), w.fusible.len());
+        assert!(lib.stats.seeds_served.load(Ordering::SeqCst) >= 1);
+        assert!(lib.stats.exact_hits.load(Ordering::SeqCst)
+                >= w.len() as u64);
+        // seeds must be evaluable (valid arity, hardware-valid tiles)
+        costmodel::feasible(&seeds[0], &w, &hw).unwrap();
+    }
+
+    #[test]
+    fn exact_seed_transfers_across_related_workloads() {
+        let lib = MappingLibrary::new();
+        let hw = hw();
+        // library learned vgg16; vgg19 shares most conv shapes
+        let w16 = zoo::vgg16();
+        assert!(lib.record("cfp", &w16, &hw, &Strategy::trivial(&w16))
+                > 0);
+        let w19 = zoo::vgg19();
+        let tables = WorkloadTables::new(&w19);
+        let seeds = lib.seeds_for("cfp", &w19, &hw, &tables);
+        assert!(!seeds.is_empty(), "shared shapes must seed");
+        assert!(lib.stats.exact_hits.load(Ordering::SeqCst) > 0);
+        for seed in &seeds {
+            costmodel::feasible(seed, &w19, &hw).unwrap();
+        }
+        // a disjoint hw shard serves nothing
+        assert!(lib.seeds_for("other", &w19, &hw, &tables).is_empty());
+    }
+
+    #[test]
+    fn nearest_seed_transfers_across_shapes_and_stays_valid() {
+        let lib = MappingLibrary::new();
+        let hw = hw();
+        // library learned mobilenet; resnet18 shares NO layer shapes,
+        // so every resolved layer goes through the nearest-shape snap
+        let wm = zoo::mobilenet_v1();
+        let mut s = Strategy::trivial(&wm);
+        s.mappings[0].factors[DIM_K][SLOT_S] = 4;
+        assert!(lib.record("cfp", &wm, &hw, &s) > 0);
+        let wr = zoo::resnet18();
+        let tables = WorkloadTables::new(&wr);
+        let seeds = lib.seeds_for("cfp", &wr, &hw, &tables);
+        assert_eq!(seeds.len(), 1, "no exact matches -> nearest only");
+        assert_eq!(lib.stats.exact_hits.load(Ordering::SeqCst), 0);
+        assert!(lib.stats.nearest_hits.load(Ordering::SeqCst) > 0);
+        costmodel::feasible(&seeds[0], &wr, &hw).unwrap();
+        // the transferred spatial-K tile survived the snap on a dim
+        // it divides
+        assert!(seeds[0]
+            .mappings
+            .iter()
+            .any(|m| m.factors[DIM_K][SLOT_S] == 4));
+    }
+
+    #[test]
+    fn shard_json_roundtrips_bit_exact() {
+        let lib = MappingLibrary::new();
+        let hw = hw();
+        let w = zoo::resnet18();
+        lib.record("cfp", &w, &hw, &Strategy::trivial(&w));
+        let shards = lib.shards.lock().unwrap();
+        let shard = shards.get("cfp").unwrap();
+        let back = parse_shard(&Json::parse(
+            &shard_to_json(shard).compact()).unwrap()).unwrap();
+        assert_eq!(back.len(), shard.len());
+        for (fp, entry) in back {
+            let orig = shard.get(&fp).unwrap();
+            assert_eq!(&entry, orig);
+            assert_eq!(entry.score.to_bits(), orig.score.to_bits());
+        }
+    }
+}

@@ -39,6 +39,7 @@
 //! * **Sweeps** — the server's `sweep` verb fans a method x workload x
 //!   seed grid through the same queue and aggregates the results.
 
+pub mod library;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
@@ -57,15 +58,18 @@ use anyhow::{anyhow, Result};
 use crate::config::{load_config, repo_root, HwConfig};
 use crate::costmodel;
 use crate::runtime::Runtime;
+use crate::costmodel::tables::WorkloadTables;
 use crate::search::{bo, ga, gradient, random, Budget, Deadline,
                     EvalBackend, EvalCtx, FleetHandle,
-                    ProgressSnapshot, SearchProgress, SearchResult};
+                    ProgressSnapshot, PruneMode, PruneStats,
+                    SearchProgress, SearchResult};
 use crate::util::fault;
 use crate::util::json::Json;
 use crate::util::threadpool::{oneshot, OneShot, OneShotSender,
                               ThreadPool};
 use crate::workload::{spec, zoo, Workload};
 
+pub use library::MappingLibrary;
 pub use metrics::Metrics;
 pub use registry::CacheRegistry;
 pub use scheduler::FleetScheduler;
@@ -159,6 +163,26 @@ pub struct JobRequest {
     /// `force` parameter / the CLI's `--force` switch; meaningless
     /// without a store.
     pub force: bool,
+    /// Bound-and-prune screening mode for the evaluation fast path
+    /// (the protocol's `prune` parameter). [`PruneMode::On`] (the
+    /// default) skips the full cost-model kernel for candidates whose
+    /// admissible lower bound already meets the incumbent — on the
+    /// paths where that is bit-identical to an unscreened run (random
+    /// search, gradient decode offers, BO's capacity-only screen).
+    /// [`PruneMode::Off`] disables screening entirely.
+    /// [`PruneMode::Full`] additionally screens GA generations, where
+    /// pruned candidates take their bound as pessimistic fitness —
+    /// this *changes the GA trajectory*, so Full results are stored
+    /// under a distinct result key.
+    pub prune: PruneMode,
+    /// Fraction of the search's starting population/chains seeded
+    /// from the coordinator's warm-start mapping library (`0.0`, the
+    /// default, disables seeding; recording into the library is
+    /// always on). Seeds come from best-known per-layer mappings for
+    /// this hardware config, matched by exact layer-shape fingerprint
+    /// first and nearest same-kind shape otherwise, and are offered
+    /// to the incumbent deterministically before the search starts.
+    pub warm_frac: f64,
 }
 
 impl Default for JobRequest {
@@ -174,6 +198,8 @@ impl Default for JobRequest {
             deadline_ms: 0,
             spec: None,
             force: false,
+            prune: PruneMode::On,
+            warm_frac: 0.0,
         }
     }
 }
@@ -526,6 +552,14 @@ pub struct Coordinator {
     eval_pool: Arc<ThreadPool>,
     scheduler: Arc<FleetScheduler>,
     store: Option<Arc<ResultStore>>,
+    /// Fleet-wide bound-and-prune counters (the `metrics` verb's
+    /// `prune` block): aggregated across every job's screened batches.
+    prune_stats: Arc<PruneStats>,
+    /// The warm-start mapping library: best-known per-layer mappings
+    /// keyed by hardware config + layer-shape fingerprint. Every
+    /// feasible completed job records into it; requests with
+    /// `warm_frac > 0` seed from it.
+    library: Arc<MappingLibrary>,
     jobs: Arc<JobTable>,
     queue_depth: Arc<AtomicUsize>,
     queue_capacity: AtomicUsize,
@@ -594,6 +628,8 @@ impl Coordinator {
             Arc::new(FleetScheduler::new(Arc::clone(&eval_pool)));
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let supervisor = Arc::new(Supervisor::new());
+        let prune_stats = Arc::new(PruneStats::default());
+        let library = Arc::new(MappingLibrary::new());
         let workers = (0..n_workers.max(1))
             .map(|i| {
                 let rx = Arc::clone(&rx);
@@ -603,6 +639,8 @@ impl Coordinator {
                 let eval_pool = Arc::clone(&eval_pool);
                 let scheduler = Arc::clone(&scheduler);
                 let store = store.clone();
+                let prune_stats = Arc::clone(&prune_stats);
+                let library = Arc::clone(&library);
                 let jobs = Arc::clone(&jobs);
                 let queue_depth = Arc::clone(&queue_depth);
                 let supervisor = Arc::clone(&supervisor);
@@ -611,7 +649,8 @@ impl Coordinator {
                     .spawn(move || {
                         worker_loop(&dir, &rx, &metrics, &registry,
                                     &eval_pool, &scheduler, &store,
-                                    &jobs, &queue_depth, &supervisor)
+                                    &prune_stats, &library, &jobs,
+                                    &queue_depth, &supervisor)
                     })
                     .expect("spawn coordinator worker")
             })
@@ -642,6 +681,8 @@ impl Coordinator {
             eval_pool,
             scheduler,
             store,
+            prune_stats,
+            library,
             jobs,
             queue_depth,
             queue_capacity: AtomicUsize::new(DEFAULT_QUEUE_CAPACITY),
@@ -762,6 +803,18 @@ impl Coordinator {
         self.store.as_ref()
     }
 
+    /// Fleet-wide bound-and-prune counters (test hooks; the `metrics`
+    /// verb's `prune` block).
+    pub fn prune_stats(&self) -> &Arc<PruneStats> {
+        &self.prune_stats
+    }
+
+    /// The warm-start mapping library (test hooks; the `metrics`
+    /// verb's `library` block).
+    pub fn library(&self) -> &Arc<MappingLibrary> {
+        &self.library
+    }
+
     /// Jobs queued but not yet picked up by a worker.
     pub fn queue_depth(&self) -> usize {
         self.queue_depth.load(Ordering::SeqCst)
@@ -849,6 +902,36 @@ impl Coordinator {
                     ]),
                 },
             );
+            let bounded =
+                self.prune_stats.bounded.load(Ordering::Relaxed);
+            let pruned = self.prune_stats.pruned();
+            map.insert(
+                "prune".into(),
+                obj(vec![
+                    ("bounded", num(bounded as f64)),
+                    ("pruned_above",
+                     num(self
+                         .prune_stats
+                         .pruned_above
+                         .load(Ordering::Relaxed)
+                         as f64)),
+                    ("pruned_infeasible",
+                     num(self
+                         .prune_stats
+                         .pruned_infeasible
+                         .load(Ordering::Relaxed)
+                         as f64)),
+                    ("evaluated",
+                     num(self
+                         .prune_stats
+                         .evaluated
+                         .load(Ordering::Relaxed)
+                         as f64)),
+                    ("ratio",
+                     num(pruned as f64 / (bounded as f64).max(1.0))),
+                ]),
+            );
+            map.insert("library".into(), self.library.stats_json());
             map.insert(
                 "supervision".into(),
                 obj(vec![
@@ -950,9 +1033,13 @@ impl Drop for Coordinator {
         if let Some(wd) = self.watchdog.take() {
             let _ = wd.join();
         }
-        // workers are quiesced: flush dirty eval-cache segments so the
-        // next process on this store dir starts warm
+        // workers are quiesced: flush dirty eval-cache segments and
+        // dirty mapping-library shards so the next process on this
+        // store dir starts warm
         self.registry.flush_all();
+        if let Some(st) = &self.store {
+            self.library.flush(st);
+        }
     }
 }
 
@@ -962,7 +1049,9 @@ fn worker_loop(dir: &std::path::Path,
                metrics: &Arc<Metrics>, registry: &Arc<CacheRegistry>,
                eval_pool: &Arc<ThreadPool>,
                scheduler: &Arc<FleetScheduler>,
-               store: &Option<Arc<ResultStore>>, jobs: &Arc<JobTable>,
+               store: &Option<Arc<ResultStore>>,
+               prune_stats: &Arc<PruneStats>,
+               library: &Arc<MappingLibrary>, jobs: &Arc<JobTable>,
                queue_depth: &Arc<AtomicUsize>,
                supervisor: &Arc<Supervisor>) {
     // One PJRT runtime per worker; artifacts compile lazily on the
@@ -1012,6 +1101,8 @@ fn worker_loop(dir: &std::path::Path,
             fleet: Some(Arc::clone(scheduler)),
             progress: Some(Arc::clone(&progress)),
             store: store.clone(),
+            prune_stats: Some(Arc::clone(prune_stats)),
+            library: Some(Arc::clone(library)),
             deadline: deadline.clone(),
         };
         let (token, stall_latch) =
@@ -1123,6 +1214,15 @@ pub struct JobCtx<'c> {
     /// it (re-verified), improvements record back, and the pair's eval
     /// cache hydrates from its persisted segment.
     pub store: Option<Arc<ResultStore>>,
+    /// Shared bound-and-prune counters: when set, the job's screened
+    /// batches aggregate into them (the `metrics` verb's `prune`
+    /// block). Counters never affect results.
+    pub prune_stats: Option<Arc<PruneStats>>,
+    /// The warm-start mapping library: feasible completed jobs record
+    /// their per-layer mappings into it, and requests with
+    /// `warm_frac > 0` draw seeds from it. With a store present the
+    /// library lazily hydrates each hardware config's shard from disk.
+    pub library: Option<Arc<MappingLibrary>>,
     /// Cooperative per-job deadline: the search's stop seam polls it
     /// alongside the cancel flag; when it expires the job ends
     /// `deadline_exceeded` keeping its best-so-far. When `None` and
@@ -1152,6 +1252,12 @@ impl JobCtx<'_> {
             }),
             progress: self.progress.clone(),
             deadline: self.deadline.clone(),
+            prune: req.prune,
+            prune_stats: self.prune_stats.clone(),
+            // seeds are assembled by `execute_job_ctx` once the
+            // library shard for this config is loaded
+            seeds: Vec::new(),
+            warm_frac: req.warm_frac,
         }
     }
 }
@@ -1296,6 +1402,17 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     }
     let budget = Budget { seconds: req.seconds, max_iters: req.max_iters };
     let mut ectx = ctx.eval_ctx(req, &w_arc, &hw_arc);
+    if let Some(lib) = &ctx.library {
+        // hydrate this config's shard before any record/seed touches
+        // it (a persisted shard merges under the in-memory one,
+        // improvement-gated per fingerprint)
+        let config_fp = hw.fingerprint();
+        lib.ensure_loaded(&config_fp, ctx.store.as_deref());
+        if req.warm_frac > 0.0 {
+            let tables = WorkloadTables::new(w);
+            ectx.seeds = lib.seeds_for(&config_fp, w, hw, &tables);
+        }
+    }
     // the CLI path has no worker to start the clock, so the deadline
     // begins here; server jobs carry one from their worker already
     if ectx.deadline.is_none() && req.deadline_ms > 0 {
@@ -1329,17 +1446,23 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
     // final safety: the result must be hardware-valid
     costmodel::feasible(&r.best, w, &hw)
         .map_err(|e| anyhow!("coordinator produced invalid strategy: {e}"))?;
+    // a cancelled or deadline-cut job's partial best is served to its
+    // caller but never recorded — neither to the result store (the
+    // stored incumbent for a key must always be a full run of that
+    // key's budget) nor to the mapping library (same rule)
+    let cancelled = ctx
+        .cancel
+        .as_ref()
+        .is_some_and(|c| c.load(Ordering::SeqCst));
+    let cut = deadline.as_ref().is_some_and(|d| d.was_hit());
     if let (Some(st), Some(key)) = (&ctx.store, &store_key) {
-        // a cancelled or deadline-cut job's partial best is served to
-        // its caller but never recorded: the stored incumbent for a
-        // key must always be a full run of that key's budget
-        let cancelled = ctx
-            .cancel
-            .as_ref()
-            .is_some_and(|c| c.load(Ordering::SeqCst));
-        let cut = deadline.as_ref().is_some_and(|d| d.was_hit());
         if !cancelled && !cut {
             st.record_result(key, &store::StoredResult::of(&r));
+        }
+    }
+    if let Some(lib) = &ctx.library {
+        if !cancelled && !cut {
+            lib.record(&hw.fingerprint(), w, hw, &r.best);
         }
     }
     let groups = r.best.groups();

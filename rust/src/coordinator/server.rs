@@ -76,6 +76,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::search::PruneMode;
 use crate::util::json::{arr, num, obj, s as js, Json};
 use crate::util::threadpool::{OneShot, Poll};
 use crate::workload::spec;
@@ -371,6 +372,23 @@ pub fn parse_request(j: &Json) -> WireResult<JobRequest> {
             }
         }
     }
+    if let Ok(p) = j.get("prune") {
+        req.prune = PruneMode::parse(field(p.as_str())?)
+            .ok_or_else(|| {
+                WireError::bad(
+                    "prune must be \"on\", \"off\", or \"full\"",
+                )
+            })?;
+    }
+    if let Ok(wf) = j.get("warm_frac") {
+        let x = field(wf.as_f64())?;
+        if !(x.is_finite() && (0.0..=1.0).contains(&x)) {
+            return Err(WireError::bad(
+                "warm_frac must be a number in [0, 1]",
+            ));
+        }
+        req.warm_frac = x;
+    }
     Ok(req)
 }
 
@@ -441,6 +459,8 @@ pub fn parse_sweep(j: &Json) -> WireResult<Vec<JobRequest>> {
                     deadline_ms: base.deadline_ms,
                     spec: base.spec.clone(),
                     force: base.force,
+                    prune: base.prune,
+                    warm_frac: base.warm_frac,
                 });
             }
         }
@@ -968,7 +988,12 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
                 Some(st) => st.stats_json(),
                 None => obj(vec![("enabled", Json::Bool(false))]),
             };
-            Step::Reply(Response::ok(obj(vec![("store", payload)])))
+            Step::Reply(Response::ok(obj(vec![
+                ("store", payload),
+                // runtime view of the warm-start mapping library (the
+                // persisted shard counts live under store above)
+                ("library", coord.library().stats_json()),
+            ])))
         }
         "workloads" => Step::Reply(run_workloads(&j)),
         "chaos" => Step::Reply(run_chaos(&j)),
@@ -1973,6 +1998,61 @@ mod tests {
             r#"{"verb": "sweep", "seeds": [1, 2], "force": true}"#)
             .unwrap();
         assert!(parse_sweep(&j).unwrap().iter().all(|r| r.force));
+    }
+
+    #[test]
+    fn parse_request_validates_prune_mode() {
+        assert_eq!(parse_request(&Json::parse("{}").unwrap())
+                       .unwrap()
+                       .prune,
+                   PruneMode::On);
+        for (text, want) in [("on", PruneMode::On),
+                             ("off", PruneMode::Off),
+                             ("full", PruneMode::Full)] {
+            let j = Json::parse(&format!(r#"{{"prune": "{text}"}}"#))
+                .unwrap();
+            assert_eq!(parse_request(&j).unwrap().prune, want);
+        }
+        for bad in [r#"{"prune": "sometimes"}"#, r#"{"prune": true}"#,
+                    r#"{"prune": 1}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert_eq!(parse_request(&j).unwrap_err().code,
+                       ErrorCode::BadRequest,
+                       "{bad} must be rejected");
+        }
+        // sweeps inherit the mode into every cell
+        let j = Json::parse(
+            r#"{"verb": "sweep", "seeds": [1, 2], "prune": "full"}"#)
+            .unwrap();
+        assert!(parse_sweep(&j)
+            .unwrap()
+            .iter()
+            .all(|r| r.prune == PruneMode::Full));
+    }
+
+    #[test]
+    fn parse_request_validates_warm_frac() {
+        let defaulted =
+            parse_request(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(defaulted.warm_frac, 0.0);
+        let j = Json::parse(r#"{"warm_frac": 0.25}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().warm_frac, 0.25);
+        for bad in [r#"{"warm_frac": -0.1}"#, r#"{"warm_frac": 1.5}"#,
+                    r#"{"warm_frac": "half"}"#,
+                    r#"{"warm_frac": 1e400}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert_eq!(parse_request(&j).unwrap_err().code,
+                       ErrorCode::BadRequest,
+                       "{bad} must be rejected");
+        }
+        // sweeps inherit the fraction into every cell
+        let j = Json::parse(
+            r#"{"verb": "sweep", "seeds": [1, 2], "warm_frac": 0.5}"#)
+            .unwrap();
+        assert!(parse_sweep(&j)
+            .unwrap()
+            .iter()
+            .all(|r| r.warm_frac == 0.5));
     }
 
     fn error_code_of(step: Step) -> String {

@@ -80,7 +80,7 @@ pub fn bits_hex(x: f64) -> String {
     format!("{:016x}", x.to_bits())
 }
 
-fn parse_bits(text: &str) -> Option<f64> {
+pub(crate) fn parse_bits(text: &str) -> Option<f64> {
     if text.len() != 16 {
         return None;
     }
@@ -155,6 +155,11 @@ struct SegmentMeta {
 struct Manifest {
     results: BTreeMap<String, ResultMeta>,
     segments: BTreeMap<String, SegmentMeta>,
+    /// Warm-start mapping-library shards, one per hardware config
+    /// fingerprint (same metadata shape as eval-cache segments). The
+    /// section is OPTIONAL on parse: manifests written before the
+    /// library existed load with an empty library, not as corrupt.
+    library: BTreeMap<String, SegmentMeta>,
 }
 
 enum ManifestLoad {
@@ -192,10 +197,23 @@ impl Manifest {
                  ]))
             })
             .collect();
+        let library: BTreeMap<String, Json> = self
+            .library
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(),
+                 obj(vec![
+                     ("digest", s(&v.digest)),
+                     ("entries", num(v.entries as f64)),
+                     ("created_at", num(v.created_at as f64)),
+                 ]))
+            })
+            .collect();
         obj(vec![
             ("version", num(MANIFEST_VERSION as f64)),
             ("results", Json::Obj(results)),
             ("segments", Json::Obj(segments)),
+            ("library", Json::Obj(library)),
         ])
     }
 
@@ -248,6 +266,26 @@ impl Manifest {
                 Some(meta) => m.segments.insert(key.clone(), meta),
                 None => return ManifestLoad::Corrupt,
             };
+        }
+        // optional: pre-library manifests simply have no such section
+        if let Ok(library) =
+            j.get("library").and_then(|r| r.as_obj())
+        {
+            for (key, v) in library {
+                let meta = (|| {
+                    Some(SegmentMeta {
+                        digest: v.get("digest").ok()?.as_str().ok()?
+                            .to_string(),
+                        entries: v.get_f64("entries").ok()? as u64,
+                        created_at: v.get_f64("created_at").ok()?
+                            as u64,
+                    })
+                })();
+                match meta {
+                    Some(meta) => m.library.insert(key.clone(), meta),
+                    None => return ManifestLoad::Corrupt,
+                };
+            }
         }
         ManifestLoad::Ready(m)
     }
@@ -570,8 +608,16 @@ impl ResultStore {
     /// same answer.
     pub fn result_key(workload_fp: &str, config_fp: &str,
                       req: &JobRequest) -> String {
+        // `prune: "full"` changes the GA trajectory, so its results
+        // live under a distinct key. The default-on and off modes are
+        // bit-identical to each other by construction and share the
+        // unsuffixed key (pre-prune stored results stay servable).
+        let prune = match req.prune {
+            crate::search::PruneMode::Full => ":pfull",
+            _ => "",
+        };
         format!(
-            "res:{workload_fp}:{config_fp}:{}:s{}:c{}:i{}:t{}",
+            "res:{workload_fp}:{config_fp}:{}:s{}:c{}:i{}:t{}{prune}",
             req.method.name(), req.seed, req.chains, req.max_iters,
             bits_hex(req.seconds)
         )
@@ -582,6 +628,14 @@ impl ResultStore {
     /// `(workload, hardware)` content.
     pub fn segment_key(workload_fp: &str, config_fp: &str) -> String {
         format!("seg:{workload_fp}:{config_fp}")
+    }
+
+    /// The manifest key of a hardware config's warm-start mapping
+    /// library shard. Workload independent on purpose: per-layer
+    /// mappings transfer across workloads that share layer shapes,
+    /// which is the library's whole point.
+    pub fn library_key(config_fp: &str) -> String {
+        format!("lib:{config_fp}")
     }
 
     /// Look up a stored result. `None` (and a counted miss) when the
@@ -727,13 +781,76 @@ impl ResultStore {
         true
     }
 
+    /// Load a hardware config's mapping-library shard as parsed JSON
+    /// (the [`super::library::MappingLibrary`] owns the entry format).
+    /// A corrupt blob is dropped (counted) and reported as `None`.
+    pub fn load_library(&self, key: &str) -> Option<Json> {
+        let meta = {
+            let m = self.manifest.lock().unwrap();
+            m.library.get(key)?.clone()
+        };
+        let parsed = self
+            .read_blob(&meta.digest)
+            .and_then(|text| Json::parse(&text).ok());
+        match parsed {
+            Some(j) => Some(j),
+            None => {
+                self.reject_library(key);
+                None
+            }
+        }
+    }
+
+    /// Drop a library shard that failed digest or parse checks
+    /// (counted as a corrupt skip).
+    pub fn reject_library(&self, key: &str) {
+        self.stats.corrupt_skips.fetch_add(1, Ordering::SeqCst);
+        let mut m = self.manifest.lock().unwrap();
+        if let Some(old) = m.library.remove(key) {
+            self.persist_manifest(&m);
+            self.gc_blob(&m, &old.digest);
+        }
+    }
+
+    /// Persist a mapping-library shard under `key` (one flush, same
+    /// digest-dedup as [`ResultStore::save_segment`]). Returns whether
+    /// anything was written.
+    pub fn save_library(&self, key: &str, shard: &Json,
+                        entries: u64) -> bool {
+        if !self.writable {
+            return false;
+        }
+        let text = shard.compact();
+        let digest = fnv1a64(text.as_bytes());
+        let mut m = self.manifest.lock().unwrap();
+        if m.library.get(key).map(|e| e.digest == digest)
+            == Some(true)
+        {
+            return false;
+        }
+        if self.write_blob(&digest, &text).is_err() {
+            return false;
+        }
+        let old = m.library.insert(key.to_string(), SegmentMeta {
+            digest,
+            entries,
+            created_at: unix_now(),
+        });
+        self.persist_manifest(&m);
+        if let Some(old) = old {
+            self.gc_blob(&m, &old.digest);
+        }
+        self.stats.flushes.fetch_add(1, Ordering::SeqCst);
+        true
+    }
+
     /// The `store` verb payload / the `metrics.store` block: manifest
     /// entry counts, blob usage, and every [`StoreStats`] counter.
     pub fn stats_json(&self) -> Json {
         let (blob_count, blob_bytes) = self.blob_usage();
-        let (results, segments) = {
+        let (results, segments, library) = {
             let m = self.manifest.lock().unwrap();
-            (m.results.len(), m.segments.len())
+            (m.results.len(), m.segments.len(), m.library.len())
         };
         let c = |a: &AtomicU64| num(a.load(Ordering::SeqCst) as f64);
         obj(vec![
@@ -742,6 +859,7 @@ impl ResultStore {
             ("writable", Json::Bool(self.writable)),
             ("manifest_results", num(results as f64)),
             ("manifest_segments", num(segments as f64)),
+            ("manifest_library", num(library as f64)),
             ("blob_count", num(blob_count as f64)),
             ("blob_bytes", num(blob_bytes as f64)),
             ("result_hits", c(&self.stats.result_hits)),
@@ -845,13 +963,17 @@ impl ResultStore {
         self.write_atomic(&path, text)
     }
 
-    /// Delete a blob no longer referenced by any manifest entry.
+    /// Delete a blob no longer referenced by any manifest entry —
+    /// results, eval-cache segments, AND live mapping-library shards
+    /// (a library blob must never be collected out from under its
+    /// manifest entry).
     fn gc_blob(&self, m: &Manifest, digest: &str) {
         let referenced = m
             .results
             .values()
             .any(|e| e.digest == digest)
-            || m.segments.values().any(|e| e.digest == digest);
+            || m.segments.values().any(|e| e.digest == digest)
+            || m.library.values().any(|e| e.digest == digest);
         if !referenced {
             let _ = std::fs::remove_file(self.blob_path(digest));
         }
@@ -1139,6 +1261,70 @@ mod tests {
         assert_eq!(store.stats.io_retries.load(Ordering::SeqCst),
                    (IO_ATTEMPTS - 1) as u64);
         assert_eq!(store.stats.io_permanent.load(Ordering::SeqCst), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn library_shard_roundtrips_and_blob_survives_churn() {
+        let dir = tmp_store_dir("library");
+        let store = ResultStore::open(&dir).unwrap();
+        let key = ResultStore::library_key("cfp");
+        let shard = obj(vec![("kind", s("library")), ("x", num(1.0))]);
+        assert!(store.save_library(&key, &shard, 1));
+        // identical content: digest-deduped, no second flush
+        assert!(!store.save_library(&key, &shard, 1));
+        assert_eq!(store.stats.flushes.load(Ordering::SeqCst), 1);
+        // unrelated result churn (insert + reject runs the gc) must
+        // never collect a live library blob
+        assert!(store.record_result("res", &sample_result(5.0)));
+        store.reject_result("res");
+        drop(store);
+        let store = ResultStore::open(&dir).unwrap();
+        let back = store.load_library(&key).unwrap();
+        assert_eq!(back.get_f64("x").unwrap(), 1.0);
+        // replacing the shard collects the superseded blob only
+        let shard2 =
+            obj(vec![("kind", s("library")), ("x", num(2.0))]);
+        assert!(store.save_library(&key, &shard2, 1));
+        let (blob_count, _) = store.blob_usage();
+        assert_eq!(blob_count, 1, "old shard blob collected");
+        assert_eq!(store.load_library(&key).unwrap()
+                       .get_f64("x").unwrap(), 2.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_library_blob_degrades_to_counted_skip() {
+        let dir = tmp_store_dir("library-corrupt");
+        let store = ResultStore::open(&dir).unwrap();
+        let key = ResultStore::library_key("cfp");
+        let shard = obj(vec![("kind", s("library"))]);
+        assert!(store.save_library(&key, &shard, 0));
+        let digest = {
+            let m = store.manifest.lock().unwrap();
+            m.library.get(&key).unwrap().digest.clone()
+        };
+        std::fs::write(store.blob_path(&digest), "garbage").unwrap();
+        assert!(store.load_library(&key).is_none());
+        assert_eq!(
+            store.stats.corrupt_skips.load(Ordering::SeqCst), 1);
+        // the entry was dropped; a fresh save repopulates it
+        assert!(store.save_library(&key, &shard, 0));
+        assert!(store.load_library(&key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pre_library_manifest_loads_with_empty_library() {
+        let dir = tmp_store_dir("library-compat");
+        let old = "{\"version\": 1, \"results\": {}, \
+                    \"segments\": {}}";
+        std::fs::write(dir.join(MANIFEST_FILE), old).unwrap();
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.writable(), "old manifests are not corrupt");
+        assert!(store.load_library("lib:any").is_none());
+        assert_eq!(
+            store.stats.corrupt_skips.load(Ordering::SeqCst), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

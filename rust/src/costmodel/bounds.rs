@@ -1,0 +1,307 @@
+//! Admissible per-candidate lower bounds — the bound-and-prune
+//! prefilter in front of the [`super::batch`] kernel.
+//!
+//! For a candidate strategy the exact model (Eqs. 13-19) prices every
+//! traffic component from the full tiling. This module prices a *floor*
+//! on the same quantities from per-layer constants plus two numbers
+//! that are read straight off the candidate (its spatial K/C factors):
+//!
+//! * every weight element crosses DRAM->L2 and L2->RF at least once
+//!   (`fill2_w >= |W|`, `fill0_w >= |W|`): under the honest-traffic
+//!   clamp `t3 = max(dims/ext2, 1)`, each W-dim contributes
+//!   `ext2 * t3 = max(dims, ext2) >= dims` and every other dim
+//!   contributes `t3 >= 1`;
+//! * every live input element is filled at least once
+//!   (`fill2_i >= |I|`, same argument over the I-dims) and every
+//!   output element drains at least once (`wb0_o >= |O|`, over the
+//!   O-dims with `ext1 * t2 * t3 = ext2 * t3`);
+//! * the PE-stream and accumulate terms are exact already:
+//!   `read_pe_i = ops / sp_k`, `accwb_o = ops / sp_c`;
+//! * the compute roofline is exact: `ops / (sp_k * sp_c)`.
+//!
+//! Substituting the floors into Eqs. 13-19 term by term keeps every
+//! access sum `a_i` and therefore every roofline arm and the energy sum
+//! below its exact value; the [`ROUNDING_SLACK`] factor then absorbs
+//! the few-ulp float-reassociation drift of the pre-folded constants,
+//! so `E_lb <= E`, `L_lb <= L` and `E_lb * L_lb <= EDP` hold *in f64*
+//! (not just in exact arithmetic) for every candidate that passes
+//! `Strategy::validate` (invalid candidates evaluate to infeasible
+//! anyway, so their bound is never load-bearing). That admissibility is
+//! what lets the prefilter skip the full kernel for candidates whose
+//! bound already meets the incumbent without changing any search
+//! result — pinned by `rust/tests/prune_warmstart.rs`.
+//!
+//! The capacity screen is not a bound but an *exact replica* of the
+//! kernel's accumulator and fusion-group checks (same expressions, same
+//! evaluation order, bit-identical verdicts), so `Infeasible` here
+//! implies `feasible == false` from [`super::batch::eval_into`].
+
+use crate::config::HwConfig;
+use crate::mapping::{Strategy, SLOT_S, SLOT_T0, SLOT_T1, SLOT_T2};
+use crate::workload::{Workload, DIM_C, DIM_K, NDIMS};
+
+use super::{first_group_overflow, I_DIMS, O_DIMS, W_DIMS};
+
+/// One-sided slack on the energy/latency floors, compensating for the
+/// pre-folded per-signature constants associating their additions in a
+/// different order than the kernel's live sums: reassociating the
+/// handful of terms of Eqs. 13-19 perturbs an f64 result by a few ulps
+/// (~1e-16 relative), so an exactly-tight candidate (every traffic
+/// floor met with equality — full-residency tilings) could otherwise
+/// see its "lower" bound land one ulp *above* the exact value and be
+/// wrongly pruned. Scaling the floors down by 1e-12 — four orders of
+/// magnitude above the worst reordering error observed in the offline
+/// float mirror, ten below any real traffic slack — keeps the bound
+/// strictly admissible at negligible cost in pruning power.
+const ROUNDING_SLACK: f64 = 1.0 - 1e-12;
+
+/// Outcome of screening one candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct ScreenVerdict {
+    /// Admissible lower bound on total energy (pJ).
+    pub energy_lb: f64,
+    /// Admissible lower bound on total latency (cycles).
+    pub latency_lb: f64,
+    /// `energy_lb * latency_lb` (a lower bound on EDP).
+    pub edp_lb: f64,
+    /// The kernel's accumulator / fusion-group check is guaranteed to
+    /// fail for this candidate (exact replica, not a bound).
+    pub capacity_infeasible: bool,
+}
+
+/// Reusable per-layer column for the fusion-group walk (mirrors
+/// [`super::batch::SoaScratch`], which the kernel itself uses).
+#[derive(Debug, Default)]
+pub struct ScreenScratch {
+    l2_bytes: Vec<f64>,
+}
+
+impl ScreenScratch {
+    /// An empty scratch (grows on first use).
+    pub fn new() -> ScreenScratch {
+        ScreenScratch::default()
+    }
+}
+
+/// Precomputed bound constants for one `(workload, hw)` pair.
+///
+/// All sig-combination constants are folded at construction; per
+/// candidate the screen costs ~10 flops per layer plus the exact
+/// footprint products for the capacity replica — 10-20x cheaper than
+/// [`super::components`] + [`super::layer_cost`].
+#[derive(Debug)]
+pub struct BoundsCtx {
+    layers: usize,
+    /// Total MACs per layer.
+    ops: Vec<f64>,
+    /// Energy constant per layer, indexed `[sig_in << 1 | sig_out]`.
+    e_const: Vec<[f64; 4]>,
+    /// DRAM roofline arm per layer (fully constant per sig combo).
+    l_dram: Vec<[f64; 4]>,
+    /// L2 roofline arm constant part per layer and sig combo.
+    l2_base: Vec<[f64; 4]>,
+    /// L1 roofline arm constant part per layer (`|O| * eb / bw_l1`).
+    l1_base: Vec<f64>,
+    eb_bw_l2: f64,
+    eb_bw_l1: f64,
+    epa_l2: f64,
+    epa_l1: f64,
+    element_bytes: f64,
+    acc_bytes: f64,
+    c1_bytes: f64,
+    c2_bytes: f64,
+}
+
+impl BoundsCtx {
+    /// Build the bound constants for one workload on one hw config.
+    pub fn new(w: &Workload, hw: &HwConfig) -> BoundsCtx {
+        let l = w.len();
+        let mut ops = Vec::with_capacity(l);
+        let mut e_const = Vec::with_capacity(l);
+        let mut l_dram = Vec::with_capacity(l);
+        let mut l2_base = Vec::with_capacity(l);
+        let mut l1_base = Vec::with_capacity(l);
+        let eb = hw.element_bytes;
+        for layer in &w.layers {
+            let dims = &layer.dims;
+            let size = |ds: &[usize]| -> f64 {
+                ds.iter().map(|&d| dims[d] as f64).product()
+            };
+            let wsize = size(&W_DIMS);
+            let isize_ = size(&I_DIMS);
+            let osize = size(&O_DIMS);
+            let macs: f64 = dims.iter().map(|&d| d as f64).product();
+            let a0 = wsize + macs;
+            let mut ec = [0.0f64; 4];
+            let mut ld = [0.0f64; 4];
+            let mut l2 = [0.0f64; 4];
+            for (idx, (si, so)) in [(0.0, 0.0), (0.0, 1.0), (1.0, 0.0),
+                                    (1.0, 1.0)]
+                .into_iter()
+                .enumerate()
+            {
+                let a3 = (1.0 - si) * isize_ + wsize
+                    + (1.0 - so) * osize;
+                let c2c = (1.0 - si) * isize_ + 2.0 * wsize
+                    + so * osize;
+                ec[idx] = macs * hw.energy_per_mac + a3 * hw.epa_dram
+                    + c2c * hw.epa_l2
+                    + osize * hw.epa_l1
+                    + a0 * hw.epa_reg;
+                ld[idx] = a3 * eb / hw.bw_dram;
+                l2[idx] = c2c * eb / hw.bw_l2;
+            }
+            ops.push(macs);
+            e_const.push(ec);
+            l_dram.push(ld);
+            l2_base.push(l2);
+            l1_base.push(osize * eb / hw.bw_l1);
+        }
+        BoundsCtx {
+            layers: l,
+            ops,
+            e_const,
+            l_dram,
+            l2_base,
+            l1_base,
+            eb_bw_l2: eb / hw.bw_l2,
+            eb_bw_l1: eb / hw.bw_l1,
+            epa_l2: hw.epa_l2,
+            epa_l1: hw.epa_l1,
+            element_bytes: hw.element_bytes,
+            acc_bytes: hw.acc_bytes,
+            c1_bytes: hw.c1_bytes,
+            c2_bytes: hw.c2_bytes,
+        }
+    }
+
+    /// Number of layers the context was built for.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Screen one candidate: admissible energy/latency/EDP floors plus
+    /// the exact-replica capacity verdict. The strategy's arity must
+    /// match the workload (the engine guards this before screening).
+    pub fn screen(&self, s: &Strategy, scratch: &mut ScreenScratch)
+                  -> ScreenVerdict {
+        let l = self.layers;
+        scratch.l2_bytes.clear();
+        scratch.l2_bytes.resize(l, 0.0);
+        let (mut energy, mut latency) = (0.0f64, 0.0f64);
+        let mut caps_ok = true;
+        for i in 0..l {
+            let m = &s.mappings[i];
+            // exact footprint replica, mirroring `components`: ext
+            // chains and products in the kernel's evaluation order so
+            // the capacity verdict is bit-identical
+            let mut ext1 = [0.0f64; NDIMS];
+            let mut ext2 = [0.0f64; NDIMS];
+            for d in 0..NDIMS {
+                let f = &m.factors[d];
+                let sp = f[SLOT_S] as f64;
+                let e0 = f[SLOT_T0] as f64 * sp;
+                ext1[d] = e0 * f[SLOT_T1] as f64;
+                ext2[d] = ext1[d] * f[SLOT_T2] as f64;
+            }
+            let prod = |xs: &[usize], e: &[f64; NDIMS]| -> f64 {
+                xs.iter().map(|&d| e[d]).product()
+            };
+            let s_w2 = prod(&W_DIMS, &ext2);
+            let s_i2 = prod(&I_DIMS, &ext2);
+            let s_o1 = prod(&O_DIMS, &ext1);
+            scratch.l2_bytes[i] = (s_w2 + s_i2) * self.element_bytes;
+            if s_o1 * self.acc_bytes > self.c1_bytes {
+                caps_ok = false;
+            }
+
+            let sig_out = i < l - 1 && s.fuse[i];
+            let sig_in = i > 0 && s.fuse[i - 1];
+            let idx = ((sig_in as usize) << 1) | sig_out as usize;
+            let ops = self.ops[i];
+            let sp_k = (m.factors[DIM_K][SLOT_S] as f64).max(1.0);
+            let sp_c = (m.factors[DIM_C][SLOT_S] as f64).max(1.0);
+            let rk = ops / sp_k;
+            let rc = ops / sp_c;
+            energy += self.e_const[i][idx] + rk * self.epa_l2
+                + rc * self.epa_l1;
+            latency += (ops / (sp_k * sp_c))
+                .max(self.l_dram[i][idx])
+                .max(self.l2_base[i][idx] + rk * self.eb_bw_l2)
+                .max(self.l1_base[i] + rc * self.eb_bw_l1);
+        }
+        if first_group_overflow(l, &s.fuse, self.c2_bytes, false,
+                                |i| scratch.l2_bytes[i])
+            .is_some()
+        {
+            caps_ok = false;
+        }
+        let energy_lb = energy * ROUNDING_SLACK;
+        let latency_lb = latency * ROUNDING_SLACK;
+        ScreenVerdict {
+            energy_lb,
+            latency_lb,
+            edp_lb: energy_lb * latency_lb,
+            capacity_infeasible: !caps_ok,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{load_config, repo_root};
+    use crate::costmodel;
+    use crate::workload::zoo;
+
+    #[test]
+    fn bound_is_below_exact_for_trivial_strategies() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        for w in zoo::table1_suite() {
+            let ctx = BoundsCtx::new(&w, &hw);
+            let mut scratch = ScreenScratch::new();
+            let s = Strategy::trivial(&w);
+            let v = ctx.screen(&s, &mut scratch);
+            let exact = costmodel::evaluate(&s, &w, &hw);
+            assert!(v.energy_lb <= exact.energy, "{}", w.name);
+            assert!(v.latency_lb <= exact.latency, "{}", w.name);
+            assert!(v.edp_lb <= exact.edp, "{}", w.name);
+            assert!(!v.capacity_infeasible,
+                    "trivial is feasible everywhere");
+        }
+    }
+
+    #[test]
+    fn capacity_replica_matches_kernel_on_oversized_group() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::vgg16();
+        let ctx = BoundsCtx::new(&w, &hw);
+        let mut scratch = ScreenScratch::new();
+        let mut s = Strategy::trivial(&w);
+        for d in 0..NDIMS {
+            s.mappings[0].factors[d][SLOT_T2] =
+                w.layers[0].dims[d] as u64;
+            s.mappings[1].factors[d][SLOT_T2] =
+                w.layers[1].dims[d] as u64;
+        }
+        s.fuse[0] = true;
+        let v = ctx.screen(&s, &mut scratch);
+        assert!(v.capacity_infeasible);
+        assert!(costmodel::feasible(&s, &w, &hw).is_err());
+    }
+
+    #[test]
+    fn fused_edges_lower_the_bound() {
+        // fusion removes DRAM write-back + refill floors, so the bound
+        // must drop when an edge fuses (mirroring the exact model)
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::gpt3_6_7b();
+        let ctx = BoundsCtx::new(&w, &hw);
+        let mut scratch = ScreenScratch::new();
+        let mut s = Strategy::trivial(&w);
+        let cold = ctx.screen(&s, &mut scratch);
+        s.fuse[0] = true;
+        let fused = ctx.screen(&s, &mut scratch);
+        assert!(fused.energy_lb < cold.energy_lb);
+    }
+}

@@ -16,6 +16,10 @@
 //! * [`batch`] — the allocation-free single-pass batch kernel behind
 //!   `search::EvalEngine` (components once per layer, inline
 //!   feasibility, reusable SoA scratch).
+//! * [`bounds`] — admissible per-candidate energy/latency/EDP lower
+//!   bounds plus an exact-replica capacity screen; the engine's
+//!   bound-and-prune prefilter skips the batch kernel for candidates
+//!   whose floor already meets the incumbent.
 //! * [`grad`] — the pure-Rust forward + reverse-mode implementation of
 //!   the *relaxed* cost model (Gumbel-Softmax snap, fusion sigma
 //!   modulation, penalty terms), the native backend of the FADiff
@@ -23,6 +27,7 @@
 //!   the same math.
 
 pub mod batch;
+pub mod bounds;
 pub mod grad;
 pub mod tables;
 

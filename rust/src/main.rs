@@ -17,6 +17,7 @@ use fadiff::config::repo_root;
 use fadiff::coordinator::{self, Coordinator, JobRequest, Method};
 use fadiff::experiments::{fig3, fig4, table1, validation};
 use fadiff::runtime::Runtime;
+use fadiff::search::PruneMode;
 use fadiff::util::cli::Args;
 use fadiff::workload::{spec, zoo};
 
@@ -38,6 +39,10 @@ USAGE: fadiff <subcommand> [flags]
             --store-dir DIR persists best results + eval caches: a
             repeat invocation answers warm from disk (re-verified);
             --force searches anyway and records improvements
+            --prune on|off|full bound-and-prune screening (default on,
+            bit-identical; full also screens GA, changing its
+            trajectory); --warm-frac F seeds F of the population from
+            the store's mapping library (needs --store-dir)
   workloads [--describe name]   list servable workloads / show one
   table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
   fig3                                           (paper Figure 3)
@@ -102,7 +107,20 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         deadline_ms: args.get_u64("deadline-ms", 0)?,
         spec: None,
         force: args.has("force"),
+        prune: {
+            let text = args.get_or("prune", "on");
+            PruneMode::parse(&text).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--prune must be \"on\", \"off\", or \"full\" \
+                     (got {text:?})"
+                )
+            })?
+        },
+        warm_frac: args.get_f64("warm-frac", 0.0)?,
     };
+    if !(0.0..=1.0).contains(&req.warm_frac) {
+        bail!("--warm-frac must be in [0, 1]");
+    }
     if let Some(path) = args.get("workload-file") {
         let w = spec::load_file(std::path::Path::new(path))?;
         req.workload = w.name.clone();
@@ -125,8 +143,20 @@ fn cmd_optimize(args: &Args) -> Result<()> {
                 std::path::Path::new(dir))?)),
         None => None,
     };
-    let ctx = coordinator::JobCtx { store, ..Default::default() };
+    // the mapping library rides the same store: this run records its
+    // per-layer bests and a later --warm-frac run seeds from them
+    let library = store.as_ref().map(|_| {
+        std::sync::Arc::new(coordinator::MappingLibrary::new())
+    });
+    let ctx = coordinator::JobCtx {
+        store: store.clone(),
+        library: library.clone(),
+        ..Default::default()
+    };
     let r = coordinator::execute_job_ctx(rt.as_ref(), &req, &ctx)?;
+    if let (Some(lib), Some(st)) = (&library, &store) {
+        lib.flush(st);
+    }
     println!("workload        : {}", r.request.workload);
     println!("config          : {}", r.request.config);
     println!("method          : {}", r.request.method.name());

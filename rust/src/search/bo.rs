@@ -22,7 +22,7 @@ use crate::workload::Workload;
 
 use super::encoding::{dim, express_with};
 use super::gp::Gp;
-use super::{Budget, EvalCtx, Incumbent, SearchResult};
+use super::{Budget, EvalCtx, Incumbent, Screened, SearchResult};
 
 /// BO hyper-parameters.
 #[derive(Clone, Debug)]
@@ -80,26 +80,42 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
     let mut rng = Rng::new(cfg.seed);
     let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+    if !ctx.seeds.is_empty() {
+        inc.offer_seeds(&ctx.seeds);
+    }
 
     let mut xs: Vec<Vec<f64>> = Vec::new();
     let mut ys: Vec<f64> = Vec::new();
     let mut iter = 0usize;
 
-    // initial design: uniform random, decoded + scored as one batch
+    // initial design: uniform random, decoded + scored as one batch.
+    // Screening is capacity-only (no EDP threshold): every exact eval
+    // feeds the GP, and a screen-infeasible candidate contributes the
+    // same 1e3 sentinel the kernel's infeasible verdict would, so the
+    // observation stream is bit-identical either way.
     let init = cfg.init_samples.min(budget.max_iters);
     let design: Vec<Vec<f64>> = (0..init)
         .map(|_| (0..d).map(|_| rng.f64()).collect())
         .collect();
     let tables = std::sync::Arc::clone(inc.engine.tables());
-    let scored = inc
-        .engine
-        .eval_population(&design, |x| express_with(x, w, hw, &tables));
-    for (x, (s, e)) in design.into_iter().zip(scored) {
+    let scored: Vec<_> = if ctx.prune.enabled() {
+        inc.engine.eval_population_screened(
+            &design, |x| express_with(x, w, hw, &tables), None,
+            ctx.prune_stats())
+    } else {
+        inc.engine
+            .eval_population(&design,
+                             |x| express_with(x, w, hw, &tables))
+            .into_iter()
+            .map(|(s, e)| (s, Screened::Exact(e)))
+            .collect()
+    };
+    for (x, (s, sc)) in design.into_iter().zip(scored) {
         if inc.cancelled() || inc.elapsed() > budget.seconds {
             break;
         }
         iter += 1;
-        let edp = inc.offer_eval(&s, e, iter);
+        let edp = inc.offer_screened(&s, sc, iter);
         xs.push(x);
         ys.push(log_y(edp));
     }
@@ -160,8 +176,14 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &BoConfig,
                 None => (0..d).map(|_| rng.f64()).collect(),
             };
         let s = express_with(&next_x, w, hw, &tables);
-        let e = inc.engine.eval(&s);
-        let edp = inc.offer_eval(&s, e, iter);
+        let edp = if ctx.prune.enabled() {
+            let sc = inc.engine.eval_batch_screened(
+                std::slice::from_ref(&s), None, ctx.prune_stats())[0];
+            inc.offer_screened(&s, sc, iter)
+        } else {
+            let e = inc.engine.eval(&s);
+            inc.offer_eval(&s, e, iter)
+        };
         inc.note_iters(iter);
         xs.push(next_x);
         ys.push(log_y(edp));

@@ -44,6 +44,31 @@ pub fn express_with(x: &[f64], w: &Workload, hw: &HwConfig,
 }
 
 
+/// Inverse of the unit-cube encoding for a hardware-valid strategy:
+/// a genome that re-expresses (through [`express_naive`]) to the same
+/// strategy, because every stored factor is an exact divisor of its
+/// dim and the nearest-divisor snap at distance zero is unique. Used
+/// to inject warm-start library seeds into GA populations.
+pub fn encode_strategy(s: &Strategy, w: &Workload) -> Vec<f64> {
+    let mut x = vec![0.0f64; dim(w)];
+    for l in 0..w.len().min(s.mappings.len()) {
+        for d in 0..NDIMS {
+            let cap = (w.layers[l].dims[d] as f64).log2().max(0.0);
+            for slot in 0..4 {
+                let f = s.mappings[l].factors[d][slot].max(1) as f64;
+                let u = (f.log2() + 0.25) / (cap + 0.5);
+                x[(l * NDIMS + d) * 4 + slot] = u.clamp(0.0, 1.0);
+            }
+        }
+    }
+    let base = w.len() * NDIMS * 4;
+    for i in 0..w.fusible.len() {
+        let on = s.fuse.get(i).copied().unwrap_or(false);
+        x[base + i] = if on { 1.0 } else { 0.0 };
+    }
+    x
+}
+
 /// Naive legalization used by the heuristic GA baseline: the same
 /// unit-cube genes, but WITHOUT FADiff's snap-then-trim decode and
 /// sigma-ordered capacity repair (those embody the paper's contribution
@@ -161,6 +186,19 @@ mod tests {
                 let s = express_naive(&x, &w, &hw);
                 crate::costmodel::feasible(&s, &w, &hw).unwrap();
             }
+        }
+    }
+
+    #[test]
+    fn encode_strategy_roundtrips_through_naive_expression() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let mut rng = Rng::new(7);
+        for w in zoo::table1_suite() {
+            let x: Vec<f64> = (0..dim(&w)).map(|_| rng.f64()).collect();
+            let s = express_naive(&x, &w, &hw);
+            let s2 = express_naive(&encode_strategy(&s, &w), &w, &hw);
+            assert_eq!(s.mappings, s2.mappings, "{}", w.name);
+            assert_eq!(s.fuse, s2.fuse, "{}", w.name);
         }
     }
 

@@ -48,6 +48,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::HwConfig;
+use crate::costmodel::bounds::{BoundsCtx, ScreenScratch};
 use crate::costmodel::{batch, WorkloadTables};
 use crate::mapping::{Strategy, NSLOTS};
 use crate::util::threadpool::{par_map, ThreadPool};
@@ -167,6 +168,55 @@ impl Eval {
         } else {
             f64::INFINITY
         }
+    }
+}
+
+/// Outcome of one candidate in a screened (bound-and-prune) batch.
+///
+/// The prefilter never invents numbers: `Exact` carries the same
+/// [`Eval`] the unscreened path would have produced, and the two pruned
+/// arms only ever report candidates that provably could not have beaten
+/// the threshold (`Pruned`, admissible bound) or that the kernel is
+/// guaranteed to reject (`Infeasible`, exact capacity replica).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Screened {
+    /// Fully evaluated (cache hit or batch-kernel computation).
+    Exact(Eval),
+    /// The admissible EDP lower bound already met the threshold; the
+    /// exact cost can only be worse. Carries the bound for callers
+    /// that want a pessimistic fitness (GA's `prune: "full"` mode).
+    Pruned {
+        /// Admissible lower bound on the candidate's EDP.
+        bound_edp: f64,
+    },
+    /// The kernel's capacity checks are guaranteed to fail; the exact
+    /// path would have scored this candidate infeasible.
+    Infeasible {
+        /// Admissible lower bound on the candidate's EDP.
+        bound_edp: f64,
+    },
+}
+
+/// Lock-free counters for the bound-and-prune prefilter. One instance
+/// is shared process-wide by the coordinator (every job's `EvalCtx`
+/// carries it) and rendered as the `metrics.prune` block.
+#[derive(Debug, Default)]
+pub struct PruneStats {
+    /// Candidates that went through the screen (cache hits bypass it).
+    pub bounded: AtomicU64,
+    /// Candidates pruned because their bound met the threshold.
+    pub pruned_above: AtomicU64,
+    /// Candidates pruned as capacity-infeasible by the exact replica.
+    pub pruned_infeasible: AtomicU64,
+    /// Candidates that produced an `Exact` result (hits + kernel runs).
+    pub evaluated: AtomicU64,
+}
+
+impl PruneStats {
+    /// Total pruned (threshold + capacity).
+    pub fn pruned(&self) -> u64 {
+        self.pruned_above.load(Ordering::Relaxed)
+            + self.pruned_infeasible.load(Ordering::Relaxed)
     }
 }
 
@@ -308,6 +358,7 @@ pub struct EvalEngine<'a> {
     pool: Option<Arc<ThreadPool>>,
     fleet: Option<FleetHandle>,
     tables: Arc<WorkloadTables>,
+    bounds: BoundsCtx,
 }
 
 impl<'a> EvalEngine<'a> {
@@ -333,6 +384,7 @@ impl<'a> EvalEngine<'a> {
             pool: None,
             fleet: None,
             tables: Arc::new(WorkloadTables::new(w)),
+            bounds: BoundsCtx::new(w, hw),
         }
     }
 
@@ -547,6 +599,126 @@ impl<'a> EvalEngine<'a> {
         let evals = self.eval_batch(&strategies);
         strategies.into_iter().zip(evals).collect()
     }
+
+    /// [`EvalEngine::eval_batch`] behind the bound-and-prune prefilter.
+    ///
+    /// Each candidate is first looked up in the cache (hits bypass the
+    /// screen and come back `Exact` unconditionally), then screened by
+    /// [`BoundsCtx`]: capacity-infeasible candidates and — when a
+    /// `threshold` is given — candidates whose admissible EDP bound
+    /// already reaches it skip the kernel entirely. Survivors go
+    /// through exactly the unscreened compute path (dedup, fleet
+    /// routing, cache insert), so their `Exact` results are
+    /// bit-identical to [`EvalEngine::eval_batch`]'s.
+    ///
+    /// Pruned candidates are **not** inserted into the (possibly
+    /// shared) cache and touch no hit/miss counters — the cache only
+    /// ever holds kernel-exact results.
+    pub fn eval_batch_screened(&self, pop: &[Strategy],
+                               threshold: Option<f64>,
+                               stats: Option<&PruneStats>)
+                               -> Vec<Screened> {
+        let layers = self.w.len();
+        let mut out: Vec<Option<Screened>> = vec![None; pop.len()];
+        let mut todo: Vec<usize> = Vec::new();
+        let mut keys: Vec<StrategyKey> = Vec::new();
+        let mut alias: Vec<(usize, usize)> = Vec::new();
+        let mut scratch = ScreenScratch::new();
+        let mut bounded = 0u64;
+        let mut pruned_above = 0u64;
+        let mut pruned_infeasible = 0u64;
+        let mut exact = 0u64;
+        {
+            let map = self.cache.map.lock().unwrap();
+            let mut seen: HashMap<StrategyKey, usize> = HashMap::new();
+            for (i, s) in pop.iter().enumerate() {
+                let key = StrategyKey::of(s);
+                if let Some(e) = map.get(&key) {
+                    self.cache.hits.fetch_add(1, Ordering::Relaxed);
+                    exact += 1;
+                    out[i] = Some(Screened::Exact(*e));
+                    continue;
+                }
+                // screen before dedup; wrong-arity candidates cannot
+                // be bounded and fall through to the kernel's own
+                // arity guard (plain infeasible, same as unscreened)
+                if s.mappings.len() == layers
+                    && s.fuse.len() == layers.saturating_sub(1)
+                {
+                    let v = self.bounds.screen(s, &mut scratch);
+                    bounded += 1;
+                    if v.capacity_infeasible {
+                        pruned_infeasible += 1;
+                        out[i] = Some(Screened::Infeasible {
+                            bound_edp: v.edp_lb,
+                        });
+                        continue;
+                    }
+                    if threshold.is_some_and(|t| v.edp_lb >= t) {
+                        pruned_above += 1;
+                        out[i] = Some(Screened::Pruned {
+                            bound_edp: v.edp_lb,
+                        });
+                        continue;
+                    }
+                }
+                if let Some(&pos) = seen.get(&key) {
+                    self.cache.hits.fetch_add(1, Ordering::Relaxed);
+                    exact += 1;
+                    alias.push((i, pos));
+                    continue;
+                }
+                seen.insert(key.clone(), todo.len());
+                todo.push(i);
+                keys.push(key);
+            }
+        }
+        self.cache
+            .misses
+            .fetch_add(todo.len() as u64, Ordering::Relaxed);
+        exact += todo.len() as u64;
+        let computed: Vec<Eval> = self.compute_misses(pop, &todo);
+        {
+            let mut map = self.cache.map.lock().unwrap();
+            for (pos, &i) in todo.iter().enumerate() {
+                out[i] = Some(Screened::Exact(computed[pos]));
+                self.cache.insert_bounded(&mut map, keys[pos].clone(),
+                                          computed[pos]);
+            }
+        }
+        for (i, pos) in alias {
+            out[i] = Some(Screened::Exact(computed[pos]));
+        }
+        if let Some(st) = stats {
+            st.bounded.fetch_add(bounded, Ordering::Relaxed);
+            st.pruned_above
+                .fetch_add(pruned_above, Ordering::Relaxed);
+            st.pruned_infeasible
+                .fetch_add(pruned_infeasible, Ordering::Relaxed);
+            st.evaluated.fetch_add(exact, Ordering::Relaxed);
+        }
+        out.into_iter().map(|e| e.expect("every candidate screened"))
+            .collect()
+    }
+
+    /// [`EvalEngine::eval_population`] behind the prefilter: decode in
+    /// parallel, then [`EvalEngine::eval_batch_screened`].
+    pub fn eval_population_screened<G, F>(&self, genomes: &[G],
+                                          decode: F,
+                                          threshold: Option<f64>,
+                                          stats: Option<&PruneStats>)
+                                          -> Vec<(Strategy, Screened)>
+    where
+        G: Sync,
+        F: Fn(&G) -> Strategy + Sync,
+    {
+        let idx: Vec<usize> = (0..genomes.len()).collect();
+        let strategies: Vec<Strategy> =
+            self.run_indexed(idx, |i| decode(&genomes[i]));
+        let screened =
+            self.eval_batch_screened(&strategies, threshold, stats);
+        strategies.into_iter().zip(screened).collect()
+    }
 }
 
 #[cfg(test)]
@@ -750,6 +922,63 @@ mod tests {
         let engine = EvalEngine::new(&w, &hw).with_fleet(handle);
         assert_eq!(engine.eval_batch(&pop), expect,
                    "short backend answer must fall back, not corrupt");
+    }
+
+    #[test]
+    fn screened_batch_without_threshold_matches_unscreened() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 20, 41);
+        let plain = EvalEngine::new(&w, &hw);
+        let expect = plain.eval_batch(&pop);
+        let engine = EvalEngine::new(&w, &hw);
+        let stats = PruneStats::default();
+        let screened =
+            engine.eval_batch_screened(&pop, None, Some(&stats));
+        for (sc, e) in screened.iter().zip(&expect) {
+            match sc {
+                Screened::Exact(got) => assert_eq!(got, e),
+                other => {
+                    // only capacity-infeasible candidates may skip the
+                    // kernel without a threshold — and then the exact
+                    // path must agree they are infeasible
+                    assert!(matches!(other, Screened::Infeasible { .. }));
+                    assert!(!e.feasible);
+                }
+            }
+        }
+        assert_eq!(stats.bounded.load(Ordering::Relaxed),
+                   pop.len() as u64);
+        assert_eq!(stats.pruned_above.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn screened_batch_prunes_above_threshold_and_skips_cache() {
+        let hw = load_config(&repo_root(), "large").unwrap();
+        let w = zoo::mobilenet_v1();
+        let pop = random_pop(&w, &hw, 16, 55);
+        let engine = EvalEngine::new(&w, &hw);
+        // an absurdly low threshold: everything screenable is pruned
+        let stats = PruneStats::default();
+        let screened =
+            engine.eval_batch_screened(&pop, Some(1e-30), Some(&stats));
+        assert!(screened.iter().all(|sc| !matches!(
+            sc, Screened::Exact(_))));
+        assert!(stats.pruned() >= 1);
+        assert_eq!(engine.cache_len(), 0,
+                   "pruned candidates must never enter the cache");
+        assert_eq!(engine.cache_misses(), 0);
+        // pruned bounds really are admissible for these candidates
+        for (sc, s) in screened.iter().zip(&pop) {
+            let exact = costmodel::evaluate(s, &w, &hw);
+            match sc {
+                Screened::Pruned { bound_edp }
+                | Screened::Infeasible { bound_edp } => {
+                    assert!(*bound_edp <= exact.edp);
+                }
+                Screened::Exact(_) => unreachable!(),
+            }
+        }
     }
 
     #[test]

@@ -20,8 +20,9 @@ use crate::config::HwConfig;
 use crate::util::rng::Rng;
 use crate::workload::{Workload, NDIMS};
 
-use super::encoding::{dim, express_naive_with};
-use super::{Budget, EvalCtx, Incumbent, SearchResult};
+use super::encoding::{dim, encode_strategy, express_naive_with};
+use super::{Budget, EvalCtx, Incumbent, PruneMode, Screened,
+            SearchResult};
 
 /// GA hyper-parameters.
 #[derive(Clone, Debug)]
@@ -76,20 +77,50 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, cfg: &GaConfig,
     let mut pop: Vec<Vec<f64>> = (0..cfg.population)
         .map(|_| (0..d).map(|_| rng.f64()).collect())
         .collect();
+    // warm-start: overwrite the first seed_slots genomes with library
+    // incumbents AFTER drawing the full random population, so the rng
+    // stream (and thus every unseeded run) is byte-for-byte unchanged
+    let slots = ctx.seed_slots(cfg.population);
+    if slots > 0 {
+        inc.offer_seeds(&ctx.seeds);
+        for i in 0..slots {
+            let seed = &ctx.seeds[i % ctx.seeds.len()];
+            pop[i] = encode_strategy(seed, w);
+        }
+    }
     let mut fitness = vec![f64::INFINITY; pop.len()];
     let mut gen = 0usize;
 
+    let full_prune = ctx.prune == PruneMode::Full;
     let tables = std::sync::Arc::clone(inc.engine.tables());
     while gen < budget.max_iters && !inc.stopped(&budget) {
         gen += 1;
         // decode + score the whole generation in parallel (cache folds
         // elites and crossover duplicates)
-        let scored = inc
-            .engine
-            .eval_population(&pop,
-                             |g| express_naive_with(g, w, hw, &tables));
-        for (i, (s, e)) in scored.iter().enumerate() {
-            fitness[i] = inc.offer_eval(s, *e, gen);
+        if full_prune {
+            // prune: "full" — pruned individuals take their admissible
+            // bound as a pessimistic fitness instead of the exact EDP.
+            // Selection pressure on them weakens, so the GA trajectory
+            // can differ from the unpruned run (documented opt-in).
+            let scored = inc.engine.eval_population_screened(
+                &pop,
+                |g| express_naive_with(g, w, hw, &tables),
+                inc.best_edp(),
+                ctx.prune_stats(),
+            );
+            for (i, (s, sc)) in scored.iter().enumerate() {
+                let offered = inc.offer_screened(s, *sc, gen);
+                fitness[i] = match *sc {
+                    Screened::Pruned { bound_edp } => bound_edp,
+                    _ => offered,
+                };
+            }
+        } else {
+            let scored = inc.engine.eval_population(
+                &pop, |g| express_naive_with(g, w, hw, &tables));
+            for (i, (s, e)) in scored.iter().enumerate() {
+                fitness[i] = inc.offer_eval(s, *e, gen);
+            }
         }
         inc.note_iters(gen);
         if inc.stopped(&budget) {

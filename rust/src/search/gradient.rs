@@ -49,6 +49,7 @@ use crate::config::HwConfig;
 use crate::costmodel::grad::{GradModel, SnapMode};
 use crate::costmodel::tables::WorkloadTables;
 use crate::mapping::decode::{decode_with, fusion_greedy, Relaxed};
+use crate::mapping::Strategy;
 use crate::runtime::stage::WorkloadStage;
 use crate::runtime::{HostTensor, Runtime, ART_GRAD};
 use crate::util::rng::{GumbelPool, Rng};
@@ -545,9 +546,11 @@ fn step_chain_block(view: &mut ChainView<'_>, model: &GradModel<'_>,
 /// threads and score in a single `EvalEngine` SoA sweep, then the
 /// offers land in fixed chain order — one deterministic trace
 /// regardless of worker count.
+#[allow(clippy::too_many_arguments)]
 fn offer_chain_decodes(batch: &ChainBatch, w: &Workload, hw: &HwConfig,
                        cfg: &GradientConfig, inc: &mut Incumbent<'_>,
-                       iter: usize, tables: &Arc<WorkloadTables>) {
+                       iter: usize, tables: &Arc<WorkloadTables>,
+                       ctx: &EvalCtx) {
     let mut variants: Vec<Relaxed> =
         Vec::with_capacity(2 * batch.c_n);
     for c in 0..batch.c_n {
@@ -563,12 +566,51 @@ fn offer_chain_decodes(batch: &ChainBatch, w: &Workload, hw: &HwConfig,
             variants.push(g);
         }
     }
-    let scored = inc.engine.eval_population(&variants, |r| {
-        decode_with(r, w, hw, tables)
-    });
-    for (s, e) in scored {
-        inc.offer_eval(&s, e, iter);
+    if ctx.prune.enabled() {
+        // decode offers never feed back into the chain state, so
+        // pruning candidates whose admissible bound meets the
+        // incumbent leaves the search trajectory bit-identical
+        let scored = inc.engine.eval_population_screened(
+            &variants, |r| decode_with(r, w, hw, tables),
+            inc.best_edp(), ctx.prune_stats());
+        for (s, sc) in scored {
+            inc.offer_screened(&s, sc, iter);
+        }
+    } else {
+        let scored = inc.engine.eval_population(&variants, |r| {
+            decode_with(r, w, hw, tables)
+        });
+        for (s, e) in scored {
+            inc.offer_eval(&s, e, iter);
+        }
     }
+}
+
+/// Overwrite chain `c`'s relaxed state with a warm-start strategy:
+/// theta = log2(factor) (the decode snap reproduces the factors
+/// exactly, they are divisors) and fusion logits pushed to +-2.0 so
+/// the seeded decisions survive the 0.5 sigmoid threshold.
+fn seed_chain(batch: &mut ChainBatch, c: usize, s: &Strategy,
+              w: &Workload) {
+    let nt = batch.n_theta;
+    let ns = batch.n_sigma;
+    let theta = &mut batch.theta[c * nt..(c + 1) * nt];
+    let sigma = &mut batch.sigma[c * ns..(c + 1) * ns];
+    for l in 0..w.len().min(s.mappings.len()) {
+        for d in 0..NDIMS {
+            for slot in 0..4 {
+                let f = s.mappings[l].factors[d][slot].max(1) as f64;
+                theta[(l * NDIMS + d) * 4 + slot] = f.log2();
+            }
+        }
+    }
+    for (i, logit) in
+        sigma.iter_mut().enumerate().take(w.fusible.len())
+    {
+        let on = s.fuse.get(i).copied().unwrap_or(false);
+        *logit = if on { 2.0 } else { -2.0 };
+    }
+    clamp_params(theta, sigma, w);
 }
 
 /// Run the FADiff (or DOSA) gradient search. `rt` selects the backend:
@@ -611,6 +653,17 @@ fn optimize_native(w: &Workload, hw: &HwConfig, cfg: &GradientConfig,
     let model = GradModel::new(w, hw, &tables, cfg.alpha,
                                cfg.fuse_enabled, SnapMode::Straight);
     let mut batch = ChainBatch::new(w, hw, cfg, &model, c_n);
+    // warm-start: the first seed_slots chains restart from library
+    // incumbents instead of the hardware prior (rng streams already
+    // drawn, so unseeded chains are unchanged)
+    let slots = ctx.seed_slots(c_n);
+    if slots > 0 {
+        inc.offer_seeds(&ctx.seeds);
+        for c in 0..slots {
+            seed_chain(&mut batch, c, &ctx.seeds[c % ctx.seeds.len()],
+                       w);
+        }
+    }
     let per_chain_iters = budget.max_iters.max(1);
     let block = cfg.decode_every.max(1);
     let threads = inc.engine.threads().min(c_n);
@@ -633,7 +686,7 @@ fn optimize_native(w: &Workload, hw: &HwConfig, cfg: &GradientConfig,
         total_iters += counts.iter().sum::<usize>();
         it += todo;
         offer_chain_decodes(&batch, w, hw, cfg, &mut inc, total_iters,
-                            &tables);
+                            &tables, ctx);
         inc.note_iters(total_iters);
         blocks_done += 1;
         if it < per_chain_iters

@@ -44,7 +44,55 @@ use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
 
 pub use eval::{compute_eval, Eval, EvalBackend, EvalCache, EvalEngine,
-               FleetHandle};
+               FleetHandle, PruneStats, Screened};
+
+/// Policy for the bound-and-prune prefilter
+/// ([`EvalEngine::eval_batch_screened`]).
+///
+/// `On` is the default and is *result-invariant*: it only skips kernel
+/// work for candidates that provably could not have improved the
+/// incumbent (admissible bound) or that the kernel provably rejects
+/// (exact capacity replica), so random/gradient/BO results stay
+/// bit-identical to `Off`. `Full` additionally lets GA selection see
+/// pruned candidates' bounds as pessimistic fitness — faster
+/// generations, but a *different* (still valid) GA trajectory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PruneMode {
+    /// Result-invariant pruning (the default).
+    #[default]
+    On,
+    /// No screening: every candidate runs the full kernel.
+    Off,
+    /// `On`, plus GA uses bounds as pessimistic fitness for pruned
+    /// candidates (documented as changing the GA trajectory).
+    Full,
+}
+
+impl PruneMode {
+    /// Parse a protocol-level mode name.
+    pub fn parse(text: &str) -> Option<PruneMode> {
+        match text {
+            "on" => Some(PruneMode::On),
+            "off" => Some(PruneMode::Off),
+            "full" => Some(PruneMode::Full),
+            _ => None,
+        }
+    }
+
+    /// Stable wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMode::On => "on",
+            PruneMode::Off => "off",
+            PruneMode::Full => "full",
+        }
+    }
+
+    /// Whether the screened evaluation path is active at all.
+    pub fn enabled(&self) -> bool {
+        !matches!(self, PruneMode::Off)
+    }
+}
 
 /// Live, lock-free progress of one running search, shared between the
 /// search loop (writer) and the serving layer (reader — the `status`
@@ -190,6 +238,19 @@ pub struct EvalCtx {
     /// boundaries as `cancel`. Expired jobs keep their best-so-far
     /// and terminate with status `deadline_exceeded`.
     pub deadline: Option<Deadline>,
+    /// Bound-and-prune policy for the engine's screened batch path.
+    pub prune: PruneMode,
+    /// Shared prefilter counters (the coordinator's `metrics.prune`).
+    pub prune_stats: Option<Arc<PruneStats>>,
+    /// Warm-start seed strategies (assembled from the coordinator's
+    /// mapping library in a deterministic order). Offered to the
+    /// incumbent before the search starts and injected into a
+    /// `warm_frac` fraction of GA populations / gradient chains.
+    pub seeds: Vec<Strategy>,
+    /// Fraction (0..=1) of GA genomes / gradient chains initialized
+    /// from `seeds`. 0 disables warm-starting (the default — results
+    /// then never depend on library state).
+    pub warm_frac: f64,
 }
 
 impl EvalCtx {
@@ -207,6 +268,22 @@ impl EvalCtx {
             engine = engine.with_fleet(fleet.clone());
         }
         engine
+    }
+
+    /// The shared prefilter counters, if the serving layer installed
+    /// any (searches pass this straight to the screened batch calls).
+    pub fn prune_stats(&self) -> Option<&PruneStats> {
+        self.prune_stats.as_deref()
+    }
+
+    /// How many of `n` population/chain slots to initialize from the
+    /// warm-start seeds (`ceil(warm_frac * n)`, capped at `n`; 0 when
+    /// seeding is disabled or no seeds exist).
+    pub fn seed_slots(&self, n: usize) -> usize {
+        if self.seeds.is_empty() || self.warm_frac <= 0.0 {
+            return 0;
+        }
+        ((self.warm_frac * n as f64).ceil() as usize).min(n)
     }
 }
 
@@ -363,6 +440,41 @@ impl<'a> Incumbent<'a> {
     pub fn offer(&mut self, s: &Strategy, iter: usize) -> f64 {
         let e = self.engine.eval(s);
         self.offer_eval(s, e, iter)
+    }
+
+    /// Best feasible EDP so far — the screened path's prune threshold
+    /// (a candidate whose admissible bound reaches this cannot improve
+    /// the incumbent).
+    pub fn best_edp(&self) -> Option<f64> {
+        self.best.as_ref().map(|&(_, edp, _, _)| edp)
+    }
+
+    /// Offer warm-start seeds (iter 0, fixed order) before a search
+    /// begins: the incumbent starts from the best library-known
+    /// strategy instead of cold. No-op when `seeds` is empty.
+    pub fn offer_seeds(&mut self, seeds: &[Strategy]) {
+        for s in seeds {
+            self.offer(s, 0);
+        }
+    }
+
+    /// Record one outcome of a screened batch. `Exact` results go
+    /// through [`Incumbent::offer_eval`]; pruned candidates count as
+    /// offered evals (keeping counters identical to the unscreened
+    /// path) but by construction cannot improve the incumbent, so no
+    /// kernel work or trace update happens for them.
+    pub fn offer_screened(&mut self, s: &Strategy, sc: Screened,
+                          iter: usize) -> f64 {
+        match sc {
+            Screened::Exact(e) => self.offer_eval(s, e, iter),
+            Screened::Pruned { .. } | Screened::Infeasible { .. } => {
+                self.evals += 1;
+                if let Some(p) = &self.progress {
+                    p.record_evals(self.evals as u64);
+                }
+                f64::INFINITY
+            }
+        }
     }
 
     /// Record an already-scored candidate (the batched path: score the

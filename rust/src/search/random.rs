@@ -46,25 +46,48 @@ pub fn optimize_ctx(w: &Workload, hw: &HwConfig, seed: u64,
     let mut rng = Rng::new(seed);
     let mut inc = Incumbent::with_ctx(w, hw, ctx);
     inc.offer(&crate::mapping::Strategy::trivial(w), 0);
+    if !ctx.seeds.is_empty() {
+        inc.offer_seeds(&ctx.seeds);
+    }
     let tables = std::sync::Arc::clone(inc.engine.tables());
     let mut iter = 0usize;
     while !inc.stopped(&budget) && iter < budget.max_iters {
         let b = BATCH.min(budget.max_iters - iter).max(1);
         let samples: Vec<Relaxed> =
             (0..b).map(|_| sample(&mut rng, w)).collect();
-        let scored = inc
-            .engine
-            .eval_population(&samples,
-                             |r| decode_with(r, w, hw, &tables));
-        for (s, e) in &scored {
-            // keep the old per-candidate budget granularity: never
-            // record results past the deadline (the batch evaluation
-            // itself may overrun by at most one batch)
-            if inc.stopped(&budget) {
-                break;
+        if ctx.prune.enabled() {
+            // bound-and-prune fast path: candidates whose admissible
+            // EDP floor meets the incumbent at batch start skip the
+            // exact kernel — bit-identical to the unpruned path
+            // because exact >= bound >= incumbent means no improvement
+            let scored = inc.engine.eval_population_screened(
+                &samples,
+                |r| decode_with(r, w, hw, &tables),
+                inc.best_edp(),
+                ctx.prune_stats(),
+            );
+            for (s, sc) in &scored {
+                if inc.stopped(&budget) {
+                    break;
+                }
+                iter += 1;
+                inc.offer_screened(s, *sc, iter);
             }
-            iter += 1;
-            inc.offer_eval(s, *e, iter);
+        } else {
+            let scored = inc
+                .engine
+                .eval_population(&samples,
+                                 |r| decode_with(r, w, hw, &tables));
+            for (s, e) in &scored {
+                // keep the old per-candidate budget granularity: never
+                // record results past the deadline (the batch
+                // evaluation itself may overrun by at most one batch)
+                if inc.stopped(&budget) {
+                    break;
+                }
+                iter += 1;
+                inc.offer_eval(s, *e, iter);
+            }
         }
         inc.note_iters(iter);
     }

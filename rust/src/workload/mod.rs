@@ -94,6 +94,25 @@ impl Layer {
     pub fn ops(&self) -> f64 {
         self.dims.iter().map(|&d| d as f64).product()
     }
+
+    /// Shape fingerprint: FNV-1a over the operator kind and the seven
+    /// dim sizes — the key the warm-start mapping library indexes by.
+    /// The layer *name* is deliberately excluded: only the shape
+    /// matters for mapping reuse across workloads.
+    pub fn shape_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        eat(self.kind.name().as_bytes());
+        for &d in &self.dims {
+            eat(&(d as u64).to_le_bytes());
+        }
+        h
+    }
 }
 
 /// A workload: a topologically-ordered chain of layers with explicit
@@ -214,6 +233,19 @@ mod tests {
             1.0,
         );
         assert_eq!(w.fusible, vec![false]);
+    }
+
+    #[test]
+    fn shape_fingerprint_keys_on_kind_and_dims_only() {
+        let a = conv("a", 64, 3, 224);
+        let renamed = conv("zzz", 64, 3, 224);
+        assert_eq!(a.shape_fingerprint(), renamed.shape_fingerprint());
+        let bigger = conv("a", 128, 3, 224);
+        assert_ne!(a.shape_fingerprint(), bigger.shape_fingerprint());
+        let other_kind = Layer::new("a", LayerKind::Pointwise,
+                                    a.dims);
+        assert_ne!(a.shape_fingerprint(),
+                   other_kind.shape_fingerprint());
     }
 
     #[test]

@@ -145,6 +145,8 @@ fn coordinator_serves_repeat_jobs_from_cache() {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     };
     let r1 = coord.run(req.clone()).unwrap();
     let hits1 = coord.registry().hits();
@@ -192,6 +194,8 @@ fn pooled_coordinator_results_match_standalone_search() {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     };
     let served = coord.run(req).unwrap();
 

@@ -27,6 +27,8 @@ fn small_job(workload: &str, method: Method) -> JobRequest {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     }
 }
 
@@ -282,6 +284,8 @@ fn cancel_stops_a_running_job_early() {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     }).unwrap();
     // wait until it is actually running
     let t0 = Instant::now();

@@ -1,0 +1,343 @@
+//! The bound-and-prune fast path and the warm-start mapping library:
+//!
+//! * admissibility — the screen's energy/latency/EDP floors never
+//!   exceed the exact model, and its capacity verdict is bit-identical
+//!   to the kernel's, across the whole zoo x both hw configs x random
+//!   decoded candidates;
+//! * bit-identity — the default-on pruned paths (random, gradient
+//!   decode offers, BO) reproduce the unpruned `SearchResult`
+//!   bit-for-bit (`f64::to_bits`), so pruning is a pure speedup;
+//! * warm-start — library seeds are deterministic for a fixed library
+//!   state, never worse than the seeds they start from, and flow
+//!   end-to-end through a store-backed coordinator restart.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::coordinator::{Coordinator, JobRequest, MappingLibrary,
+                          Method};
+use fadiff::costmodel::bounds::{BoundsCtx, ScreenScratch};
+use fadiff::costmodel::tables::WorkloadTables;
+use fadiff::search::encoding::{dim, express_naive_with, express_with};
+use fadiff::search::{bo, compute_eval, ga, gradient, random, Budget,
+                     EvalCtx, PruneMode, SearchResult};
+use fadiff::util::rng::Rng;
+use fadiff::workload::zoo;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!(
+        "fadiff_prune_{tag}_{}_{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// -------------------------------------------------------------------
+// admissibility
+// -------------------------------------------------------------------
+
+#[test]
+fn bounds_are_admissible_across_zoo_and_configs() {
+    for config in ["large", "small"] {
+        let hw = load_config(&repo_root(), config).unwrap();
+        for w in zoo::table1_suite() {
+            let bounds = BoundsCtx::new(&w, &hw);
+            let tables = WorkloadTables::new(&w);
+            let mut scratch = ScreenScratch::new();
+            let mut rng = Rng::new(0xADA + w.len() as u64);
+            let d = dim(&w);
+            for i in 0..24 {
+                let x: Vec<f64> =
+                    (0..d).map(|_| rng.f64()).collect();
+                let mut s = if i % 2 == 0 {
+                    express_with(&x, &w, &hw, &tables)
+                } else {
+                    express_naive_with(&x, &w, &hw, &tables)
+                };
+                if i % 3 == 0 {
+                    // stress the group-capacity replica: fuse every
+                    // legal edge regardless of what decode repaired
+                    s.fuse = w.fusible.clone();
+                }
+                let v = bounds.screen(&s, &mut scratch);
+                let e = compute_eval(&s, &w, &hw);
+                // the capacity screen is an exact replica, not a
+                // bound: verdicts must agree bit-for-bit
+                assert_eq!(v.capacity_infeasible, !e.feasible,
+                           "{config}/{}: screen and kernel disagree \
+                            on feasibility (sample {i})",
+                           w.name);
+                if !e.feasible {
+                    continue;
+                }
+                assert!(v.energy_lb <= e.energy,
+                        "{config}/{}: energy bound {} above exact {} \
+                         (sample {i})",
+                        w.name, v.energy_lb, e.energy);
+                assert!(v.latency_lb <= e.latency,
+                        "{config}/{}: latency bound {} above exact \
+                         {} (sample {i})",
+                        w.name, v.latency_lb, e.latency);
+                assert!(v.edp_lb <= e.edp,
+                        "{config}/{}: EDP bound {} above exact {} \
+                         (sample {i})",
+                        w.name, v.edp_lb, e.edp);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// bit-identity of the default-on pruned paths
+// -------------------------------------------------------------------
+
+fn assert_bit_identical(on: &SearchResult, off: &SearchResult,
+                        what: &str) {
+    assert_eq!(on.edp.to_bits(), off.edp.to_bits(),
+               "{what}: EDP diverged under pruning");
+    assert_eq!(on.energy.to_bits(), off.energy.to_bits(),
+               "{what}: energy diverged under pruning");
+    assert_eq!(on.latency.to_bits(), off.latency.to_bits(),
+               "{what}: latency diverged under pruning");
+    assert_eq!(on.iters, off.iters,
+               "{what}: iteration count diverged under pruning");
+    assert_eq!(on.evals, off.evals,
+               "{what}: eval count diverged under pruning");
+    assert_eq!(on.best.mappings, off.best.mappings,
+               "{what}: winning mappings diverged under pruning");
+    assert_eq!(on.best.fuse, off.best.fuse,
+               "{what}: winning fusion diverged under pruning");
+}
+
+fn on_off() -> (EvalCtx, EvalCtx) {
+    let on = EvalCtx { prune: PruneMode::On, ..Default::default() };
+    let off = EvalCtx { prune: PruneMode::Off, ..Default::default() };
+    (on, off)
+}
+
+#[test]
+fn random_search_is_bit_identical_under_pruning() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let budget = Budget { seconds: 3600.0, max_iters: 400 };
+    for w in [zoo::gpt3_6_7b(), zoo::resnet18()] {
+        let (on, off) = on_off();
+        let a = random::optimize_ctx(&w, &hw, 17, budget, &on)
+            .unwrap();
+        let b = random::optimize_ctx(&w, &hw, 17, budget, &off)
+            .unwrap();
+        assert_bit_identical(&a, &b, &format!("random/{}", w.name));
+    }
+}
+
+#[test]
+fn gradient_native_is_bit_identical_under_pruning() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::gpt3_6_7b();
+    let cfg = gradient::GradientConfig {
+        seed: 5,
+        chains: 1, // serial: the on/off comparison is order-free
+        ..Default::default()
+    };
+    let budget = Budget { seconds: 3600.0, max_iters: 80 };
+    let (on, off) = on_off();
+    let a = gradient::optimize_ctx(None, &w, &hw, &cfg, budget, &on)
+        .unwrap();
+    let b = gradient::optimize_ctx(None, &w, &hw, &cfg, budget, &off)
+        .unwrap();
+    assert_bit_identical(&a, &b, "gradient-native/gpt3");
+}
+
+#[test]
+fn bo_is_bit_identical_under_pruning() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::gpt3_6_7b();
+    let cfg = bo::BoConfig { seed: 3, ..Default::default() };
+    let budget = Budget { seconds: 3600.0, max_iters: 24 };
+    let (on, off) = on_off();
+    let a = bo::optimize_ctx(&w, &hw, &cfg, budget, &on).unwrap();
+    let b = bo::optimize_ctx(&w, &hw, &cfg, budget, &off).unwrap();
+    assert_bit_identical(&a, &b, "bo/gpt3");
+}
+
+#[test]
+fn ga_default_is_unpruned_and_full_mode_still_finds_feasible() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::gpt3_6_7b();
+    let cfg = ga::GaConfig { seed: 9, ..Default::default() };
+    let budget = Budget { seconds: 3600.0, max_iters: 10 };
+    let (on, off) = on_off();
+    // GA's exact-fitness selection makes threshold pruning
+    // trajectory-changing, so the default-on mode must not screen it
+    let a = ga::optimize_ctx(&w, &hw, &cfg, budget, &on).unwrap();
+    let b = ga::optimize_ctx(&w, &hw, &cfg, budget, &off).unwrap();
+    assert_bit_identical(&a, &b, "ga-default/gpt3");
+    // the opt-in full mode screens generations (bounds as pessimistic
+    // fitness); it must still land on a feasible strategy
+    let full =
+        EvalCtx { prune: PruneMode::Full, ..Default::default() };
+    let c = ga::optimize_ctx(&w, &hw, &cfg, budget, &full).unwrap();
+    assert!(c.edp.is_finite() && c.edp > 0.0);
+    assert!(fadiff::costmodel::feasible(&c.best, &w, &hw).is_ok());
+}
+
+// -------------------------------------------------------------------
+// warm-start seeding at the search layer
+// -------------------------------------------------------------------
+
+#[test]
+fn warm_seeding_is_deterministic_and_no_worse_than_its_seeds() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let donor = zoo::vgg16();
+    let target = zoo::vgg19();
+    let budget = Budget { seconds: 3600.0, max_iters: 6 };
+
+    // grow a library from a short GA run on the donor workload
+    let lib = MappingLibrary::new();
+    let cfg = ga::GaConfig { seed: 21, ..Default::default() };
+    let donor_best =
+        ga::optimize_ctx(&donor, &hw, &cfg, budget,
+                         &EvalCtx::default())
+            .unwrap();
+    assert!(lib.record(&hw.fingerprint(), &donor, &hw,
+                       &donor_best.best)
+            > 0);
+
+    // vgg19 shares vgg16's conv shapes: seeds must resolve
+    let tables = WorkloadTables::new(&target);
+    let seeds =
+        lib.seeds_for(&hw.fingerprint(), &target, &hw, &tables);
+    assert!(!seeds.is_empty(), "shared shapes must yield seeds");
+    for s in &seeds {
+        assert!(fadiff::costmodel::feasible(s, &target, &hw).is_ok(),
+                "library seeds must be hardware-valid");
+    }
+
+    let warm_ctx = || EvalCtx {
+        seeds: seeds.clone(),
+        warm_frac: 0.5,
+        ..Default::default()
+    };
+    let cfg2 = ga::GaConfig { seed: 33, ..Default::default() };
+    let w1 = ga::optimize_ctx(&target, &hw, &cfg2, budget,
+                              &warm_ctx())
+        .unwrap();
+    let w2 = ga::optimize_ctx(&target, &hw, &cfg2, budget,
+                              &warm_ctx())
+        .unwrap();
+    assert_bit_identical(&w1, &w2, "ga-warm/vgg19");
+
+    // seeds are offered to the incumbent before the search starts, so
+    // the warm result can never be worse than its best seed
+    let best_seed = seeds
+        .iter()
+        .map(|s| compute_eval(s, &target, &hw).fitness())
+        .fold(f64::INFINITY, f64::min);
+    assert!(w1.edp <= best_seed,
+            "warm result {} worse than its own seed {best_seed}",
+            w1.edp);
+
+    // random search offers the same seeds
+    let r = random::optimize_ctx(&target, &hw, 7,
+                                 Budget { seconds: 3600.0,
+                                          max_iters: 50 },
+                                 &warm_ctx())
+        .unwrap();
+    assert!(r.edp <= best_seed);
+}
+
+// -------------------------------------------------------------------
+// coordinator end-to-end: record, persist, restart, seed
+// -------------------------------------------------------------------
+
+fn job(seed: u64) -> JobRequest {
+    JobRequest {
+        workload: "mobilenet".into(),
+        method: Method::Random,
+        seconds: 3600.0, // iteration-capped: deterministic per seed
+        max_iters: 40,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn library_survives_restart_and_seeds_repeat_shape_jobs() {
+    let dir = tmp_dir("warm");
+    {
+        let coord =
+            Coordinator::new_with_store(None, 1, Some(dir.clone()))
+                .unwrap();
+        let r = coord.run(job(7)).unwrap();
+        assert!(!r.stored);
+        assert!(coord.library().entries() > 0,
+                "completed jobs must record into the library");
+        // the default-on prefilter screened this run's batches
+        assert!(coord.prune_stats().bounded.load(Ordering::SeqCst)
+                    > 0,
+                "random jobs must route through the screen");
+    } // drop: dirty library shard flushes alongside eval segments
+
+    let coord =
+        Coordinator::new_with_store(None, 1, Some(dir.clone()))
+            .unwrap();
+    assert_eq!(coord.library().entries(), 0,
+               "shards hydrate lazily, per config, on first use");
+    // same shapes, different seed (a fresh result key), warm-started
+    let warm = coord
+        .run(JobRequest { warm_frac: 1.0, ..job(8) })
+        .unwrap();
+    assert!(!warm.stored);
+    assert!(warm.edp.is_finite() && warm.edp > 0.0);
+    assert!(coord.library().entries() > 0,
+            "the persisted shard must hydrate on job start");
+    let stats = coord.library().stats();
+    assert!(stats.seeds_served.load(Ordering::SeqCst) > 0,
+            "a repeat-shape warm job must be served seeds");
+    assert!(stats.exact_hits.load(Ordering::SeqCst) > 0,
+            "identical shapes must resolve as exact hits");
+
+    // the metrics payload surfaces both new blocks
+    let m = coord.metrics_json();
+    let prune = m.get("prune").unwrap();
+    assert!(prune.get_f64("bounded").unwrap() >= 0.0);
+    assert!(prune.get_f64("ratio").unwrap() >= 0.0);
+    let lib = m.get("library").unwrap();
+    assert!(lib.get_f64("entries").unwrap() > 0.0);
+    assert!(lib.get_f64("seeds_served").unwrap() > 0.0);
+    drop(coord);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_seeding_defaults_off_and_preserves_cold_results() {
+    // warm_frac = 0 must reproduce a library-free run bit-for-bit
+    // even when the library has entries — seeding is strictly opt-in
+    let dir = tmp_dir("optin");
+    let cold = {
+        let coord = Coordinator::new(None, 1).unwrap();
+        coord.run(job(11)).unwrap()
+    };
+    {
+        let coord =
+            Coordinator::new_with_store(None, 1, Some(dir.clone()))
+                .unwrap();
+        // populate the library with a different seed's incumbents
+        coord.run(job(12)).unwrap();
+        let again = coord.run(job(11)).unwrap();
+        assert!(!again.stored);
+        assert_eq!(again.edp.to_bits(), cold.edp.to_bits(),
+                   "default requests must not depend on library \
+                    state");
+        assert_eq!(coord.library().stats()
+                       .seeds_served
+                       .load(Ordering::SeqCst),
+                   0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

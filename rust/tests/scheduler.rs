@@ -25,6 +25,8 @@ fn req(method: Method, seed: u64) -> JobRequest {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     }
 }
 

@@ -36,6 +36,8 @@ fn job(seed: u64) -> JobRequest {
         deadline_ms: 0,
         spec: None,
         force: false,
+        prune: fadiff::search::PruneMode::On,
+        warm_frac: 0.0,
     }
 }
 
