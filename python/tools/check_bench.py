@@ -33,7 +33,11 @@ Two kinds of checks:
   and may only skip work, never change the answer. The prune and
   warm-start speedup floors are throughput claims on the same run, so
   they are enforced on real baselines and advisory while the
-  ``bootstrap`` flag stands.
+  ``bootstrap`` flag stands. Finally, the exact-mapper lane: the
+  branch-and-bound oracle must certify all three exhaustively-solvable
+  ``micro-*`` workloads (machine-independent, enforced even on
+  bootstrap baselines); its node counts and prune ratio are recorded
+  so the mapper's pruning power is tracked PR-over-PR.
 """
 
 import json
@@ -202,6 +206,31 @@ def main(argv):
                 print(f"advisory (bootstrap baseline): {msg}")
             else:
                 failures.append(msg)
+
+    # exact mapper: certifying the micro trio is machine-independent
+    # (the spaces are exhaustively enumerable under the default node
+    # cap), so a lost certification means the mapper or its bounds
+    # regressed — enforced even on bootstrap baselines. Node counts
+    # and prune ratio are recorded for the perf trajectory.
+    cert = cur.get("exact_certified_workloads")
+    if cert is None:
+        failures.append(
+            "current run is missing exact_certified_workloads"
+        )
+    elif cert < 3:
+        failures.append(
+            f"exact mapper certified only {cert:.0f}/3 micro "
+            "workloads — branch-and-bound or its bounds regressed"
+        )
+    else:
+        print(f"exact mapper certified {cert:.0f}/3 micro workloads")
+    for lane in ("exact_nodes_per_sec", "exact_prune_ratio",
+                 "exact_nodes_expanded", "exact_pruned"):
+        v = cur.get(lane)
+        if v is None:
+            failures.append(f"current run is missing lane {lane!r}")
+        else:
+            print(f"{lane}: {v:.6g}")
 
     if failures:
         print("\nFAIL:")

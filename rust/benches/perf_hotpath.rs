@@ -28,6 +28,9 @@
 //!     stay identical — the CI-gated invariant)
 //!   * warm-start time-to-quality: a library-seeded repeat-shape
 //!     search vs the cold run that populated the library
+//!   * exact mapper: branch-and-bound certification, node counts and
+//!     prune ratios on the exhaustively-solvable micro trio (the
+//!     certification count is CI-gated; see docs/exact.md)
 //!   * PJRT gradient step + batched artifact eval (skipped unless real
 //!     artifacts + a PJRT-backed xla crate are present)
 //!
@@ -48,8 +51,8 @@ use fadiff::mapping::Strategy;
 use fadiff::runtime::stage::WorkloadStage;
 use fadiff::runtime::{HostTensor, Runtime, ART_EVAL, ART_GRAD};
 use fadiff::search::encoding::{dim, express_naive};
-use fadiff::search::{gradient, random, Budget, EvalCtx, EvalEngine,
-                     PruneMode, PruneStats};
+use fadiff::search::{exact, gradient, random, Budget, EvalCtx,
+                     EvalEngine, PruneMode, PruneStats};
 use fadiff::util::json::{num, obj};
 use fadiff::util::rng::Rng;
 use fadiff::util::threadpool::ThreadPool;
@@ -533,6 +536,54 @@ fn main() {
     println!("  -> warm-start time-to-quality speedup \
               {warm_speedup:.0}x (min over workloads)\n");
 
+    // --- exact mapper: branch-and-bound oracle on the micro trio --------
+    // certification is machine-independent (check_bench.py enforces
+    // all three); node counts and prune ratios track the mapper's
+    // pruning power PR-over-PR
+    let exact_cfg = exact::ExactConfig::default();
+    let exact_budget =
+        Budget { seconds: 3600.0, max_iters: usize::MAX };
+    let mut exact_nodes = 0u64;
+    let mut exact_pruned = 0u64;
+    let mut exact_certified = 0u64;
+    let mut exact_wall = 0.0f64;
+    for wl in
+        [zoo::micro_mlp(), zoo::micro_gemm(), zoo::micro_chain()]
+    {
+        let t0 = std::time::Instant::now();
+        let out = exact::optimize(&wl, &hw, &exact_cfg,
+                                  &exact_budget,
+                                  &EvalCtx::default())
+            .expect("exact mapper");
+        let wall = t0.elapsed().as_secs_f64();
+        let st = out.stats;
+        if st.certified {
+            exact_certified += 1;
+        }
+        exact_nodes += st.nodes_expanded;
+        exact_pruned += st.pruned();
+        exact_wall += wall;
+        println!(
+            "exact mapper {} ({} layers): EDP {:.3e} {} in {:.3}s — \
+             {} expanded / {} generated, {} pruned ({} bound, {} \
+             capacity, {} dominated), {} leaves",
+            wl.name, wl.len(), out.result.edp,
+            if st.certified { "certified" } else { "UNCERTIFIED" },
+            wall, st.nodes_expanded, st.nodes_generated, st.pruned(),
+            st.pruned_bound, st.pruned_infeasible,
+            st.pruned_dominated, st.leaves
+        );
+    }
+    let exact_prune_ratio = exact_pruned as f64
+        / ((exact_nodes + exact_pruned) as f64).max(1.0);
+    let exact_nodes_per_sec =
+        exact_nodes as f64 / exact_wall.max(1e-9);
+    println!(
+        "  -> exact mapper: {exact_certified}/3 certified, prune \
+         ratio {exact_prune_ratio:.2}, {exact_nodes_per_sec:.0} \
+         nodes/s\n"
+    );
+
     if json_mode {
         let j = obj(vec![
             ("pop", num(POP as f64)),
@@ -591,6 +642,12 @@ fn main() {
             ("cold_time_to_quality_sec_gpt3", num(cold_tt_gpt)),
             ("warm_time_to_quality_sec_gpt3", num(warm_tt_gpt)),
             ("warm_start_speedup", num(warm_speedup)),
+            ("exact_certified_workloads",
+             num(exact_certified as f64)),
+            ("exact_nodes_expanded", num(exact_nodes as f64)),
+            ("exact_pruned", num(exact_pruned as f64)),
+            ("exact_prune_ratio", num(exact_prune_ratio)),
+            ("exact_nodes_per_sec", num(exact_nodes_per_sec)),
         ]);
         // cargo runs benches with CWD = the package root (rust/);
         // anchor at the repo root so CI finds the file

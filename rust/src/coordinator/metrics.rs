@@ -55,6 +55,19 @@ pub struct Metrics {
     /// Gauge: connections the event loop currently holds open
     /// (refreshed once per loop sweep; watch streams included).
     pub conns_open: AtomicU64,
+    /// Branch-and-bound exact jobs that finished (stored hits
+    /// excluded — they report the original run's effort). Surfaced as
+    /// `exact.jobs` in the `metrics` verb.
+    pub exact_jobs: AtomicU64,
+    /// Of those, how many returned a certified optimum (no node or
+    /// candidate cap tripped). Surfaced as `exact.certified`.
+    pub exact_certified: AtomicU64,
+    /// Cumulative search-tree nodes the exact mapper expanded across
+    /// finished jobs. Surfaced as `exact.nodes_expanded`.
+    pub exact_nodes: AtomicU64,
+    /// Cumulative subtrees pruned (bound + infeasible + dominance)
+    /// across finished exact jobs. Surfaced as `exact.pruned`.
+    pub exact_pruned: AtomicU64,
 }
 
 impl Metrics {

@@ -59,8 +59,8 @@ use crate::config::{load_config, repo_root, HwConfig};
 use crate::costmodel;
 use crate::runtime::Runtime;
 use crate::costmodel::tables::WorkloadTables;
-use crate::search::{bo, ga, gradient, random, Budget, Deadline,
-                    EvalBackend, EvalCtx, FleetHandle,
+use crate::search::{bo, exact, ga, gradient, random, Budget,
+                    Deadline, EvalBackend, EvalCtx, FleetHandle,
                     ProgressSnapshot, PruneMode, PruneStats,
                     SearchProgress, SearchResult};
 use crate::util::fault;
@@ -94,6 +94,10 @@ pub enum Method {
     Bo,
     /// Uniform random search (sanity floor).
     Random,
+    /// Branch-and-bound exact mapper ([`crate::search::exact`]):
+    /// certified-optimal on small-to-medium workloads, budget-capped
+    /// (and then uncertified) on larger ones.
+    Exact,
 }
 
 impl Method {
@@ -105,6 +109,7 @@ impl Method {
             "ga" | "genetic" => Method::Ga,
             "bo" | "bayesian" => Method::Bo,
             "random" | "rand" => Method::Random,
+            "exact" | "bnb" => Method::Exact,
             other => return Err(anyhow!("unknown method {other:?}")),
         })
     }
@@ -117,6 +122,7 @@ impl Method {
             Method::Ga => "ga",
             Method::Bo => "bo",
             Method::Random => "random",
+            Method::Exact => "exact",
         }
     }
 }
@@ -257,6 +263,14 @@ pub struct JobResult {
     /// job's terminal status is `deadline_exceeded`, and nothing was
     /// recorded to the persistent store.
     pub deadline_hit: bool,
+    /// Branch-and-bound statistics, present exactly when the request's
+    /// method is [`Method::Exact`]. `stats.certified` is the
+    /// certification flag: `true` means the returned mapping is the
+    /// proven optimum of the full design space, `false` means a node
+    /// or candidate cap tripped and the result is best-effort. Stored
+    /// hits report a certified default (only certified exact results
+    /// are ever recorded).
+    pub exact: Option<crate::search::exact::ExactStats>,
 }
 
 /// Lifecycle of a tracked job (see [`Coordinator::submit_tracked`]).
@@ -932,6 +946,29 @@ impl Coordinator {
                 ]),
             );
             map.insert("library".into(), self.library.stats_json());
+            let ex_jobs =
+                self.metrics.exact_jobs.load(Ordering::SeqCst);
+            let ex_nodes =
+                self.metrics.exact_nodes.load(Ordering::SeqCst);
+            let ex_pruned =
+                self.metrics.exact_pruned.load(Ordering::SeqCst);
+            map.insert(
+                "exact".into(),
+                obj(vec![
+                    ("jobs", num(ex_jobs as f64)),
+                    ("certified",
+                     num(self
+                         .metrics
+                         .exact_certified
+                         .load(Ordering::SeqCst)
+                         as f64)),
+                    ("nodes_expanded", num(ex_nodes as f64)),
+                    ("pruned", num(ex_pruned as f64)),
+                    ("prune_ratio",
+                     num(ex_pruned as f64
+                         / ((ex_nodes + ex_pruned) as f64).max(1.0))),
+                ]),
+            );
             map.insert(
                 "supervision".into(),
                 obj(vec![
@@ -1137,6 +1174,26 @@ fn worker_loop(dir: &std::path::Path,
                     metrics
                         .grad_steps
                         .fetch_add(r.iters as u64, Ordering::SeqCst);
+                }
+                // the branch-and-bound mapper reports how much of
+                // the tree it walked and whether the result is a
+                // certified optimum
+                if let Some(ex) = &r.exact {
+                    metrics
+                        .exact_jobs
+                        .fetch_add(1, Ordering::SeqCst);
+                    if ex.certified {
+                        metrics
+                            .exact_certified
+                            .fetch_add(1, Ordering::SeqCst);
+                    }
+                    metrics
+                        .exact_nodes
+                        .fetch_add(ex.nodes_expanded,
+                                   Ordering::SeqCst);
+                    metrics
+                        .exact_pruned
+                        .fetch_add(ex.pruned(), Ordering::SeqCst);
                 }
             }
         }
@@ -1357,6 +1414,16 @@ fn stored_job_result(sr: &store::StoredResult, req: &JobRequest,
         wall_seconds: t0.elapsed().as_secs_f64(),
         stored: true,
         deadline_hit: false,
+        // only certified exact results are recorded, so a stored hit
+        // for the exact method is certified by construction
+        exact: match req.method {
+            Method::Exact => Some(exact::ExactStats {
+                certified: true,
+                space_complete: true,
+                ..Default::default()
+            }),
+            _ => None,
+        },
     })
 }
 
@@ -1419,6 +1486,7 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         ectx.deadline = Some(Deadline::in_ms(req.deadline_ms));
     }
     let deadline = ectx.deadline.clone();
+    let mut exact_stats: Option<exact::ExactStats> = None;
     let r: SearchResult = match req.method {
         Method::FADiff => gradient::optimize_ctx(
             rt, w, &hw,
@@ -1442,6 +1510,13 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
             budget, &ectx)?,
         Method::Random => random::optimize_ctx(w, &hw, req.seed, budget,
                                                &ectx)?,
+        Method::Exact => {
+            let out = exact::optimize(w, &hw,
+                                      &exact::ExactConfig::default(),
+                                      &budget, &ectx)?;
+            exact_stats = Some(out.stats);
+            out.result
+        }
     };
     // final safety: the result must be hardware-valid
     costmodel::feasible(&r.best, w, &hw)
@@ -1455,8 +1530,12 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         .as_ref()
         .is_some_and(|c| c.load(Ordering::SeqCst));
     let cut = deadline.as_ref().is_some_and(|d| d.was_hit());
+    // an uncertified exact result (node/candidate cap tripped) is
+    // best-effort, but a stored hit for the exact method is served as
+    // certified — so only certified runs may record under that key
+    let certified_ok = exact_stats.map_or(true, |e| e.certified);
     if let (Some(st), Some(key)) = (&ctx.store, &store_key) {
-        if !cancelled && !cut {
+        if !cancelled && !cut && certified_ok {
             st.record_result(key, &store::StoredResult::of(&r));
         }
     }
@@ -1488,6 +1567,7 @@ pub fn execute_job_ctx(rt: Option<&Runtime>, req: &JobRequest,
         deadline_hit: deadline
             .as_ref()
             .is_some_and(|d| d.was_hit()),
+        exact: exact_stats,
     })
 }
 

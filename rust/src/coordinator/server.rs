@@ -9,6 +9,8 @@
 //!    "method": "fadiff", "seconds": 5, "seed": 1, "chains": 8}
 //!   {"verb": "sweep", "workloads": ["resnet18", "vgg16"],
 //!    "methods": ["ga", "random"], "seeds": [1, 2], "seconds": 5}
+//!   {"verb": "gap", "workload": "micro-mlp", "seconds": 5}
+//!                    (exact oracle vs every baseline, measured gaps)
 //!   {"verb": "submit", "workload": "gpt3", "method": "ga",
 //!    "seconds": 120}
 //!   {"verb": "status", "job_id": 7}
@@ -76,6 +78,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::experiments::gap::GapReport;
 use crate::search::PruneMode;
 use crate::util::json::{arr, num, obj, s as js, Json};
 use crate::util::threadpool::{OneShot, Poll};
@@ -113,9 +116,9 @@ const WATCH_PROGRESS_EVERY: Duration = Duration::from_millis(25);
 
 /// Every verb this server answers, sorted (the `unknown_verb` error
 /// lists these so clients can discover the surface).
-pub const SUPPORTED_VERBS: [&str; 11] = [
-    "cancel", "chaos", "metrics", "optimize", "ping", "shutdown",
-    "status", "store", "submit", "sweep", "workloads",
+pub const SUPPORTED_VERBS: [&str; 12] = [
+    "cancel", "chaos", "gap", "metrics", "optimize", "ping",
+    "shutdown", "status", "store", "submit", "sweep", "workloads",
 ];
 
 // ---------------------------------------------------------------------
@@ -468,6 +471,45 @@ pub fn parse_sweep(j: &Json) -> WireResult<Vec<JobRequest>> {
     Ok(reqs)
 }
 
+/// Expand a `gap` request into its job list: the exact oracle first,
+/// then each baseline method (default: fadiff, ga, bo, random), all
+/// sharing the base request's workload / config / budget / seed.
+pub fn parse_gap(j: &Json) -> WireResult<Vec<JobRequest>> {
+    let base = parse_request(j)?;
+    let methods: Vec<Method> = match j.get("methods") {
+        Err(_) => crate::experiments::gap::BASELINES.to_vec(),
+        Ok(v) => field(v.as_arr())?
+            .iter()
+            .map(|x| field(Method::parse(field(x.as_str())?)))
+            .collect::<WireResult<_>>()?,
+    };
+    if methods.is_empty() {
+        return Err(WireError::bad("empty gap methods list"));
+    }
+    if methods.contains(&Method::Exact) {
+        return Err(WireError::bad(
+            "gap baselines must not include \"exact\" (the oracle \
+             always runs)",
+        ));
+    }
+    if methods.len() + 1 > MAX_SWEEP_JOBS {
+        return Err(WireError::new(
+            ErrorCode::TooLarge,
+            format!("gap grid of {} jobs exceeds the cap of \
+                     {MAX_SWEEP_JOBS}", methods.len() + 1),
+        ));
+    }
+    let mut reqs = Vec::with_capacity(methods.len() + 1);
+    reqs.push(JobRequest {
+        method: Method::Exact,
+        ..base.clone()
+    });
+    for m in methods {
+        reqs.push(JobRequest { method: m, ..base.clone() });
+    }
+    Ok(reqs)
+}
+
 fn get_job_id(j: &Json) -> WireResult<u64> {
     let x = field(j.get("job_id").and_then(|v| v.as_f64()))?;
     // 2^53: past here f64 can't represent every integer, so the id
@@ -559,7 +601,74 @@ pub fn result_to_json(r: &JobResult) -> Json {
     if r.deadline_hit {
         rows.push(("deadline_exceeded", Json::Bool(true)));
     }
+    // only for exact-method results, so every other method's payload
+    // stays byte-identical
+    if let Some(ex) = &r.exact {
+        rows.push(("certified", Json::Bool(ex.certified)));
+        rows.push(("exact", obj(vec![
+            ("space_complete", Json::Bool(ex.space_complete)),
+            ("cap_hit", Json::Bool(ex.cap_hit)),
+            ("layer_candidates", num(ex.layer_candidates as f64)),
+            ("frontier", num(ex.frontier as f64)),
+            ("nodes_generated", num(ex.nodes_generated as f64)),
+            ("nodes_expanded", num(ex.nodes_expanded as f64)),
+            ("pruned_bound", num(ex.pruned_bound as f64)),
+            ("pruned_infeasible", num(ex.pruned_infeasible as f64)),
+            ("pruned_dominated", num(ex.pruned_dominated as f64)),
+            ("leaves", num(ex.leaves as f64)),
+        ])));
+    }
     obj(rows)
+}
+
+/// Aggregate a finished `gap` grid into its wire response: the
+/// oracle's full result (certification flag and tree statistics
+/// included), one row per baseline with its measured optimality gap
+/// (`edp / exact_edp - 1`), and the rendered Table-1-style markdown
+/// row. An oracle failure fails the whole verb — there is nothing to
+/// measure against; baseline failures report inside their row so one
+/// broken method never sinks its siblings.
+fn gap_response(
+    outcomes: &[std::result::Result<JobResult, WireError>]) -> Json {
+    let exact = match outcomes.first() {
+        Some(Ok(r)) => r,
+        Some(Err(e)) => return Response::err(e),
+        None => {
+            return Response::err(&WireError::new(
+                ErrorCode::Internal,
+                "empty gap grid",
+            ))
+        }
+    };
+    let mut rows = Vec::new();
+    let mut oks: Vec<JobResult> = Vec::new();
+    for entry in &outcomes[1..] {
+        match entry {
+            Ok(r) => {
+                rows.push(obj(vec![
+                    ("method", js(r.request.method.name())),
+                    ("edp", num(r.edp)),
+                    ("gap", num(r.edp / exact.edp - 1.0)),
+                    ("evals", num(r.evals as f64)),
+                    ("wall_seconds", num(r.wall_seconds)),
+                ]));
+                oks.push(r.clone());
+            }
+            Err(e) => rows.push(obj(vec![("error", e.body())])),
+        }
+    }
+    let markdown = GapReport::from_results(exact, &oks)
+        .map(|rep| rep.render())
+        .unwrap_or_default();
+    Response::ok(obj(vec![
+        ("workload", js(&exact.request.workload)),
+        ("config", js(&exact.request.config)),
+        ("certified",
+         Json::Bool(exact.exact.map_or(false, |e| e.certified))),
+        ("exact", result_to_json(exact)),
+        ("rows", arr(rows)),
+        ("markdown", js(&markdown)),
+    ]))
 }
 
 /// The `workloads` verb: list every servable workload (zoo builders +
@@ -753,6 +862,17 @@ struct SweepWait {
     failed: usize,
 }
 
+/// A parked `gap`: the exact oracle job (always the queue's front)
+/// plus its baseline jobs; outcomes drain front-to-back like a sweep,
+/// and the reply is assembled once every job is terminal.
+struct GapWait {
+    #[allow(clippy::type_complexity)]
+    pending: VecDeque<(JobRequest,
+                       OneShot<std::result::Result<JobResult,
+                                                   String>>)>,
+    outcomes: Vec<std::result::Result<JobResult, WireError>>,
+}
+
 /// A live `status {"watch": true}` stream.
 struct WatchWait {
     job_id: u64,
@@ -769,6 +889,8 @@ enum Mode {
     Job(JobWait),
     /// Blocked on a `sweep` grid.
     Sweep(SweepWait),
+    /// Blocked on a `gap` comparison (oracle + baselines).
+    Gap(GapWait),
     /// Streaming watch events for a tracked job.
     Watch(WatchWait),
 }
@@ -981,6 +1103,27 @@ fn dispatch(line: &str, coord: &Coordinator, shutdown: &ShutdownFlag)
                 jobs,
                 completed: 0,
                 failed: 0,
+            }))
+        }
+        // gap: the exact oracle plus every baseline on one workload,
+        // queued together (full worker parallelism, shared eval
+        // cache); the reply reports each method's measured gap
+        "gap" => {
+            let reqs = match parse_gap(&j)
+                .and_then(|r| validate_workloads(&r).map(|()| r))
+                .and_then(|r| {
+                    check_capacity(coord, r.len()).map(|()| r)
+                }) {
+                Err(e) => return reply_err(e),
+                Ok(r) => r,
+            };
+            let pending = reqs
+                .into_iter()
+                .map(|req| (req.clone(), coord.submit(req)))
+                .collect();
+            Step::Enter(Mode::Gap(GapWait {
+                pending,
+                outcomes: Vec::new(),
             }))
         }
         "store" => {
@@ -1262,6 +1405,7 @@ impl Conn {
             Mode::Idle => (Mode::Idle, false),
             Mode::Job(wait) => self.poll_job(wait),
             Mode::Sweep(wait) => self.poll_sweep(wait),
+            Mode::Gap(wait) => self.poll_gap(wait),
             Mode::Watch(wait) => self.poll_watch(coord, wait),
         };
         let finished = matches!(next, Mode::Idle);
@@ -1356,6 +1500,46 @@ impl Conn {
             ("failed", num(wait.failed as f64)),
             ("results", arr(wait.results)),
         ])));
+        (Mode::Idle, true)
+    }
+
+    fn poll_gap(&mut self, mut wait: GapWait) -> (Mode, bool) {
+        // drain front-to-back: the oracle's outcome stays first, the
+        // baselines keep request order
+        while let Some((_, rx)) = wait.pending.front() {
+            let entry = match rx.try_poll() {
+                Poll::Empty => break,
+                // a deadline-cut job is not a fair gap measurement:
+                // it reports as a per-method error, best-so-far
+                // attached, like a sweep cell
+                Poll::Ready(Ok(r)) if r.deadline_hit => {
+                    let e = WireError::new(
+                        ErrorCode::DeadlineExceeded,
+                        format!("deadline_ms {} expired; returning \
+                                 best-so-far",
+                                r.request.deadline_ms),
+                    )
+                    .with("result", result_to_json(&r));
+                    Err(e)
+                }
+                Poll::Ready(Ok(r)) => Ok(r),
+                outcome => {
+                    let msg = match outcome {
+                        Poll::Ready(Err(e)) => e,
+                        _ => "worker dropped the job".to_string(),
+                    };
+                    let (req, _) = wait.pending.front().unwrap();
+                    Err(job_error(&msg)
+                        .with("method", js(req.method.name())))
+                }
+            };
+            wait.outcomes.push(entry);
+            wait.pending.pop_front();
+        }
+        if !wait.pending.is_empty() {
+            return (Mode::Gap(wait), false);
+        }
+        self.push_line(&gap_response(&wait.outcomes));
         (Mode::Idle, true)
     }
 
@@ -1666,6 +1850,121 @@ mod tests {
         assert!(err.message.contains("cap"), "{}", err.message);
     }
 
+    #[test]
+    fn parse_gap_defaults_and_rejections() {
+        let j = Json::parse(
+            r#"{"verb": "gap", "workload": "micro-mlp",
+                "max_iters": 64, "seed": 5}"#)
+            .unwrap();
+        let reqs = parse_gap(&j).unwrap();
+        assert_eq!(reqs.len(),
+                   1 + crate::experiments::gap::BASELINES.len());
+        assert_eq!(reqs[0].method, Method::Exact,
+                   "the oracle is always the grid's front");
+        assert!(reqs.iter().all(|r| r.workload == "micro-mlp"
+                                && r.seed == 5
+                                && r.max_iters == 64));
+        // explicit baseline list
+        let j = Json::parse(
+            r#"{"verb": "gap", "methods": ["ga", "random"]}"#)
+            .unwrap();
+        let reqs = parse_gap(&j).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[1].method, Method::Ga);
+        assert_eq!(reqs[2].method, Method::Random);
+        // bad baseline lists are one-line errors
+        for body in [
+            r#"{"verb": "gap", "methods": []}"#,
+            r#"{"verb": "gap", "methods": ["exact"]}"#,
+            r#"{"verb": "gap", "methods": ["quantum"]}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert_eq!(parse_gap(&j).unwrap_err().code,
+                       ErrorCode::BadRequest, "{body}");
+        }
+        let many: Vec<String> =
+            (0..MAX_SWEEP_JOBS).map(|_| "\"ga\"".into()).collect();
+        let j = Json::parse(&format!(
+            r#"{{"verb": "gap", "methods": [{}]}}"#,
+            many.join(",")
+        ))
+        .unwrap();
+        assert_eq!(parse_gap(&j).unwrap_err().code,
+                   ErrorCode::TooLarge);
+    }
+
+    /// A hand-built JobResult for gap_response tests; exact-method
+    /// results carry certified stats like a real oracle run.
+    fn gap_jr(method: Method, edp: f64) -> JobResult {
+        JobResult {
+            request: JobRequest {
+                workload: "micro-mlp".into(),
+                method,
+                ..Default::default()
+            },
+            edp,
+            full_model_edp: edp,
+            energy: 1.0,
+            latency: edp,
+            groups: Vec::new(),
+            fused_names: Vec::new(),
+            iters: 1,
+            evals: 1,
+            wall_seconds: 0.0,
+            stored: false,
+            deadline_hit: false,
+            exact: match method {
+                Method::Exact => {
+                    Some(crate::search::exact::ExactStats {
+                        certified: true,
+                        space_complete: true,
+                        ..Default::default()
+                    })
+                }
+                _ => None,
+            },
+        }
+    }
+
+    #[test]
+    fn gap_response_reports_rows_and_markdown() {
+        let outcomes = vec![
+            Ok(gap_jr(Method::Exact, 100.0)),
+            Ok(gap_jr(Method::Ga, 150.0)),
+            Err(WireError::new(ErrorCode::Internal, "boom")
+                .with("method", js("bo"))),
+        ];
+        let resp = gap_response(&outcomes);
+        let body = resp.get("ok").unwrap();
+        assert_eq!(body.get("certified").unwrap(), &Json::Bool(true));
+        let ex = body.get("exact").unwrap();
+        assert_eq!(ex.get("certified").unwrap(), &Json::Bool(true));
+        assert!(ex.get("exact").is_ok(),
+                "oracle payload carries its tree statistics");
+        let rows = body.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("method").unwrap().as_str().unwrap(),
+                   "ga");
+        assert!((rows[0].get_f64("gap").unwrap() - 0.5).abs() < 1e-12);
+        assert!(rows[1].get("error").is_ok(),
+                "a failed baseline reports inside its row");
+        let md = body.get("markdown").unwrap().as_str().unwrap();
+        assert!(md.contains("| micro-mlp |")
+                && md.contains("+50.00%"), "{md}");
+    }
+
+    #[test]
+    fn gap_response_oracle_failure_fails_the_verb() {
+        let outcomes = vec![
+            Err(WireError::new(ErrorCode::Internal, "exact died")),
+            Ok(gap_jr(Method::Ga, 1.0)),
+        ];
+        let resp = gap_response(&outcomes);
+        let e = resp.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(),
+                   "internal");
+    }
+
     const SPEC_BODY: &str = r#"{"name": "custom-mlp",
         "layers": [
             {"name": "fc1", "kind": "fc",
@@ -1832,6 +2131,7 @@ mod tests {
             wall_seconds: 0.0,
             stored: false,
             deadline_hit: false,
+            exact: None,
         };
         let clean = result_to_json(&r);
         assert!(clean.get("deadline_exceeded").is_err(),

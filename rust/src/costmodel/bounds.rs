@@ -53,7 +53,12 @@ use super::{first_group_overflow, I_DIMS, O_DIMS, W_DIMS};
 /// magnitude above the worst reordering error observed in the offline
 /// float mirror, ten below any real traffic slack — keeps the bound
 /// strictly admissible at negligible cost in pruning power.
-const ROUNDING_SLACK: f64 = 1.0 - 1e-12;
+///
+/// Public because the branch-and-bound exact mapper
+/// (`search::exact`) applies the same slack to its partial-assignment
+/// bounds, whose suffix floors are likewise pre-folded sums that may
+/// associate differently than the kernel's per-leaf accumulation.
+pub const ROUNDING_SLACK: f64 = 1.0 - 1e-12;
 
 /// Outcome of screening one candidate.
 #[derive(Clone, Copy, Debug)]

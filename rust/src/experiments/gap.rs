@@ -1,0 +1,232 @@
+//! Measured optimality gaps against the branch-and-bound oracle: run
+//! [`crate::search::exact`] on one workload, then every requested
+//! baseline method under the same budget, and report each method's
+//! distance from the certified optimum as a Table-1-style markdown
+//! row. This turns the paper's *relative* Table 1 comparison into an
+//! *absolute* one on the workloads small enough to solve exactly (the
+//! `micro-*` zoo trio and similar): instead of "FADiff beats GA", the
+//! row says how far each method lands from the true optimum.
+//!
+//! The report is produced in two ways that must agree:
+//! * synchronously by [`measure`] (the CLI `gap` subcommand and the
+//!   `gap_report` example), and
+//! * from already-collected [`JobResult`]s by
+//!   [`GapReport::from_results`] (the server's `gap` verb, which fans
+//!   the same jobs through the coordinator queue).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{execute_job, JobRequest, JobResult, Method};
+use crate::runtime::Runtime;
+
+/// Baseline methods of the gap comparison, in column order.
+pub const BASELINES: [Method; 4] =
+    [Method::FADiff, Method::Ga, Method::Bo, Method::Random];
+
+/// One baseline method's distance from the exact optimum.
+#[derive(Clone, Debug)]
+pub struct GapRow {
+    /// Canonical method name ([`Method::name`]).
+    pub method: String,
+    /// The method's best per-replica EDP.
+    pub edp: f64,
+    /// Relative optimality gap, `edp / exact_edp - 1` (`0.0` means
+    /// the method found the optimum; always `>= 0` when the oracle is
+    /// certified).
+    pub gap: f64,
+    /// Candidate evaluations the method spent.
+    pub evals: usize,
+    /// Wall-clock seconds the method's job took.
+    pub wall_seconds: f64,
+}
+
+/// The full gap report for one `(workload, config)` pair.
+#[derive(Clone, Debug)]
+pub struct GapReport {
+    /// Workload name.
+    pub workload: String,
+    /// Hardware configuration name.
+    pub config: String,
+    /// The oracle's per-replica EDP.
+    pub exact_edp: f64,
+    /// Whether the oracle proved optimality (no cap tripped). An
+    /// uncertified report is still rendered, but its gaps are lower
+    /// bounds on the truth and may even be negative.
+    pub certified: bool,
+    /// Search-tree nodes the oracle expanded.
+    pub nodes_expanded: u64,
+    /// Subtrees the oracle pruned (bound + infeasible + dominance).
+    pub pruned: u64,
+    /// Wall-clock seconds the oracle took.
+    pub exact_seconds: f64,
+    /// One row per baseline method, in request order.
+    pub rows: Vec<GapRow>,
+}
+
+impl GapReport {
+    /// Assemble a report from an already-executed exact job plus its
+    /// baseline jobs (the server path). The exact job must carry
+    /// [`JobResult::exact`] stats — i.e. its request really used
+    /// [`Method::Exact`].
+    pub fn from_results(exact: &JobResult, baselines: &[JobResult])
+                        -> Result<GapReport> {
+        let stats = exact.exact.ok_or_else(|| {
+            anyhow!("gap report needs an exact-method result")
+        })?;
+        let rows = baselines
+            .iter()
+            .map(|r| GapRow {
+                method: r.request.method.name().to_string(),
+                edp: r.edp,
+                gap: r.edp / exact.edp - 1.0,
+                evals: r.evals,
+                wall_seconds: r.wall_seconds,
+            })
+            .collect();
+        Ok(GapReport {
+            workload: exact.request.workload.clone(),
+            config: exact.request.config.clone(),
+            exact_edp: exact.edp,
+            certified: stats.certified,
+            nodes_expanded: stats.nodes_expanded,
+            pruned: stats.pruned(),
+            exact_seconds: exact.wall_seconds,
+            rows,
+        })
+    }
+
+    /// The markdown table header matching [`GapReport::row`], for the
+    /// given method columns.
+    pub fn header(methods: &[String]) -> String {
+        let mut top = String::from("| model | exact EDP |");
+        let mut rule = String::from("|---|---|");
+        for m in methods {
+            top.push_str(&format!(" {m} |"));
+            rule.push_str("---|");
+        }
+        format!("{top}\n{rule}\n")
+    }
+
+    /// One Table-1-style markdown row: the certified optimum followed
+    /// by each method's measured gap.
+    pub fn row(&self) -> String {
+        let mark = if self.certified { "" } else { " (uncertified)" };
+        let mut out = format!("| {} | {:.2e}{mark} |",
+                              self.workload, self.exact_edp);
+        for r in &self.rows {
+            out.push_str(&format!(" +{:.2}% |", r.gap * 100.0));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// Header plus this report's row — the self-contained table the
+    /// CLI prints.
+    pub fn render(&self) -> String {
+        let methods: Vec<String> =
+            self.rows.iter().map(|r| r.method.clone()).collect();
+        format!("{}{}", GapReport::header(&methods), self.row())
+    }
+}
+
+/// Run the whole experiment synchronously: the oracle first, then each
+/// baseline with the same budget and seed. `methods` defaults to
+/// [`BASELINES`] when empty. Each job goes through
+/// [`execute_job`], so the CLI and server paths share one execution
+/// seam (and with `rt = None` the gradient methods use the native
+/// differentiable backend).
+pub fn measure(rt: Option<&Runtime>, base: &JobRequest,
+               methods: &[Method]) -> Result<GapReport> {
+    let exact = execute_job(rt, &JobRequest {
+        method: Method::Exact,
+        ..base.clone()
+    })?;
+    let methods: Vec<Method> = if methods.is_empty() {
+        BASELINES.to_vec()
+    } else {
+        methods.to_vec()
+    };
+    let mut results = Vec::with_capacity(methods.len());
+    for m in methods {
+        results.push(execute_job(rt, &JobRequest {
+            method: m,
+            ..base.clone()
+        })?);
+    }
+    GapReport::from_results(&exact, &results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_certified_row_with_gaps() {
+        let mut exact = JobResult {
+            request: JobRequest {
+                workload: "micro-mlp".into(),
+                method: Method::Exact,
+                ..Default::default()
+            },
+            edp: 100.0,
+            full_model_edp: 100.0,
+            energy: 10.0,
+            latency: 10.0,
+            groups: Vec::new(),
+            fused_names: Vec::new(),
+            iters: 5,
+            evals: 5,
+            wall_seconds: 0.1,
+            stored: false,
+            deadline_hit: false,
+            exact: Some(crate::search::exact::ExactStats {
+                certified: true,
+                space_complete: true,
+                nodes_expanded: 7,
+                pruned_bound: 3,
+                ..Default::default()
+            }),
+        };
+        let mut ga = exact.clone();
+        ga.request.method = Method::Ga;
+        ga.edp = 125.0;
+        ga.exact = None;
+        let rep = GapReport::from_results(&exact, &[ga.clone()])
+            .unwrap();
+        assert!(rep.certified);
+        assert_eq!(rep.nodes_expanded, 7);
+        assert_eq!(rep.pruned, 3);
+        assert!((rep.rows[0].gap - 0.25).abs() < 1e-12);
+        let table = rep.render();
+        assert!(table.contains("| micro-mlp |"), "{table}");
+        assert!(table.contains("+25.00%"), "{table}");
+        assert!(!table.contains("uncertified"), "{table}");
+
+        // an uncertified oracle is flagged in the rendered row
+        if let Some(st) = &mut exact.exact {
+            st.certified = false;
+        }
+        let rep = GapReport::from_results(&exact, &[ga]).unwrap();
+        assert!(rep.row().contains("uncertified"));
+    }
+
+    #[test]
+    fn from_results_requires_an_exact_result() {
+        let plain = JobResult {
+            request: JobRequest::default(),
+            edp: 1.0,
+            full_model_edp: 1.0,
+            energy: 1.0,
+            latency: 1.0,
+            groups: Vec::new(),
+            fused_names: Vec::new(),
+            iters: 0,
+            evals: 0,
+            wall_seconds: 0.0,
+            stored: false,
+            deadline_hit: false,
+            exact: None,
+        };
+        assert!(GapReport::from_results(&plain, &[]).is_err());
+    }
+}

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   optimize   run one optimization job (workload x config x method)
+//!   gap        exact oracle vs every baseline: measured optimality gaps
 //!   workloads  list / describe servable workloads (zoo + spec files)
 //!   table1     reproduce Table 1 (all workloads/configs/methods)
 //!   fig3       reproduce Fig 3 (fusion trend vs DeFiNES-like baseline)
@@ -15,7 +16,7 @@ use std::sync::atomic::Ordering;
 use anyhow::{bail, Result};
 use fadiff::config::repo_root;
 use fadiff::coordinator::{self, Coordinator, JobRequest, Method};
-use fadiff::experiments::{fig3, fig4, table1, validation};
+use fadiff::experiments::{fig3, fig4, gap, table1, validation};
 use fadiff::runtime::Runtime;
 use fadiff::search::PruneMode;
 use fadiff::util::cli::Args;
@@ -28,7 +29,9 @@ USAGE: fadiff <subcommand> [flags]
 
   optimize  --workload resnet18 --config large --method fadiff
             --seconds 10 --seed 1 --chains 8 --deadline-ms 0
-            methods: fadiff | dosa | ga | bo | random
+            methods: fadiff | dosa | ga | bo | random | exact
+            (exact is the branch-and-bound oracle: certified-optimal
+            on small workloads, best-effort past its node budget)
             workloads: zoo names (gpt3 vgg19 vgg16 mobilenet resnet18)
             or any data/workloads/*.json spec stem (llama7b-decode,
             bert-base-block, ...); --workload-file my_model.json runs
@@ -43,6 +46,10 @@ USAGE: fadiff <subcommand> [flags]
             bit-identical; full also screens GA, changing its
             trajectory); --warm-frac F seeds F of the population from
             the store's mapping library (needs --store-dir)
+  gap       --workload micro-mlp --config large --seconds 5
+            --max-iters N --seed 1 [--methods fadiff,ga,bo,random]
+            run the exact oracle plus every baseline method and print
+            each method's measured optimality gap (Table-1-style row)
   workloads [--describe name]   list servable workloads / show one
   table1    --seconds 30 --threads 4 --seed 1   (paper Table 1)
   fig3                                           (paper Figure 3)
@@ -80,6 +87,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &["verbose", "summary", "force"])?;
     match sub {
         "optimize" => cmd_optimize(&args),
+        "gap" => cmd_gap(&args),
         "workloads" => cmd_workloads(&args),
         "table1" => cmd_table1(&args),
         "fig3" => cmd_fig3(&args),
@@ -169,6 +177,16 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     if r.stored {
         println!("served from     : result store (re-verified)");
     }
+    if let Some(ex) = &r.exact {
+        println!("certified       : {}",
+                 if ex.certified { "yes (proven optimum)" }
+                 else { "no (node/candidate cap tripped)" });
+        println!("nodes exp / gen : {} / {}",
+                 ex.nodes_expanded, ex.nodes_generated);
+        println!("pruned b/i/d    : {} / {} / {}",
+                 ex.pruned_bound, ex.pruned_infeasible,
+                 ex.pruned_dominated);
+    }
     if r.fused_names.is_empty() {
         println!("fusion groups   : none");
     } else {
@@ -177,6 +195,38 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             println!("  - {}", g.join(" -> "));
         }
     }
+    Ok(())
+}
+
+fn cmd_gap(args: &Args) -> Result<()> {
+    let base = JobRequest {
+        workload: args.get_or("workload", "micro-mlp"),
+        config: args.get_or("config", "large"),
+        seconds: args.get_f64("seconds", 5.0)?,
+        max_iters: args.get_usize("max-iters", usize::MAX)?,
+        seed: args.get_u64("seed", 1)?,
+        ..Default::default()
+    };
+    let methods: Vec<Method> = match args.get("methods") {
+        None => Vec::new(), // measure() applies the default panel
+        Some(list) => list
+            .split(',')
+            .map(|m| Method::parse(m.trim()))
+            .collect::<Result<_>>()?,
+    };
+    // PJRT accelerates the gradient baselines when artifacts exist;
+    // everything runs on the native backends otherwise
+    let rt = Runtime::load_if_available(&repo_root().join("artifacts"));
+    let rep = gap::measure(rt.as_ref(), &base, &methods)?;
+    println!("exact EDP       : {:.4e} pJ*cycles ({})",
+             rep.exact_edp,
+             if rep.certified { "certified optimum" }
+             else { "UNCERTIFIED — cap tripped" });
+    println!("nodes expanded  : {}", rep.nodes_expanded);
+    println!("subtrees pruned : {}", rep.pruned);
+    println!("oracle wall time: {:.2}s", rep.exact_seconds);
+    println!();
+    print!("{}", rep.render());
     Ok(())
 }
 

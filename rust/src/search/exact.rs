@@ -1,0 +1,735 @@
+//! Best-first branch-and-bound *exact* mapper over the divisor/fusion
+//! design space — the correctness oracle for every other search
+//! method ("Fast and Fusiest" / "Turbo-Charged Mapper", arXiv
+//! 2602.15166 / 2602.15172).
+//!
+//! The mapper enumerates, per layer, every valid tiling assignment
+//! (ordered divisor splits across the T0/T1/T2 temporal slots and the
+//! spatially-capped S slot; the DRAM co-factor is derived) and every
+//! per-edge fusion decision, organized as a search tree assigning
+//! layers left to right. Partial assignments carry exact per-layer
+//! energy/latency partial sums — accumulated in the same order as
+//! `costmodel::evaluate`, so completed leaves reproduce the kernel's
+//! numbers bit for bit — and subtrees are cut by three prune rules:
+//!
+//! * **admissible bounds** — partial sum plus per-layer suffix
+//!   floors, scaled by [`ROUNDING_SLACK`] (the same slack the
+//!   screened eval path uses) so reassociation noise can never prune
+//!   the optimum;
+//! * **capacity infeasibility** — an exact replica of the kernel's
+//!   accumulator and fusion-group L2 checks; the open group's running
+//!   sum is monotone, so a partial overflow condemns the subtree;
+//! * **dominance** — within a layer, a candidate whose exact energy
+//!   and latency (under every reachable fusion signature) and L2
+//!   footprint are all `<=` another's makes the other redundant;
+//!   across partial assignments, equal `(depth, open-edge)` states
+//!   are ordered componentwise by (energy, latency, open-group
+//!   bytes). Dominance always compares *exact* costs — dominance by a
+//!   lower bound would be unsound.
+//!
+//! Leaves are scored through the incumbent's engine (screened exactly
+//! like `random`/`gradient` candidates), so the returned
+//! [`SearchResult`] is bit-identical to what exhaustive enumeration
+//! through the same engine would select. When neither subsampling nor
+//! a node/time cap fired, the result is *certified* optimal up to the
+//! documented 1e-12 bound slack — see `docs/exact.md`.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+use anyhow::Result;
+
+use crate::config::HwConfig;
+use crate::costmodel::bounds::ROUNDING_SLACK;
+use crate::costmodel::{components, layer_cost};
+use crate::mapping::{divisors, LayerMapping, Strategy, NSLOTS, SLOT_S,
+                     SLOT_T0, SLOT_T1, SLOT_T2};
+use crate::workload::{Workload, DIM_C, DIM_K, NDIMS};
+
+use super::{Budget, EvalCtx, Incumbent, Screened, SearchResult};
+
+/// Leaves buffered between engine batches (mirrors `random`'s block).
+const LEAF_BATCH: usize = 64;
+
+/// Partial-assignment states kept per `(depth, open-edge)` dominance
+/// key; past the cap new states are still *checked* (sound) but no
+/// longer stored (bounded memory).
+const DOM_KEEP: usize = 1024;
+
+/// Caps bounding the exact mapper's enumeration and search effort.
+#[derive(Clone, Copy, Debug)]
+pub struct ExactConfig {
+    /// Node budget: heap pops (expansions) and queued nodes are each
+    /// capped here; tripping it yields an uncertified (but still
+    /// best-feasible-seen) result.
+    pub max_nodes: u64,
+    /// Per-layer candidate cross-product cap. A layer above it has
+    /// its per-dimension assignment lists deterministically
+    /// subsampled (first/last kept, even stride), which drops the
+    /// certification flag.
+    pub max_layer_candidates: u64,
+    /// Per-layer Pareto-frontier size cap; overflow drops the
+    /// certification flag.
+    pub max_frontier: usize,
+}
+
+impl Default for ExactConfig {
+    fn default() -> ExactConfig {
+        ExactConfig {
+            max_nodes: 2_000_000,
+            max_layer_candidates: 100_000,
+            max_frontier: 512,
+        }
+    }
+}
+
+/// Node/prune/expansion statistics of one branch-and-bound run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExactStats {
+    /// The search proved its result optimal over the full space (no
+    /// subsampling, no cap, no budget trip).
+    pub certified: bool,
+    /// The enumerated space was complete (no per-layer subsampling or
+    /// frontier overflow).
+    pub space_complete: bool,
+    /// The node/arena cap tripped before the queue drained.
+    pub cap_hit: bool,
+    /// Per-layer tiling candidates enumerated (pre-filter, summed
+    /// over layers).
+    pub layer_candidates: u64,
+    /// Candidates surviving the per-layer Pareto filter (all layers).
+    pub frontier: u64,
+    /// Nodes pushed onto the best-first queue (root included).
+    pub nodes_generated: u64,
+    /// Nodes popped and expanded.
+    pub nodes_expanded: u64,
+    /// Children cut by the admissible bound (leaf pre-prunes
+    /// included).
+    pub pruned_bound: u64,
+    /// Candidates/children cut by the accumulator or group-capacity
+    /// replica.
+    pub pruned_infeasible: u64,
+    /// Candidates/children cut by a dominance rule (frontier-cap
+    /// overflow drops included).
+    pub pruned_dominated: u64,
+    /// Complete strategies handed to the engine for exact scoring.
+    pub leaves: u64,
+}
+
+impl ExactStats {
+    /// Total cuts across the three prune classes.
+    pub fn pruned(&self) -> u64 {
+        self.pruned_bound + self.pruned_infeasible
+            + self.pruned_dominated
+    }
+}
+
+/// An exact-mapper outcome: the search result plus its statistics.
+#[derive(Clone, Debug)]
+pub struct ExactOutcome {
+    /// Best feasible strategy found — the proven optimum when
+    /// `stats.certified`.
+    pub result: SearchResult,
+    /// Node/prune/certification statistics.
+    pub stats: ExactStats,
+}
+
+/// Factor slots of one dimension, indexed by the `SLOT_*` constants.
+type DimAssign = [u64; NSLOTS];
+
+/// Every `[t0, t1, t2, s]` assignment whose inner product divides
+/// `n`, with the spatial slot capped at `s_cap` (nested divisor
+/// splits of successive quotients; the DRAM co-factor absorbs the
+/// rest — exactly the space `Strategy::validate` accepts).
+fn dim_assignments(n: u64, s_cap: u64) -> Vec<DimAssign> {
+    let mut out = Vec::new();
+    for &s in divisors(n).iter().filter(|&&d| d <= s_cap) {
+        for &t0 in &divisors(n / s) {
+            for &t1 in &divisors(n / (s * t0)) {
+                for &t2 in &divisors(n / (s * t0 * t1)) {
+                    let mut f = [1u64; NSLOTS];
+                    f[SLOT_T0] = t0;
+                    f[SLOT_T1] = t1;
+                    f[SLOT_T2] = t2;
+                    f[SLOT_S] = s;
+                    out.push(f);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic even-stride subsample keeping the first and last
+/// entries (the all-ones and most-split assignments).
+fn subsample(v: &[DimAssign], keep: usize) -> Vec<DimAssign> {
+    if v.len() <= keep {
+        return v.to_vec();
+    }
+    if keep <= 1 {
+        return vec![v[0]];
+    }
+    let last = v.len() - 1;
+    (0..keep).map(|i| v[i * last / (keep - 1)]).collect()
+}
+
+/// One surviving per-layer tiling candidate: its mapping, its exact
+/// per-signature costs, and its fusion-group footprint.
+struct Cand {
+    m: LayerMapping,
+    /// Exact energy under fusion signature `[sig_in][sig_out]`
+    /// (unreachable signatures hold infinity and are never read).
+    e: [[f64; 2]; 2],
+    /// Exact latency, same indexing.
+    l: [[f64; 2]; 2],
+    /// Fusion-group L2 footprint, bytes (the group-capacity operand).
+    l2_bytes: f64,
+}
+
+/// Per-layer candidate frontier plus its admissible cost floors.
+struct LayerSpace {
+    cands: Vec<Cand>,
+    /// Minimum energy over candidates x reachable signatures. Equal
+    /// to the full enumeration's minimum: a dominated candidate is
+    /// componentwise `>=` its dominator.
+    min_e: f64,
+    /// Minimum latency, ditto.
+    min_l: f64,
+}
+
+/// Reachable incoming-edge fusion signatures of layer `i`.
+fn sig_in_opts(w: &Workload, i: usize) -> Vec<bool> {
+    if i > 0 && w.fusible[i - 1] {
+        vec![false, true]
+    } else {
+        vec![false]
+    }
+}
+
+/// Reachable outgoing-edge fusion signatures of layer `i`.
+fn sig_out_opts(w: &Workload, i: usize) -> Vec<bool> {
+    if i + 1 < w.len() && w.fusible[i] {
+        vec![false, true]
+    } else {
+        vec![false]
+    }
+}
+
+fn sig(b: bool) -> f64 {
+    if b {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Whether `a` makes `b` redundant: no complete strategy using `b`
+/// can beat the same strategy with `a` substituted — exact energy and
+/// latency under every reachable signature, and the group footprint,
+/// are all `<=`.
+fn dominates(a: &Cand, b: &Cand, si: &[bool], so: &[bool]) -> bool {
+    if a.l2_bytes > b.l2_bytes {
+        return false;
+    }
+    for &i in si {
+        for &o in so {
+            let (i, o) = (i as usize, o as usize);
+            if a.e[i][o] > b.e[i][o] || a.l[i][o] > b.l[i][o] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Enumerate layer `i`'s tiling assignments, drop
+/// accumulator-infeasible and dominated ones, and compute the
+/// admissible floors. The returned flag is false when the space had
+/// to be subsampled or the frontier cap dropped candidates.
+fn build_layer_space(w: &Workload, hw: &HwConfig, i: usize,
+                     cfg: &ExactConfig, stats: &mut ExactStats)
+                     -> (LayerSpace, bool) {
+    let dims = &w.layers[i].dims;
+    let si = sig_in_opts(w, i);
+    let so = sig_out_opts(w, i);
+    let mut lists: Vec<Vec<DimAssign>> = (0..NDIMS)
+        .map(|d| {
+            let cap = if d == DIM_K {
+                hw.pe_cols as u64
+            } else if d == DIM_C {
+                hw.pe_rows as u64
+            } else {
+                1
+            };
+            dim_assignments(dims[d] as u64, cap)
+        })
+        .collect();
+    // shrink the largest per-dimension list until the cross product
+    // fits the budget (deterministic; keeps the extremes)
+    let mut complete = true;
+    loop {
+        let total: f64 =
+            lists.iter().map(|v| v.len() as f64).product();
+        if total <= cfg.max_layer_candidates as f64 {
+            break;
+        }
+        let d = (0..NDIMS)
+            .max_by_key(|&d| lists[d].len())
+            .unwrap_or(0);
+        if lists[d].len() <= 1 {
+            break;
+        }
+        lists[d] = subsample(&lists[d], (lists[d].len() + 1) / 2);
+        complete = false;
+    }
+    // odometer over the per-dimension lists
+    let mut raw: Vec<Cand> = Vec::new();
+    let mut idx = [0usize; NDIMS];
+    'cands: loop {
+        let mut m = LayerMapping::trivial();
+        for d in 0..NDIMS {
+            m.factors[d] = lists[d][idx[d]];
+        }
+        stats.layer_candidates += 1;
+        let c = components(&m, dims);
+        if c.s_o1 * hw.acc_bytes > hw.c1_bytes {
+            // accumulator overflow: infeasible in any strategy
+            stats.pruned_infeasible += 1;
+        } else {
+            let mut e = [[f64::INFINITY; 2]; 2];
+            let mut l = [[f64::INFINITY; 2]; 2];
+            for &s_i in &si {
+                for &s_o in &so {
+                    let lc = layer_cost(&c, sig(s_o), sig(s_i), hw);
+                    e[s_i as usize][s_o as usize] = lc.energy;
+                    l[s_i as usize][s_o as usize] = lc.latency;
+                }
+            }
+            let l2_bytes = (c.s_w2 + c.s_i2) * hw.element_bytes;
+            raw.push(Cand { m, e, l, l2_bytes });
+        }
+        for d in 0..NDIMS {
+            idx[d] += 1;
+            if idx[d] < lists[d].len() {
+                continue 'cands;
+            }
+            idx[d] = 0;
+        }
+        break;
+    }
+    // Pareto filter. Scanning in ascending total-cost order means a
+    // kept candidate can never be dominated by a later one, so one
+    // pass yields the mutually-undominated frontier.
+    let score = |c: &Cand| -> f64 {
+        let mut t = c.l2_bytes;
+        for &s_i in &si {
+            for &s_o in &so {
+                t += c.e[s_i as usize][s_o as usize]
+                    + c.l[s_i as usize][s_o as usize];
+            }
+        }
+        t
+    };
+    raw.sort_by(|a, b| score(a).total_cmp(&score(b)));
+    let mut cands: Vec<Cand> = Vec::new();
+    for c in raw {
+        if cands.iter().any(|a| dominates(a, &c, &si, &so)) {
+            stats.pruned_dominated += 1;
+            continue;
+        }
+        if cands.len() >= cfg.max_frontier {
+            // undominated but over the cap: the floors below stay
+            // admissible over the *searched* space, and the dropped
+            // flag downgrades certification
+            stats.pruned_dominated += 1;
+            complete = false;
+            continue;
+        }
+        cands.push(c);
+    }
+    stats.frontier += cands.len() as u64;
+    let mut min_e = f64::INFINITY;
+    let mut min_l = f64::INFINITY;
+    for c in &cands {
+        for &s_i in &si {
+            for &s_o in &so {
+                min_e = min_e.min(c.e[s_i as usize][s_o as usize]);
+                min_l = min_l.min(c.l[s_i as usize][s_o as usize]);
+            }
+        }
+    }
+    (LayerSpace { cands, min_e, min_l }, complete)
+}
+
+/// One partial assignment: layers `0..depth` mapped, with running
+/// exact cost sums and the open fusion group's footprint.
+#[derive(Clone, Copy)]
+struct Node {
+    /// Arena index of the parent (the root points at itself).
+    parent: u32,
+    /// Frontier index of layer `depth - 1`'s chosen candidate.
+    cand: u32,
+    /// Whether layer `depth - 1` fuses into layer `depth`.
+    fused_out: bool,
+    /// Layers assigned so far.
+    depth: u16,
+    /// Exact energy partial sum (kernel accumulation order).
+    e: f64,
+    /// Exact latency partial sum.
+    l: f64,
+    /// Open fusion group's accumulated L2 bytes (0 when closed).
+    open: f64,
+}
+
+/// Best-first queue entry: the smallest `(bound, seq)` pops first.
+struct HeapItem {
+    bound: f64,
+    seq: u64,
+    node: u32,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    // reversed: BinaryHeap is a max-heap and the smallest bound
+    // (ties: oldest entry) must surface
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Mutable branch-and-bound state: the arena tree, the best-first
+/// queue, the dominance table, and the leaf buffer.
+struct Bnb<'a> {
+    w: &'a Workload,
+    spaces: &'a [LayerSpace],
+    suf_e: &'a [f64],
+    suf_l: &'a [f64],
+    c2_bytes: f64,
+    node_cap: u64,
+    arena: Vec<Node>,
+    heap: BinaryHeap<HeapItem>,
+    seq: u64,
+    dom: HashMap<(u16, bool), Vec<[f64; 3]>>,
+    leaves: Vec<Strategy>,
+    leaf_edp: Vec<f64>,
+    stats: ExactStats,
+}
+
+impl Bnb<'_> {
+    /// Componentwise dominance over equal `(depth, open-edge)`
+    /// partial states; stores the new state (bounded per key) when it
+    /// survives. A dominated state's every completion costs at least
+    /// as much as the dominator's matching completion and is feasible
+    /// only if it is, so cutting it preserves the optimum value.
+    fn dominated_or_insert(&mut self, key: (u16, bool), e: f64,
+                           l: f64, open: f64) -> bool {
+        let states = self.dom.entry(key).or_default();
+        if states
+            .iter()
+            .any(|s| s[0] <= e && s[1] <= l && s[2] <= open)
+        {
+            return true;
+        }
+        if states.len() < DOM_KEEP {
+            states.push([e, l, open]);
+        }
+        false
+    }
+
+    /// Expand one popped node: try every (candidate, fusion) choice
+    /// for its next layer, pruning by capacity, bound, and dominance.
+    /// `inc_edp` is the incumbent EDP at pop time (admissible to use
+    /// even if a buffered leaf would lower it).
+    fn expand(&mut self, idx: u32, inc_edp: f64) {
+        let node = self.arena[idx as usize];
+        let spaces = self.spaces;
+        let i = node.depth as usize;
+        let si = usize::from(i > 0 && node.fused_out);
+        let last = i + 1 == self.w.len();
+        let fuse_ok = !last && self.w.fusible[i];
+        for ci in 0..spaces[i].cands.len() {
+            for fo in [false, true] {
+                if fo && !fuse_ok {
+                    continue;
+                }
+                let c = &spaces[i].cands[ci];
+                let so = usize::from(fo);
+                let e2 = node.e + c.e[si][so];
+                let l2 = node.l + c.l[si][so];
+                let open2 = node.open + c.l2_bytes;
+                if open2 > self.c2_bytes {
+                    // the group's running sum already overflows; it
+                    // can only grow (monotone), so the close-time
+                    // check is doomed too
+                    self.stats.pruned_infeasible += 1;
+                    continue;
+                }
+                if last {
+                    // exact leaf value — identical accumulation to
+                    // the kernel; slack guards only the engine edge
+                    let edp = e2 * l2;
+                    if edp * ROUNDING_SLACK >= inc_edp {
+                        self.stats.pruned_bound += 1;
+                        continue;
+                    }
+                    let s = self.leaf_strategy(idx, ci);
+                    self.leaves.push(s);
+                    self.leaf_edp.push(edp);
+                } else {
+                    let bound = (e2 + self.suf_e[i + 1])
+                        * (l2 + self.suf_l[i + 1])
+                        * ROUNDING_SLACK;
+                    if bound >= inc_edp {
+                        self.stats.pruned_bound += 1;
+                        continue;
+                    }
+                    let open_next = if fo { open2 } else { 0.0 };
+                    let key = (node.depth + 1, fo);
+                    if self.dominated_or_insert(key, e2, l2,
+                                                open_next) {
+                        self.stats.pruned_dominated += 1;
+                        continue;
+                    }
+                    if self.stats.nodes_generated >= self.node_cap
+                        || self.arena.len() >= u32::MAX as usize
+                    {
+                        self.stats.cap_hit = true;
+                        return;
+                    }
+                    self.arena.push(Node {
+                        parent: idx,
+                        cand: ci as u32,
+                        fused_out: fo,
+                        depth: node.depth + 1,
+                        e: e2,
+                        l: l2,
+                        open: open_next,
+                    });
+                    self.seq += 1;
+                    self.stats.nodes_generated += 1;
+                    self.heap.push(HeapItem {
+                        bound,
+                        seq: self.seq,
+                        node: (self.arena.len() - 1) as u32,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Reconstruct the complete strategy of a leaf: the parent
+    /// chain's choices plus candidate `ci` (unfused) at the last
+    /// layer.
+    fn leaf_strategy(&self, parent: u32, ci: usize) -> Strategy {
+        let l = self.w.len();
+        let mut s = Strategy::trivial(self.w);
+        s.mappings[l - 1] = self.spaces[l - 1].cands[ci].m.clone();
+        let mut at = parent;
+        loop {
+            let n = &self.arena[at as usize];
+            if n.depth == 0 {
+                break;
+            }
+            let layer = (n.depth - 1) as usize;
+            s.mappings[layer] =
+                self.spaces[layer].cands[n.cand as usize].m.clone();
+            s.fuse[layer] = n.fused_out;
+            at = n.parent;
+        }
+        s
+    }
+}
+
+/// Debug invariant: a leaf reaching the engine is feasible by
+/// construction, and the kernel EDP reproduces the tree's partial-sum
+/// accumulation bit for bit (what certification relies on).
+fn debug_assert_leaf(sc: &Screened, expect: f64) {
+    if let Screened::Exact(e) = sc {
+        debug_assert!(e.feasible, "b&b leaf scored infeasible");
+        debug_assert!(
+            e.edp.to_bits() == expect.to_bits(),
+            "b&b partial sums diverged from the kernel: {} vs {}",
+            e.edp,
+            expect
+        );
+    }
+}
+
+/// Score the buffered complete strategies through the incumbent's
+/// engine — screened exactly like the other searches' batches when
+/// pruning is enabled — and offer each.
+fn flush_leaves(inc: &mut Incumbent<'_>, ctx: &EvalCtx,
+                buf: &mut Vec<Strategy>, expect: &mut Vec<f64>,
+                stats: &mut ExactStats, iter: usize) {
+    if buf.is_empty() {
+        return;
+    }
+    stats.leaves += buf.len() as u64;
+    if ctx.prune.enabled() {
+        let thr = inc.best_edp();
+        let scored = inc.engine.eval_batch_screened(
+            &buf[..], thr, ctx.prune_stats());
+        for ((s, sc), exp) in
+            buf.iter().zip(scored).zip(expect.iter())
+        {
+            debug_assert_leaf(&sc, *exp);
+            inc.offer_screened(s, sc, iter);
+        }
+    } else {
+        let evals = inc.engine.eval_batch(&buf[..]);
+        for ((s, e), exp) in
+            buf.iter().zip(evals).zip(expect.iter())
+        {
+            debug_assert_leaf(&Screened::Exact(e), *exp);
+            inc.offer_eval(s, e, iter);
+        }
+    }
+    buf.clear();
+    expect.clear();
+}
+
+/// Run the branch-and-bound exact search under `budget` and `cfg`.
+///
+/// Deterministic for iteration-only budgets ([`Budget::iters`]): the
+/// tree walk is single-threaded and the engine's parallel batch
+/// scoring is bit-deterministic; the RNG seed plays no role. The
+/// result is the proven optimum iff `stats.certified`; otherwise a
+/// cap or the budget tripped first and the result is the best
+/// feasible strategy encountered.
+pub fn optimize(w: &Workload, hw: &HwConfig, cfg: &ExactConfig,
+                budget: &Budget, ctx: &EvalCtx)
+                -> Result<ExactOutcome> {
+    let l = w.len();
+    let mut stats = ExactStats::default();
+    let mut inc = Incumbent::with_ctx(w, hw, ctx);
+    inc.offer(&Strategy::trivial(w), 0);
+    if !ctx.seeds.is_empty() {
+        // a warm incumbent only tightens pruning; certification and
+        // the returned optimum value are seed-independent
+        inc.offer_seeds(&ctx.seeds);
+    }
+
+    // per-layer exact-cost Pareto frontiers + admissible floors
+    let mut spaces: Vec<LayerSpace> = Vec::with_capacity(l);
+    let mut space_complete = true;
+    for i in 0..l {
+        if inc.stopped(budget) {
+            return Ok(ExactOutcome {
+                result: inc.finish(0),
+                stats,
+            });
+        }
+        let (space, complete) =
+            build_layer_space(w, hw, i, cfg, &mut stats);
+        space_complete &= complete;
+        spaces.push(space);
+    }
+
+    // suffix floors: the cheapest possible completion of layers i..
+    let mut suf_e = vec![0.0f64; l + 1];
+    let mut suf_l = vec![0.0f64; l + 1];
+    for i in (0..l).rev() {
+        suf_e[i] = spaces[i].min_e + suf_e[i + 1];
+        suf_l[i] = spaces[i].min_l + suf_l[i + 1];
+    }
+
+    let node_cap = (budget.max_iters as u64).min(cfg.max_nodes);
+    let mut bnb = Bnb {
+        w,
+        spaces: &spaces,
+        suf_e: &suf_e,
+        suf_l: &suf_l,
+        c2_bytes: hw.c2_bytes,
+        node_cap,
+        arena: vec![Node {
+            parent: 0,
+            cand: 0,
+            fused_out: false,
+            depth: 0,
+            e: 0.0,
+            l: 0.0,
+            open: 0.0,
+        }],
+        heap: BinaryHeap::new(),
+        seq: 0,
+        dom: HashMap::new(),
+        leaves: Vec::new(),
+        leaf_edp: Vec::new(),
+        stats,
+    };
+    bnb.stats.nodes_generated = 1;
+    bnb.heap.push(HeapItem {
+        bound: suf_e[0] * suf_l[0] * ROUNDING_SLACK,
+        seq: 0,
+        node: 0,
+    });
+
+    let mut pops: u64 = 0;
+    let mut search_complete = false;
+    loop {
+        if bnb.leaves.len() >= LEAF_BATCH {
+            flush_leaves(&mut inc, ctx, &mut bnb.leaves,
+                         &mut bnb.leaf_edp, &mut bnb.stats,
+                         pops as usize);
+        }
+        if inc.stopped(budget) {
+            break;
+        }
+        if pops >= node_cap {
+            bnb.stats.cap_hit = true;
+            break;
+        }
+        let inc_edp = inc.best_edp().unwrap_or(f64::INFINITY);
+        let top = match bnb.heap.peek() {
+            Some(t) => t.bound,
+            None => f64::INFINITY,
+        };
+        if top >= inc_edp {
+            if !bnb.leaves.is_empty() {
+                // pending leaves can only lower the incumbent, which
+                // keeps this exit condition true — settle them, then
+                // conclude on the next pass
+                flush_leaves(&mut inc, ctx, &mut bnb.leaves,
+                             &mut bnb.leaf_edp, &mut bnb.stats,
+                             pops as usize);
+                continue;
+            }
+            // every queued subtree is bounded at or above the final
+            // incumbent: the incumbent is optimal over the space
+            search_complete = true;
+            break;
+        }
+        let item = bnb.heap.pop().expect("peeked a non-empty heap");
+        pops += 1;
+        bnb.stats.nodes_expanded += 1;
+        inc.note_iters(pops as usize);
+        bnb.expand(item.node, inc_edp);
+        if bnb.stats.cap_hit {
+            break;
+        }
+    }
+    flush_leaves(&mut inc, ctx, &mut bnb.leaves, &mut bnb.leaf_edp,
+                 &mut bnb.stats, pops as usize);
+
+    bnb.stats.space_complete = space_complete;
+    bnb.stats.certified =
+        space_complete && search_complete && !bnb.stats.cap_hit;
+    let stats = bnb.stats;
+    Ok(ExactOutcome { result: inc.finish(pops as usize), stats })
+}

@@ -14,6 +14,10 @@
 //! * [`bo`] — the learning-based baseline (GP + expected improvement,
 //!   paper ref [15]) on top of [`gp`].
 //! * [`random`] — uniform random sampling (sanity floor).
+//! * [`exact`] — the branch-and-bound oracle: certified-optimal
+//!   mapping for small-to-medium workloads, driven by the admissible
+//!   bounds of `costmodel::bounds` plus dominance rules, reporting
+//!   the measured optimality gap of every other method.
 //!
 //! All native candidate scoring flows through [`eval::EvalEngine`] — the
 //! batched, multi-threaded, memoizing evaluator of the analytical cost
@@ -29,6 +33,7 @@
 pub mod bo;
 pub mod encoding;
 pub mod eval;
+pub mod exact;
 pub mod ga;
 pub mod gp;
 pub mod gradient;

@@ -1,6 +1,9 @@
 //! The evaluation model zoo (paper Sec 4.1 / Table 1): GPT-3 6.7B
 //! (MHA + FFN of one decoder block, replicated 32x), VGG19, VGG16,
-//! MobileNetV1, ResNet18 — all expressed in the unified 7-dim space.
+//! MobileNetV1, ResNet18 — all expressed in the unified 7-dim space —
+//! plus three exhaustively-enumerable `micro-*` models whose full
+//! divisor/fusion spaces a test can brute-force (the exact mapper's
+//! certification targets).
 //!
 //! GEMM convention (DESIGN.md §2): P = rows (M), K = output columns,
 //! C = reduction dimension, N = batch (e.g. attention heads); R = S = 1.
@@ -176,6 +179,39 @@ pub fn resnet18() -> Workload {
     Workload::chain("resnet18", layers, &blocked, 1.0)
 }
 
+/// Two fused 4x4 FC layers — the smallest fusible chain. The full
+/// divisor/fusion space is ~10^5 strategies: exhaustively enumerable
+/// in a debug-build test, yet rich enough to exercise tiling, fusion,
+/// and capacity interplay.
+pub fn micro_mlp() -> Workload {
+    let layers = vec![fc("fc1", 4, 4), fc("fc2", 4, 4)];
+    Workload::chain("micro-mlp", layers, &[], 1.0)
+}
+
+/// Two chained tiny GEMMs with asymmetric shapes (4->2 channel
+/// contraction), fusible at the single edge.
+pub fn micro_gemm() -> Workload {
+    let layers = vec![gemm("g1", 1, 2, 4, 2), gemm("g2", 1, 2, 2, 4)];
+    Workload::chain("micro-gemm", layers, &[], 1.0)
+}
+
+/// Three chained 2-channel pointwise layers — two fusible edges, so
+/// all four fusion masks are reachable.
+pub fn micro_chain() -> Workload {
+    let layers = vec![
+        pw("pw1", 2, 2, 1),
+        pw("pw2", 2, 2, 1),
+        pw("pw3", 2, 2, 1),
+    ];
+    Workload::chain("micro-chain", layers, &[], 1.0)
+}
+
+/// The exhaustively-enumerable micro models (exact-mapper oracle
+/// targets; not part of the Table-1 suite).
+pub fn micro_suite() -> Vec<Workload> {
+    vec![micro_mlp(), micro_gemm(), micro_chain()]
+}
+
 /// The full Table-1 suite in paper order.
 pub fn table1_suite() -> Vec<Workload> {
     vec![gpt3_6_7b(), vgg19(), vgg16(), mobilenet_v1(), resnet18()]
@@ -184,8 +220,9 @@ pub fn table1_suite() -> Vec<Workload> {
 /// Canonical names of the built-in zoo models (each resolvable via
 /// [`by_name`]; the serving layer's `workloads` verb lists these
 /// alongside the checked-in spec files).
-pub fn names() -> [&'static str; 5] {
-    ["gpt3-6.7b", "vgg19", "vgg16", "mobilenet-v1", "resnet18"]
+pub fn names() -> [&'static str; 8] {
+    ["gpt3-6.7b", "vgg19", "vgg16", "mobilenet-v1", "resnet18",
+     "micro-mlp", "micro-gemm", "micro-chain"]
 }
 
 /// Look a workload up by CLI name.
@@ -196,6 +233,9 @@ pub fn by_name(name: &str) -> Option<Workload> {
         "vgg16" => Some(vgg16()),
         "mobilenet" | "mobilenet-v1" | "mobilenetv1" => Some(mobilenet_v1()),
         "resnet18" => Some(resnet18()),
+        "micro-mlp" => Some(micro_mlp()),
+        "micro-gemm" => Some(micro_gemm()),
+        "micro-chain" => Some(micro_chain()),
         _ => None,
     }
 }
@@ -285,6 +325,21 @@ mod tests {
             let w = by_name(n).expect(n);
             assert_eq!(w.name, n);
         }
+    }
+
+    #[test]
+    fn micro_models_are_tiny_and_fusible() {
+        for w in micro_suite() {
+            assert!(w.len() <= 3, "{}", w.name);
+            // every edge fusible: the exact mapper's fusion branching
+            // is fully exercised
+            assert!(w.fusible.iter().all(|&f| f), "{}", w.name);
+            for l in &w.layers {
+                assert!(l.dims.iter().all(|&d| d <= 4), "{}", l.name);
+            }
+        }
+        assert_eq!(micro_mlp().fusible.len(), 1);
+        assert_eq!(micro_chain().fusible.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,453 @@
+//! Differential battery for the branch-and-bound exact mapper
+//! (`search::exact`).
+//!
+//! An *independent* exhaustive enumerator — written cross-product
+//! style, deliberately unlike the mapper's nested-quotient
+//! generator — walks the complete divisor/fusion design space of the
+//! tiny `micro-*` zoo models, scores every candidate through the
+//! same eval kernel, and pins:
+//!
+//! * **oracle identity** — the certified B&B result is bit-identical
+//!   (`f64::to_bits`) to the enumerated optimum on every micro model,
+//!   with and without fusion enabled;
+//! * **bound admissibility over the FULL space** — for *every*
+//!   enumerated candidate the screen's energy/latency/EDP floors
+//!   never exceed the exact kernel, and the capacity verdict agrees
+//!   with the kernel bit-for-bit (prune_warmstart.rs samples this;
+//!   here it is exhaustive);
+//! * **prune/seed invariance** — `PruneMode::{On, Off, Full}` and
+//!   warm-start seeds never change the certified result;
+//! * **cap semantics** — tripping the node, per-layer-candidate, or
+//!   frontier cap drops `certified` but still returns a feasible
+//!   strategy no better than the true optimum;
+//! * **determinism** — two identical runs agree bit-for-bit,
+//!   statistics included.
+//!
+//! The micro models are exhaustively enumerable (~10^4..10^5
+//! candidates) so the battery stays debug-build friendly.
+
+use fadiff::config::{load_config, repo_root, HwConfig};
+use fadiff::costmodel::bounds::{BoundsCtx, ScreenScratch};
+use fadiff::mapping::{divisors, LayerMapping, Strategy, NSLOTS,
+                      SLOT_S, SLOT_T0, SLOT_T1, SLOT_T2};
+use fadiff::search::exact::{self, ExactConfig, ExactOutcome};
+use fadiff::search::{compute_eval, Budget, Eval, EvalCtx, EvalEngine,
+                     PruneMode};
+use fadiff::workload::{zoo, Workload, DIM_C, DIM_K, NDIMS};
+
+/// Strategies buffered per eval_batch call while streaming the space.
+const CHUNK: usize = 512;
+
+/// Safety rail: the micro models must stay exhaustively enumerable.
+const MAX_SPACE: u64 = 250_000;
+
+fn hw() -> HwConfig {
+    load_config(&repo_root(), "large").unwrap()
+}
+
+fn wide_open() -> Budget {
+    Budget { seconds: 3600.0, max_iters: usize::MAX }
+}
+
+// -------------------------------------------------------------------
+// independent exhaustive enumerator
+// -------------------------------------------------------------------
+
+fn spatial_cap(d: usize, hw: &HwConfig) -> u64 {
+    if d == DIM_K {
+        hw.pe_cols as u64
+    } else if d == DIM_C {
+        hw.pe_rows as u64
+    } else {
+        1
+    }
+}
+
+/// Every `[t0, t1, t2, s]` slot assignment for one dimension of
+/// extent `n`: each factor a divisor of `n`, the product dividing `n`
+/// (the DRAM co-factor absorbs the rest), the spatial slot capped.
+/// Filtered cross product — not the mapper's nested quotients — but
+/// the same set.
+fn dim_list(n: u64, cap: u64) -> Vec<[u64; NSLOTS]> {
+    let divs = divisors(n);
+    let mut out = Vec::new();
+    for &s in divs.iter().filter(|&&s| s <= cap) {
+        for &t0 in &divs {
+            for &t1 in &divs {
+                for &t2 in &divs {
+                    if n % (s * t0 * t1 * t2) == 0 {
+                        let mut f = [1u64; NSLOTS];
+                        f[SLOT_T0] = t0;
+                        f[SLOT_T1] = t1;
+                        f[SLOT_T2] = t2;
+                        f[SLOT_S] = s;
+                        out.push(f);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Full cross product of one layer's per-dimension assignments.
+fn layer_mappings(dims: &[usize; NDIMS], hw: &HwConfig)
+                  -> Vec<LayerMapping> {
+    let lists: Vec<Vec<[u64; NSLOTS]>> = (0..NDIMS)
+        .map(|d| dim_list(dims[d] as u64, spatial_cap(d, hw)))
+        .collect();
+    let mut out = Vec::new();
+    let mut idx = [0usize; NDIMS];
+    loop {
+        let mut m = LayerMapping::trivial();
+        for d in 0..NDIMS {
+            m.factors[d] = lists[d][idx[d]];
+        }
+        out.push(m);
+        let mut d = 0;
+        loop {
+            idx[d] += 1;
+            if idx[d] < lists[d].len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+            if d == NDIMS {
+                return out;
+            }
+        }
+    }
+}
+
+/// Every legal fuse vector (all subsets of the fusible edges).
+fn fusion_masks(w: &Workload) -> Vec<Vec<bool>> {
+    let edges = w.fusible.len();
+    assert!(edges <= 8, "micro models must stay tiny");
+    let mut out = Vec::new();
+    'mask: for mask in 0u32..(1u32 << edges) {
+        let mut fuse = vec![false; edges];
+        for (i, f) in fuse.iter_mut().enumerate() {
+            if mask & (1 << i) != 0 {
+                if !w.fusible[i] {
+                    continue 'mask;
+                }
+                *f = true;
+            }
+        }
+        out.push(fuse);
+    }
+    out
+}
+
+/// Stream every strategy in the design space through `visit`,
+/// returning the total count. Never materializes the space.
+fn enumerate_all<F: FnMut(Strategy)>(w: &Workload, hw: &HwConfig,
+                                     mut visit: F) -> u64 {
+    let per_layer: Vec<Vec<LayerMapping>> = w
+        .layers
+        .iter()
+        .map(|l| layer_mappings(&l.dims, hw))
+        .collect();
+    let masks = fusion_masks(w);
+    let mut count = 0u64;
+    let mut idx = vec![0usize; w.len()];
+    loop {
+        let mappings: Vec<LayerMapping> =
+            (0..w.len()).map(|l| per_layer[l][idx[l]]).collect();
+        for fuse in &masks {
+            count += 1;
+            assert!(count <= MAX_SPACE,
+                    "{}: space no longer micro", w.name);
+            visit(Strategy {
+                mappings: mappings.clone(),
+                fuse: fuse.clone(),
+            });
+        }
+        let mut l = 0;
+        loop {
+            idx[l] += 1;
+            if idx[l] < per_layer[l].len() {
+                break;
+            }
+            idx[l] = 0;
+            l += 1;
+            if l == w.len() {
+                return count;
+            }
+        }
+    }
+}
+
+/// Result of one exhaustive sweep: candidate counts plus the
+/// enumerated optimum (kernel-scored).
+struct SpaceScan {
+    count: u64,
+    feasible: u64,
+    best: Strategy,
+    best_eval: Eval,
+}
+
+/// Enumerate + kernel-score the full space; along the way assert the
+/// per-candidate contracts (validity of the emitted space, screen
+/// admissibility, exact capacity verdict).
+fn scan_space(w: &Workload, hw: &HwConfig) -> SpaceScan {
+    let engine =
+        EvalEngine::new(w, hw).with_cache_capacity(CHUNK);
+    let bounds = BoundsCtx::new(w, hw);
+    let mut scratch = ScreenScratch::new();
+
+    let mut buf: Vec<Strategy> = Vec::with_capacity(CHUNK);
+    let mut feasible = 0u64;
+    let mut best: Option<(Strategy, Eval)> = None;
+
+    let mut flush = |buf: &mut Vec<Strategy>,
+                     best: &mut Option<(Strategy, Eval)>,
+                     feasible: &mut u64| {
+        let evals = engine.eval_batch(buf);
+        for (s, e) in buf.iter().zip(&evals) {
+            assert!(s.validate(w, hw.pe_rows as u64,
+                               hw.pe_cols as u64)
+                        .is_ok(),
+                    "{}: enumerator left the legal space", w.name);
+            let v = bounds.screen(s, &mut scratch);
+            assert_eq!(v.capacity_infeasible, !e.feasible,
+                       "{}: screen/kernel capacity disagreement",
+                       w.name);
+            if !e.feasible {
+                continue;
+            }
+            *feasible += 1;
+            assert!(v.energy_lb <= e.energy,
+                    "{}: energy floor {} above exact {}", w.name,
+                    v.energy_lb, e.energy);
+            assert!(v.latency_lb <= e.latency,
+                    "{}: latency floor {} above exact {}", w.name,
+                    v.latency_lb, e.latency);
+            assert!(v.edp_lb <= e.edp,
+                    "{}: EDP floor {} above exact {}", w.name,
+                    v.edp_lb, e.edp);
+            let better = best
+                .as_ref()
+                .map_or(true, |(_, b)| e.edp < b.edp);
+            if better {
+                *best = Some((s.clone(), *e));
+            }
+        }
+        buf.clear();
+    };
+
+    let count = enumerate_all(w, hw, |s| {
+        buf.push(s);
+        if buf.len() >= CHUNK {
+            flush(&mut buf, &mut best, &mut feasible);
+        }
+    });
+    flush(&mut buf, &mut best, &mut feasible);
+
+    let (best, best_eval) =
+        best.expect("micro space must contain a feasible strategy");
+    SpaceScan { count, feasible, best, best_eval }
+}
+
+// -------------------------------------------------------------------
+// oracle identity: certified B&B == enumerated optimum, bit for bit
+// -------------------------------------------------------------------
+
+fn run_exact(w: &Workload, hw: &HwConfig, cfg: &ExactConfig,
+             ctx: &EvalCtx) -> ExactOutcome {
+    exact::optimize(w, hw, cfg, &wide_open(), ctx).unwrap()
+}
+
+fn assert_certified_matches(w: &Workload, hw: &HwConfig,
+                            scan: &SpaceScan) -> ExactOutcome {
+    // the enumerated optimum reproduces its own numbers
+    let eb = compute_eval(&scan.best, w, hw);
+    assert!(eb.feasible);
+    assert_eq!(eb.edp.to_bits(), scan.best_eval.edp.to_bits(),
+               "{}: enumerator optimum is not reproducible", w.name);
+
+    let out = run_exact(w, hw, &ExactConfig::default(),
+                        &EvalCtx::default());
+    assert!(out.stats.certified,
+            "{}: mapper must certify a micro space", w.name);
+    assert!(out.stats.space_complete, "{}: no subsampling expected",
+            w.name);
+    assert!(!out.stats.cap_hit, "{}: no cap expected", w.name);
+    assert_eq!(out.result.edp.to_bits(),
+               scan.best_eval.edp.to_bits(),
+               "{}: certified EDP {} != enumerated optimum {} \
+                ({} candidates, {} feasible)",
+               w.name, out.result.edp, scan.best_eval.edp,
+               scan.count, scan.feasible);
+    // the returned strategy really produces the returned numbers
+    let re = compute_eval(&out.result.best, w, hw);
+    assert!(re.feasible, "{}: winner must be feasible", w.name);
+    assert_eq!(re.edp.to_bits(), out.result.edp.to_bits(),
+               "{}: result EDP is not its strategy's EDP", w.name);
+    assert_eq!(re.energy.to_bits(), out.result.energy.to_bits());
+    assert_eq!(re.latency.to_bits(), out.result.latency.to_bits());
+    out
+}
+
+#[test]
+fn exact_matches_exhaustive_on_micro_mlp() {
+    let hw = hw();
+    let w = zoo::micro_mlp();
+    let scan = scan_space(&w, &hw);
+    assert_certified_matches(&w, &hw, &scan);
+}
+
+#[test]
+fn exact_matches_exhaustive_on_micro_gemm() {
+    let hw = hw();
+    let w = zoo::micro_gemm();
+    let scan = scan_space(&w, &hw);
+    assert_certified_matches(&w, &hw, &scan);
+}
+
+#[test]
+fn exact_matches_exhaustive_on_micro_chain() {
+    let hw = hw();
+    let w = zoo::micro_chain();
+    let scan = scan_space(&w, &hw);
+    assert_certified_matches(&w, &hw, &scan);
+}
+
+#[test]
+fn exact_matches_exhaustive_with_fusion_disabled() {
+    // same oracle identity on the fusion-free restriction of the
+    // space; its optimum can never beat the full space's
+    let hw = hw();
+    let full = zoo::micro_chain();
+    let full_scan = scan_space(&full, &hw);
+    let mut nofuse = full.clone();
+    nofuse.fusible = vec![false; nofuse.fusible.len()];
+    let scan = scan_space(&nofuse, &hw);
+    assert!(scan.count < full_scan.count,
+            "disabling fusion must shrink the space");
+    let out = assert_certified_matches(&nofuse, &hw, &scan);
+    assert!(out.result.best.fuse.iter().all(|&f| !f));
+    assert!(full_scan.best_eval.edp <= scan.best_eval.edp,
+            "a restricted space cannot beat the full space");
+}
+
+// -------------------------------------------------------------------
+// prune-mode / warm-seed invariance
+// -------------------------------------------------------------------
+
+#[test]
+fn prune_modes_and_seeds_never_change_the_certified_result() {
+    let hw = hw();
+    let w = zoo::micro_gemm();
+    let base = run_exact(&w, &hw, &ExactConfig::default(),
+                         &EvalCtx::default());
+    assert!(base.stats.certified);
+
+    for prune in [PruneMode::On, PruneMode::Off, PruneMode::Full] {
+        let ctx = EvalCtx { prune, ..Default::default() };
+        let out = run_exact(&w, &hw, &ExactConfig::default(), &ctx);
+        assert!(out.stats.certified,
+                "prune={}: certification lost", prune.name());
+        assert_eq!(out.result.edp.to_bits(),
+                   base.result.edp.to_bits(),
+                   "prune={}: EDP diverged", prune.name());
+        assert_eq!(out.result.energy.to_bits(),
+                   base.result.energy.to_bits());
+        assert_eq!(out.result.latency.to_bits(),
+                   base.result.latency.to_bits());
+    }
+
+    // warm-start seeds only tighten the incumbent: the certified
+    // optimum value is invariant even when a seed already attains it
+    for seeds in [vec![Strategy::trivial(&w)],
+                  vec![base.result.best.clone()]] {
+        let ctx = EvalCtx {
+            seeds,
+            warm_frac: 1.0,
+            ..Default::default()
+        };
+        let out = run_exact(&w, &hw, &ExactConfig::default(), &ctx);
+        assert!(out.stats.certified, "seeded: certification lost");
+        assert_eq!(out.result.edp.to_bits(),
+                   base.result.edp.to_bits(),
+                   "seeded: EDP diverged");
+    }
+}
+
+// -------------------------------------------------------------------
+// cap semantics: uncertified but feasible, never below the optimum
+// -------------------------------------------------------------------
+
+#[test]
+fn caps_drop_certification_but_keep_a_feasible_bound() {
+    let hw = hw();
+    let w = zoo::micro_mlp();
+    let scan = scan_space(&w, &hw);
+    let opt = scan.best_eval.edp;
+
+    // node cap: the queue cannot drain
+    let cfg = ExactConfig { max_nodes: 2, ..Default::default() };
+    let out = run_exact(&w, &hw, &cfg, &EvalCtx::default());
+    assert!(out.stats.cap_hit, "node cap must trip");
+    assert!(!out.stats.certified, "cap trip must drop certification");
+    assert!(fadiff::costmodel::feasible(&out.result.best, &w, &hw)
+                .is_ok(),
+            "uncertified results must still be feasible");
+    assert!(out.result.edp >= opt,
+            "uncertified {} beat the true optimum {}",
+            out.result.edp, opt);
+
+    // per-layer candidate cap: deterministic subsampling
+    let cfg = ExactConfig {
+        max_layer_candidates: 2,
+        ..Default::default()
+    };
+    let out = run_exact(&w, &hw, &cfg, &EvalCtx::default());
+    assert!(!out.stats.space_complete,
+            "subsampling must mark the space incomplete");
+    assert!(!out.stats.certified);
+    assert!(out.result.edp >= opt);
+
+    // frontier cap: Pareto overflow
+    let cfg = ExactConfig { max_frontier: 1, ..Default::default() };
+    let out = run_exact(&w, &hw, &cfg, &EvalCtx::default());
+    assert!(!out.stats.space_complete);
+    assert!(!out.stats.certified);
+    assert!(out.result.edp >= opt);
+
+    // the budget's iteration bound is the same node cap
+    let budget = Budget { seconds: 3600.0, max_iters: 2 };
+    let out = exact::optimize(&w, &hw, &ExactConfig::default(),
+                              &budget, &EvalCtx::default())
+        .unwrap();
+    assert!(!out.stats.certified,
+            "a 2-iteration budget cannot certify");
+    assert!(out.result.edp >= opt);
+}
+
+// -------------------------------------------------------------------
+// determinism
+// -------------------------------------------------------------------
+
+#[test]
+fn exact_is_deterministic_bit_for_bit() {
+    let hw = hw();
+    for w in [zoo::micro_gemm(), zoo::micro_chain()] {
+        let a = run_exact(&w, &hw, &ExactConfig::default(),
+                          &EvalCtx::default());
+        let b = run_exact(&w, &hw, &ExactConfig::default(),
+                          &EvalCtx::default());
+        assert_eq!(a.result.edp.to_bits(), b.result.edp.to_bits(),
+                   "{}: EDP not deterministic", w.name);
+        assert_eq!(a.result.energy.to_bits(),
+                   b.result.energy.to_bits());
+        assert_eq!(a.result.latency.to_bits(),
+                   b.result.latency.to_bits());
+        assert_eq!(a.result.best.mappings, b.result.best.mappings,
+                   "{}: winning mappings not deterministic", w.name);
+        assert_eq!(a.result.best.fuse, b.result.best.fuse);
+        assert_eq!(format!("{:?}", a.stats),
+                   format!("{:?}", b.stats),
+                   "{}: statistics not deterministic", w.name);
+    }
+}

@@ -1,0 +1,227 @@
+//! Gap-regression battery: the branch-and-bound oracle versus every
+//! search method, end to end through the coordinator.
+//!
+//! * **gap invariants** — on the exhaustively-solvable `micro-*` trio
+//!   with fixed seeds, every baseline's measured optimality gap is
+//!   finite and `>= 0`, and the certified exact EDP is `<=` every
+//!   method's (no method can beat a certified optimum);
+//! * **store/cache hygiene** (the audited incumbent/cache sweep,
+//!   pinned): exact jobs recompute bit-identically across the
+//!   coordinator's shared cross-job eval cache; *certified* results
+//!   re-serve from the persistent store as certified hits; and
+//!   *uncertified* results are never recorded, so a capped run can
+//!   never masquerade as a stored optimum;
+//! * **iteration-zero screening** — the screened batch path offers
+//!   candidates from the very first batch (threshold-free against an
+//!   empty incumbent), so a 1-iteration budget already returns a
+//!   feasible result, bit-identical with pruning on or off.
+
+use std::path::PathBuf;
+
+use fadiff::config::{load_config, repo_root};
+use fadiff::coordinator::{Coordinator, JobRequest, Method};
+use fadiff::experiments::gap;
+use fadiff::search::{compute_eval, random, Budget, EvalCtx,
+                     PruneMode};
+use fadiff::mapping::Strategy;
+use fadiff::workload::zoo;
+
+const MICRO: [&str; 3] = ["micro-mlp", "micro-gemm", "micro-chain"];
+
+fn base(workload: &str) -> JobRequest {
+    JobRequest {
+        workload: workload.into(),
+        config: "large".into(),
+        seconds: 3600.0, // iteration-capped: deterministic per seed
+        max_iters: 30,
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+fn exact_req(workload: &str) -> JobRequest {
+    JobRequest { method: Method::Exact, ..base(workload) }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!(
+        "fadiff_gap_{tag}_{}_{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// -------------------------------------------------------------------
+// gap invariants on the micro trio
+// -------------------------------------------------------------------
+
+#[test]
+fn micro_trio_gaps_are_finite_and_nonnegative() {
+    for workload in MICRO {
+        let rep = gap::measure(None, &base(workload), &[]).unwrap();
+        assert_eq!(rep.workload, workload);
+        assert!(rep.certified,
+                "{workload}: the oracle must certify a micro model");
+        assert!(rep.exact_edp.is_finite() && rep.exact_edp > 0.0);
+        assert!(rep.nodes_expanded > 0);
+
+        let names: Vec<&str> =
+            rep.rows.iter().map(|r| r.method.as_str()).collect();
+        assert_eq!(names, ["fadiff", "ga", "bo", "random"],
+                   "{workload}: default baseline panel changed");
+        for row in &rep.rows {
+            assert!(row.edp.is_finite() && row.edp > 0.0,
+                    "{workload}/{}: bogus EDP {}", row.method,
+                    row.edp);
+            assert!(row.gap.is_finite(),
+                    "{workload}/{}: non-finite gap", row.method);
+            assert!(row.gap >= 0.0,
+                    "{workload}/{}: gap {} < 0 — method beat a \
+                     certified optimum",
+                    row.method, row.gap);
+            assert!(row.edp >= rep.exact_edp,
+                    "{workload}/{}: EDP {} below the certified \
+                     optimum {}",
+                    row.method, row.edp, rep.exact_edp);
+            assert!(row.evals > 0,
+                    "{workload}/{}: no evaluations recorded",
+                    row.method);
+        }
+        let table = rep.render();
+        assert!(table.contains(&format!("| {workload} |")),
+                "{table}");
+        assert!(!table.contains("uncertified"), "{table}");
+    }
+}
+
+#[test]
+fn gap_measure_is_deterministic_for_fixed_seeds() {
+    let a = gap::measure(None, &base("micro-mlp"), &[]).unwrap();
+    let b = gap::measure(None, &base("micro-mlp"), &[]).unwrap();
+    assert_eq!(a.exact_edp.to_bits(), b.exact_edp.to_bits());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.method, rb.method);
+        assert_eq!(ra.edp.to_bits(), rb.edp.to_bits(),
+                   "{}: baseline not deterministic", ra.method);
+        assert_eq!(ra.gap.to_bits(), rb.gap.to_bits());
+        assert_eq!(ra.evals, rb.evals);
+    }
+}
+
+// -------------------------------------------------------------------
+// store/cache hygiene for exact jobs (pinning the audited sweep)
+// -------------------------------------------------------------------
+
+#[test]
+fn exact_jobs_recompute_bit_identically_over_the_shared_cache() {
+    // no result store: the second identical request recomputes, but
+    // through the cross-job eval-cache registry warmed by the first —
+    // a stale incumbent or poisoned cache entry would break identity
+    let coord = Coordinator::new(None, 1).unwrap();
+    let r1 = coord.run(exact_req("micro-mlp")).unwrap();
+    let r2 = coord.run(exact_req("micro-mlp")).unwrap();
+    assert!(!r1.stored && !r2.stored,
+            "no store was configured — nothing may be 'stored'");
+    let e1 = r1.exact.expect("exact jobs must carry stats");
+    let e2 = r2.exact.expect("exact jobs must carry stats");
+    assert!(e1.certified && e2.certified);
+    assert_eq!(r1.edp.to_bits(), r2.edp.to_bits(),
+               "cache-warmed rerun diverged");
+    assert_eq!(r1.energy.to_bits(), r2.energy.to_bits());
+    assert_eq!(r1.latency.to_bits(), r2.latency.to_bits());
+    assert_eq!(e1.nodes_expanded, e2.nodes_expanded,
+               "search shape must not depend on cache state");
+    assert_eq!(e1.pruned(), e2.pruned());
+}
+
+#[test]
+fn certified_results_store_and_reserve_as_certified() {
+    let dir = tmp_dir("store");
+    let coord =
+        Coordinator::new_with_store(None, 1, Some(dir.clone()))
+            .unwrap();
+    let r1 = coord.run(exact_req("micro-gemm")).unwrap();
+    assert!(!r1.stored);
+    assert!(r1.exact.unwrap().certified);
+
+    // identical request: served from the store, still certified
+    let r2 = coord.run(exact_req("micro-gemm")).unwrap();
+    assert!(r2.stored, "identical request must hit the store");
+    assert_eq!(r2.edp.to_bits(), r1.edp.to_bits());
+    let e2 = r2.exact.expect("stored exact hits must carry stats");
+    assert!(e2.certified,
+            "only certified results are recorded, so a stored hit \
+             re-serves as certified");
+
+    // force: recompute past the store, bit-identical again
+    let r3 = coord
+        .run(JobRequest { force: true, ..exact_req("micro-gemm") })
+        .unwrap();
+    assert!(!r3.stored);
+    assert_eq!(r3.edp.to_bits(), r1.edp.to_bits());
+    drop(coord);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn uncertified_results_are_never_recorded_to_the_store() {
+    let dir = tmp_dir("uncert");
+    let coord =
+        Coordinator::new_with_store(None, 1, Some(dir.clone()))
+            .unwrap();
+    // a 2-node budget trips the cap: feasible but uncertified
+    let capped =
+        JobRequest { max_iters: 2, ..exact_req("micro-mlp") };
+    let r1 = coord.run(capped.clone()).unwrap();
+    assert!(!r1.stored);
+    assert!(!r1.exact.unwrap().certified,
+            "a 2-iteration exact run must not certify");
+
+    // the identical request must RECOMPUTE — an uncertified result
+    // stored here would later re-serve as a certified optimum
+    let r2 = coord.run(capped).unwrap();
+    assert!(!r2.stored,
+            "uncertified exact results must never be recorded");
+    assert!(!r2.exact.unwrap().certified);
+    assert_eq!(r2.edp.to_bits(), r1.edp.to_bits(),
+               "capped runs are still deterministic");
+    drop(coord);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------------------
+// iteration-zero screening (pinning the incumbent-init audit)
+// -------------------------------------------------------------------
+
+#[test]
+fn first_screened_batch_already_offers_candidates() {
+    let hw = load_config(&repo_root(), "large").unwrap();
+    let w = zoo::micro_mlp();
+    let budget = Budget { seconds: 3600.0, max_iters: 1 };
+    // one iteration, pruning on: the very first batch is screened
+    // against an *empty* incumbent (threshold None) — nothing may be
+    // pruned-by-threshold away from the offer path
+    let on = EvalCtx { prune: PruneMode::On, ..Default::default() };
+    let off =
+        EvalCtx { prune: PruneMode::Off, ..Default::default() };
+    let a = random::optimize_ctx(&w, &hw, 17, budget, &on).unwrap();
+    let b = random::optimize_ctx(&w, &hw, 17, budget, &off).unwrap();
+    assert!(a.edp.is_finite() && a.edp > 0.0,
+            "a 1-iteration run must already hold a result");
+    assert_eq!(a.edp.to_bits(), b.edp.to_bits(),
+               "first-batch screening changed the result");
+    assert_eq!(a.evals, b.evals,
+               "first-batch screening miscounted evaluations");
+    // the trivial strategy is offered at iteration zero, so no result
+    // is ever worse than it
+    let trivial = compute_eval(&Strategy::trivial(&w), &w, &hw);
+    assert!(a.edp <= trivial.fitness(),
+            "result {} worse than the iteration-zero trivial offer \
+             {}",
+            a.edp, trivial.fitness());
+}

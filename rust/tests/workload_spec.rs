@@ -1,6 +1,6 @@
 //! The workload-spec subsystem end-to-end: the checked-in
 //! `data/workloads/*.json` files are the source of truth for the model
-//! zoo expansion, so (1) the five zoo re-expressions must be
+//! zoo expansion, so (1) the zoo re-expressions must be
 //! *bit-identical* to their builder functions, (2) every new spec must
 //! parse, validate, and be searchable, and (3) the builder -> spec ->
 //! parse round trip must be lossless.
@@ -12,7 +12,8 @@ use fadiff::mapping::Strategy;
 use fadiff::search::{random, Budget, EvalCtx};
 use fadiff::workload::{spec, zoo, Workload};
 
-/// The five zoo models and their spec-file stems.
+/// The zoo models and their spec-file stems (the five paper models
+/// plus the exhaustively-enumerable micro trio).
 fn zoo_pairs() -> Vec<(&'static str, Workload)> {
     vec![
         ("gpt3-6.7b", zoo::gpt3_6_7b()),
@@ -20,6 +21,9 @@ fn zoo_pairs() -> Vec<(&'static str, Workload)> {
         ("vgg16", zoo::vgg16()),
         ("mobilenet-v1", zoo::mobilenet_v1()),
         ("resnet18", zoo::resnet18()),
+        ("micro-mlp", zoo::micro_mlp()),
+        ("micro-gemm", zoo::micro_gemm()),
+        ("micro-chain", zoo::micro_chain()),
     ]
 }
 
